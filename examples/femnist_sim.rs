@@ -1,0 +1,35 @@
+//! FEMNIST-sim head-to-head: QCCF vs the four §VI baselines on the same
+//! federation and channel statistics (a compact version of Fig. 3).
+//!
+//!     make artifacts && cargo run --release --example femnist_sim -- [rounds]
+
+use anyhow::Result;
+
+use qccf::baselines::ALL_ALGORITHMS;
+use qccf::experiments::{fig3, run_one, RunSpec, Task};
+use qccf::runtime::Runtime;
+
+fn main() -> Result<()> {
+    qccf::util::logging::init();
+    let rounds: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(12);
+    let rt = Runtime::load_default("small")?;
+    println!("profile `small` (Z = {}), {rounds} rounds, β = 150\n", rt.info.z);
+
+    let mut rows = Vec::new();
+    for alg in ALL_ALGORITHMS {
+        let mut spec = RunSpec::new(alg, Task::Femnist);
+        spec.rounds = rounds;
+        spec.seed = 1;
+        let trace = run_one(&rt, &spec)?;
+        println!(
+            "{alg:<18} best acc {:.3}   energy {:>8.4} J   dropouts {}",
+            trace.best_accuracy().unwrap_or(f64::NAN),
+            trace.total_energy(),
+            trace.total_dropouts(),
+        );
+        rows.push(fig3::summarize(&trace, 150.0));
+    }
+    println!();
+    fig3::print(&rows, "femnist_sim summary");
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! Doubly-adaptive-quantization analysis (a compact Fig. 5): run the
+//! quantizing algorithms, then print the two relationships the paper's
+//! Remarks 1–2 predict — q rising with the round index, and q negatively
+//! correlated with dataset size for the wireless-aware policies.
+//!
+//!     make artifacts && cargo run --release --example quant_analysis
+
+use anyhow::Result;
+
+use qccf::experiments::fig5;
+use qccf::runtime::Runtime;
+
+fn main() -> Result<()> {
+    qccf::util::logging::init();
+    let rt = Runtime::load_default("small")?;
+    let data = fig5::run(&rt, 16, &[1, 2])?;
+    fig5::print(&data);
+
+    // Sparkline-ish view of q per round for QCCF.
+    if let Some(qccf) = data.iter().find(|d| d.algorithm == "qccf") {
+        println!("QCCF mean q per round:");
+        let line: Vec<String> =
+            qccf.q_by_round.iter().map(|(n, q)| format!("{n}:{q:.1}")).collect();
+        println!("  {}", line.join("  "));
+    }
+    Ok(())
+}

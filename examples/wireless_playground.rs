@@ -1,0 +1,74 @@
+//! Wireless-substrate playground (no artifacts needed): sample the
+//! channel model of §IV-A and show how pathloss, Rician fading and the
+//! OFDMA rates translate into the per-client feasibility region —
+//! i.e. which quantization levels fit inside T^max (constraint C4).
+//!
+//!     cargo run --release --example wireless_playground
+
+use qccf::config::SystemParams;
+use qccf::energy;
+use qccf::solver;
+use qccf::util::rng::Rng;
+use qccf::util::table;
+use qccf::wireless::ChannelModel;
+
+fn main() {
+    let params = SystemParams::femnist_small();
+    let mut rng = Rng::seed_from(7);
+    let model = ChannelModel::new(&params, &mut rng);
+    let state = model.draw(&mut rng);
+
+    println!(
+        "cell radius {} m, carrier {} GHz, gain {} dB, B = {} MHz, Z = {}\n",
+        params.cell_radius_m,
+        params.carrier_ghz,
+        params.gain_db,
+        params.bandwidth_hz / 1e6,
+        params.z
+    );
+
+    let mut rows = Vec::new();
+    for i in 0..params.num_clients {
+        let best = state.best_channel(i);
+        let rate = state.rate(i, best);
+        let d_i = 1200.0;
+        let qmax = solver::q_max_feasible(&params, d_i, rate);
+        let f_q8 = energy::s_of_q(&params, d_i, 8, rate);
+        let energy_q8 = f_q8.map(|f| energy::client_energy(&params, d_i, f, 8, rate));
+        rows.push(vec![
+            i.to_string(),
+            format!("{:.0}", model.distances_m[i]),
+            format!("{:.1}", rate / 1e6),
+            qmax.map(|q| q.to_string()).unwrap_or_else(|| "infeasible".into()),
+            f_q8.map(|f| format!("{f:.2e}")).unwrap_or_else(|| "-".into()),
+            energy_q8.map(|e| format!("{e:.4}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    println!(
+        "{}",
+        table::render(
+            &["client", "dist (m)", "best rate (Mb/s)", "q_max (C4)", "f@q=8 (Hz)", "E@q=8 (J)"],
+            &rows
+        )
+    );
+
+    // Rate vs distance curve (mean over fading).
+    println!("mean best-channel rate vs distance (10k fading draws):");
+    for d in [50.0, 100.0, 200.0, 300.0, 400.0, 500.0] {
+        let mut p2 = params.clone();
+        p2.num_clients = 1;
+        let mut r = Rng::seed_from(13);
+        let mut m = ChannelModel::new(&p2, &mut r);
+        // Overwrite placement with the probe distance.
+        m.distances_m[0] = d;
+        m.large_scale[0] = qccf::config::params::db_to_lin(p2.gain_db)
+            * qccf::wireless::pathloss_gain(d, p2.carrier_ghz);
+        let mut acc = 0.0;
+        let n = 10_000;
+        for _ in 0..n {
+            let st = m.draw(&mut r);
+            acc += (0..p2.num_channels).map(|c| st.rate(0, c)).fold(0.0, f64::max);
+        }
+        println!("  d = {d:>3.0} m  →  {:.1} Mb/s", acc / n as f64 / 1e6);
+    }
+}

@@ -1,0 +1,95 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts + manifest.json.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client.  HLO **text** (never ``.serialize()``) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.
+
+Usage:
+    python -m compile.aot --out ../artifacts --profiles tiny small
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _arg_desc(spec) -> dict:
+    return {"shape": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def lower_profile(profile: model.Profile, out_dir: str, seed: int) -> dict:
+    """Lower every entry point of one profile; returns its manifest stanza."""
+    pdir = os.path.join(out_dir, profile.name)
+    os.makedirs(pdir, exist_ok=True)
+    arts = {}
+    for name, fn, args in model.entry_points(profile, seed):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(pdir, fname), "w") as f:
+            f.write(text)
+        arts[name] = {
+            "file": fname,
+            "args": [_arg_desc(a) for a in args],
+        }
+        print(f"  {profile.name}/{fname}: {len(text)} chars")
+    h, w, c = profile.image
+    return {
+        "z": model.num_params(profile),
+        "tau": profile.tau,
+        "tau_e": profile.tau_e,
+        "batch": profile.batch,
+        "eval_batch": profile.eval_batch,
+        "image": [h, w, c],
+        "classes": profile.classes,
+        "lr": profile.lr,
+        "seed": seed,
+        "artifacts": arts,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--profiles", nargs="+", default=["tiny", "small"],
+        choices=sorted(model.PROFILES),
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest_path = os.path.join(args.out, "manifest.json")
+    manifest = {}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    for pname in args.profiles:
+        print(f"lowering profile {pname} ...")
+        manifest[pname] = lower_profile(model.PROFILES[pname], args.out, args.seed)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

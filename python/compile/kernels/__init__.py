@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels + pure-jnp oracles (ref.py)."""
+
+from .matmul import matmul
+from .quantize import stochastic_quantize
+from .sgd import sgd_update
+
+__all__ = ["matmul", "stochastic_quantize", "sgd_update"]

@@ -1,0 +1,90 @@
+"""Layer-1 Pallas kernel: tiled matmul for the dense model head.
+
+Classic MXU-shaped tiling: grid ``(M/bm, N/bn, K/bk)`` with an f32
+accumulator in the output tile, K innermost so each output tile is
+initialized on the first K step and accumulated in place.  On TPU the
+128x128 tiles map onto the systolic array and the BlockSpecs express the
+HBM->VMEM schedule; here interpret-mode lowering turns the same structure
+into plain HLO (DESIGN.md §7 — hardware adaptation).
+
+Autodiff: ``pallas_call`` has no automatic VJP, so :func:`matmul` is a
+``jax.custom_vjp`` whose backward pass reuses the same kernel
+(``dx = g @ w^T``, ``dw = x^T @ g``) — both forward and backward of every
+dense layer in the model run through this kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick(dim: int, cap: int = TILE) -> int:
+    """Tile size: next power of two covering ``dim``, capped at ``cap``."""
+    t = 1
+    while t < dim and t < cap:
+        t *= 2
+    return t
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pallas_matmul(x, w):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    # K-tile cap 1024 (perf pass, EXPERIMENTS.md §Perf): halves the
+    # K-grid trips of the dense layers for a ≤ 512 KiB per-operand tile —
+    # still ~1% of TPU VMEM double-buffered, −10% train_step wall clock
+    # under interpret-mode lowering.
+    bm, bn, bk = _pick(m), _pick(n), _pick(k, 1024)
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """``x @ w`` through the tiled Pallas kernel (f32)."""
+    return _pallas_matmul(x, w)
+
+
+def _mm_fwd(x, w):
+    return _pallas_matmul(x, w), (x, w)
+
+
+def _mm_bwd(res, g):
+    x, w = res
+    return _pallas_matmul(g, w.T), _pallas_matmul(x.T, g)
+
+
+matmul.defvjp(_mm_fwd, _mm_bwd)

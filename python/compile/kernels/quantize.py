@@ -1,0 +1,83 @@
+"""Layer-1 Pallas kernel: stochastic quantization (paper eq. (4)).
+
+The kernel streams the flat parameter vector through VMEM-sized 1-D blocks
+(``BLOCK`` elements per grid step) and snaps every element onto the
+``2^q - 1`` knot grid with stochastic rounding.  The rounding decision uses
+an *explicit* uniform-noise input so that
+
+* the Rust coordinator owns the randomness (xoshiro256++ stream per client
+  per round) and the whole simulation is reproducible end-to-end, and
+* the pure-jnp oracle in :mod:`ref` can be compared bit-for-bit.
+
+The quantization level ``q`` and the L-inf range ``theta_max`` are runtime
+scalars, so a single AOT-lowered artifact serves every level the QCCF
+solver picks (q changes per client per round — eq. (41)).
+
+On a real TPU the 1-D grid expresses the HBM->VMEM double-buffering
+schedule; here the kernel is lowered with ``interpret=True`` into plain HLO
+(the CPU PJRT client cannot execute Mosaic custom-calls), so correctness is
+the signal and the BlockSpec structure is the TPU story (see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 4096 f32 = 16 KiB per operand block; with theta + noise + out double
+# buffered this stays far under the ~16 MiB VMEM budget of a TPU core.
+BLOCK = 4096
+
+
+def _quantize_kernel(scale_ref, theta_ref, noise_ref, o_ref):
+    """One block: snap |theta| / theta_max onto the knot grid (eq. (4))."""
+    t = theta_ref[...]
+    u = noise_ref[...]
+    safe_max = scale_ref[0]
+    levels = scale_ref[1]
+    scaled = jnp.abs(t) / safe_max * levels  # in [0, levels]
+    low = jnp.floor(scaled)
+    frac = scaled - low
+    # P[round up] = frac  (eq. (4) second branch probability).
+    knot = low + (u < frac).astype(jnp.float32)
+    o_ref[...] = jnp.sign(t) * knot / levels * safe_max
+
+
+def stochastic_quantize(theta, noise, q, *, block=BLOCK):
+    """Quantize ``theta`` with ``q`` bits; returns ``(dequantized, theta_max)``.
+
+    Args:
+      theta: f32[Z] flat parameter vector.
+      noise: f32[Z] uniforms in [0, 1).
+      q:     f32 scalar quantization level (bits, >= 1). Runtime value.
+      block: elements per grid step (VMEM tile).
+
+    Matches :func:`ref.stochastic_quantize_ref` bit-for-bit.
+    """
+    theta = theta.astype(jnp.float32)
+    noise = noise.astype(jnp.float32)
+    (z,) = theta.shape
+    theta_max = jnp.max(jnp.abs(theta))
+    levels = jnp.exp2(jnp.asarray(q, jnp.float32)) - 1.0
+    safe_max = jnp.where(theta_max > 0.0, theta_max, 1.0)
+    scale = jnp.stack([safe_max, levels])
+
+    zp = max(block, ((z + block - 1) // block) * block)
+    tp = jnp.pad(theta, (0, zp - z))
+    up = jnp.pad(noise, (0, zp - z))
+    out = pl.pallas_call(
+        _quantize_kernel,
+        grid=(zp // block,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((zp,), jnp.float32),
+        interpret=True,
+    )(scale, tp, up)
+    deq = out[:z]
+    deq = jnp.where(theta_max > 0.0, deq, jnp.zeros_like(deq))
+    return deq, theta_max

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: pytest (and hypothesis sweeps)
+assert the Pallas kernels in ``quantize.py`` / ``sgd.py`` / ``matmul.py``
+match these implementations bit-for-bit (quantize, sgd) or to float
+tolerance (matmul).
+
+They mirror the paper's equations directly:
+
+* :func:`stochastic_quantize_ref` — eq. (4): q-bit stochastic quantization
+  of each dimension against the vector's L-inf range ``theta_max``, with an
+  *explicit* uniform noise input so the stochastic rounding decision is
+  reproducible (the Rust coordinator supplies the noise from its own RNG).
+* :func:`sgd_update_ref` — the inner write of eq. (1).
+* :func:`matmul_ref` — dense head matmul.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quant_levels(q):
+    """Number of intervals ``2^q - 1`` for a q-bit level, as f32.
+
+    ``q`` is a runtime scalar (f32) so one lowered artifact serves every
+    quantization level the coordinator picks.
+    """
+    return jnp.exp2(q) - 1.0
+
+
+def stochastic_quantize_ref(theta, noise, q):
+    """Eq. (4) of the paper, vectorized over the flat parameter vector.
+
+    Args:
+      theta: f32[Z] flat parameter vector.
+      noise: f32[Z] i.i.d. uniforms in [0, 1) deciding the rounding.
+      q:     f32 scalar quantization level (bits), q >= 1.
+
+    Returns:
+      (dequantized f32[Z] — values snapped onto the 2^q - 1 knot grid with
+      stochastic rounding, f32 scalar theta_max).
+
+    The wire format (range float + signs + knot indices, eq. (5)) is
+    accounted analytically on the Rust side; the simulation moves the
+    dequantized values, which is exactly what the server reconstructs.
+    """
+    theta = theta.astype(jnp.float32)
+    theta_max = jnp.max(jnp.abs(theta))
+    levels = quant_levels(q)
+    # Guard: theta_max == 0 -> everything quantizes to 0.
+    safe_max = jnp.where(theta_max > 0.0, theta_max, 1.0)
+    scaled = jnp.abs(theta) / safe_max * levels  # in [0, levels]
+    low = jnp.floor(scaled)
+    frac = scaled - low
+    up = (noise < frac).astype(jnp.float32)
+    knot = low + up
+    deq = jnp.sign(theta) * knot / levels * safe_max
+    deq = jnp.where(theta_max > 0.0, deq, jnp.zeros_like(theta))
+    return deq.astype(jnp.float32), theta_max.astype(jnp.float32)
+
+
+def sgd_update_ref(theta, grad, lr):
+    """theta <- theta - lr * grad (eq. (1) inner step)."""
+    return (theta - lr * grad).astype(jnp.float32)
+
+
+def matmul_ref(x, w):
+    """f32 matmul oracle for the tiled Pallas matmul."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))

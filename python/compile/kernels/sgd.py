@@ -1,0 +1,51 @@
+"""Layer-1 Pallas kernel: fused SGD update (paper eq. (1) inner write).
+
+``theta <- theta - lr * grad`` over the flat parameter vector, tiled into
+VMEM-sized blocks.  This is the hot write of every local update: it runs
+``tau`` times per participating client per communication round, inside the
+AOT-lowered ``train_step``.
+
+Lowered with ``interpret=True`` (see quantize.py for why).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096
+
+
+def _sgd_kernel(lr_ref, theta_ref, grad_ref, o_ref):
+    o_ref[...] = theta_ref[...] - lr_ref[0] * grad_ref[...]
+
+
+def sgd_update(theta, grad, lr, *, block=BLOCK):
+    """Fused ``theta - lr * grad``; matches :func:`ref.sgd_update_ref`.
+
+    Args:
+      theta: f32[Z] flat parameters.
+      grad:  f32[Z] flat gradient.
+      lr:    f32 scalar learning rate (runtime value).
+    """
+    theta = theta.astype(jnp.float32)
+    grad = grad.astype(jnp.float32)
+    (z,) = theta.shape
+    lr = jnp.reshape(jnp.asarray(lr, jnp.float32), (1,))
+    zp = max(block, ((z + block - 1) // block) * block)
+    tp = jnp.pad(theta, (0, zp - z))
+    gp = jnp.pad(grad, (0, zp - z))
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(zp // block,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((zp,), jnp.float32),
+        interpret=True,
+    )(lr, tp, gp)
+    return out[:z]

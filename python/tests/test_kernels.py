@@ -1,0 +1,183 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+The quantize kernel must match the oracle *bit-for-bit* (same float ops in
+the same order); sgd/matmul are allowed 1-ulp FMA reassociation.
+Hypothesis sweeps shapes, quantization levels and value distributions
+(zeros, constants, negatives, denormal-ish scales).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, sgd_update, stochastic_quantize
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, n, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), (n,)) * scale
+
+
+# ---------------------------------------------------------------- quantize
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=9000),
+    q=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([1e-6, 1e-2, 1.0, 37.5, 1e4]),
+)
+def test_quantize_matches_ref(n, q, seed, scale):
+    theta = _rand(seed, n, scale)
+    noise = jax.random.uniform(jax.random.PRNGKey(seed + 1), (n,))
+    a, amax = stochastic_quantize(theta, noise, float(q))
+    b, bmax = ref.stochastic_quantize_ref(theta, noise, float(q))
+    assert amax == bmax
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("block", [8, 64, 4096])
+def test_quantize_block_size_invariance(block):
+    theta = _rand(3, 1000)
+    noise = jax.random.uniform(jax.random.PRNGKey(4), (1000,))
+    base, _ = ref.stochastic_quantize_ref(theta, noise, 2.0)
+    out, _ = stochastic_quantize(theta, noise, 2.0, block=block)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+
+
+def test_quantize_zero_vector():
+    theta = jnp.zeros(100)
+    noise = jnp.full((100,), 0.5)
+    out, tmax = stochastic_quantize(theta, noise, 4.0)
+    assert tmax == 0.0
+    np.testing.assert_array_equal(np.asarray(out), np.zeros(100))
+
+
+def test_quantize_knots_on_grid():
+    """Quantized values must lie exactly on the 2^q - 1 knot grid (eq. 4)."""
+    q = 3.0
+    theta = _rand(7, 512)
+    noise = jax.random.uniform(jax.random.PRNGKey(8), (512,))
+    out, tmax = stochastic_quantize(theta, noise, q)
+    levels = 2.0**q - 1.0
+    idx = np.asarray(jnp.abs(out) / tmax * levels)
+    np.testing.assert_allclose(idx, np.round(idx), atol=1e-4)
+    assert np.all(np.abs(np.asarray(out)) <= float(tmax) * (1 + 1e-6))
+
+
+def test_quantize_unbiased_statistically():
+    """Lemma 1: E[Q(theta)] = theta. Average many independent noise draws."""
+    theta = _rand(11, 256)
+    reps = 600
+    keys = jax.random.split(jax.random.PRNGKey(12), reps)
+    acc = jnp.zeros_like(theta)
+    for k in keys:
+        noise = jax.random.uniform(k, theta.shape)
+        out, _ = ref.stochastic_quantize_ref(theta, noise, 2.0)
+        acc = acc + out
+    mean = acc / reps
+    tmax = float(jnp.max(jnp.abs(theta)))
+    # std of each estimate <= interval/2/sqrt(reps)
+    tol = tmax / (2**2 - 1) / np.sqrt(reps) * 5
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(theta), atol=tol)
+
+
+def test_quantize_variance_bound_lemma1():
+    """Lemma 1: E||Q(t) - t||^2 <= Z * tmax^2 / (4 (2^q - 1)^2)."""
+    theta = _rand(13, 400)
+    tmax = float(jnp.max(jnp.abs(theta)))
+    for q in [1.0, 2.0, 5.0]:
+        errs = []
+        for s in range(40):
+            noise = jax.random.uniform(jax.random.PRNGKey(100 + s), theta.shape)
+            out, _ = ref.stochastic_quantize_ref(theta, noise, q)
+            errs.append(float(jnp.sum((out - theta) ** 2)))
+        bound = 400 * tmax**2 / (4 * (2.0**q - 1) ** 2)
+        assert np.mean(errs) <= bound * 1.05
+
+
+def test_quantize_high_q_near_identity():
+    theta = _rand(17, 300)
+    noise = jax.random.uniform(jax.random.PRNGKey(18), (300,))
+    out, tmax = stochastic_quantize(theta, noise, 16.0)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(theta), atol=float(tmax) / (2**16 - 1) * 1.01
+    )
+
+
+# -------------------------------------------------------------------- sgd
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=9000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    lr=st.sampled_from([0.0, 1e-4, 0.05, 1.0]),
+)
+def test_sgd_matches_ref(n, seed, lr):
+    theta = _rand(seed, n)
+    grad = _rand(seed + 1, n)
+    a = sgd_update(theta, grad, lr)
+    b = ref.sgd_update_ref(theta, grad, lr)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6, rtol=1e-6)
+
+
+def test_sgd_zero_lr_identity():
+    theta = _rand(19, 500)
+    grad = _rand(20, 500)
+    out = sgd_update(theta, grad, 0.0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(theta))
+
+
+# ----------------------------------------------------------------- matmul
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=70),
+    k=st.integers(min_value=1, max_value=300),
+    n=st.integers(min_value=1, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, n))
+    a = matmul(x, w)
+    b = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3, rtol=1e-4)
+
+
+def test_matmul_grad_matches_ref():
+    x = jax.random.normal(jax.random.PRNGKey(21), (16, 100))
+    w = jax.random.normal(jax.random.PRNGKey(22), (100, 62))
+    ga = jax.grad(lambda x, w: jnp.sum(matmul(x, w) ** 2), argnums=(0, 1))(x, w)
+    gb = jax.grad(lambda x, w: jnp.sum(ref.matmul_ref(x, w) ** 2), argnums=(0, 1))(
+        x, w
+    )
+    for a, b in zip(ga, gb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-2, rtol=1e-3)
+
+
+def test_matmul_large_k_accumulation():
+    """K spans several 512-wide tiles: accumulation across grid steps."""
+    x = jnp.ones((4, 1500))
+    w = jnp.ones((1500, 8))
+    out = matmul(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.full((4, 8), 1500.0), rtol=1e-6)
+
+
+def test_matmul_jit_under_scan():
+    """The kernel must lower inside jit+scan (same path as train_step)."""
+
+    def step(c, _):
+        return matmul(c, jnp.eye(8)), None
+
+    out, _ = jax.jit(lambda c: jax.lax.scan(step, c, None, length=3))(
+        jnp.arange(16.0).reshape(2, 8)
+    )
+    np.testing.assert_allclose(np.asarray(out), np.arange(16.0).reshape(2, 8))

@@ -1,0 +1,161 @@
+"""L2 model checks: parameter accounting (paper Table I Z values),
+flatten/unflatten bijection, training-step semantics, eval masking."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = model.PROFILES["tiny"]
+
+
+def _toy_data(p, seed=0, n=None):
+    """Linearly-separable-ish blobs so a few SGD steps must reduce loss."""
+    h, w, c = p.image
+    n = n or p.batch
+    key = jax.random.PRNGKey(seed)
+    y = jax.random.randint(key, (n,), 0, p.classes)
+    protos = jax.random.normal(jax.random.PRNGKey(7), (p.classes, h, w, c))
+    x = protos[y] + 0.1 * jax.random.normal(jax.random.PRNGKey(seed + 1), (n, h, w, c))
+    return x, y.astype(jnp.int32)
+
+
+# -------------------------------------------------------- param accounting
+
+
+def test_paper_z_femnist():
+    """Paper Table I: Z^FEMNIST = 246590 — our architecture matches exactly."""
+    assert model.num_params(model.PROFILES["femnist"]) == 246590
+
+
+def test_paper_z_cifar():
+    """Paper Table I: Z^CIFAR-10 = 576778."""
+    assert model.num_params(model.PROFILES["cifar"]) == 576778
+
+
+@pytest.mark.parametrize("name", sorted(model.PROFILES))
+def test_flatten_roundtrip(name):
+    p = model.PROFILES[name]
+    z = model.num_params(p)
+    flat = jnp.arange(z, dtype=jnp.float32)
+    back = model.flatten_tree(p, model.unflatten(p, flat))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(flat))
+
+
+@pytest.mark.parametrize("name", sorted(model.PROFILES))
+def test_init_shape_and_determinism(name):
+    p = model.PROFILES[name]
+    a = model.init_flat(p, 0)
+    b = model.init_flat(p, 0)
+    assert a.shape == (model.num_params(p),)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = model.init_flat(p, 1)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_init_biases_zero():
+    p = TINY
+    params = model.unflatten(p, model.init_flat(p, 0))
+    for name, _ in model.param_shapes(p):
+        if name.endswith("_b"):
+            np.testing.assert_array_equal(np.asarray(params[name]), 0.0)
+
+
+# ------------------------------------------------------------- train_step
+
+
+def test_train_step_reduces_loss():
+    p = TINY
+    flat = model.init_flat(p, 0)
+    x, y = _toy_data(p, n=p.batch * p.tau)
+    xs = x.reshape(p.tau, p.batch, *p.image)
+    ys = y.reshape(p.tau, p.batch)
+    step = jax.jit(lambda t: model.train_step(p, t, xs, ys, p.lr))
+    l0 = float(model.loss_fn(p, flat, x, y))
+    for _ in range(8):
+        flat, loss, gnorms = step(flat)
+    l1 = float(model.loss_fn(p, flat, x, y))
+    assert l1 < l0 * 0.8, (l0, l1)
+    assert gnorms.shape == (p.tau,)
+    assert bool(jnp.all(gnorms > 0))
+
+
+def test_train_step_zero_lr_is_identity():
+    p = TINY
+    flat = model.init_flat(p, 0)
+    x, y = _toy_data(p, n=p.batch * p.tau)
+    xs = x.reshape(p.tau, p.batch, *p.image)
+    ys = y.reshape(p.tau, p.batch)
+    out, _, _ = model.train_step(p, flat, xs, ys, 0.0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(flat))
+
+
+def test_train_step_matches_manual_sgd():
+    """scan-of-(grad, pallas-sgd) == hand-rolled python loop."""
+    p = TINY
+    flat = model.init_flat(p, 0)
+    x, y = _toy_data(p, n=p.batch * p.tau)
+    xs = x.reshape(p.tau, p.batch, *p.image)
+    ys = y.reshape(p.tau, p.batch)
+    got, _, _ = model.train_step(p, flat, xs, ys, 0.05)
+    ref = flat
+    for m in range(p.tau):
+        g = jax.grad(lambda t: model.loss_fn(p, t, xs[m], ys[m]))(ref)
+        gnorm = jnp.sqrt(jnp.sum(g * g))
+        scale = jnp.minimum(1.0, p.clip / (gnorm + 1e-12))
+        ref = ref - 0.05 * scale * g
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+# -------------------------------------------------------------- eval_step
+
+
+def test_eval_step_mask():
+    p = TINY
+    flat = model.init_flat(p, 0)
+    x, y = _toy_data(p, n=p.eval_batch)
+    w = jnp.ones(p.eval_batch).at[p.eval_batch // 2 :].set(0.0)
+    loss, correct, n = model.eval_step(p, flat, x, y, w)
+    assert float(n) == p.eval_batch // 2
+    assert 0 <= float(correct) <= p.eval_batch // 2
+    # Masked-out entries must not contribute.
+    x2 = x.at[p.eval_batch // 2 :].set(1e3)
+    loss2, correct2, _ = model.eval_step(p, flat, x2, y, w)
+    np.testing.assert_allclose(float(loss), float(loss2), rtol=1e-5)
+    assert float(correct) == float(correct2)
+
+
+def test_eval_step_perfect_model_counts_all():
+    p = TINY
+    flat = model.init_flat(p, 0)
+    x, y = _toy_data(p, n=p.eval_batch)
+    xs = x[: p.batch * p.tau].reshape(p.tau, p.batch, *p.image)
+    ys = y[: p.batch * p.tau].reshape(p.tau, p.batch)
+    step = jax.jit(lambda t: model.train_step(p, t, xs, ys, p.lr)[0])
+    for _ in range(60):
+        flat = step(flat)
+    _, correct, n = model.eval_step(p, flat, x, y, jnp.ones(p.eval_batch))
+    assert float(correct) / float(n) > 0.6
+
+
+# --------------------------------------------------------------- quantize
+
+
+def test_model_quantize_roundtrip_error_shrinks_with_q():
+    p = TINY
+    flat = model.init_flat(p, 0)
+    noise = jax.random.uniform(jax.random.PRNGKey(5), flat.shape)
+    errs = []
+    for q in [1.0, 4.0, 8.0]:
+        qf, _ = model.quantize(p, flat, noise, q)
+        errs.append(float(jnp.sum((qf - flat) ** 2)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_entry_points_cover_manifest_names():
+    names = [n for n, _, _ in model.entry_points(TINY)]
+    assert names == ["init", "train_step", "eval_step", "quantize"]

@@ -1,0 +1,70 @@
+//! GA benchmarks: the combinatorial half of the round decision (P3.1)
+//! with the real QCCF fitness (inner solver per candidate) — the paper's
+//! Algorithm 1 end to end — plus a per-fitness micro-bench.
+
+use qccf::bench::BenchSet;
+use qccf::config::SystemParams;
+use qccf::ga::{self, Chromosome, GaParams};
+use qccf::lyapunov::Queues;
+use qccf::sched::{evaluate_allocation, RoundInputs};
+use qccf::solver::Case5Mode;
+use qccf::util::rng::Rng;
+use qccf::wireless::ChannelModel;
+
+fn main() {
+    let params = SystemParams::femnist_small();
+    let mut rng = Rng::seed_from(3);
+    let model = ChannelModel::new(&params, &mut rng);
+    let channels = model.draw(&mut rng);
+    let sizes: Vec<f64> =
+        (0..params.num_clients).map(|_| rng.gaussian(1200.0, 150.0).max(64.0)).collect();
+    let total: f64 = sizes.iter().sum();
+    let w_full: Vec<f64> = sizes.iter().map(|d| d / total).collect();
+    let mut queues = Queues::new();
+    queues.update(&params, params.eps1 + 30.0, params.eps2 + 1.0);
+    let g2 = vec![2.0; 10];
+    let sigma2 = vec![0.5; 10];
+    let theta_max = vec![0.4; 10];
+    let q_prev = vec![6.0; 10];
+    let inputs = RoundInputs {
+        params: &params,
+        round: 5,
+        channels: &channels,
+        sizes: &sizes,
+        w_full: &w_full,
+        g2: &g2,
+        sigma2: &sigma2,
+        theta_max: &theta_max,
+        q_prev: &q_prev,
+        queues: &queues,
+    };
+
+    let mut set = BenchSet::new("ga");
+    {
+        let mut r = Rng::seed_from(7);
+        set.bench("fitness_eval_one_chromosome", || {
+            let c = Chromosome::random(10, 10, &mut r);
+            evaluate_allocation(&inputs, &c, Case5Mode::Taylor).0
+        });
+    }
+    {
+        let mut r = Rng::seed_from(11);
+        set.bench("algorithm1_full_run_default", || {
+            ga::optimize(10, 10, &GaParams::default(), &mut r, |c| {
+                evaluate_allocation(&inputs, c, Case5Mode::Taylor).0
+            })
+            .best_j0
+        });
+    }
+    {
+        let small = GaParams { population: 12, generations: 8, ..GaParams::default() };
+        let mut r = Rng::seed_from(13);
+        set.bench("algorithm1_small_budget", || {
+            ga::optimize(10, 10, &small, &mut r, |c| {
+                evaluate_allocation(&inputs, c, Case5Mode::Taylor).0
+            })
+            .best_j0
+        });
+    }
+    set.finish();
+}

@@ -1,0 +1,37 @@
+//! Quantizer benchmarks: the Rust mirror (pure CPU), the wire codec
+//! (encode/decode at eq. (5) densities), across model sizes.
+
+use qccf::bench::BenchSet;
+use qccf::quant;
+use qccf::util::rng::Rng;
+
+fn main() {
+    let mut set = BenchSet::new("quant");
+    for &z in &[1242usize, 20_522, 246_590] {
+        let mut rng = Rng::seed_from(z as u64);
+        let theta: Vec<f32> = (0..z).map(|_| rng.gaussian(0.0, 0.5) as f32).collect();
+        let mut noise = vec![0.0f32; z];
+        rng.fill_uniform_f32(&mut noise);
+
+        set.bench(&format!("stochastic_quantize_z{z}_q8"), || {
+            quant::stochastic_quantize(&theta, &noise, 8.0)
+        });
+
+        let (idx, signs, tmax) = quant::knot_indices(&theta, &noise, 8);
+        set.bench(&format!("wire_encode_z{z}_q8"), || {
+            quant::encode(tmax, &signs, &idx, 8)
+        });
+        let bytes = quant::encode(tmax, &signs, &idx, 8);
+        set.bench(&format!("wire_decode_z{z}_q8"), || quant::decode(&bytes, z, 8));
+    }
+    // Noise-stream generation (runs once per upload on the hot path).
+    {
+        let mut rng = Rng::seed_from(99);
+        let mut buf = vec![0.0f32; 20_522];
+        set.bench("noise_fill_z20522", move || {
+            rng.fill_uniform_f32(&mut buf);
+            buf[0]
+        });
+    }
+    set.finish();
+}

@@ -1,0 +1,47 @@
+//! End-to-end round-decision benchmark: one full scheduler decision per
+//! algorithm on a fresh channel draw — the paper's per-round control
+//! overhead (Table-less, but the practical cost of Algorithm 1 + KKT).
+
+use qccf::baselines::{make_scheduler, ALL_ALGORITHMS};
+use qccf::bench::BenchSet;
+use qccf::config::SystemParams;
+use qccf::lyapunov::Queues;
+use qccf::sched::RoundInputs;
+use qccf::util::rng::Rng;
+use qccf::wireless::ChannelModel;
+
+fn main() {
+    let params = SystemParams::femnist_small();
+    let mut rng = Rng::seed_from(29);
+    let model = ChannelModel::new(&params, &mut rng);
+    let channels = model.draw(&mut rng);
+    let sizes: Vec<f64> =
+        (0..params.num_clients).map(|_| rng.gaussian(1200.0, 150.0).max(64.0)).collect();
+    let total: f64 = sizes.iter().sum();
+    let w_full: Vec<f64> = sizes.iter().map(|d| d / total).collect();
+    let mut queues = Queues::new();
+    queues.update(&params, params.eps1 + 30.0, params.eps2 + 1.0);
+    let g2 = vec![2.0; 10];
+    let sigma2 = vec![0.5; 10];
+    let theta_max = vec![0.4; 10];
+    let q_prev = vec![6.0; 10];
+    let inputs = RoundInputs {
+        params: &params,
+        round: 5,
+        channels: &channels,
+        sizes: &sizes,
+        w_full: &w_full,
+        g2: &g2,
+        sigma2: &sigma2,
+        theta_max: &theta_max,
+        q_prev: &q_prev,
+        queues: &queues,
+    };
+
+    let mut set = BenchSet::new("round_decision");
+    for alg in ALL_ALGORITHMS {
+        let mut sched = make_scheduler(alg, 1).unwrap();
+        set.bench(alg, || sched.decide(&inputs).assignments.len());
+    }
+    set.finish();
+}

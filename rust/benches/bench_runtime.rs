@@ -1,0 +1,67 @@
+//! PJRT runtime benchmarks: the AOT-compiled train_step / quantize /
+//! eval executions that dominate round wall-clock. Requires
+//! `make artifacts`; exits cleanly (with a note) if they're absent.
+
+use qccf::bench::BenchSet;
+use qccf::runtime::{artifacts_dir, Runtime};
+use qccf::util::rng::Rng;
+
+fn main() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        println!("bench_runtime: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    for profile in ["tiny", "small"] {
+        let Ok(rt) = Runtime::load(&artifacts_dir(), profile) else {
+            println!("bench_runtime: profile `{profile}` unavailable; skipping");
+            continue;
+        };
+        let info = rt.info.clone_info();
+        let mut rng = Rng::seed_from(5);
+        let theta = rt.init().expect("init");
+        let pix = info.pix;
+        let xs: Vec<f32> =
+            (0..info.tau * info.batch * pix).map(|_| rng.gaussian(0.0, 1.0) as f32).collect();
+        let ys: Vec<i32> =
+            (0..info.tau * info.batch).map(|_| rng.below(info.classes) as i32).collect();
+        let mut noise = vec![0.0f32; info.z];
+        rng.fill_uniform_f32(&mut noise);
+        let ex: Vec<f32> = (0..info.eval_batch * pix).map(|_| rng.gaussian(0.0, 1.0) as f32).collect();
+        let ey: Vec<i32> = (0..info.eval_batch).map(|_| rng.below(info.classes) as i32).collect();
+        let ew = vec![1.0f32; info.eval_batch];
+
+        let mut set = BenchSet::new(&format!("runtime_{profile}"));
+        set.bench("train_step_tau6", || rt.train_step(&theta, &xs, &ys, 0.05).unwrap().mean_loss);
+        set.bench("quantize_q8", || rt.quantize(&theta, &noise, 8.0).unwrap().1);
+        set.bench("eval_chunk", || rt.eval_chunk(&theta, &ex, &ey, &ew).unwrap().1);
+        set.finish();
+    }
+}
+
+/// Tiny helper mirroring the fields bench needs (keeps the bench free of
+/// borrow gymnastics against `rt.info`).
+trait CloneInfo {
+    fn clone_info(&self) -> Info;
+}
+
+struct Info {
+    z: usize,
+    tau: usize,
+    batch: usize,
+    eval_batch: usize,
+    classes: usize,
+    pix: usize,
+}
+
+impl CloneInfo for qccf::runtime::ProfileInfo {
+    fn clone_info(&self) -> Info {
+        Info {
+            z: self.z,
+            tau: self.tau,
+            batch: self.batch,
+            eval_batch: self.eval_batch,
+            classes: self.classes,
+            pix: self.pix(),
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! Micro-benchmarks of the closed-form KKT solver (P3.2″) — the inner
+//! loop of every GA fitness evaluation, so the hottest pure-Rust path in
+//! the round decision.
+
+use qccf::bench::BenchSet;
+use qccf::config::SystemParams;
+use qccf::solver::{self, Case5Mode, ClientCtx};
+use qccf::util::rng::Rng;
+
+fn main() {
+    let p = SystemParams::femnist_small();
+    let mut rng = Rng::seed_from(42);
+    let cases: Vec<(f64, ClientCtx)> = (0..256)
+        .map(|_| {
+            let lambda2 = p.eps2 + 10f64.powf(rng.range(-2.0, 3.0));
+            let ctx = ClientCtx {
+                d_i: rng.range(300.0, 2500.0),
+                w_round: rng.range(0.02, 0.5),
+                rate: rng.range(8e6, 40e6),
+                theta_max: rng.range(0.05, 2.0),
+                q_prev: rng.range(1.0, 14.0),
+            };
+            (lambda2, ctx)
+        })
+        .collect();
+
+    let mut set = BenchSet::new("solver");
+    let mut i = 0usize;
+    set.bench("closed_form_taylor", || {
+        i = (i + 1) % cases.len();
+        let (l2, ctx) = &cases[i];
+        solver::solve_client(&p, *l2, ctx, Case5Mode::Taylor)
+    });
+    let mut i = 0usize;
+    set.bench("closed_form_bisect", || {
+        i = (i + 1) % cases.len();
+        let (l2, ctx) = &cases[i];
+        solver::solve_client(&p, *l2, ctx, Case5Mode::Bisect)
+    });
+    let mut i = 0usize;
+    set.bench("brute_force_scan", || {
+        i = (i + 1) % cases.len();
+        let (l2, ctx) = &cases[i];
+        solver::solve_brute(&p, *l2, ctx)
+    });
+    let mut i = 0usize;
+    set.bench("cubic_root", || {
+        i = (i + 1) % cases.len();
+        qccf::solver::cubic::positive_root(0.1 + i as f64)
+    });
+    set.finish();
+}

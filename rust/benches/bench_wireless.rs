@@ -1,0 +1,33 @@
+//! Wireless-substrate benchmarks: per-round channel draws (U×C Rician
+//! samples + Shannon rates) and the energy/latency model evaluations.
+
+use qccf::bench::BenchSet;
+use qccf::config::SystemParams;
+use qccf::energy;
+use qccf::util::rng::Rng;
+use qccf::wireless::{channel_rate, ChannelModel};
+
+fn main() {
+    let params = SystemParams::femnist_small();
+    let mut rng = Rng::seed_from(17);
+    let model = ChannelModel::new(&params, &mut rng);
+
+    let mut set = BenchSet::new("wireless");
+    {
+        let mut r = Rng::seed_from(19);
+        let m = model.clone();
+        set.bench("channel_draw_10x10", move || m.draw(&mut r).rate(0, 0));
+    }
+    {
+        let mut r = Rng::seed_from(23);
+        set.bench("rician_power_sample", move || r.rician_power(4.0, 1.0));
+    }
+    set.bench("shannon_rate", || channel_rate(1e6, 0.2, 1e-8, 4e-21));
+    set.bench("energy_model_full_client", || {
+        let f = 6e8;
+        energy::client_energy(&params, 1200.0, f, 8, 20e6)
+            + energy::client_latency(&params, 1200.0, f, 8, 20e6)
+    });
+    set.bench("s_of_q", || energy::s_of_q(&params, 1200.0, 8, 20e6));
+    set.finish();
+}

@@ -1,0 +1,143 @@
+//! Criterion-style micro-bench harness (criterion is unavailable offline).
+//!
+//! Each file in `rust/benches/` is a `harness = false` binary that builds a
+//! [`BenchSet`], registers closures, and calls [`BenchSet::finish`], which
+//! prints a table and appends JSON lines to `target/qccf-bench.jsonl` so
+//! the perf pass in EXPERIMENTS.md §Perf can diff before/after.
+//!
+//! Protocol per benchmark: warm up for `warmup`, then run fixed-size
+//! batches until `measure` elapses, recording per-iteration wall time;
+//! report mean / p50 / p95 / min and iteration count.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+pub struct BenchSet {
+    group: String,
+    warmup: Duration,
+    measure: Duration,
+    results: Vec<BenchResult>,
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl BenchSet {
+    pub fn new(group: &str) -> BenchSet {
+        // Defaults keep `cargo bench` wall time sane on 1 core; override
+        // with QCCF_BENCH_MEASURE_MS / QCCF_BENCH_WARMUP_MS.
+        let ms = |var: &str, default: u64| {
+            Duration::from_millis(
+                std::env::var(var).ok().and_then(|v| v.parse().ok()).unwrap_or(default),
+            )
+        };
+        BenchSet {
+            group: group.to_string(),
+            warmup: ms("QCCF_BENCH_WARMUP_MS", 200),
+            measure: ms("QCCF_BENCH_MEASURE_MS", 1000),
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`; its return value is black-boxed to keep the work alive.
+    pub fn bench<R, F: FnMut() -> R>(&mut self, name: &str, mut f: F) {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.measure && samples_ns.len() < 2_000_000 {
+            let it = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(it.elapsed().as_nanos() as f64);
+        }
+        let res = BenchResult {
+            name: format!("{}/{}", self.group, name),
+            iters: samples_ns.len() as u64,
+            mean_ns: stats::mean(&samples_ns),
+            p50_ns: stats::percentile(&samples_ns, 50.0),
+            p95_ns: stats::percentile(&samples_ns, 95.0),
+            min_ns: samples_ns.iter().cloned().fold(f64::INFINITY, f64::min),
+        };
+        println!(
+            "{:<48} {:>10} iters   mean {:>12}   p50 {:>12}   p95 {:>12}",
+            res.name,
+            res.iters,
+            fmt_ns(res.mean_ns),
+            fmt_ns(res.p50_ns),
+            fmt_ns(res.p95_ns),
+        );
+        self.results.push(res);
+    }
+
+    /// Print a summary and append JSONL records for the perf log.
+    pub fn finish(self) {
+        let path = std::path::Path::new("target").join("qccf-bench.jsonl");
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut lines = String::new();
+        for r in &self.results {
+            lines.push_str(&format!(
+                "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{:.1},\"p50_ns\":{:.1},\"p95_ns\":{:.1},\"min_ns\":{:.1}}}\n",
+                r.name, r.iters, r.mean_ns, r.p50_ns, r.p95_ns, r.min_ns
+            ));
+        }
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+            f.write_all(lines.as_bytes()).ok();
+        }
+        println!("== {} done ({} benchmarks) ==", self.group, self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("QCCF_BENCH_WARMUP_MS", "1");
+        std::env::set_var("QCCF_BENCH_MEASURE_MS", "5");
+        let mut set = BenchSet::new("test");
+        let mut acc = 0u64;
+        set.bench("noop", || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert_eq!(set.results.len(), 1);
+        assert!(set.results[0].iters > 0);
+        assert!(set.results[0].mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

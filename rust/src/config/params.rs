@@ -1,0 +1,311 @@
+//! [`SystemParams`] (paper Table I + §III–§V constants) and
+//! [`ExperimentConfig`] (one experiment run).
+
+/// All physical/algorithmic constants of the wireless FL system.
+///
+/// Field-by-field mapping to the paper is given inline; defaults are the
+/// FEMNIST column of Table I unless noted.
+#[derive(Clone, Debug)]
+pub struct SystemParams {
+    // ----- topology (§VI) -----
+    /// U — number of clients (paper: 10).
+    pub num_clients: usize,
+    /// C — OFDMA channels (paper doesn't state; we default to U so full
+    /// participation is possible, which the aggregation eq. (2) assumes
+    /// in the no-quantization baseline).
+    pub num_channels: usize,
+    /// Cell radius in meters (paper: 500 m circular area).
+    pub cell_radius_m: f64,
+
+    // ----- communication (Table I) -----
+    /// B — per-channel bandwidth in Hz (1 MHz).
+    pub bandwidth_hz: f64,
+    /// p — uplink transmit power in W (0.2 W).
+    pub tx_power_w: f64,
+    /// N0 — noise power spectral density in W/Hz (−174 dBm/Hz).
+    pub noise_psd_w_hz: f64,
+    /// K — Rician K-factor (4).
+    pub rician_k: f64,
+    /// ζ — Rician mean power (1).
+    pub rician_zeta: f64,
+    /// Carrier frequency in GHz (unpublished; we use 2.4 GHz).
+    pub carrier_ghz: f64,
+    /// h^Gain in dB — device/antenna gain "and other settings". The
+    /// calibration knob (see module docs).
+    pub gain_db: f64,
+
+    // ----- computation (Table I) -----
+    /// α — energy coefficient (1e−26).
+    pub alpha: f64,
+    /// γ — CPU cycles per sample (1000 FEMNIST / 2000 CIFAR-10).
+    pub gamma: f64,
+    /// f^min, f^max — CPU frequency range in Hz (2e8 .. 1e9).
+    pub f_min: f64,
+    pub f_max: f64,
+    /// τ — local updates per round (6); τ^e — local epochs (2).
+    pub tau: usize,
+    pub tau_e: usize,
+    /// T^max — per-round latency budget in seconds (0.02 FEMNIST).
+    pub t_max: f64,
+
+    // ----- model -----
+    /// Z — model dimension count (profile-dependent; Table I lists
+    /// 246 590 / 576 778 for the paper profiles).
+    pub z: usize,
+
+    // ----- convergence constants (§III–§IV) -----
+    /// η — learning rate used in the A1/A2 constants.
+    pub eta: f64,
+    /// L — smoothness constant estimate (Assumption 2).
+    pub lips: f64,
+
+    // ----- Lyapunov (§V-A) -----
+    /// V — drift-plus-penalty weight (Fig. 2 sweeps this).
+    pub v: f64,
+    /// ε1 — data-property budget (C6).
+    pub eps1: f64,
+    /// ε2 — quantization-error budget (C7).
+    pub eps2: f64,
+    /// The paper never publishes its ε values; when set, the server
+    /// recalibrates ε1/ε2 once (at round 2) from the *observed* gradient
+    /// statistics so that C6/C7 are tight-but-satisfiable and the queues
+    /// are mean-rate stable (see EXPERIMENTS.md §Calibration).
+    pub auto_eps: bool,
+
+    // ----- quantization bounds -----
+    /// Hard ceiling on integer quantization levels (wire format sanity;
+    /// 32 = "effectively unquantized").
+    pub q_cap: u32,
+}
+
+impl SystemParams {
+    /// Table I, FEMNIST column, with the `small` profile's Z (the default
+    /// experiment profile — see module docs on feasibility).
+    pub fn femnist_small() -> SystemParams {
+        SystemParams {
+            num_clients: 10,
+            num_channels: 10,
+            cell_radius_m: 500.0,
+            bandwidth_hz: 1e6,
+            tx_power_w: 0.2,
+            noise_psd_w_hz: dbm_per_hz_to_w_per_hz(-174.0),
+            rician_k: 4.0,
+            rician_zeta: 1.0,
+            carrier_ghz: 2.4,
+            gain_db: 10.0,
+            alpha: 1e-26,
+            gamma: 1000.0,
+            f_min: 2e8,
+            f_max: 1e9,
+            tau: 6,
+            tau_e: 2,
+            t_max: 0.02,
+            z: 20_522,
+            eta: 0.05,
+            lips: 1.0,
+            v: 100.0,
+            eps1: 60.0,
+            eps2: 0.05,
+            auto_eps: true,
+            q_cap: 32,
+        }
+    }
+
+    /// Paper-size FEMNIST profile (Z = 246 590): T^max scaled by Z ratio
+    /// so per-dimension latency pressure matches the `small` default.
+    pub fn femnist_paper() -> SystemParams {
+        let mut p = Self::femnist_small();
+        p.z = 246_590;
+        p.t_max = 0.02 * 246_590.0 / 20_522.0;
+        p
+    }
+
+    /// Table I CIFAR-10 column (γ = 2000, T^max = 0.05 s) with scaled Z.
+    pub fn cifar_paper() -> SystemParams {
+        let mut p = Self::femnist_small();
+        p.gamma = 2000.0;
+        p.z = 576_778;
+        p.t_max = 0.05 * 576_778.0 / 20_522.0;
+        p.v = 10.0;
+        p
+    }
+
+    /// CIFAR-like parameters at `small`-profile Z (default Fig. 4 runs).
+    pub fn cifar_small() -> SystemParams {
+        let mut p = Self::femnist_small();
+        p.gamma = 2000.0;
+        p.t_max = 0.05;
+        p.v = 10.0;
+        p
+    }
+
+    /// Tiny-profile params for unit/integration tests (Z from the tiny
+    /// artifact, generous latency so every scheduler path is exercised).
+    pub fn tiny_test() -> SystemParams {
+        let mut p = Self::femnist_small();
+        p.z = 1242;
+        p.t_max = 0.01;
+        p
+    }
+
+    /// Nominal CPU frequency used by wireless-oblivious baselines that
+    /// perform no frequency control (§VI: the Principle and
+    /// No-Quantization baselines have no f design; a device default in
+    /// the upper-middle of the DVFS range is the realistic stand-in).
+    pub fn nominal_f(&self) -> f64 {
+        0.6 * self.f_max
+    }
+
+    /// Bits on the wire for a q-bit quantized model: eq. (5).
+    pub fn payload_bits(&self, q: u32) -> f64 {
+        (self.z as f64) * (q as f64) + self.z as f64 + 32.0
+    }
+
+    /// Bits for an unquantized f32 upload (the No-Quantization baseline).
+    pub fn raw_payload_bits(&self) -> f64 {
+        32.0 * self.z as f64
+    }
+
+    /// Validate internal consistency; returns a list of violated
+    /// conditions (empty = good). Covers the theorem prerequisites
+    /// (2η²τ²L² < 1 for Theorem 2) and physical sanity.
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        let etl = 2.0 * self.eta * self.eta * (self.tau * self.tau) as f64 * self.lips * self.lips;
+        if etl >= 1.0 {
+            errs.push(format!("Theorem 2 prerequisite violated: 2η²τ²L² = {etl:.3} >= 1"));
+        }
+        if self.eta * self.lips >= 1.0 {
+            errs.push(format!(
+                "Theorem 1 prerequisite violated: ηL = {} >= 1",
+                self.eta * self.lips
+            ));
+        }
+        if self.f_min <= 0.0 || self.f_min > self.f_max {
+            errs.push("need 0 < f_min <= f_max".into());
+        }
+        if self.tau % self.tau_e != 0 {
+            errs.push(format!("τ = {} must be a multiple of τ^e = {}", self.tau, self.tau_e));
+        }
+        if self.num_channels == 0 || self.num_clients == 0 {
+            errs.push("need at least one client and one channel".into());
+        }
+        if self.t_max <= 0.0 {
+            errs.push("T^max must be positive".into());
+        }
+        errs
+    }
+}
+
+/// dBm/Hz → W/Hz (−174 dBm/Hz ≈ 3.98e−21 W/Hz).
+pub fn dbm_per_hz_to_w_per_hz(dbm: f64) -> f64 {
+    10f64.powf(dbm / 10.0) * 1e-3
+}
+
+/// dB → linear power ratio.
+pub fn db_to_lin(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// One experiment run (an algorithm on a task profile).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Artifact profile name (`tiny`/`small`/`femnist`/`cifar`).
+    pub profile: String,
+    /// Scheduling algorithm (see `sched`/`baselines`).
+    pub algorithm: String,
+    /// Communication rounds N.
+    pub rounds: usize,
+    /// µ — mean dataset size (paper: 1200).
+    pub data_mean: f64,
+    /// β — dataset size std (paper: 150 or 300).
+    pub data_std: f64,
+    /// Dirichlet α for label skew (non-IID; paper just says non-IID).
+    pub dirichlet_alpha: f64,
+    /// Test set size.
+    pub test_size: usize,
+    /// Evaluate every k rounds.
+    pub eval_every: usize,
+    /// Master seed.
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            profile: "small".into(),
+            algorithm: "qccf".into(),
+            rounds: 60,
+            data_mean: 1200.0,
+            data_std: 150.0,
+            dirichlet_alpha: 0.5,
+            test_size: 512,
+            eval_every: 2,
+            seed: 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_i_values() {
+        let p = SystemParams::femnist_small();
+        assert_eq!(p.num_clients, 10);
+        assert_eq!(p.bandwidth_hz, 1e6);
+        assert_eq!(p.tx_power_w, 0.2);
+        assert!((p.noise_psd_w_hz - 3.9810717e-21).abs() < 1e-27);
+        assert_eq!(p.rician_k, 4.0);
+        assert_eq!(p.alpha, 1e-26);
+        assert_eq!(p.gamma, 1000.0);
+        assert_eq!((p.f_min, p.f_max), (2e8, 1e9));
+        assert_eq!((p.tau, p.tau_e), (6, 2));
+        assert_eq!(p.t_max, 0.02);
+    }
+
+    #[test]
+    fn paper_profiles_z() {
+        assert_eq!(SystemParams::femnist_paper().z, 246_590);
+        assert_eq!(SystemParams::cifar_paper().z, 576_778);
+        assert_eq!(SystemParams::cifar_paper().gamma, 2000.0);
+    }
+
+    #[test]
+    fn payload_bits_eq5() {
+        let p = SystemParams::tiny_test();
+        // eq. (5): ℓ = Z q + Z + 32.
+        assert_eq!(p.payload_bits(8), 1242.0 * 8.0 + 1242.0 + 32.0);
+        assert_eq!(p.raw_payload_bits(), 32.0 * 1242.0);
+    }
+
+    #[test]
+    fn defaults_validate() {
+        for p in [
+            SystemParams::femnist_small(),
+            SystemParams::femnist_paper(),
+            SystemParams::cifar_paper(),
+            SystemParams::cifar_small(),
+            SystemParams::tiny_test(),
+        ] {
+            let errs = p.validate();
+            assert!(errs.is_empty(), "{errs:?}");
+        }
+    }
+
+    #[test]
+    fn validate_catches_bad_theorem_prereq() {
+        let mut p = SystemParams::femnist_small();
+        p.eta = 0.2;
+        p.lips = 2.0;
+        assert!(!p.validate().is_empty());
+    }
+
+    #[test]
+    fn unit_conversions() {
+        assert!((dbm_per_hz_to_w_per_hz(0.0) - 1e-3).abs() < 1e-12);
+        assert!((db_to_lin(10.0) - 10.0).abs() < 1e-9);
+        assert!((db_to_lin(-3.0) - 0.501187).abs() < 1e-5);
+    }
+}

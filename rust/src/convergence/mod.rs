@@ -1,0 +1,214 @@
+//! Convergence machinery (paper §III): the A1/A2 constants, the two
+//! bound components that become the long-term constraints C6/C7, and the
+//! per-client G_i / σ_i estimators the coordinator maintains from
+//! `train_step`'s reported gradient norms.
+
+use crate::config::SystemParams;
+
+/// A1 = 2η²L²(2τ³ − 3τ² + τ) / (3 − 6η²L²τ²)   (below eq. (21)).
+pub fn a1(p: &SystemParams) -> f64 {
+    let (eta, l, tau) = (p.eta, p.lips, p.tau as f64);
+    let num = 2.0 * eta * eta * l * l * (2.0 * tau.powi(3) - 3.0 * tau * tau + tau);
+    let den = 3.0 - 6.0 * eta * eta * l * l * tau * tau;
+    num / den
+}
+
+/// A2 = ηLτ + η²L²(τ² − τ) / (1 − 2η²L²τ²)   (below eq. (21)).
+pub fn a2(p: &SystemParams) -> f64 {
+    let (eta, l, tau) = (p.eta, p.lips, p.tau as f64);
+    eta * l * tau + eta * eta * l * l * (tau * tau - tau) / (1.0 - 2.0 * eta * eta * l * l * tau * tau)
+}
+
+/// Per-round **data-property** term — the C6 summand (eq. (20)):
+/// `Σ_i [ 4τ(1 − a_i w_i) G_i² + A1 w_i^n G_i² + A2 w_i^n σ_i² ]`.
+///
+/// * `w_full[i]` — w_i = D_i / ΣD (all clients);
+/// * `w_round[i]` — w_i^n (participants only, zero otherwise);
+/// * `participating[i]` — a_i^n.
+pub fn data_term(
+    p: &SystemParams,
+    participating: &[bool],
+    w_full: &[f64],
+    w_round: &[f64],
+    g2: &[f64],
+    sigma2: &[f64],
+) -> f64 {
+    let tau = p.tau as f64;
+    let (a1v, a2v) = (a1(p), a2(p));
+    let mut sum = 0.0;
+    for i in 0..participating.len() {
+        let a = if participating[i] { 1.0 } else { 0.0 };
+        sum += 4.0 * tau * (1.0 - a * w_full[i]) * g2[i];
+        sum += a1v * w_round[i] * g2[i] + a2v * w_round[i] * sigma2[i];
+    }
+    sum
+}
+
+/// Per-round **quantization-error** term — the C7 summand (eq. (21)):
+/// `Σ_i w_i^n · Z L (θ_i^max)² / (8 (2^{q_i} − 1)²)`.
+pub fn quant_term(
+    p: &SystemParams,
+    w_round: &[f64],
+    theta_max: &[f64],
+    q: &[Option<u32>],
+) -> f64 {
+    let mut sum = 0.0;
+    for i in 0..w_round.len() {
+        if let Some(qi) = q[i] {
+            sum += quant_term_client(p, w_round[i], theta_max[i], qi);
+        }
+    }
+    sum
+}
+
+/// One client's C7 summand.
+pub fn quant_term_client(p: &SystemParams, w_round: f64, theta_max: f64, q: u32) -> f64 {
+    let l = (2f64).powi(q as i32) - 1.0;
+    w_round * (p.z as f64) * p.lips * theta_max * theta_max / (8.0 * l * l)
+}
+
+/// Online estimator of a client's gradient statistics (Assumptions 1 & 3):
+/// G_i from the max per-step gradient norm, σ_i from the spread of the
+/// per-step norms within a round. EMA-smoothed across the client's
+/// participations; priors cover rounds before first participation.
+#[derive(Clone, Debug)]
+pub struct GradStats {
+    /// Estimated G_i (gradient-norm bound).
+    pub g: f64,
+    /// Estimated σ_i (mini-batch gradient std).
+    pub sigma: f64,
+    /// EMA factor for updates.
+    pub ema: f64,
+    /// Whether any observation has arrived.
+    pub observed: bool,
+}
+
+impl GradStats {
+    /// Priors: the coordinator has to decide round 1 before any client
+    /// ever trained, so it assumes a unit-scale gradient landscape.
+    pub fn prior() -> GradStats {
+        GradStats { g: 1.0, sigma: 0.5, ema: 0.5, observed: false }
+    }
+
+    /// Fold in one round's per-step gradient norms (from `train_step`).
+    pub fn update(&mut self, gnorms: &[f32]) {
+        if gnorms.is_empty() {
+            return;
+        }
+        let max = gnorms.iter().fold(0.0f64, |m, &x| m.max(x as f64));
+        let mean = gnorms.iter().map(|&x| x as f64).sum::<f64>() / gnorms.len() as f64;
+        let var = gnorms
+            .iter()
+            .map(|&x| (x as f64 - mean).powi(2))
+            .sum::<f64>()
+            / gnorms.len() as f64;
+        let sigma = var.sqrt().max(0.05 * mean);
+        if self.observed {
+            self.g = (1.0 - self.ema) * self.g + self.ema * max;
+            self.sigma = (1.0 - self.ema) * self.sigma + self.ema * sigma;
+        } else {
+            self.g = max;
+            self.sigma = sigma;
+            self.observed = true;
+        }
+    }
+
+    pub fn g2(&self) -> f64 {
+        self.g * self.g
+    }
+
+    pub fn sigma2(&self) -> f64 {
+        self.sigma * self.sigma
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> SystemParams {
+        SystemParams::femnist_small()
+    }
+
+    #[test]
+    fn constants_positive_under_prereqs() {
+        let params = p();
+        assert!(a1(&params) > 0.0);
+        assert!(a2(&params) > 0.0);
+        // Exact spot-check: η=0.05, L=1, τ=6.
+        let eta: f64 = 0.05;
+        let tau: f64 = 6.0;
+        let a1_want =
+            2.0 * eta * eta * (2.0 * tau.powi(3) - 3.0 * tau * tau + tau) / (3.0 - 6.0 * eta * eta * tau * tau);
+        assert!((a1(&params) - a1_want).abs() < 1e-12);
+        let a2_want = eta * tau + eta * eta * (tau * tau - tau) / (1.0 - 2.0 * eta * eta * tau * tau);
+        assert!((a2(&params) - a2_want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn data_term_full_participation_drops_exclusion_penalty() {
+        let params = p();
+        let n = 4;
+        let w_full = vec![0.25; n];
+        let w_round = vec![0.25; n];
+        let g2 = vec![4.0; n];
+        let s2 = vec![1.0; n];
+        let all = data_term(&params, &[true; 4], &w_full, &w_round, &g2, &s2);
+        let none = data_term(&params, &[false; 4], &w_full, &vec![0.0; n], &g2, &s2);
+        // No participants: pure exclusion penalty 4τ Σ G² = 4·6·16.
+        assert!((none - 4.0 * 6.0 * 16.0).abs() < 1e-9);
+        assert!(all < none);
+    }
+
+    #[test]
+    fn data_term_monotone_in_participation() {
+        let params = p();
+        let w_full = vec![0.4, 0.3, 0.2, 0.1];
+        let g2 = vec![1.0, 2.0, 3.0, 4.0];
+        let s2 = vec![0.5; 4];
+        // Adding one participant lowers the exclusion penalty more than the
+        // A1/A2 terms add (with these scales).
+        let t1 = data_term(&params, &[true, false, false, false], &w_full, &[1.0, 0.0, 0.0, 0.0], &g2, &s2);
+        let t2 = data_term(
+            &params,
+            &[true, true, false, false],
+            &w_full,
+            &[0.571, 0.429, 0.0, 0.0],
+            &g2,
+            &s2,
+        );
+        assert!(t2 < t1, "t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn quant_term_decreases_in_q() {
+        let params = p();
+        let t1 = quant_term_client(&params, 0.3, 0.8, 1);
+        let t4 = quant_term_client(&params, 0.3, 0.8, 4);
+        let t8 = quant_term_client(&params, 0.3, 0.8, 8);
+        assert!(t1 > t4 && t4 > t8);
+        // Exact: w Z L θ² / (8(2^q−1)²).
+        let want = 0.3 * 20_522.0 * 0.8 * 0.8 / (8.0 * 15.0 * 15.0);
+        assert!((t4 - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grad_stats_updates() {
+        let mut gs = GradStats::prior();
+        assert!(!gs.observed);
+        gs.update(&[1.0, 2.0, 3.0]);
+        assert!(gs.observed);
+        assert!((gs.g - 3.0).abs() < 1e-9);
+        let g_before = gs.g;
+        gs.update(&[10.0, 10.0, 10.0]);
+        assert!(gs.g > g_before && gs.g < 10.0); // EMA smoothing
+        assert!(gs.sigma > 0.0);
+    }
+
+    #[test]
+    fn grad_stats_empty_noop() {
+        let mut gs = GradStats::prior();
+        gs.update(&[]);
+        assert!(!gs.observed);
+    }
+}

@@ -1,0 +1,295 @@
+//! Synthetic federated datasets (paper §VI *Datasets*, substituted per
+//! DESIGN.md §4): per-client non-IID image classification with dataset
+//! sizes `D_i ~ N(µ, β)` — exactly the heterogeneity the paper studies —
+//! and Dirichlet label skew for the non-IID-ness.
+//!
+//! Samples are class-prototype images plus Gaussian noise, a synthetic
+//! stand-in for FEMNIST/CIFAR that keeps the learning problem real (loss
+//! decreases, accuracy is meaningful) while requiring no downloads.
+
+use crate::util::rng::Rng;
+
+/// One client's local dataset (flattened NHWC images + labels).
+#[derive(Clone, Debug)]
+pub struct ClientData {
+    /// D_i — number of samples.
+    pub size: usize,
+    /// `size * h*w*c` floats.
+    pub images: Vec<f32>,
+    /// `size` labels.
+    pub labels: Vec<i32>,
+}
+
+/// The federation: U client datasets + a balanced test set.
+#[derive(Clone, Debug)]
+pub struct Federation {
+    pub image_dims: (usize, usize, usize),
+    pub num_classes: usize,
+    pub clients: Vec<ClientData>,
+    pub test: ClientData,
+}
+
+/// Generation parameters.
+#[derive(Clone, Debug)]
+pub struct DataGenConfig {
+    pub num_clients: usize,
+    pub image_dims: (usize, usize, usize),
+    pub num_classes: usize,
+    /// µ — mean dataset size (paper: 1200).
+    pub size_mean: f64,
+    /// β — dataset size std (paper: 150 / 300).
+    pub size_std: f64,
+    /// Dirichlet concentration for label skew (smaller = more skewed).
+    pub dirichlet_alpha: f64,
+    /// Test-set size.
+    pub test_size: usize,
+    /// Per-pixel noise std around the class prototype.
+    pub noise_std: f64,
+    /// Floor on D_i (a client must at least fill one round of batches).
+    pub min_size: usize,
+}
+
+impl DataGenConfig {
+    pub fn new(num_clients: usize, image_dims: (usize, usize, usize), num_classes: usize) -> Self {
+        DataGenConfig {
+            num_clients,
+            image_dims,
+            num_classes,
+            size_mean: 1200.0,
+            size_std: 150.0,
+            dirichlet_alpha: 0.5,
+            test_size: 512,
+            noise_std: 0.35,
+            min_size: 64,
+        }
+    }
+}
+
+/// Gamma(α, 1) sampler (Marsaglia–Tsang; α boost for α < 1) — used for
+/// Dirichlet draws.
+fn gamma_sample(rng: &mut Rng, alpha: f64) -> f64 {
+    if alpha < 1.0 {
+        let u = rng.uniform().max(1e-12);
+        return gamma_sample(rng, alpha + 1.0) * u.powf(1.0 / alpha);
+    }
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.normal();
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u = rng.uniform().max(1e-12);
+        if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+            return d * v;
+        }
+    }
+}
+
+/// Dirichlet(α, …, α) over `k` categories.
+fn dirichlet(rng: &mut Rng, alpha: f64, k: usize) -> Vec<f64> {
+    let draws: Vec<f64> = (0..k).map(|_| gamma_sample(rng, alpha).max(1e-12)).collect();
+    let total: f64 = draws.iter().sum();
+    draws.into_iter().map(|x| x / total).collect()
+}
+
+/// Generate the federation. Deterministic per seed.
+pub fn generate(cfg: &DataGenConfig, seed: u64) -> Federation {
+    let mut rng = Rng::seed_from(seed);
+    let (h, w, c) = cfg.image_dims;
+    let pix = h * w * c;
+
+    // Class prototypes shared by every client (a single global task).
+    let prototypes: Vec<f32> = (0..cfg.num_classes * pix)
+        .map(|_| rng.gaussian(0.0, 1.0) as f32)
+        .collect();
+
+    let sample_into = |rng: &mut Rng, label: usize, images: &mut Vec<f32>| {
+        let base = &prototypes[label * pix..(label + 1) * pix];
+        for &b in base {
+            images.push(b + rng.gaussian(0.0, cfg.noise_std) as f32);
+        }
+    };
+
+    let mut clients = Vec::with_capacity(cfg.num_clients);
+    for ci in 0..cfg.num_clients {
+        let mut crng = rng.fork(ci as u64 + 1);
+        // D_i ~ N(µ, β), floored.
+        let size = crng
+            .gaussian(cfg.size_mean, cfg.size_std)
+            .round()
+            .max(cfg.min_size as f64) as usize;
+        // Label-skew mixture for this client.
+        let mix = dirichlet(&mut crng, cfg.dirichlet_alpha, cfg.num_classes);
+        let mut images = Vec::with_capacity(size * pix);
+        let mut labels = Vec::with_capacity(size);
+        for _ in 0..size {
+            // Sample a label from the client mixture.
+            let mut x = crng.uniform();
+            let mut label = cfg.num_classes - 1;
+            for (k, &p) in mix.iter().enumerate() {
+                if x < p {
+                    label = k;
+                    break;
+                }
+                x -= p;
+            }
+            labels.push(label as i32);
+            sample_into(&mut crng, label, &mut images);
+        }
+        clients.push(ClientData { size, images, labels });
+    }
+
+    // Balanced test set.
+    let mut trng = rng.fork(0xdead);
+    let mut images = Vec::with_capacity(cfg.test_size * pix);
+    let mut labels = Vec::with_capacity(cfg.test_size);
+    for i in 0..cfg.test_size {
+        let label = i % cfg.num_classes;
+        labels.push(label as i32);
+        sample_into(&mut trng, label, &mut images);
+    }
+    let test = ClientData { size: cfg.test_size, images, labels };
+
+    Federation { image_dims: cfg.image_dims, num_classes: cfg.num_classes, clients, test }
+}
+
+impl ClientData {
+    /// Sample `tau` mini-batches of `batch` (with replacement), returning
+    /// the stacked buffers `train_step` expects:
+    /// xs `[tau*batch*pix]`, ys `[tau*batch]`.
+    pub fn sample_batches(
+        &self,
+        rng: &mut Rng,
+        tau: usize,
+        batch: usize,
+        pix: usize,
+    ) -> (Vec<f32>, Vec<i32>) {
+        let mut xs = Vec::with_capacity(tau * batch * pix);
+        let mut ys = Vec::with_capacity(tau * batch);
+        for _ in 0..tau * batch {
+            let idx = rng.below(self.size);
+            xs.extend_from_slice(&self.images[idx * pix..(idx + 1) * pix]);
+            ys.push(self.labels[idx]);
+        }
+        (xs, ys)
+    }
+
+    /// Label histogram (diagnostics / tests).
+    pub fn label_histogram(&self, num_classes: usize) -> Vec<usize> {
+        let mut h = vec![0usize; num_classes];
+        for &l in &self.labels {
+            h[l as usize] += 1;
+        }
+        h
+    }
+}
+
+impl Federation {
+    pub fn sizes(&self) -> Vec<f64> {
+        self.clients.iter().map(|c| c.size as f64).collect()
+    }
+
+    pub fn pix(&self) -> usize {
+        let (h, w, c) = self.image_dims;
+        h * w * c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DataGenConfig {
+        let mut c = DataGenConfig::new(10, (8, 8, 1), 10);
+        c.size_mean = 300.0;
+        c.size_std = 60.0;
+        c.test_size = 100;
+        c
+    }
+
+    #[test]
+    fn shapes_consistent() {
+        let fed = generate(&cfg(), 1);
+        assert_eq!(fed.clients.len(), 10);
+        for cd in &fed.clients {
+            assert_eq!(cd.images.len(), cd.size * 64);
+            assert_eq!(cd.labels.len(), cd.size);
+            assert!(cd.labels.iter().all(|&l| (0..10).contains(&l)));
+        }
+        assert_eq!(fed.test.size, 100);
+    }
+
+    #[test]
+    fn sizes_follow_gaussian_roughly() {
+        let mut c = cfg();
+        c.num_clients = 200;
+        let fed = generate(&c, 2);
+        let sizes = fed.sizes();
+        let mean = sizes.iter().sum::<f64>() / sizes.len() as f64;
+        let std = (sizes.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / sizes.len() as f64).sqrt();
+        assert!((mean - 300.0).abs() < 20.0, "mean={mean}");
+        assert!((std - 60.0).abs() < 15.0, "std={std}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&cfg(), 7);
+        let b = generate(&cfg(), 7);
+        assert_eq!(a.clients[0].images, b.clients[0].images);
+        let c = generate(&cfg(), 8);
+        assert_ne!(a.clients[0].images, c.clients[0].images);
+    }
+
+    #[test]
+    fn label_skew_present() {
+        // With α = 0.5 the per-client label histograms must be visibly
+        // non-uniform for at least some clients.
+        let fed = generate(&cfg(), 3);
+        let mut max_frac: f64 = 0.0;
+        for cd in &fed.clients {
+            let h = cd.label_histogram(10);
+            let top = *h.iter().max().unwrap() as f64 / cd.size as f64;
+            max_frac = max_frac.max(top);
+        }
+        assert!(max_frac > 0.25, "no skew detected: {max_frac}");
+    }
+
+    #[test]
+    fn test_set_balanced() {
+        let fed = generate(&cfg(), 4);
+        let h = fed.test.label_histogram(10);
+        assert!(h.iter().all(|&n| n == 10), "{h:?}");
+    }
+
+    #[test]
+    fn batch_sampling_shapes() {
+        let fed = generate(&cfg(), 5);
+        let mut rng = Rng::seed_from(9);
+        let (xs, ys) = fed.clients[0].sample_batches(&mut rng, 6, 16, 64);
+        assert_eq!(xs.len(), 6 * 16 * 64);
+        assert_eq!(ys.len(), 6 * 16);
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut rng = Rng::seed_from(11);
+        for alpha in [0.1, 0.5, 1.0, 10.0] {
+            let d = dirichlet(&mut rng, alpha, 8);
+            let s: f64 = d.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(d.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn gamma_mean_matches_alpha() {
+        let mut rng = Rng::seed_from(13);
+        for alpha in [0.5, 2.0, 5.0] {
+            let n = 20_000;
+            let mean: f64 = (0..n).map(|_| gamma_sample(&mut rng, alpha)).sum::<f64>() / n as f64;
+            assert!((mean - alpha).abs() < 0.1 * alpha.max(1.0), "alpha={alpha} mean={mean}");
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Latency & energy models — paper eqs. (14)–(17), verbatim.
+//!
+//! Everything here is analytic (the paper's own methodology: energy is
+//! modeled, not measured), so the figures' energy axes are exact
+//! functions of the decisions (q, f, R, a) and the channel draws.
+
+use crate::config::SystemParams;
+
+/// Uplink latency, eq. (14): `ℓ / v` with ℓ = Z(q+1)+32 from eq. (5).
+pub fn t_com(params: &SystemParams, q: u32, rate_bps: f64) -> f64 {
+    params.payload_bits(q) / rate_bps
+}
+
+/// Uplink latency for a raw (unquantized) 32-bit upload.
+pub fn t_com_raw(params: &SystemParams, rate_bps: f64) -> f64 {
+    params.raw_payload_bits() / rate_bps
+}
+
+/// Uplink energy, eq. (15): `p · T^com`.
+pub fn e_com(params: &SystemParams, t_com_s: f64) -> f64 {
+    params.tx_power_w * t_com_s
+}
+
+/// Computation latency, eq. (16): `τ^e γ D_i / f`.
+pub fn t_cmp(params: &SystemParams, d_i: f64, f_hz: f64) -> f64 {
+    params.tau_e as f64 * params.gamma * d_i / f_hz
+}
+
+/// Computation energy, eq. (17): `τ^e α γ D_i f²`.
+pub fn e_cmp(params: &SystemParams, d_i: f64, f_hz: f64) -> f64 {
+    params.tau_e as f64 * params.alpha * params.gamma * d_i * f_hz * f_hz
+}
+
+/// The frequency that exactly meets the latency budget for payload
+/// `bits` at `rate_bps` (the paper's 𝒮(q) before the f^min clamp);
+/// `None` when even f = ∞ cannot meet it (communication alone exceeds
+/// T^max).
+pub fn freq_to_meet_deadline(
+    params: &SystemParams,
+    d_i: f64,
+    bits: f64,
+    rate_bps: f64,
+) -> Option<f64> {
+    let t_budget = params.t_max - bits / rate_bps;
+    if t_budget <= 0.0 {
+        return None;
+    }
+    Some(params.tau_e as f64 * params.gamma * d_i / t_budget)
+}
+
+/// The paper's 𝒮(q) = max(f^min, ...) — optimal frequency for a fixed
+/// integer q (Theorem 3 / Case 1 logic). `None` if infeasible even at
+/// f^max.
+pub fn s_of_q(params: &SystemParams, d_i: f64, q: u32, rate_bps: f64) -> Option<f64> {
+    let f = freq_to_meet_deadline(params, d_i, params.payload_bits(q), rate_bps)?;
+    let f = f.max(params.f_min);
+    if f > params.f_max {
+        None
+    } else {
+        Some(f)
+    }
+}
+
+/// Total per-round energy of a participating client (objective summand).
+pub fn client_energy(params: &SystemParams, d_i: f64, f_hz: f64, q: u32, rate_bps: f64) -> f64 {
+    e_cmp(params, d_i, f_hz) + e_com(params, t_com(params, q, rate_bps))
+}
+
+/// Total per-round latency of a participating client (C4 LHS).
+pub fn client_latency(params: &SystemParams, d_i: f64, f_hz: f64, q: u32, rate_bps: f64) -> f64 {
+    t_cmp(params, d_i, f_hz) + t_com(params, q, rate_bps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> SystemParams {
+        SystemParams::femnist_small()
+    }
+
+    #[test]
+    fn eq14_t_com_exact() {
+        let params = p();
+        // ℓ = Z·q + Z + 32 bits at `rate` bit/s.
+        let rate = 20e6;
+        let want = (20_522.0 * 8.0 + 20_522.0 + 32.0) / rate;
+        assert!((t_com(&params, 8, rate) - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn eq15_e_com_exact() {
+        let params = p();
+        assert!((e_com(&params, 0.01) - 0.2 * 0.01).abs() < 1e-15);
+    }
+
+    #[test]
+    fn eq16_t_cmp_exact() {
+        let params = p();
+        // τ^e γ D / f = 2 * 1000 * 1200 / 1e9 = 2.4 ms.
+        assert!((t_cmp(&params, 1200.0, 1e9) - 0.0024).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq17_e_cmp_exact() {
+        let params = p();
+        // 2 * 1e-26 * 1000 * 1200 * (1e9)^2 = 0.024 J.
+        assert!((e_cmp(&params, 1200.0, 1e9) - 0.024).abs() < 1e-9);
+    }
+
+    #[test]
+    fn e_cmp_quadratic_in_f() {
+        let params = p();
+        let e1 = e_cmp(&params, 1200.0, 4e8);
+        let e2 = e_cmp(&params, 1200.0, 8e8);
+        assert!((e2 / e1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_freq_matches_latency() {
+        let params = p();
+        let rate = 20e6;
+        let q = 6;
+        let f = s_of_q(&params, 1200.0, q, rate).unwrap();
+        let lat = client_latency(&params, 1200.0, f, q, rate);
+        assert!(lat <= params.t_max + 1e-12, "lat={lat}");
+        // At f^min the slack case: tiny dataset ⇒ clamped to f_min.
+        let f2 = s_of_q(&params, 1.0, 1, rate).unwrap();
+        assert_eq!(f2, params.f_min);
+    }
+
+    #[test]
+    fn infeasible_when_comm_alone_exceeds_budget() {
+        let params = p();
+        // Very low rate: even q = 1 can't fit in T^max.
+        assert!(s_of_q(&params, 1200.0, 1, 0.5e6).is_none());
+        // Huge q at a normal rate is also infeasible.
+        assert!(s_of_q(&params, 1200.0, 32, 10e6).is_none());
+    }
+
+    #[test]
+    fn q16_feasible_at_default_calibration() {
+        // The calibration promise from config/mod.rs: q up to ~16 feasible
+        // at a typical 20 Mb/s rate with D_i = 1200.
+        let params = p();
+        assert!(s_of_q(&params, 1200.0, 16, 20e6).is_some());
+    }
+}

@@ -1,0 +1,95 @@
+//! Shared experiment runner: profile → SystemParams mapping, federation
+//! generation, server construction, trace capture.
+
+use anyhow::Result;
+
+use crate::baselines::make_scheduler;
+use crate::config::SystemParams;
+use crate::data::{self, DataGenConfig};
+use crate::fl::Server;
+use crate::metrics::Trace;
+use crate::runtime::Runtime;
+
+/// Which Table-I column drives the wireless/compute constants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// γ = 1000, T^max = 0.02 s, V default 100.
+    Femnist,
+    /// γ = 2000, T^max = 0.05 s, V default 10.
+    Cifar,
+}
+
+/// One experiment run.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub algorithm: String,
+    pub task: Task,
+    pub rounds: usize,
+    /// Lyapunov penalty weight V (None = task default).
+    pub v: Option<f64>,
+    /// β — dataset-size std (paper: 150 / 300).
+    pub beta: f64,
+    /// µ — dataset-size mean.
+    pub mu: f64,
+    pub seed: u64,
+    pub eval_every: usize,
+}
+
+impl RunSpec {
+    pub fn new(algorithm: &str, task: Task) -> RunSpec {
+        RunSpec {
+            algorithm: algorithm.to_string(),
+            task,
+            rounds: 40,
+            v: None,
+            beta: 150.0,
+            mu: 1200.0,
+            seed: 1,
+            eval_every: 2,
+        }
+    }
+}
+
+/// Table-I parameters for `task`, adapted to the loaded profile's Z
+/// (T^max scales with Z per the calibration note in `config`).
+pub fn params_for(rt: &Runtime, task: Task, mu: f64) -> SystemParams {
+    let mut p = match task {
+        Task::Femnist => SystemParams::femnist_small(),
+        Task::Cifar => SystemParams::cifar_small(),
+    };
+    let z_ref = p.z;
+    p.z = rt.info.z;
+    p.t_max *= rt.info.z as f64 / z_ref as f64;
+    // Keep computation inside the scaled budget: T^max must leave head
+    // room for τ^e γ µ / f^max (matters for the tiny test profile).
+    let t_cmp_min = p.tau_e as f64 * p.gamma * mu / p.f_max;
+    if p.t_max < 2.0 * t_cmp_min {
+        p.t_max = 2.0 * t_cmp_min;
+    }
+    p.eta = rt.info.lr;
+    p
+}
+
+/// Run one (algorithm, task, β, V, seed) experiment on a loaded runtime.
+pub fn run_one(rt: &Runtime, spec: &RunSpec) -> Result<Trace> {
+    let mut params = params_for(rt, spec.task, spec.mu);
+    if let Some(v) = spec.v {
+        params.v = v;
+    }
+    let mut dcfg = DataGenConfig::new(params.num_clients, rt.info.image, rt.info.classes);
+    dcfg.size_mean = spec.mu;
+    dcfg.size_std = spec.beta;
+    let fed = data::generate(&dcfg, spec.seed);
+    let sched = make_scheduler(&spec.algorithm, spec.seed.wrapping_mul(31).wrapping_add(7))
+        .ok_or_else(|| anyhow::anyhow!("unknown algorithm `{}`", spec.algorithm))?;
+    let mut server = Server::new(params, rt, fed, sched, spec.seed)?;
+    server.eval_every = spec.eval_every;
+    server.run(spec.rounds)
+}
+
+/// Results directory (`$QCCF_RESULTS` or `./results`).
+pub fn results_dir() -> std::path::PathBuf {
+    std::env::var("QCCF_RESULTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("results"))
+}

@@ -1,0 +1,65 @@
+//! Fig. 2 — trade-off between energy consumption and FL performance:
+//! sweep the Lyapunov penalty weight V and report final accuracy and
+//! accumulated energy of QCCF (paper: both descend as V grows).
+
+use anyhow::Result;
+
+use super::common::{results_dir, run_one, RunSpec, Task};
+use crate::runtime::Runtime;
+use crate::util::csv::CsvWriter;
+use crate::util::table;
+
+#[derive(Clone, Debug)]
+pub struct Fig2Row {
+    pub v: f64,
+    pub final_acc: f64,
+    pub best_acc: f64,
+    pub cum_energy: f64,
+}
+
+pub fn run(rt: &Runtime, task: Task, v_values: &[f64], rounds: usize, seed: u64) -> Result<Vec<Fig2Row>> {
+    let mut rows = Vec::new();
+    for &v in v_values {
+        let mut spec = RunSpec::new("qccf", task);
+        spec.rounds = rounds;
+        spec.v = Some(v);
+        spec.seed = seed;
+        let trace = run_one(rt, &spec)?;
+        rows.push(Fig2Row {
+            v,
+            final_acc: trace.final_accuracy().unwrap_or(f64::NAN),
+            best_acc: trace.best_accuracy().unwrap_or(f64::NAN),
+            cum_energy: trace.total_energy(),
+        });
+        let path = results_dir().join(format!("fig2_{:?}_v{v}.csv", task)).with_extension("csv");
+        trace.write_csv(&path)?;
+    }
+    Ok(rows)
+}
+
+pub fn print(rows: &[Fig2Row]) {
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                table::fnum(r.v),
+                format!("{:.4}", r.final_acc),
+                format!("{:.4}", r.best_acc),
+                table::fnum(r.cum_energy),
+            ]
+        })
+        .collect();
+    println!("Fig. 2 — QCCF accuracy / accumulated energy vs V");
+    println!("{}", table::render(&["V", "final acc", "best acc", "energy (J)"], &body));
+}
+
+pub fn write_summary(rows: &[Fig2Row], task: Task) -> Result<()> {
+    let path = results_dir().join(format!("fig2_{task:?}_summary.csv"));
+    let mut w = CsvWriter::create(&path, &["v", "final_acc", "best_acc", "cum_energy_j"])?;
+    for r in rows {
+        w.row_f64(&[r.v, r.final_acc, r.best_acc, r.cum_energy])?;
+    }
+    w.flush()?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Fig. 4 — CIFAR-sim: the same five-algorithm grid as Fig. 3 under the
+//! CIFAR-10 column of Table I (γ = 2000 cycles/sample, T^max = 0.05 s,
+//! V = 10). Runs on the loaded profile's model; the wireless/compute
+//! constants are what differ from Fig. 3.
+
+use anyhow::Result;
+
+use super::common::Task;
+use super::fig3::{self, AlgRow};
+use crate::runtime::Runtime;
+
+pub fn run_grid(rt: &Runtime, betas: &[f64], rounds: usize, seed: u64) -> Result<Vec<AlgRow>> {
+    fig3::run_grid(rt, Task::Cifar, betas, rounds, seed, "fig4")
+}
+
+pub fn print(rows: &[AlgRow]) {
+    fig3::print(rows, "Fig. 4 — CIFAR-sim: accuracy & accumulated energy (5 algorithms)");
+}
+
+pub fn write_summary(rows: &[AlgRow]) -> Result<()> {
+    fig3::write_summary(rows, "fig4")
+}

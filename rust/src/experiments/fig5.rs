@@ -1,0 +1,182 @@
+//! Fig. 5 — the doubly adaptive quantization level itself:
+//!
+//! * (a) mean q per round for the four quantizing algorithms — QCCF /
+//!   Principle / Same-Size rise with the training process,
+//!   Channel-Allocate stays flat (channel statistics don't drift);
+//! * (b) per-client mean q against dataset size D_i — negative
+//!   correlation for QCCF and Channel-Allocate (Remark 2), positive for
+//!   Principle, flat for Same-Size.
+
+use anyhow::Result;
+
+use super::common::{results_dir, run_one, RunSpec, Task};
+use crate::metrics::Trace;
+use crate::runtime::Runtime;
+use crate::util::csv::CsvWriter;
+use crate::util::table;
+
+/// Quantizing algorithms shown in Fig. 5 (no-quant has no q).
+pub const QUANTIZING: [&str; 4] = ["qccf", "channel-allocate", "principle", "same-size"];
+
+#[derive(Clone, Debug)]
+pub struct Fig5Data {
+    pub algorithm: String,
+    /// (round, mean q) series — Fig. 5(a).
+    pub q_by_round: Vec<(usize, f64)>,
+    /// (D_i, mean q of client i) — Fig. 5(b).
+    pub q_by_size: Vec<(f64, f64)>,
+}
+
+/// Pearson correlation (the Fig. 5b "negatively correlated" check).
+pub fn correlation(xy: &[(f64, f64)]) -> f64 {
+    let n = xy.len() as f64;
+    if n < 2.0 {
+        return f64::NAN;
+    }
+    let mx = xy.iter().map(|p| p.0).sum::<f64>() / n;
+    let my = xy.iter().map(|p| p.1).sum::<f64>() / n;
+    let (mut sxy, mut sxx, mut syy) = (0.0f64, 0.0f64, 0.0f64);
+    for &(x, y) in xy {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    sxy / (sxx.sqrt() * syy.sqrt()).max(1e-12)
+}
+
+fn per_client_mean_q(trace: &Trace, sizes: &[f64]) -> Vec<(f64, f64)> {
+    let u = sizes.len();
+    let mut sum = vec![0.0f64; u];
+    let mut cnt = vec![0usize; u];
+    for rec in &trace.records {
+        for (i, q) in rec.q_per_client.iter().enumerate() {
+            if let Some(q) = q {
+                if *q > 0 {
+                    sum[i] += *q as f64;
+                    cnt[i] += 1;
+                }
+            }
+        }
+    }
+    (0..u)
+        .filter(|&i| cnt[i] > 0)
+        .map(|i| (sizes[i], sum[i] / cnt[i] as f64))
+        .collect()
+}
+
+/// Run the four quantizing algorithms over several seeds: the level
+/// trajectory is averaged pointwise, and the (D_i, q̄_i) cloud pools all
+/// seeds — with only U = 10 clients a single placement can alias client
+/// distance with D_i and fake a correlation, so Remark-2 verdicts need
+/// several independent placements.
+pub fn run(rt: &Runtime, rounds: usize, seeds: &[u64]) -> Result<Vec<Fig5Data>> {
+    let mut out = Vec::new();
+    for alg in QUANTIZING {
+        let mut traj_sum: Vec<(usize, f64, usize)> = Vec::new();
+        let mut cloud: Vec<(f64, f64)> = Vec::new();
+        for &seed in seeds {
+            let mut spec = RunSpec::new(alg, Task::Femnist);
+            spec.rounds = rounds;
+            spec.seed = seed;
+            spec.eval_every = 0; // Fig. 5 only needs decisions, not accuracy
+            let trace = run_one(rt, &spec)?;
+            for (round, q) in trace.q_trajectory() {
+                match traj_sum.iter_mut().find(|(r, _, _)| *r == round) {
+                    Some((_, sum, n)) => {
+                        *sum += q;
+                        *n += 1;
+                    }
+                    None => traj_sum.push((round, q, 1)),
+                }
+            }
+            // Recover the D_i of this run (same data seed ⇒ same sizes).
+            let mut dcfg = crate::data::DataGenConfig::new(
+                crate::config::SystemParams::femnist_small().num_clients,
+                rt.info.image,
+                rt.info.classes,
+            );
+            dcfg.size_mean = spec.mu;
+            dcfg.size_std = spec.beta;
+            let sizes = crate::data::generate(&dcfg, seed).sizes();
+            cloud.extend(per_client_mean_q(&trace, &sizes));
+        }
+        traj_sum.sort_by_key(|(r, _, _)| *r);
+        out.push(Fig5Data {
+            algorithm: alg.to_string(),
+            q_by_round: traj_sum.into_iter().map(|(r, s, n)| (r, s / n as f64)).collect(),
+            q_by_size: cloud,
+        });
+    }
+    Ok(out)
+}
+
+pub fn print(data: &[Fig5Data]) {
+    println!("Fig. 5(a) — mean quantization level vs communication round");
+    let mut body = Vec::new();
+    for d in data {
+        let first = d.q_by_round.first().map(|p| p.1).unwrap_or(f64::NAN);
+        let mid = d.q_by_round.get(d.q_by_round.len() / 2).map(|p| p.1).unwrap_or(f64::NAN);
+        let last = d.q_by_round.last().map(|p| p.1).unwrap_or(f64::NAN);
+        body.push(vec![
+            d.algorithm.clone(),
+            format!("{first:.2}"),
+            format!("{mid:.2}"),
+            format!("{last:.2}"),
+            format!("{:+.2}", last - first),
+        ]);
+    }
+    println!(
+        "{}",
+        table::render(&["algorithm", "q(start)", "q(mid)", "q(end)", "Δq"], &body)
+    );
+
+    println!("Fig. 5(b) — quantization level vs dataset size (Pearson r)");
+    let mut body = Vec::new();
+    for d in data {
+        let r = correlation(&d.q_by_size);
+        let verdict = if r < -0.2 {
+            "negative (Remark 2)"
+        } else if r > 0.2 {
+            "positive"
+        } else {
+            "flat"
+        };
+        body.push(vec![d.algorithm.clone(), format!("{r:+.3}"), verdict.to_string()]);
+    }
+    println!("{}", table::render(&["algorithm", "corr(q, D_i)", "verdict"], &body));
+}
+
+pub fn write_csv(data: &[Fig5Data]) -> Result<()> {
+    let dir = results_dir();
+    let mut w = CsvWriter::create(dir.join("fig5a_q_by_round.csv"), &["algorithm", "round", "mean_q"])?;
+    for d in data {
+        for &(round, q) in &d.q_by_round {
+            w.row(&[d.algorithm.clone(), round.to_string(), format!("{q:.4}")])?;
+        }
+    }
+    w.flush()?;
+    let mut w = CsvWriter::create(dir.join("fig5b_q_by_size.csv"), &["algorithm", "d_i", "mean_q"])?;
+    for d in data {
+        for &(size, q) in &d.q_by_size {
+            w.row(&[d.algorithm.clone(), format!("{size}"), format!("{q:.4}")])?;
+        }
+    }
+    w.flush()?;
+    println!("wrote {} and fig5b_q_by_size.csv", dir.join("fig5a_q_by_round.csv").display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn correlation_signs() {
+        let pos: Vec<(f64, f64)> = (0..20).map(|i| (i as f64, 2.0 * i as f64 + 1.0)).collect();
+        let neg: Vec<(f64, f64)> = (0..20).map(|i| (i as f64, -0.5 * i as f64)).collect();
+        assert!(correlation(&pos) > 0.99);
+        assert!(correlation(&neg) < -0.99);
+        let flat: Vec<(f64, f64)> = (0..20).map(|i| (i as f64, 3.0)).collect();
+        assert!(correlation(&flat).abs() < 0.5);
+    }
+}

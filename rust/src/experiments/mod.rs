@@ -1,0 +1,17 @@
+//! Experiment harness: regenerates every figure of the paper's §VI
+//! (see DESIGN.md §6 for the experiment index and EXPERIMENTS.md for
+//! recorded paper-vs-measured outcomes).
+//!
+//! * [`fig2`] — V trade-off (accuracy & accumulated energy vs V);
+//! * [`fig3`] — FEMNIST-sim: accuracy + energy, 5 algorithms, β ∈ {150, 300};
+//! * [`fig4`] — CIFAR-sim: same grid under the CIFAR wireless column;
+//! * [`fig5`] — quantization-level dynamics (vs round, vs dataset size).
+
+pub mod ablate;
+pub mod common;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+
+pub use common::{run_one, RunSpec, Task};

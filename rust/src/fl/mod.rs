@@ -1,0 +1,378 @@
+//! The FL server loop (paper §II-A, Fig. 1): per communication round —
+//! **decision → broadcast → local update → quantize → upload →
+//! aggregate** — with the wireless/energy bookkeeping and Lyapunov queue
+//! updates of §IV–§V.
+//!
+//! The server *realizes* whatever the scheduler intended: it trains the
+//! scheduled clients through the PJRT runtime, quantizes their uploads
+//! through the Pallas-kernel artifact, re-checks the latency budget C4
+//! with the client's actual D_i (so wireless-oblivious baselines pay for
+//! timeouts exactly as in §VI), accounts energy with eqs. (14)–(17), and
+//! aggregates per eq. (2) over the uploads that made the deadline.
+
+use anyhow::Result;
+
+use crate::config::SystemParams;
+use crate::convergence::{self, GradStats};
+use crate::data::Federation;
+use crate::energy;
+use crate::lyapunov::Queues;
+use crate::metrics::{RoundRecord, Trace};
+use crate::runtime::Runtime;
+use crate::sched::{RoundDecision, RoundInputs, Scheduler};
+use crate::util::rng::Rng;
+use crate::util::stats::linf_norm;
+use crate::wireless::ChannelModel;
+
+/// Per-client coordinator-side state.
+#[derive(Clone, Debug)]
+pub struct ClientState {
+    pub id: usize,
+    /// D_i.
+    pub size: f64,
+    pub stats: GradStats,
+    /// θ^max estimate used at decision time (from the global model).
+    pub theta_max: f64,
+    /// q from the last participation (Case-5 anchor).
+    pub q_prev: f64,
+    /// Private noise stream for quantization.
+    pub rng: Rng,
+}
+
+/// The FL server.
+pub struct Server<'rt> {
+    pub params: SystemParams,
+    runtime: &'rt Runtime,
+    fed: Federation,
+    pub clients: Vec<ClientState>,
+    channel_model: ChannelModel,
+    pub queues: Queues,
+    scheduler: Box<dyn Scheduler>,
+    /// Global model θ^n.
+    pub theta: Vec<f32>,
+    round: usize,
+    rng: Rng,
+    /// Evaluate every k rounds (0 = never).
+    pub eval_every: usize,
+}
+
+impl<'rt> Server<'rt> {
+    pub fn new(
+        params: SystemParams,
+        runtime: &'rt Runtime,
+        fed: Federation,
+        scheduler: Box<dyn Scheduler>,
+        seed: u64,
+    ) -> Result<Server<'rt>> {
+        let mut rng = Rng::seed_from(seed);
+        let channel_model = ChannelModel::new(&params, &mut rng);
+        let theta = runtime.init()?;
+        let theta_max0 = linf_norm(&theta) as f64;
+        let clients: Vec<ClientState> = fed
+            .clients
+            .iter()
+            .enumerate()
+            .map(|(id, cd)| ClientState {
+                id,
+                size: cd.size as f64,
+                stats: GradStats::prior(),
+                theta_max: theta_max0,
+                q_prev: 4.0,
+                rng: rng.fork(1000 + id as u64),
+            })
+            .collect();
+        // Queue warm start: treat the initial broadcast as a "round 0"
+        // in which nothing was uploaded (λ1 sees the full exclusion
+        // penalty) and any upload would have been 1-bit (λ2 sees the
+        // q = 1 error mass). Without this, round 1 runs with λ = 0 —
+        // zero constraint pressure — and QCCF wastes its first round on
+        // a minimal, maximally-quantized participation the paper's
+        // trajectories do not show.
+        let mut queues = Queues::new();
+        let w_full: Vec<f64> = {
+            let total: f64 = clients.iter().map(|c: &ClientState| c.size).sum();
+            clients.iter().map(|c| c.size / total).collect()
+        };
+        let g2: Vec<f64> = clients.iter().map(|c| c.stats.g2()).collect();
+        let sigma2: Vec<f64> = clients.iter().map(|c| c.stats.sigma2()).collect();
+        queues.lambda1 = convergence::data_term(
+            &params,
+            &vec![false; params.num_clients],
+            &w_full,
+            &vec![0.0; params.num_clients],
+            &g2,
+            &sigma2,
+        );
+        // λ2 warm-starts at the backlog that makes the round-1 optimum
+        // a *low* level (q ≈ 3 for a typical client) — safely above the
+        // destructive q = 1 regime but below equilibrium, so the level
+        // trajectory rises over training (the paper's Remark 1 /
+        // Fig. 5(a) dynamic) instead of jumping to the stationary point.
+        let typical_rate = 18e6_f64.min(params.bandwidth_hz * 25.0);
+        queues.lambda2 = crate::solver::lambda2_for_target_q(
+            &params,
+            3.0,
+            typical_rate,
+            1.0 / params.num_clients as f64,
+            theta_max0,
+        );
+        Ok(Server {
+            params,
+            runtime,
+            fed,
+            clients,
+            channel_model,
+            queues,
+            scheduler,
+            theta,
+            round: 0,
+            rng,
+            eval_every: 2,
+        })
+    }
+
+    pub fn scheduler_name(&self) -> &'static str {
+        self.scheduler.name()
+    }
+
+    /// Round-2 recalibration of ε1/ε2 (see `SystemParams::auto_eps`):
+    /// ε1 slightly above the *minimum achievable* C6 arrival (full
+    /// participation with the observed Ĝ/σ̂), ε2 at the C7 arrival of a
+    /// mid-range q = 8 — so both queues are stabilizable but exert
+    /// pressure whenever scheduling or quantization slacks off.
+    fn recalibrate_eps(&mut self) {
+        let p = &self.params;
+        let u = p.num_clients;
+        let sizes: Vec<f64> = self.clients.iter().map(|c| c.size).collect();
+        let d_total: f64 = sizes.iter().sum();
+        let w_full: Vec<f64> = sizes.iter().map(|d| d / d_total).collect();
+        let g2: Vec<f64> = self.clients.iter().map(|c| c.stats.g2()).collect();
+        let sigma2: Vec<f64> = self.clients.iter().map(|c| c.stats.sigma2()).collect();
+        let data_full =
+            convergence::data_term(p, &vec![true; u], &w_full, &w_full, &g2, &sigma2);
+        let tmax = self.clients.iter().map(|c| c.theta_max).fold(0.0f64, f64::max);
+        let quant_q8: f64 = (0..u)
+            .map(|i| convergence::quant_term_client(p, w_full[i], tmax, 8))
+            .sum();
+        self.params.eps1 = 1.02 * data_full;
+        self.params.eps2 = quant_q8.max(1e-12);
+        crate::debug_log!(
+            "fl",
+            "auto-eps: eps1={:.4} eps2={:.6}",
+            self.params.eps1,
+            self.params.eps2
+        );
+    }
+
+    /// Run one communication round; returns its record.
+    pub fn run_round(&mut self) -> Result<RoundRecord> {
+        self.round += 1;
+        // ε tracking (see `SystemParams::auto_eps`): gradient norms decay
+        // as training converges, so a fixed ε1 calibrated early becomes
+        // asymptotically slack and the C6 pressure vanishes (the queue
+        // drains and scheduling collapses); tracking the current Ĝ/σ̂
+        // keeps C6/C7 tight-but-satisfiable all along the run.
+        if self.params.auto_eps && self.round >= 2 {
+            self.recalibrate_eps();
+        }
+        let p = self.params.clone();
+        let u = p.num_clients;
+
+        // --- Step 1: decision ------------------------------------------
+        let channels = self.channel_model.draw(&mut self.rng);
+        let sizes: Vec<f64> = self.clients.iter().map(|c| c.size).collect();
+        let d_total: f64 = sizes.iter().sum();
+        let w_full: Vec<f64> = sizes.iter().map(|d| d / d_total).collect();
+        let g2: Vec<f64> = self.clients.iter().map(|c| c.stats.g2()).collect();
+        let sigma2: Vec<f64> = self.clients.iter().map(|c| c.stats.sigma2()).collect();
+        let theta_max: Vec<f64> = self.clients.iter().map(|c| c.theta_max).collect();
+        let q_prev: Vec<f64> = self.clients.iter().map(|c| c.q_prev).collect();
+        let inputs = RoundInputs {
+            params: &p,
+            round: self.round,
+            channels: &channels,
+            sizes: &sizes,
+            w_full: &w_full,
+            g2: &g2,
+            sigma2: &sigma2,
+            theta_max: &theta_max,
+            q_prev: &q_prev,
+            queues: &self.queues,
+        };
+        let t_decide = std::time::Instant::now();
+        let decision: RoundDecision = self.scheduler.decide(&inputs);
+        let decide_seconds = t_decide.elapsed().as_secs_f64();
+        if crate::util::logging::enabled(crate::util::logging::Level::Debug) {
+            let greedy = crate::sched::greedy_allocation(&inputs);
+            let (jg, ag) = crate::sched::evaluate_allocation(
+                &inputs,
+                &greedy,
+                crate::solver::Case5Mode::Taylor,
+            );
+            crate::debug_log!(
+                "fl",
+                "round {}: decided {} participants (J0={:.3e}); greedy-full {} participants (J0={:.3e}); λ1={:.3e} ε1={:.3e} λ2={:.3e} ε2={:.3e}",
+                self.round,
+                decision.assignments.iter().flatten().count(),
+                decision.j0,
+                ag.iter().flatten().count(),
+                jg,
+                self.queues.lambda1,
+                p.eps1,
+                self.queues.lambda2,
+                p.eps2
+            );
+        }
+
+        // --- Steps 2–4: broadcast, local update, quantize, upload ------
+        let t_compute = std::time::Instant::now();
+        let info = &self.runtime.info;
+        let pix = info.pix();
+        let mut uploads: Vec<(usize, Vec<f32>, f64)> = Vec::new(); // (client, model, w-unnormalized)
+        let mut scheduled = 0usize;
+        let mut round_energy = 0.0f64;
+        let mut max_latency = 0.0f64;
+        let mut loss_sum = 0.0f64;
+        let mut loss_n = 0usize;
+        let mut q_per_client: Vec<Option<u32>> = vec![None; u];
+        let mut realized_q: Vec<Option<u32>> = vec![None; u];
+        let mut w_round = vec![0.0f64; u];
+        let mut realized_theta_max = vec![0.0f64; u];
+        let mut participating = vec![false; u];
+
+        // w_i^n over scheduled clients (the aggregation weights the
+        // server *intends*; uploads that time out are renormalized out).
+        let d_sched: f64 = decision
+            .assignments
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.is_some())
+            .map(|(i, _)| sizes[i])
+            .sum();
+
+        for (i, d) in decision.assignments.iter().enumerate() {
+            let Some(d) = d else { continue };
+            scheduled += 1;
+            participating[i] = true;
+            w_round[i] = sizes[i] / d_sched;
+
+            // Local update (τ steps through the AOT train_step).
+            let (xs, ys) =
+                self.fed.clients[i].sample_batches(&mut self.clients[i].rng, info.tau, info.batch, pix);
+            let out = self.runtime.train_step(&self.theta, &xs, &ys, info.lr as f32)?;
+            self.clients[i].stats.update(&out.gnorms);
+            loss_sum += out.mean_loss as f64;
+            loss_n += 1;
+
+            // Quantize (or raw upload).
+            let (upload, tmax, bits) = match d.q {
+                Some(q) => {
+                    let mut noise = vec![0.0f32; info.z];
+                    self.clients[i].rng.fill_uniform_f32(&mut noise);
+                    let (qtheta, tmax) = self.runtime.quantize(&out.theta, &noise, q as f32)?;
+                    (qtheta, tmax as f64, p.payload_bits(q))
+                }
+                None => {
+                    let tmax = linf_norm(&out.theta) as f64;
+                    (out.theta.clone(), tmax, p.raw_payload_bits())
+                }
+            };
+            realized_theta_max[i] = tmax;
+            self.clients[i].theta_max = tmax;
+            q_per_client[i] = Some(d.q.unwrap_or(0));
+            realized_q[i] = d.q;
+            self.clients[i].q_prev = d.q.unwrap_or(32) as f64;
+
+            // Latency & energy with the *actual* D_i and decision (f, q).
+            let t_cmp = energy::t_cmp(&p, sizes[i], d.f);
+            let t_com = bits / d.rate;
+            let latency = t_cmp + t_com;
+            max_latency = max_latency.max(latency);
+            round_energy += energy::e_cmp(&p, sizes[i], d.f) + energy::e_com(&p, t_com);
+
+            // C4 check: uploads past the deadline are dropped (energy
+            // already spent) — the paper's timeout/dropout mechanism.
+            // The No-Quantization baseline is exempt (no latency design).
+            if decision.deadline_exempt || latency <= p.t_max * (1.0 + 1e-9) {
+                uploads.push((i, upload, sizes[i]));
+            }
+        }
+        let compute_seconds = t_compute.elapsed().as_secs_f64();
+
+        // --- Step 5: aggregation (eq. (2)) ------------------------------
+        let aggregated = uploads.len();
+        if aggregated > 0 {
+            let w_total: f64 = uploads.iter().map(|(_, _, w)| w).sum();
+            let mut next = vec![0.0f32; self.theta.len()];
+            for (_, model, w) in &uploads {
+                let wf = (*w / w_total) as f32;
+                for (n, m) in next.iter_mut().zip(model.iter()) {
+                    *n += wf * m;
+                }
+            }
+            self.theta = next;
+        }
+
+        // --- Queue updates (eqs. (23)–(24)) with realized terms ---------
+        let data = convergence::data_term(&p, &participating, &w_full, &w_round, &g2, &sigma2);
+        let quant = convergence::quant_term(&p, &w_round, &realized_theta_max, &realized_q);
+        self.queues.update(&p, data, quant);
+
+        // Refresh decision-time θ^max estimates from the new global model.
+        let tmax_global = linf_norm(&self.theta) as f64;
+        for c in self.clients.iter_mut() {
+            c.theta_max = if c.theta_max > 0.0 { 0.5 * c.theta_max + 0.5 * tmax_global } else { tmax_global };
+        }
+
+        // --- Evaluation --------------------------------------------------
+        let (test_loss, test_acc) = if self.eval_every > 0 && self.round % self.eval_every == 0 {
+            let (l, a) = self.runtime.evaluate(&self.theta, &self.fed.test.images, &self.fed.test.labels)?;
+            (Some(l), Some(a))
+        } else {
+            (None, None)
+        };
+
+        let qs: Vec<f64> = realized_q.iter().flatten().map(|&q| q as f64).collect();
+        let mean_q = if qs.is_empty() { 0.0 } else { qs.iter().sum::<f64>() / qs.len() as f64 };
+
+        Ok(RoundRecord {
+            round: self.round,
+            scheduled,
+            aggregated,
+            energy: round_energy,
+            cum_energy: 0.0, // filled by run()
+            train_loss: if loss_n > 0 { loss_sum / loss_n as f64 } else { f64::NAN },
+            test_loss,
+            test_acc,
+            mean_q,
+            q_per_client,
+            lambda1: self.queues.lambda1,
+            lambda2: self.queues.lambda2,
+            max_latency,
+            decide_seconds,
+            compute_seconds,
+        })
+    }
+
+    /// Run `rounds` communication rounds and return the trace.
+    pub fn run(&mut self, rounds: usize) -> Result<Trace> {
+        let mut trace = Trace::new(self.scheduler.name());
+        let mut cum = 0.0;
+        for _ in 0..rounds {
+            let mut rec = self.run_round()?;
+            cum += rec.energy;
+            rec.cum_energy = cum;
+            trace.push(rec);
+        }
+        Ok(trace)
+    }
+
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Per-client dataset sizes (diagnostics / Fig. 5b).
+    pub fn sizes(&self) -> Vec<f64> {
+        self.clients.iter().map(|c| c.size).collect()
+    }
+}

@@ -1,0 +1,419 @@
+//! Genetic algorithm for the combinatorial subproblem **P3.1**
+//! (paper §V-D, Algorithm 1): choose the channel-allocation matrix Rⁿ
+//! (and with it the participation vector aⁿ via C2).
+//!
+//! Chromosome encoding: `alloc[c] ∈ {None, Some(client)}` per channel,
+//! with the OFDMA constraints C1–C3 enforced *structurally* — a channel
+//! carries at most one client, and a repair pass keeps each client on at
+//! most one channel. Fitness is eq. (43): `(J0^max − J0)^ι`, with J0
+//! supplied by the caller (the QCCF scheduler evaluates the inner
+//! closed-form solver per candidate).
+
+use crate::util::rng::Rng;
+
+/// One channel-allocation chromosome.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Chromosome {
+    /// `alloc[c]` = client on channel c (None = channel idle).
+    pub alloc: Vec<Option<usize>>,
+}
+
+impl Chromosome {
+    pub fn num_channels(&self) -> usize {
+        self.alloc.len()
+    }
+
+    /// Participation vector aⁿ implied by C2.
+    pub fn participants(&self, num_clients: usize) -> Vec<bool> {
+        let mut a = vec![false; num_clients];
+        for &slot in &self.alloc {
+            if let Some(i) = slot {
+                a[i] = true;
+            }
+        }
+        a
+    }
+
+    /// Channel assigned to a client, if any.
+    pub fn channel_of(&self, client: usize) -> Option<usize> {
+        self.alloc.iter().position(|&s| s == Some(client))
+    }
+
+    /// C1–C3 hold structurally except client-uniqueness; repair removes
+    /// duplicate assignments (keeps the first occurrence).
+    pub fn repair(&mut self, num_clients: usize) {
+        let mut seen = vec![false; num_clients];
+        for slot in self.alloc.iter_mut() {
+            if let Some(i) = *slot {
+                if i >= num_clients || seen[i] {
+                    *slot = None;
+                } else {
+                    seen[i] = true;
+                }
+            }
+        }
+    }
+
+    /// Constraint check (used by tests and debug assertions): every
+    /// client on ≤ 1 channel, all indices in range.
+    pub fn is_valid(&self, num_clients: usize) -> bool {
+        let mut seen = vec![false; num_clients];
+        for &slot in &self.alloc {
+            if let Some(i) = slot {
+                if i >= num_clients || seen[i] {
+                    return false;
+                }
+                seen[i] = true;
+            }
+        }
+        true
+    }
+
+    /// Random chromosome: each channel independently idle or carrying a
+    /// random client, then repaired.
+    pub fn random(num_channels: usize, num_clients: usize, rng: &mut Rng) -> Chromosome {
+        let alloc = (0..num_channels)
+            .map(|_| {
+                if rng.chance(0.8) {
+                    Some(rng.below(num_clients))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let mut ch = Chromosome { alloc };
+        ch.repair(num_clients);
+        ch
+    }
+}
+
+/// GA hyperparameters (paper leaves them unspecified; defaults tuned for
+/// U = C = 10 where the search space is ~10! permutation-like).
+#[derive(Clone, Copy, Debug)]
+pub struct GaParams {
+    pub population: usize,
+    pub generations: usize,
+    /// p^c — crossover probability.
+    pub crossover_p: f64,
+    /// p^m — per-gene mutation probability.
+    pub mutation_p: f64,
+    /// ι — fitness dispersion exponent (eq. (43)).
+    pub iota: f64,
+    /// Elites copied unchanged each generation.
+    pub elites: usize,
+}
+
+impl Default for GaParams {
+    fn default() -> Self {
+        GaParams {
+            population: 24,
+            generations: 16,
+            crossover_p: 0.85,
+            mutation_p: 0.08,
+            iota: 2.0,
+            elites: 2,
+        }
+    }
+}
+
+/// Result of a GA run.
+#[derive(Clone, Debug)]
+pub struct GaOutcome {
+    pub best: Chromosome,
+    pub best_j0: f64,
+    /// Best J0 per generation (convergence diagnostics / ablations).
+    pub history: Vec<f64>,
+    /// Total fitness evaluations performed.
+    pub evals: usize,
+}
+
+/// Run Algorithm 1. `eval` returns J0 (lower = better); infeasible
+/// allocations should return `f64::INFINITY` (fitness 0 per the paper).
+pub fn optimize<F>(
+    num_channels: usize,
+    num_clients: usize,
+    params: &GaParams,
+    rng: &mut Rng,
+    eval: F,
+) -> GaOutcome
+where
+    F: FnMut(&Chromosome) -> f64,
+{
+    optimize_with_seeds(num_channels, num_clients, params, rng, &[], eval)
+}
+
+/// [`optimize`] with caller-provided seed chromosomes injected into the
+/// initial population (e.g. the greedy rate-maximizing allocation), so
+/// the GA result is never worse than the best seed.
+pub fn optimize_with_seeds<F>(
+    num_channels: usize,
+    num_clients: usize,
+    params: &GaParams,
+    rng: &mut Rng,
+    seeds: &[Chromosome],
+    mut eval: F,
+) -> GaOutcome
+where
+    F: FnMut(&Chromosome) -> f64,
+{
+    let mut evals = 0usize;
+    let mut pop: Vec<Chromosome> = (0..params.population)
+        .map(|_| Chromosome::random(num_channels, num_clients, rng))
+        .collect();
+    // Seed one greedy identity-ish chromosome so the GA never starts
+    // below the trivial "client i on channel i" allocation.
+    if num_channels >= 1 {
+        let alloc = (0..num_channels)
+            .map(|c| if c < num_clients { Some(c) } else { None })
+            .collect();
+        pop[0] = Chromosome { alloc };
+    }
+    for (k, seed) in seeds.iter().enumerate() {
+        if k + 1 < pop.len() {
+            let mut s = seed.clone();
+            s.repair(num_clients);
+            pop[k + 1] = s;
+        }
+    }
+
+    let mut score: Vec<f64> = pop
+        .iter()
+        .map(|c| {
+            evals += 1;
+            eval(c)
+        })
+        .collect();
+    let mut history = Vec::with_capacity(params.generations);
+    let (mut best, mut best_j0) = best_of(&pop, &score);
+
+    for _gen in 0..params.generations {
+        // Fitness eq. (43): (J0max − J0)^ι over the *finite* scores.
+        let j0max = score.iter().cloned().filter(|x| x.is_finite()).fold(f64::NEG_INFINITY, f64::max);
+        let fitness: Vec<f64> = score
+            .iter()
+            .map(|&j| {
+                if !j.is_finite() {
+                    0.0
+                } else {
+                    (j0max - j).max(0.0).powf(params.iota) + 1e-12
+                }
+            })
+            .collect();
+
+        let mut next: Vec<Chromosome> = Vec::with_capacity(params.population);
+        // Elitism.
+        let mut order: Vec<usize> = (0..pop.len()).collect();
+        order.sort_by(|&a, &b| score[a].partial_cmp(&score[b]).unwrap());
+        for &i in order.iter().take(params.elites) {
+            next.push(pop[i].clone());
+        }
+        // Offspring via roulette selection + crossover + mutation.
+        while next.len() < params.population {
+            let p1 = roulette(&fitness, rng);
+            let p2 = roulette(&fitness, rng);
+            let (mut c1, mut c2) = if rng.chance(params.crossover_p) {
+                crossover(&pop[p1], &pop[p2], rng)
+            } else {
+                (pop[p1].clone(), pop[p2].clone())
+            };
+            mutate(&mut c1, num_clients, params.mutation_p, rng);
+            mutate(&mut c2, num_clients, params.mutation_p, rng);
+            c1.repair(num_clients);
+            c2.repair(num_clients);
+            next.push(c1);
+            if next.len() < params.population {
+                next.push(c2);
+            }
+        }
+        pop = next;
+        score = pop
+            .iter()
+            .map(|c| {
+                evals += 1;
+                eval(c)
+            })
+            .collect();
+        let (gen_best, gen_j0) = best_of(&pop, &score);
+        if gen_j0 < best_j0 {
+            best = gen_best;
+            best_j0 = gen_j0;
+        }
+        history.push(best_j0);
+    }
+
+    GaOutcome { best, best_j0, history, evals }
+}
+
+fn best_of(pop: &[Chromosome], score: &[f64]) -> (Chromosome, f64) {
+    let mut bi = 0;
+    for i in 1..pop.len() {
+        if score[i] < score[bi] {
+            bi = i;
+        }
+    }
+    (pop[bi].clone(), score[bi])
+}
+
+/// Roulette-wheel selection over fitness weights.
+fn roulette(fitness: &[f64], rng: &mut Rng) -> usize {
+    let total: f64 = fitness.iter().sum();
+    if total <= 0.0 {
+        return rng.below(fitness.len());
+    }
+    let mut x = rng.uniform() * total;
+    for (i, &f) in fitness.iter().enumerate() {
+        x -= f;
+        if x <= 0.0 {
+            return i;
+        }
+    }
+    fitness.len() - 1
+}
+
+/// Uniform crossover on the channel axis.
+fn crossover(a: &Chromosome, b: &Chromosome, rng: &mut Rng) -> (Chromosome, Chromosome) {
+    let n = a.alloc.len();
+    let mut c1 = a.clone();
+    let mut c2 = b.clone();
+    for i in 0..n {
+        if rng.chance(0.5) {
+            std::mem::swap(&mut c1.alloc[i], &mut c2.alloc[i]);
+        }
+    }
+    (c1, c2)
+}
+
+/// Per-gene mutation: reassign to a random client, clear, or swap two
+/// channels.
+fn mutate(c: &mut Chromosome, num_clients: usize, p_m: f64, rng: &mut Rng) {
+    let n = c.alloc.len();
+    for i in 0..n {
+        if rng.chance(p_m) {
+            match rng.below(3) {
+                0 => c.alloc[i] = Some(rng.below(num_clients)),
+                1 => c.alloc[i] = None,
+                _ => {
+                    let j = rng.below(n);
+                    c.alloc.swap(i, j);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn repair_enforces_client_uniqueness() {
+        let mut c = Chromosome { alloc: vec![Some(1), Some(1), Some(2), Some(9), None] };
+        c.repair(5); // client 9 out of range
+        assert!(c.is_valid(5));
+        assert_eq!(c.alloc, vec![Some(1), None, Some(2), None, None]);
+    }
+
+    #[test]
+    fn participants_follow_c2() {
+        let c = Chromosome { alloc: vec![Some(0), None, Some(3)] };
+        assert_eq!(c.participants(4), vec![true, false, false, true]);
+        assert_eq!(c.channel_of(3), Some(2));
+        assert_eq!(c.channel_of(1), None);
+    }
+
+    #[test]
+    fn random_chromosomes_valid() {
+        prop::check(
+            "ga-random-valid",
+            prop::iters(200),
+            |rng| Chromosome::random(8, 5, rng),
+            |c| {
+                if c.is_valid(5) {
+                    Ok(())
+                } else {
+                    Err(format!("{c:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn operators_preserve_constraints() {
+        prop::check(
+            "ga-ops-valid",
+            prop::iters(200),
+            |rng| {
+                let a = Chromosome::random(10, 10, rng);
+                let b = Chromosome::random(10, 10, rng);
+                let (mut c1, mut c2) = crossover(&a, &b, rng);
+                mutate(&mut c1, 10, 0.3, rng);
+                mutate(&mut c2, 10, 0.3, rng);
+                c1.repair(10);
+                c2.repair(10);
+                (c1, c2)
+            },
+            |(c1, c2)| {
+                if c1.is_valid(10) && c2.is_valid(10) {
+                    Ok(())
+                } else {
+                    Err("invalid child".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn finds_known_optimum_on_assignment_toy() {
+        // J0 = Σ cost[c][client]; the optimum pairs client i with
+        // channel i (diagonal cost 0, off-diagonal 1, unassigned 2).
+        let eval = |c: &Chromosome| -> f64 {
+            let mut j = 0.0;
+            let mut assigned = vec![false; 6];
+            for (ch, slot) in c.alloc.iter().enumerate() {
+                if let Some(i) = slot {
+                    j += if *i == ch { 0.0 } else { 1.0 };
+                    assigned[*i] = true;
+                }
+            }
+            j + assigned.iter().filter(|&&a| !a).count() as f64 * 2.0
+        };
+        let mut rng = Rng::seed_from(9);
+        let out = optimize(6, 6, &GaParams::default(), &mut rng, eval);
+        assert!(out.best_j0 <= 1.0, "best {}: {:?}", out.best_j0, out.best);
+        assert!(out.best.is_valid(6));
+        assert!(out.evals > 0);
+    }
+
+    #[test]
+    fn history_is_monotone_nonincreasing() {
+        let eval = |c: &Chromosome| -> f64 {
+            c.alloc.iter().filter(|s| s.is_none()).count() as f64
+        };
+        let mut rng = Rng::seed_from(11);
+        let out = optimize(8, 8, &GaParams::default(), &mut rng, eval);
+        for w in out.history.windows(2) {
+            assert!(w[1] <= w[0]);
+        }
+    }
+
+    #[test]
+    fn infeasible_everywhere_still_returns() {
+        let mut rng = Rng::seed_from(13);
+        let out = optimize(4, 4, &GaParams::default(), &mut rng, |_| f64::INFINITY);
+        assert!(out.best_j0.is_infinite());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let eval = |c: &Chromosome| -> f64 {
+            c.alloc.iter().flatten().map(|&i| i as f64).sum()
+        };
+        let mut r1 = Rng::seed_from(21);
+        let mut r2 = Rng::seed_from(21);
+        let o1 = optimize(6, 6, &GaParams::default(), &mut r1, eval);
+        let o2 = optimize(6, 6, &GaParams::default(), &mut r2, eval);
+        assert_eq!(o1.best, o2.best);
+        assert_eq!(o1.best_j0, o2.best_j0);
+    }
+}

@@ -1,0 +1,42 @@
+//! # qccf — Energy-Efficient Wireless Federated Learning via Doubly
+//! # Adaptive Quantization
+//!
+//! Production-shaped reproduction of Han et al. (2024): a three-layer
+//! Rust + JAX + Pallas stack where
+//!
+//! * **Layer 1** (build-time Python) — Pallas kernels for stochastic
+//!   quantization (paper eq. 4), fused SGD updates, and the dense-head
+//!   matmul (`python/compile/kernels/`);
+//! * **Layer 2** (build-time Python) — the paper's CNNs with a flat
+//!   parameter interface, AOT-lowered to HLO text (`python/compile/`);
+//! * **Layer 3** (this crate) — the paper's actual contribution: the
+//!   per-round **QCCF** decision pipeline (Lyapunov virtual queues →
+//!   genetic channel allocation → closed-form KKT quantization/frequency
+//!   control → Theorem-3 integer rounding), the wireless/energy models,
+//!   the FL server loop, the four baselines, and the experiment harness
+//!   that regenerates every figure in §VI.
+//!
+//! Python never runs on the round loop: `make artifacts` lowers once and
+//! the `qccf` binary executes the HLO through the PJRT CPU client.
+//!
+//! Start with [`config::SystemParams`] (paper Table I), then
+//! [`fl::Server`] for the training loop, or the `examples/`.
+
+pub mod bench;
+pub mod util;
+
+pub mod baselines;
+pub mod config;
+pub mod convergence;
+pub mod data;
+pub mod energy;
+pub mod experiments;
+pub mod fl;
+pub mod ga;
+pub mod lyapunov;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod sched;
+pub mod solver;
+pub mod wireless;

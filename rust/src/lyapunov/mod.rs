@@ -1,0 +1,134 @@
+//! Lyapunov optimization (paper §V-A): virtual queues λ1/λ2 for the
+//! long-term constraints C6/C7 (eqs. (23)–(24)) and the per-round
+//! drift-plus-penalty objective Jⁿ (eq. (27)).
+
+use crate::config::SystemParams;
+
+/// The two virtual queues. Mean-rate stability of these is equivalent to
+/// satisfying C6 and C7 (paper §V-A).
+#[derive(Clone, Debug)]
+pub struct Queues {
+    /// λ1 — data-property queue (C6).
+    pub lambda1: f64,
+    /// λ2 — quantization-error queue (C7).
+    pub lambda2: f64,
+    history: Vec<(f64, f64)>,
+}
+
+impl Queues {
+    pub fn new() -> Queues {
+        Queues { lambda1: 0.0, lambda2: 0.0, history: vec![(0.0, 0.0)] }
+    }
+
+    /// Eqs. (23)–(24): `λ ← max(λ + arrival − ε, 0)` with the realized
+    /// per-round C6/C7 terms as arrivals.
+    pub fn update(&mut self, p: &SystemParams, data_term: f64, quant_term: f64) {
+        self.lambda1 = (self.lambda1 + data_term - p.eps1).max(0.0);
+        self.lambda2 = (self.lambda2 + quant_term - p.eps2).max(0.0);
+        self.history.push((self.lambda1, self.lambda2));
+    }
+
+    /// Mean-rate stability diagnostic: λ^n / n (should tend to 0).
+    pub fn mean_rates(&self) -> (f64, f64) {
+        let n = self.history.len().max(1) as f64;
+        (self.lambda1 / n, self.lambda2 / n)
+    }
+
+    pub fn history(&self) -> &[(f64, f64)] {
+        &self.history
+    }
+}
+
+impl Default for Queues {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The per-round objective Jⁿ (eq. (27)) given the realized decision:
+/// `(λ1−ε1)·data + (λ2−ε2)·quant + V·Σ a_i (E^cmp + E^com)`.
+pub fn objective_j(
+    p: &SystemParams,
+    queues: &Queues,
+    data_term: f64,
+    quant_term: f64,
+    total_energy: f64,
+) -> f64 {
+    (queues.lambda1 - p.eps1) * data_term
+        + (queues.lambda2 - p.eps2) * quant_term
+        + p.v * total_energy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> SystemParams {
+        SystemParams::femnist_small()
+    }
+
+    #[test]
+    fn queues_start_empty() {
+        let q = Queues::new();
+        assert_eq!((q.lambda1, q.lambda2), (0.0, 0.0));
+    }
+
+    #[test]
+    fn update_follows_eq23_eq24() {
+        let params = p();
+        let mut q = Queues::new();
+        q.update(&params, params.eps1 + 3.0, params.eps2 + 0.5);
+        assert!((q.lambda1 - 3.0).abs() < 1e-12);
+        assert!((q.lambda2 - 0.5).abs() < 1e-12);
+        // Under-budget arrivals drain, floored at zero.
+        q.update(&params, 0.0, 0.0);
+        assert!((q.lambda1 - (3.0 - params.eps1).max(0.0)).abs() < 1e-12);
+        assert!((q.lambda2 - (0.5 - params.eps2).max(0.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn queues_never_negative() {
+        let params = p();
+        let mut q = Queues::new();
+        for _ in 0..50 {
+            q.update(&params, 0.0, 0.0);
+            assert!(q.lambda1 >= 0.0 && q.lambda2 >= 0.0);
+        }
+    }
+
+    #[test]
+    fn stable_arrivals_keep_queue_bounded() {
+        // Arrivals exactly at ε keep λ at 0; slightly below keep it at 0.
+        let params = p();
+        let mut q = Queues::new();
+        for _ in 0..1000 {
+            q.update(&params, params.eps1 * 0.9, params.eps2 * 0.9);
+        }
+        assert_eq!(q.lambda1, 0.0);
+        assert_eq!(q.lambda2, 0.0);
+        let (r1, r2) = q.mean_rates();
+        assert_eq!((r1, r2), (0.0, 0.0));
+    }
+
+    #[test]
+    fn overloaded_queue_grows_linearly() {
+        let params = p();
+        let mut q = Queues::new();
+        for _ in 0..100 {
+            q.update(&params, params.eps1 + 1.0, params.eps2);
+        }
+        assert!((q.lambda1 - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn objective_weights_terms() {
+        let params = p();
+        let mut q = Queues::new();
+        q.update(&params, params.eps1 + 10.0, params.eps2 + 1.0);
+        let j = objective_j(&params, &q, 2.0, 0.3, 0.05);
+        let want = (q.lambda1 - params.eps1) * 2.0
+            + (q.lambda2 - params.eps2) * 0.3
+            + params.v * 0.05;
+        assert!((j - want).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,247 @@
+//! `qccf` — CLI for the wireless-FL reproduction.
+//!
+//! Subcommands:
+//!   params                       print Table I as configured
+//!   train   [--algorithm A] [--profile P] [--rounds N] [--beta B] [--v V] [--seed S]
+//!   fig2    [--profile P] [--v-values 1,10,100,1000] [--rounds N] [--quick]
+//!   fig3    [--profile P] [--betas 150,300] [--rounds N] [--quick]
+//!   fig4    [--profile P] [--betas 150,300] [--rounds N] [--quick]
+//!   fig5    [--profile P] [--rounds N] [--quick]
+//!   decide  [--profile P] [--seed S]    one-round decision demo (all algorithms)
+//!
+//! Requires `make artifacts` (HLO text under ./artifacts).
+
+use anyhow::Result;
+
+use qccf::baselines::{make_scheduler, ALL_ALGORITHMS};
+use qccf::config::SystemParams;
+use qccf::experiments::{common, fig2, fig3, fig4, fig5, run_one, RunSpec, Task};
+use qccf::info;
+use qccf::lyapunov::Queues;
+use qccf::runtime::Runtime;
+use qccf::sched::RoundInputs;
+use qccf::util::argparse::Args;
+use qccf::util::rng::Rng;
+use qccf::util::table;
+use qccf::wireless::ChannelModel;
+
+fn main() {
+    qccf::util::logging::init();
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn task_of(args: &Args) -> Task {
+    match args.get_or("task", "femnist") {
+        "cifar" => Task::Cifar,
+        _ => Task::Femnist,
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.cmd.as_deref() {
+        Some("params") => cmd_params(args),
+        Some("train") => cmd_train(args),
+        Some("fig2") => cmd_fig2(args),
+        Some("fig3") => cmd_fig3(args),
+        Some("fig4") => cmd_fig4(args),
+        Some("fig5") => cmd_fig5(args),
+        Some("decide") => cmd_decide(args),
+        Some("ablate") => cmd_ablate(args),
+        Some(other) => anyhow::bail!("unknown subcommand `{other}` (see README)"),
+        None => {
+            println!("usage: qccf <params|train|fig2|fig3|fig4|fig5|decide> [options]");
+            println!("see README.md for the full option list");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_params(args: &Args) -> Result<()> {
+    let p = match task_of(args) {
+        Task::Femnist => SystemParams::femnist_small(),
+        Task::Cifar => SystemParams::cifar_small(),
+    };
+    let rows = vec![
+        vec!["U (clients)".into(), p.num_clients.to_string()],
+        vec!["C (channels)".into(), p.num_channels.to_string()],
+        vec!["B (Hz)".into(), table::fnum(p.bandwidth_hz)],
+        vec!["p (W)".into(), p.tx_power_w.to_string()],
+        vec!["N0 (W/Hz)".into(), table::fnum(p.noise_psd_w_hz)],
+        vec!["Rician K / ζ".into(), format!("{} / {}", p.rician_k, p.rician_zeta)],
+        vec!["α".into(), table::fnum(p.alpha)],
+        vec!["γ (cycles/sample)".into(), table::fnum(p.gamma)],
+        vec!["f_min / f_max (Hz)".into(), format!("{:.1e} / {:.1e}", p.f_min, p.f_max)],
+        vec!["τ / τ^e".into(), format!("{} / {}", p.tau, p.tau_e)],
+        vec!["T_max (s)".into(), p.t_max.to_string()],
+        vec!["Z".into(), p.z.to_string()],
+        vec!["η / L".into(), format!("{} / {}", p.eta, p.lips)],
+        vec!["V / ε1 / ε2".into(), format!("{} / {} / {}", p.v, p.eps1, p.eps2)],
+    ];
+    println!("Table I system parameters ({:?} column):", task_of(args));
+    println!("{}", table::render(&["parameter", "value"], &rows));
+    let errs = p.validate();
+    if errs.is_empty() {
+        println!("validation: OK (Theorem 1/2 prerequisites hold)");
+    } else {
+        println!("validation issues: {errs:?}");
+    }
+    Ok(())
+}
+
+fn load_runtime(args: &Args) -> Result<Runtime> {
+    let profile = args.get_or("profile", "small");
+    info!("main", "loading artifacts for profile `{profile}`");
+    let rt = Runtime::load_default(profile)?;
+    info!("main", "PJRT platform: {}, Z = {}", rt.platform(), rt.info.z);
+    Ok(rt)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let mut spec = RunSpec::new(args.get_or("algorithm", "qccf"), task_of(args));
+    spec.rounds = args.get_usize("rounds", 40);
+    spec.beta = args.get_f64("beta", 150.0);
+    spec.mu = args.get_f64("mu", 1200.0);
+    spec.seed = args.get_u64("seed", 1);
+    spec.eval_every = args.get_usize("eval-every", 2);
+    if let Some(v) = args.get("v") {
+        spec.v = v.parse().ok();
+    }
+    let trace = run_one(&rt, &spec)?;
+    let row = fig3::summarize(&trace, spec.beta);
+    fig3::print(std::slice::from_ref(&row), &format!("train — {}", spec.algorithm));
+    let path = common::results_dir().join(format!("train_{}.csv", spec.algorithm));
+    trace.write_csv(&path)?;
+    println!("wrote {}", path.display());
+    let prof = rt.exec_profile();
+    info!(
+        "main",
+        "runtime seconds: init={:.2} train={:.2} eval={:.2} quantize={:.2}",
+        prof[0],
+        prof[1],
+        prof[2],
+        prof[3]
+    );
+    Ok(())
+}
+
+fn cmd_fig2(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let rounds = args.get_usize("rounds", if args.flag("quick") { 16 } else { 40 });
+    let v_values = args.get_f64_list("v-values", &[1.0, 10.0, 100.0, 1000.0]);
+    let rows = fig2::run(&rt, task_of(args), &v_values, rounds, args.get_u64("seed", 1))?;
+    fig2::print(&rows);
+    fig2::write_summary(&rows, task_of(args))
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let rounds = args.get_usize("rounds", if args.flag("quick") { 16 } else { 40 });
+    let betas = args.get_f64_list("betas", &[150.0, 300.0]);
+    let rows = fig3::run_grid(&rt, Task::Femnist, &betas, rounds, args.get_u64("seed", 1), "fig3")?;
+    fig3::print(&rows, "Fig. 3 — FEMNIST-sim: accuracy & accumulated energy (5 algorithms)");
+    fig3::write_summary(&rows, "fig3")
+}
+
+fn cmd_fig4(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let rounds = args.get_usize("rounds", if args.flag("quick") { 16 } else { 40 });
+    let betas = args.get_f64_list("betas", &[150.0, 300.0]);
+    let rows = fig4::run_grid(&rt, &betas, rounds, args.get_u64("seed", 1))?;
+    fig4::print(&rows);
+    fig4::write_summary(&rows)
+}
+
+fn cmd_fig5(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let rounds = args.get_usize("rounds", if args.flag("quick") { 20 } else { 40 });
+    let seed = args.get_u64("seed", 1);
+    let nseeds = args.get_usize("seeds", if args.flag("quick") { 1 } else { 3 });
+    let seeds: Vec<u64> = (0..nseeds as u64).map(|k| seed + k).collect();
+    let data = fig5::run(&rt, rounds, &seeds)?;
+    fig5::print(&data);
+    fig5::write_csv(&data)
+}
+
+/// Design-choice ablations (no artifacts needed — pure decision math).
+fn cmd_ablate(args: &Args) -> Result<()> {
+    let draws = args.get_usize("draws", if args.flag("quick") { 10 } else { 40 });
+    let seed = args.get_u64("seed", 1);
+    let ga_rows = qccf::experiments::ablate::ga_budget(draws, seed);
+    qccf::experiments::ablate::print_ga(&ga_rows);
+    let c5 = qccf::experiments::ablate::case5_modes(draws * 20, seed);
+    qccf::experiments::ablate::print_case5(&c5);
+    Ok(())
+}
+
+/// One-round decision demo: same channel draw, every algorithm's choices.
+fn cmd_decide(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let mut p = common::params_for(&rt, task_of(args), 1200.0);
+    p.v = args.get_f64("v", p.v);
+    let seed = args.get_u64("seed", 1);
+    let mut rng = Rng::seed_from(seed);
+    let model = ChannelModel::new(&p, &mut rng);
+    let channels = model.draw(&mut rng);
+    let sizes: Vec<f64> =
+        (0..p.num_clients).map(|_| rng.gaussian(1200.0, 150.0).max(64.0)).collect();
+    let total: f64 = sizes.iter().sum();
+    let w_full: Vec<f64> = sizes.iter().map(|d| d / total).collect();
+    let mut queues = Queues::new();
+    queues.update(&p, p.eps1 + 30.0, p.eps2 + 1.0);
+    let g2 = vec![2.0; p.num_clients];
+    let sigma2 = vec![0.5; p.num_clients];
+    let theta_max = vec![0.4; p.num_clients];
+    let q_prev = vec![6.0; p.num_clients];
+    let inputs = RoundInputs {
+        params: &p,
+        round: 5,
+        channels: &channels,
+        sizes: &sizes,
+        w_full: &w_full,
+        g2: &g2,
+        sigma2: &sigma2,
+        theta_max: &theta_max,
+        q_prev: &q_prev,
+        queues: &queues,
+    };
+    for alg in ALL_ALGORITHMS {
+        let mut s = make_scheduler(alg, seed).unwrap();
+        let dec = s.decide(&inputs);
+        let mut body = Vec::new();
+        for (i, d) in dec.assignments.iter().enumerate() {
+            match d {
+                Some(d) => body.push(vec![
+                    i.to_string(),
+                    format!("{:.0}", sizes[i]),
+                    d.channel.to_string(),
+                    d.q.map(|q| q.to_string()).unwrap_or_else(|| "raw".into()),
+                    format!("{:.2e}", d.f),
+                    format!("{:.1}", d.rate / 1e6),
+                ]),
+                None => body.push(vec![
+                    i.to_string(),
+                    format!("{:.0}", sizes[i]),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]),
+            }
+        }
+        println!("{alg} (J0 = {}):", table::fnum(dec.j0));
+        println!(
+            "{}",
+            table::render(&["client", "D_i", "channel", "q", "f (Hz)", "rate (Mb/s)"], &body)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,173 @@
+//! Per-round metric records + trace recorder (CSV/JSON export). The
+//! experiment harness aggregates these into the paper's figure series.
+
+use std::path::Path;
+
+use crate::util::csv::CsvWriter;
+
+/// Everything measured in one communication round.
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Participants scheduled / uploads aggregated (dropouts = diff).
+    pub scheduled: usize,
+    pub aggregated: usize,
+    /// Energy spent this round (J) and cumulative (J).
+    pub energy: f64,
+    pub cum_energy: f64,
+    /// Mean training loss reported by participating clients.
+    pub train_loss: f64,
+    /// Test metrics (only on eval rounds).
+    pub test_loss: Option<f64>,
+    pub test_acc: Option<f64>,
+    /// Mean quantization level among quantizing participants.
+    pub mean_q: f64,
+    /// Per-client levels (None = not scheduled; Some(0) = raw upload).
+    pub q_per_client: Vec<Option<u32>>,
+    /// Virtual queues after the round.
+    pub lambda1: f64,
+    pub lambda2: f64,
+    /// Max realized latency among participants (s).
+    pub max_latency: f64,
+    /// Wall-clock spent deciding (scheduler) and training (runtime), s.
+    pub decide_seconds: f64,
+    pub compute_seconds: f64,
+}
+
+/// A full experiment trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub algorithm: String,
+    pub records: Vec<RoundRecord>,
+}
+
+impl Trace {
+    pub fn new(algorithm: &str) -> Trace {
+        Trace { algorithm: algorithm.to_string(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, rec: RoundRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn total_energy(&self) -> f64 {
+        self.records.last().map(|r| r.cum_energy).unwrap_or(0.0)
+    }
+
+    /// Last observed test accuracy.
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| r.test_acc)
+    }
+
+    /// Best test accuracy over the run.
+    pub fn best_accuracy(&self) -> Option<f64> {
+        self.records.iter().filter_map(|r| r.test_acc).fold(None, |acc, x| {
+            Some(acc.map_or(x, |a: f64| a.max(x)))
+        })
+    }
+
+    /// Rounds until test accuracy first reaches `target` (convergence
+    /// speed, the paper's "faster convergence" claim).
+    pub fn rounds_to_accuracy(&self, target: f64) -> Option<usize> {
+        self.records.iter().find(|r| r.test_acc.map(|a| a >= target).unwrap_or(false)).map(|r| r.round)
+    }
+
+    /// Total dropouts (scheduled − aggregated).
+    pub fn total_dropouts(&self) -> usize {
+        self.records.iter().map(|r| r.scheduled - r.aggregated).sum()
+    }
+
+    /// Mean q trajectory (round, mean_q) for quantizing algorithms.
+    pub fn q_trajectory(&self) -> Vec<(usize, f64)> {
+        self.records.iter().filter(|r| r.mean_q > 0.0).map(|r| (r.round, r.mean_q)).collect()
+    }
+
+    /// Dump per-round rows to CSV.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "round",
+                "algorithm",
+                "scheduled",
+                "aggregated",
+                "energy_j",
+                "cum_energy_j",
+                "train_loss",
+                "test_loss",
+                "test_acc",
+                "mean_q",
+                "lambda1",
+                "lambda2",
+                "max_latency_s",
+                "decide_s",
+                "compute_s",
+            ],
+        )?;
+        for r in &self.records {
+            w.row(&[
+                r.round.to_string(),
+                self.algorithm.clone(),
+                r.scheduled.to_string(),
+                r.aggregated.to_string(),
+                format!("{:.9}", r.energy),
+                format!("{:.9}", r.cum_energy),
+                format!("{:.6}", r.train_loss),
+                r.test_loss.map(|x| format!("{x:.6}")).unwrap_or_default(),
+                r.test_acc.map(|x| format!("{x:.6}")).unwrap_or_default(),
+                format!("{:.4}", r.mean_q),
+                format!("{:.6}", r.lambda1),
+                format!("{:.6}", r.lambda2),
+                format!("{:.6}", r.max_latency),
+                format!("{:.4}", r.decide_seconds),
+                format!("{:.4}", r.compute_seconds),
+            ])?;
+        }
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, acc: Option<f64>, energy: f64, cum: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            test_acc: acc,
+            energy,
+            cum_energy: cum,
+            scheduled: 10,
+            aggregated: 9,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn trace_aggregates() {
+        let mut t = Trace::new("qccf");
+        t.push(rec(1, None, 1.0, 1.0));
+        t.push(rec(2, Some(0.5), 1.0, 2.0));
+        t.push(rec(3, Some(0.8), 1.0, 3.0));
+        t.push(rec(4, Some(0.7), 1.0, 4.0));
+        assert_eq!(t.total_energy(), 4.0);
+        assert_eq!(t.final_accuracy(), Some(0.7));
+        assert_eq!(t.best_accuracy(), Some(0.8));
+        assert_eq!(t.rounds_to_accuracy(0.75), Some(3));
+        assert_eq!(t.rounds_to_accuracy(0.95), None);
+        assert_eq!(t.total_dropouts(), 4);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Trace::new("x");
+        t.push(rec(1, Some(0.4), 0.5, 0.5));
+        let dir = std::env::temp_dir().join("qccf_metrics_test");
+        let path = dir.join("trace.csv");
+        t.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.lines().next().unwrap().starts_with("round,algorithm"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

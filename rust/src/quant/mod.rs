@@ -1,0 +1,214 @@
+//! Stochastic quantization on the Rust side (paper §II-B).
+//!
+//! The *hot path* quantizes through the AOT-lowered Pallas kernel
+//! (`runtime::Runtime::quantize`); this module provides
+//!
+//! * a bit-exact Rust mirror of the kernel ([`stochastic_quantize`]) used
+//!   to cross-validate the HLO artifact and by pure-Rust tests/benches,
+//! * the actual **wire codec** ([`encode`]/[`decode`]) — range float +
+//!   sign bits + knot indices — whose encoded length *is* eq. (5)'s
+//!   `ℓ = Z·q + Z + 32` bits, proving the payload accounting,
+//! * Lemma 1's variance bound ([`error_bound`]).
+
+pub mod wire;
+
+pub use wire::{decode, encode, encoded_bits};
+
+/// Quantization knot count minus one: `2^q − 1` intervals.
+pub fn levels(q: u32) -> f64 {
+    (2f64).powi(q as i32) - 1.0
+}
+
+/// Lemma 1: `E‖Q(θ)−θ‖² ≤ Z (θ^max)² / (4 (2^q − 1)²)`.
+pub fn error_bound(z: usize, theta_max: f64, q: u32) -> f64 {
+    let l = levels(q);
+    z as f64 * theta_max * theta_max / (4.0 * l * l)
+}
+
+/// Bit-exact mirror of the Pallas kernel in
+/// `python/compile/kernels/quantize.py`: same float32 operations in the
+/// same order, so given identical `noise` the outputs agree bitwise with
+/// the HLO artifact (integration-tested in `rust/tests/`).
+///
+/// Returns `(dequantized, theta_max)`.
+pub fn stochastic_quantize(theta: &[f32], noise: &[f32], q: f32) -> (Vec<f32>, f32) {
+    assert_eq!(theta.len(), noise.len());
+    let theta_max = theta.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let levels = (2f32).powf(q) - 1.0;
+    let safe_max = if theta_max > 0.0 { theta_max } else { 1.0 };
+    let out = theta
+        .iter()
+        .zip(noise.iter())
+        .map(|(&t, &u)| {
+            if theta_max == 0.0 {
+                return 0.0;
+            }
+            let scaled = t.abs() / safe_max * levels;
+            let low = scaled.floor();
+            let frac = scaled - low;
+            let knot = low + if u < frac { 1.0 } else { 0.0 };
+            sign_f32(t) * knot / levels * safe_max
+        })
+        .collect();
+    (out, theta_max)
+}
+
+/// `jnp.sign` semantics (sign(0) = 0), which the kernel relies on.
+#[inline]
+fn sign_f32(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Knot index of each element (what actually goes on the wire), plus the
+/// sign bit. `index ∈ [0, 2^q − 1]`.
+pub fn knot_indices(theta: &[f32], noise: &[f32], q: u32) -> (Vec<u32>, Vec<bool>, f32) {
+    let theta_max = theta.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let levels = (2f32).powf(q as f32) - 1.0;
+    let safe_max = if theta_max > 0.0 { theta_max } else { 1.0 };
+    let mut idx = Vec::with_capacity(theta.len());
+    let mut signs = Vec::with_capacity(theta.len());
+    for (&t, &u) in theta.iter().zip(noise.iter()) {
+        let scaled = t.abs() / safe_max * levels;
+        let low = scaled.floor();
+        let frac = scaled - low;
+        let knot = low + if u < frac { 1.0 } else { 0.0 };
+        idx.push(knot as u32);
+        signs.push(t < 0.0);
+    }
+    (idx, signs, theta_max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::seed_from(seed);
+        let theta: Vec<f32> = (0..n).map(|_| rng.gaussian(0.0, 1.0) as f32).collect();
+        let mut noise = vec![0.0f32; n];
+        rng.fill_uniform_f32(&mut noise);
+        (theta, noise)
+    }
+
+    #[test]
+    fn knots_on_grid_and_bounded() {
+        let (theta, noise) = sample(500, 3);
+        let q = 3;
+        let (out, tmax) = stochastic_quantize(&theta, &noise, q as f32);
+        let l = levels(q) as f32;
+        for &v in &out {
+            let pos = (v.abs() / tmax * l).round();
+            let recon = pos / l * tmax;
+            assert!((v.abs() - recon).abs() < 1e-4, "off-grid value {v}");
+            assert!(v.abs() <= tmax * 1.0001);
+        }
+    }
+
+    #[test]
+    fn zero_vector_quantizes_to_zero() {
+        let theta = vec![0.0f32; 64];
+        let noise = vec![0.5f32; 64];
+        let (out, tmax) = stochastic_quantize(&theta, &noise, 4.0);
+        assert_eq!(tmax, 0.0);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn unbiased_statistically() {
+        // Lemma 1: E[Q(θ)] = θ — average over many noise draws.
+        let mut rng = Rng::seed_from(7);
+        let theta: Vec<f32> = (0..128).map(|_| rng.gaussian(0.0, 1.0) as f32).collect();
+        let reps = 800;
+        let mut acc = vec![0.0f64; theta.len()];
+        for _ in 0..reps {
+            let mut noise = vec![0.0f32; theta.len()];
+            rng.fill_uniform_f32(&mut noise);
+            let (out, _) = stochastic_quantize(&theta, &noise, 2.0);
+            for (a, &o) in acc.iter_mut().zip(&out) {
+                *a += o as f64;
+            }
+        }
+        let tmax = theta.iter().fold(0.0f32, |m, &x| m.max(x.abs())) as f64;
+        let tol = tmax / levels(2) / (reps as f64).sqrt() * 5.0;
+        for (a, &t) in acc.iter().zip(&theta) {
+            assert!((a / reps as f64 - t as f64).abs() < tol);
+        }
+    }
+
+    #[test]
+    fn lemma1_variance_bound_holds() {
+        let mut rng = Rng::seed_from(11);
+        let theta: Vec<f32> = (0..256).map(|_| rng.gaussian(0.0, 2.0) as f32).collect();
+        let tmax = theta.iter().fold(0.0f32, |m, &x| m.max(x.abs())) as f64;
+        for q in [1u32, 2, 4, 8] {
+            let mut mse = 0.0;
+            let reps = 60;
+            for _ in 0..reps {
+                let mut noise = vec![0.0f32; theta.len()];
+                rng.fill_uniform_f32(&mut noise);
+                let (out, _) = stochastic_quantize(&theta, &noise, q as f32);
+                mse += out
+                    .iter()
+                    .zip(&theta)
+                    .map(|(&o, &t)| ((o - t) as f64).powi(2))
+                    .sum::<f64>();
+            }
+            let bound = error_bound(256, tmax, q);
+            assert!(mse / reps as f64 <= bound * 1.05, "q={q}");
+        }
+    }
+
+    #[test]
+    fn error_shrinks_with_q() {
+        let (theta, noise) = sample(400, 13);
+        let mut prev = f64::INFINITY;
+        for q in [1u32, 3, 6, 10] {
+            let (out, _) = stochastic_quantize(&theta, &noise, q as f32);
+            let err: f64 = out
+                .iter()
+                .zip(&theta)
+                .map(|(&o, &t)| ((o - t) as f64).powi(2))
+                .sum();
+            assert!(err < prev, "q={q} err={err} prev={prev}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn error_bound_matches_formula() {
+        // Z θmax² / (4(2^q−1)²) for Z=100, θmax=2, q=3 ⇒ 100*4/(4*49) = 2.0408…
+        let b = error_bound(100, 2.0, 3);
+        assert!((b - 100.0 * 4.0 / (4.0 * 49.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn knot_indices_within_range() {
+        let (theta, noise) = sample(300, 17);
+        for q in [1u32, 4, 9] {
+            let (idx, signs, _) = knot_indices(&theta, &noise, q);
+            let max = (1u32 << q) - 1;
+            assert!(idx.iter().all(|&i| i <= max), "q={q}");
+            assert_eq!(signs.len(), 300);
+        }
+    }
+
+    #[test]
+    fn quantize_respects_noise_threshold() {
+        // Deterministic check of the stochastic rounding rule: noise below
+        // frac rounds up, above rounds down. theta_max = 1.0, q = 1 ⇒ one
+        // interval; 0.6 has frac = 0.6.
+        let theta = vec![0.6f32, 0.6, 1.0];
+        let noise = vec![0.0f32, 0.99, 0.5];
+        let (out, _) = stochastic_quantize(&theta, &noise, 1.0);
+        assert_eq!(out[0], 1.0); // 0.0 < 0.6 → rounds up to knot 1
+        assert_eq!(out[1], 0.0); // 0.99 ≥ 0.6 → rounds down to knot 0
+        assert_eq!(out[2], 1.0); // exact knot (frac 0) stays
+    }
+}

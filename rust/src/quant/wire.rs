@@ -1,0 +1,166 @@
+//! Wire codec for quantized uploads — the concrete realization of the
+//! paper's payload accounting (eq. (5)): a 32-bit range float, one sign
+//! bit per dimension, and a q-bit knot index per dimension, bit-packed.
+//!
+//! `encoded_bits(z, q) == Z·q + Z + 32` exactly, so the simulator's
+//! latency/energy math (which uses eq. (5) analytically) matches what a
+//! real radio would transmit.
+
+/// Exact encoded length in bits (eq. (5)).
+pub fn encoded_bits(z: usize, q: u32) -> usize {
+    z * q as usize + z + 32
+}
+
+/// Streaming bit writer over a little-endian byte buffer: accumulates
+/// into a u64 word and flushes whole bytes (the bit-at-a-time version
+/// was the top L3 hot spot at Z = 20k — see EXPERIMENTS.md §Perf).
+struct BitWriter {
+    out: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    fn with_capacity(bits: usize) -> BitWriter {
+        BitWriter { out: Vec::with_capacity((bits + 7) / 8), acc: 0, nbits: 0 }
+    }
+
+    #[inline]
+    fn push(&mut self, value: u64, width: u32) {
+        debug_assert!(width <= 32);
+        self.acc |= value << self.nbits;
+        self.nbits += width;
+        while self.nbits >= 8 {
+            self.out.push(self.acc as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.out.push(self.acc as u8);
+        }
+        self.out
+    }
+}
+
+/// Streaming bit reader (inverse of [`BitWriter`]).
+struct BitReader<'a> {
+    bytes: &'a [u8],
+    byte_pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(bytes: &'a [u8]) -> BitReader<'a> {
+        BitReader { bytes, byte_pos: 0, acc: 0, nbits: 0 }
+    }
+
+    #[inline]
+    fn pull(&mut self, width: u32) -> u64 {
+        while self.nbits < width {
+            let b = self.bytes.get(self.byte_pos).copied().unwrap_or(0) as u64;
+            self.acc |= b << self.nbits;
+            self.byte_pos += 1;
+            self.nbits += 8;
+        }
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        let v = self.acc & mask;
+        self.acc >>= width;
+        self.nbits -= width;
+        v
+    }
+}
+
+/// Bit-pack a quantized model: `(theta_max, signs, knot indices)` →
+/// little-endian byte vector of `ceil(encoded_bits / 8)` bytes.
+pub fn encode(theta_max: f32, signs: &[bool], indices: &[u32], q: u32) -> Vec<u8> {
+    assert_eq!(signs.len(), indices.len());
+    let z = signs.len();
+    let total_bits = encoded_bits(z, q);
+    let mut w = BitWriter::with_capacity(total_bits);
+    w.push(u32::from_le_bytes(theta_max.to_le_bytes()) as u64, 32);
+    for &s in signs {
+        w.push(s as u64, 1);
+    }
+    for &idx in indices {
+        debug_assert!(q == 32 || idx < (1u32 << q), "index {idx} overflows q={q}");
+        w.push(idx as u64, q);
+    }
+    let out = w.finish();
+    debug_assert_eq!(out.len(), (total_bits + 7) / 8);
+    out
+}
+
+/// Inverse of [`encode`]; reconstructs the dequantized values directly
+/// (what the server aggregates, eq. (2)).
+pub fn decode(bytes: &[u8], z: usize, q: u32) -> (f32, Vec<f32>) {
+    let mut r = BitReader::new(bytes);
+    let theta_max = f32::from_le_bytes((r.pull(32) as u32).to_le_bytes());
+    let signs: Vec<bool> = (0..z).map(|_| r.pull(1) == 1).collect();
+    let levels = (2f32).powi(q as i32) - 1.0;
+    let inv = theta_max / levels;
+    let mut values = Vec::with_capacity(z);
+    for &s in signs.iter() {
+        let idx = r.pull(q);
+        let mag = idx as f32 * inv;
+        values.push(if s { -mag } else { mag });
+    }
+    (theta_max, values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{knot_indices, stochastic_quantize};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn encoded_bits_is_eq5() {
+        assert_eq!(encoded_bits(246_590, 8), 246_590 * 8 + 246_590 + 32);
+        assert_eq!(encoded_bits(0, 5), 32);
+        assert_eq!(encoded_bits(10, 1), 10 + 10 + 32);
+    }
+
+    #[test]
+    fn roundtrip_reconstructs_dequantized_model() {
+        let mut rng = Rng::seed_from(3);
+        let theta: Vec<f32> = (0..777).map(|_| rng.gaussian(0.0, 1.5) as f32).collect();
+        let mut noise = vec![0.0f32; 777];
+        rng.fill_uniform_f32(&mut noise);
+        for q in [1u32, 3, 7, 12] {
+            let (deq, tmax) = stochastic_quantize(&theta, &noise, q as f32);
+            let (idx, signs, tmax2) = knot_indices(&theta, &noise, q);
+            assert_eq!(tmax, tmax2);
+            let bytes = encode(tmax, &signs, &idx, q);
+            assert_eq!(bytes.len(), (encoded_bits(777, q) + 7) / 8);
+            let (tmax3, decoded) = decode(&bytes, 777, q);
+            assert_eq!(tmax3, tmax);
+            for (d, e) in decoded.iter().zip(&deq) {
+                assert!((d - e).abs() <= 1e-6 * tmax.max(1.0), "{d} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn sign_handling() {
+        let theta = vec![-1.0f32, 1.0, -0.25];
+        let noise = vec![0.9f32; 3];
+        let q = 2;
+        let (idx, signs, tmax) = knot_indices(&theta, &noise, q);
+        let bytes = encode(tmax, &signs, &idx, q);
+        let (_, decoded) = decode(&bytes, 3, q);
+        assert!(decoded[0] < 0.0);
+        assert!(decoded[1] > 0.0);
+        assert!(decoded[2] <= 0.0);
+    }
+
+    #[test]
+    fn payload_grows_linearly_in_q() {
+        let d1 = encoded_bits(1000, 4);
+        let d2 = encoded_bits(1000, 5);
+        assert_eq!(d2 - d1, 1000);
+    }
+}

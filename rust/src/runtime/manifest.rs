@@ -1,0 +1,129 @@
+//! Artifact manifest (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`): per-profile model metadata + HLO file map.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{parse, Json};
+
+/// One profile's stanza from the manifest.
+#[derive(Clone, Debug)]
+pub struct ProfileInfo {
+    pub name: String,
+    /// Z — flat parameter count.
+    pub z: usize,
+    /// τ — local updates per round.
+    pub tau: usize,
+    /// τ^e — local epochs.
+    pub tau_e: usize,
+    /// B — local mini-batch size.
+    pub batch: usize,
+    /// Eval chunk size.
+    pub eval_batch: usize,
+    /// (H, W, C).
+    pub image: (usize, usize, usize),
+    pub classes: usize,
+    /// Default learning rate η the model was tuned with.
+    pub lr: f64,
+    /// Artifact name → HLO text path.
+    pub files: Vec<(String, PathBuf)>,
+}
+
+impl ProfileInfo {
+    pub fn pix(&self) -> usize {
+        self.image.0 * self.image.1 * self.image.2
+    }
+
+    pub fn file(&self, name: &str) -> Option<&Path> {
+        self.files.iter().find(|(n, _)| n == name).map(|(_, p)| p.as_path())
+    }
+}
+
+/// Parse one profile from the manifest at `dir/manifest.json`.
+pub fn load_profile(dir: &Path, profile: &str) -> Result<ProfileInfo, String> {
+    let text = std::fs::read_to_string(dir.join("manifest.json"))
+        .map_err(|e| format!("read manifest: {e} (run `make artifacts`)"))?;
+    let root = parse(&text)?;
+    let stanza = root
+        .get(profile)
+        .ok_or_else(|| format!("profile `{profile}` not in manifest (run `make artifacts`)"))?;
+    let us = |k: &str| -> Result<usize, String> {
+        stanza
+            .get(k)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format!("manifest missing `{k}`"))
+    };
+    let image = stanza
+        .get("image")
+        .and_then(Json::as_arr)
+        .filter(|a| a.len() == 3)
+        .ok_or("manifest missing image dims")?;
+    let arts = stanza
+        .get("artifacts")
+        .and_then(Json::as_obj)
+        .ok_or("manifest missing artifacts")?;
+    let mut files = Vec::new();
+    for (name, art) in arts {
+        let file = art
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("artifact `{name}` missing file"))?;
+        files.push((name.clone(), dir.join(profile).join(file)));
+    }
+    Ok(ProfileInfo {
+        name: profile.to_string(),
+        z: us("z")?,
+        tau: us("tau")?,
+        tau_e: us("tau_e")?,
+        batch: us("batch")?,
+        eval_batch: us("eval_batch")?,
+        image: (
+            image[0].as_usize().unwrap_or(0),
+            image[1].as_usize().unwrap_or(0),
+            image[2].as_usize().unwrap_or(0),
+        ),
+        classes: us("classes")?,
+        lr: stanza.get("lr").and_then(Json::as_f64).unwrap_or(0.05),
+        files,
+    })
+}
+
+/// Default artifacts directory: `$QCCF_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("QCCF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_tiny_profile() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let info = load_profile(&artifacts_dir(), "tiny").unwrap();
+        assert_eq!(info.z, 1242);
+        assert_eq!(info.tau, 6);
+        assert_eq!(info.image, (8, 8, 1));
+        assert_eq!(info.classes, 10);
+        for name in ["init", "train_step", "eval_step", "quantize"] {
+            let f = info.file(name).expect(name);
+            assert!(f.exists(), "{f:?}");
+        }
+    }
+
+    #[test]
+    fn missing_profile_is_error() {
+        if !have_artifacts() {
+            return;
+        }
+        assert!(load_profile(&artifacts_dir(), "nope").is_err());
+    }
+}

@@ -1,0 +1,206 @@
+//! PJRT runtime: load the AOT-lowered HLO **text** artifacts and execute
+//! them from the coordinator's round loop. Python never runs here.
+//!
+//! Pattern (see /opt/xla-example/load_hlo and DESIGN.md): text →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. All entry points were lowered with
+//! `return_tuple=True`, so every output is a tuple literal.
+
+pub mod manifest;
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{artifacts_dir, load_profile, ProfileInfo};
+
+/// Compiled executables for one model profile.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub info: ProfileInfo,
+    init: xla::PjRtLoadedExecutable,
+    train_step: xla::PjRtLoadedExecutable,
+    eval_step: xla::PjRtLoadedExecutable,
+    quantize: xla::PjRtLoadedExecutable,
+    /// Wall-time accounting (perf pass): cumulative seconds per entry.
+    pub exec_seconds: std::cell::RefCell<[f64; 4]>,
+}
+
+/// Result of one local training round on a client.
+#[derive(Clone, Debug)]
+pub struct TrainOut {
+    pub theta: Vec<f32>,
+    pub mean_loss: f32,
+    pub gnorms: Vec<f32>,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("compile {path:?}: {e:?}"))
+}
+
+impl Runtime {
+    /// Load + compile all entry points of `profile` from `dir`.
+    pub fn load(dir: &Path, profile: &str) -> Result<Runtime> {
+        let info = load_profile(dir, profile).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let get = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = info
+                .file(name)
+                .ok_or_else(|| anyhow!("artifact `{name}` missing from manifest"))?;
+            compile(&client, path).with_context(|| format!("loading `{name}`"))
+        };
+        Ok(Runtime {
+            init: get("init")?,
+            train_step: get("train_step")?,
+            eval_step: get("eval_step")?,
+            quantize: get("quantize")?,
+            client,
+            info,
+            exec_seconds: std::cell::RefCell::new([0.0; 4]),
+        })
+    }
+
+    /// Load from the default artifacts dir.
+    pub fn load_default(profile: &str) -> Result<Runtime> {
+        Self::load(&artifacts_dir(), profile)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn run(
+        &self,
+        which: usize,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let t0 = std::time::Instant::now();
+        let out = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        self.exec_seconds.borrow_mut()[which] += t0.elapsed().as_secs_f64();
+        Ok(parts)
+    }
+
+    fn f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+    }
+
+    fn f32_scalar(lit: &xla::Literal) -> Result<f32> {
+        Ok(Self::f32_vec(lit)?[0])
+    }
+
+    fn theta_literal(&self, theta: &[f32]) -> Result<xla::Literal> {
+        anyhow::ensure!(
+            theta.len() == self.info.z,
+            "theta length {} != Z {}",
+            theta.len(),
+            self.info.z
+        );
+        Ok(xla::Literal::vec1(theta))
+    }
+
+    /// `init() -> θ⁰` — the deterministic initial global model.
+    pub fn init(&self) -> Result<Vec<f32>> {
+        let parts = self.run(0, &self.init, &[])?;
+        Self::f32_vec(&parts[0])
+    }
+
+    /// One client's τ local SGD steps (paper eq. (1)).
+    ///
+    /// `xs`: `tau*batch*pix` floats, `ys`: `tau*batch` labels.
+    pub fn train_step(&self, theta: &[f32], xs: &[f32], ys: &[i32], lr: f32) -> Result<TrainOut> {
+        let i = &self.info;
+        let (h, w, c) = i.image;
+        anyhow::ensure!(xs.len() == i.tau * i.batch * i.pix(), "xs size");
+        anyhow::ensure!(ys.len() == i.tau * i.batch, "ys size");
+        let xs = xla::Literal::vec1(xs)
+            .reshape(&[i.tau as i64, i.batch as i64, h as i64, w as i64, c as i64])
+            .map_err(|e| anyhow!("reshape xs: {e:?}"))?;
+        let ys = xla::Literal::vec1(ys)
+            .reshape(&[i.tau as i64, i.batch as i64])
+            .map_err(|e| anyhow!("reshape ys: {e:?}"))?;
+        let args = [self.theta_literal(theta)?, xs, ys, xla::Literal::scalar(lr)];
+        let parts = self.run(1, &self.train_step, &args)?;
+        Ok(TrainOut {
+            theta: Self::f32_vec(&parts[0])?,
+            mean_loss: Self::f32_scalar(&parts[1])?,
+            gnorms: Self::f32_vec(&parts[2])?,
+        })
+    }
+
+    /// One masked eval chunk: returns `(sum_loss, n_correct, n_valid)`.
+    pub fn eval_chunk(&self, theta: &[f32], x: &[f32], y: &[i32], wmask: &[f32]) -> Result<(f64, f64, f64)> {
+        let i = &self.info;
+        let (h, w, c) = i.image;
+        anyhow::ensure!(x.len() == i.eval_batch * i.pix(), "x size");
+        let x = xla::Literal::vec1(x)
+            .reshape(&[i.eval_batch as i64, h as i64, w as i64, c as i64])
+            .map_err(|e| anyhow!("reshape x: {e:?}"))?;
+        let y = xla::Literal::vec1(y);
+        let wl = xla::Literal::vec1(wmask);
+        let args = [self.theta_literal(theta)?, x, y, wl];
+        let parts = self.run(2, &self.eval_step, &args)?;
+        Ok((
+            Self::f32_scalar(&parts[0])? as f64,
+            Self::f32_scalar(&parts[1])? as f64,
+            Self::f32_scalar(&parts[2])? as f64,
+        ))
+    }
+
+    /// Evaluate over a whole test set (chunked + padded). Returns
+    /// `(mean_loss, accuracy)`.
+    pub fn evaluate(&self, theta: &[f32], images: &[f32], labels: &[i32]) -> Result<(f64, f64)> {
+        let i = &self.info;
+        let pix = i.pix();
+        let n = labels.len();
+        let eb = i.eval_batch;
+        let (mut loss, mut correct, mut total) = (0.0, 0.0, 0.0);
+        let mut off = 0;
+        while off < n {
+            let take = (n - off).min(eb);
+            let mut x = vec![0.0f32; eb * pix];
+            let mut y = vec![0i32; eb];
+            let mut wm = vec![0.0f32; eb];
+            x[..take * pix].copy_from_slice(&images[off * pix..(off + take) * pix]);
+            y[..take].copy_from_slice(&labels[off..off + take]);
+            for v in wm.iter_mut().take(take) {
+                *v = 1.0;
+            }
+            let (l, c, t) = self.eval_chunk(theta, &x, &y, &wm)?;
+            loss += l;
+            correct += c;
+            total += t;
+            off += take;
+        }
+        anyhow::ensure!(total > 0.0, "empty test set");
+        Ok((loss / total, correct / total))
+    }
+
+    /// Stochastic quantization through the Pallas kernel artifact
+    /// (paper eq. (4)). Returns `(dequantized θ, θ^max)`.
+    pub fn quantize(&self, theta: &[f32], noise: &[f32], q: f32) -> Result<(Vec<f32>, f32)> {
+        anyhow::ensure!(noise.len() == theta.len(), "noise size");
+        let args = [
+            self.theta_literal(theta)?,
+            xla::Literal::vec1(noise),
+            xla::Literal::scalar(q),
+        ];
+        let parts = self.run(3, &self.quantize, &args)?;
+        Ok((Self::f32_vec(&parts[0])?, Self::f32_scalar(&parts[1])?))
+    }
+
+    /// Cumulative execution seconds per entry point
+    /// `(init, train_step, eval, quantize)` — perf-pass accounting.
+    pub fn exec_profile(&self) -> [f64; 4] {
+        *self.exec_seconds.borrow()
+    }
+}

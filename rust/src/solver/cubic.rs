@@ -1,0 +1,115 @@
+//! The depressed cubic behind Case 2 (paper eq. (41), second row).
+//!
+//! The q-stationarity condition `pV/v = E ln2 · 2^q / (4(2^q − 1)³)`
+//! with `t = 2^q − 1` becomes `t³ = A4 (t + 1)`, i.e. the depressed cubic
+//! `t³ − A4·t − A4 = 0` with `A4 = v E ln2 / (4 p V)`.
+//!
+//! For `A4 < 27/4` Cardano's discriminant is positive and the paper's
+//! closed form applies; for larger A4 there are three real roots and we
+//! take the unique **positive** one via the trigonometric method (the
+//! paper's formula silently assumes the first branch).
+
+/// Positive real root of `t³ − a4·t − a4 = 0` for `a4 > 0`.
+pub fn positive_root(a4: f64) -> f64 {
+    debug_assert!(a4 > 0.0);
+    // Depressed cubic t³ + p t + q with p = −a4, q = −a4.
+    let disc = 0.25 - a4 / 27.0; // (q/2)² + (p/3)³ scaled by a4²: see below
+    if disc >= 0.0 {
+        // Cardano, in the paper's exact form:
+        // t = ∛A4 ( ∛(1/2 + √(1/4 − A4/27)) + ∛(1/2 − √(1/4 − A4/27)) ).
+        let s = disc.sqrt();
+        let c1 = (0.5 + s).cbrt();
+        let c2 = (0.5 - s).cbrt();
+        a4.cbrt() * (c1 + c2)
+    } else {
+        // Three real roots: t_k = 2√(a4/3) cos(φ/3 − 2πk/3) with
+        // cos φ = (a4/2) / (a4/3)^{3/2}; k = 0 gives the largest
+        // (positive) root.
+        let m = 2.0 * (a4 / 3.0).sqrt();
+        let cos_phi = (0.5 * a4) / (a4 / 3.0).powf(1.5);
+        let phi = cos_phi.clamp(-1.0, 1.0).acos();
+        m * (phi / 3.0).cos()
+    }
+}
+
+/// Residual of the cubic (for verification).
+pub fn residual(t: f64, a4: f64) -> f64 {
+    t * t * t - a4 * t - a4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn root_satisfies_cubic_small_a4() {
+        for a4 in [1e-6, 0.01, 0.5, 1.0, 5.0, 6.74] {
+            let t = positive_root(a4);
+            assert!(t > 0.0, "a4={a4} t={t}");
+            let r = residual(t, a4);
+            assert!(r.abs() < 1e-9 * (1.0 + a4), "a4={a4} residual={r}");
+        }
+    }
+
+    #[test]
+    fn root_satisfies_cubic_large_a4_trig_branch() {
+        for a4 in [6.76, 10.0, 100.0, 1e4, 1e8] {
+            let t = positive_root(a4);
+            assert!(t > 0.0, "a4={a4}");
+            let r = residual(t, a4) / (t * t * t);
+            assert!(r.abs() < 1e-9, "a4={a4} rel residual={r}");
+        }
+    }
+
+    #[test]
+    fn boundary_a4_at_half_gives_t_one() {
+        // t = 1 ⇔ 1 − A4 − A4 = 0 ⇔ A4 = 1/2 — the Case-1/Case-2
+        // boundary (q̂ = log2(1 + t) = 1).
+        let t = positive_root(0.5);
+        assert!((t - 1.0).abs() < 1e-12, "t={t}");
+    }
+
+    #[test]
+    fn monotone_in_a4() {
+        let mut prev = 0.0;
+        for i in 1..200 {
+            let a4 = i as f64 * 0.25;
+            let t = positive_root(a4);
+            assert!(t > prev, "a4={a4}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn matches_newton_property() {
+        prop::check(
+            "cubic-vs-newton",
+            prop::iters(300),
+            |rng| 10f64.powf(rng.range(-6.0, 9.0)),
+            |&a4| {
+                let t = positive_root(a4);
+                // Newton from a safe start.
+                let mut x = t.max(1.0) * 2.0;
+                for _ in 0..200 {
+                    let fx = residual(x, a4);
+                    let dfx = 3.0 * x * x - a4;
+                    if dfx.abs() < 1e-300 {
+                        break;
+                    }
+                    let nx = x - fx / dfx;
+                    if (nx - x).abs() < 1e-14 * x.abs() {
+                        x = nx;
+                        break;
+                    }
+                    x = nx;
+                }
+                if ((t - x) / x.max(1e-12)).abs() > 1e-6 {
+                    Err(format!("closed form {t} vs newton {x} (a4={a4})"))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+}

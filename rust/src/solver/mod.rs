@@ -1,0 +1,342 @@
+//! Closed-form per-client solver for the continuous subproblem **P3.2″**
+//! (paper §V-C): given a channel allocation (hence a rate v_i^n) and the
+//! queue state λ2, choose the quantization level q and CPU frequency f
+//! minimizing
+//!
+//! `J₃(f, q) = (λ2−ε2) w_i^n Z L (θ^max)² / (8(2^q−1)²)
+//!             + V τ^e α γ D_i f² + p V Z q / v`
+//!
+//! subject to C4′ (latency), C5 (f range), C8′ (q ≥ 1) — via the five
+//! exhaustive KKT cases of eq. (41), then re-integerized with Theorem 3
+//! (eq. (42)). A brute-force integer scan backs the closed form both as a
+//! numerical-fallback path and as the test oracle.
+
+pub mod cubic;
+
+use crate::config::SystemParams;
+use crate::energy;
+
+/// Per-client inputs to the solver for one round.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientCtx {
+    /// D_i — dataset size (samples).
+    pub d_i: f64,
+    /// w_i^n — aggregation weight among the round's participants.
+    pub w_round: f64,
+    /// v_i^n — uplink rate of the allocated channel (bit/s).
+    pub rate: f64,
+    /// θ_i^{n,max} — current L∞ range of the client's model.
+    pub theta_max: f64,
+    /// q from this client's previous participation (Case-5 Taylor anchor,
+    /// eq. (39)).
+    pub q_prev: f64,
+}
+
+/// Which KKT case produced the solution (0 = brute-force fallback).
+pub type CaseId = usize;
+
+/// Solver output: integer decision + diagnostics.
+#[derive(Clone, Copy, Debug)]
+pub struct Decision {
+    /// Integer quantization level q_i^n* (C8).
+    pub q: u32,
+    /// CPU frequency f_i^n* (Hz).
+    pub f: f64,
+    /// Continuous optimum q̂ before Theorem-3 rounding.
+    pub q_hat: f64,
+    /// KKT case that fired (1..=5; 0 = brute fallback).
+    pub case: CaseId,
+    /// Objective value J₃ at the integer decision.
+    pub j3: f64,
+}
+
+/// How Case 5's transcendental eq. (38) is solved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Case5Mode {
+    /// Paper-faithful: one first-order Taylor step around q_prev (eq. 39).
+    Taylor,
+    /// Exact: bisection on the (strictly decreasing) stationarity residual.
+    Bisect,
+}
+
+/// J₃ objective (eq. (31)) at a concrete (q, f); `lambda2` is λ2.
+pub fn j3(p: &SystemParams, lambda2: f64, ctx: &ClientCtx, q: f64, f: f64) -> f64 {
+    let l = (2f64).powf(q) - 1.0;
+    let err = (lambda2 - p.eps2) * ctx.w_round * (p.z as f64) * p.lips * ctx.theta_max
+        * ctx.theta_max
+        / (8.0 * l * l);
+    let cmp = p.v * p.tau_e as f64 * p.alpha * p.gamma * ctx.d_i * f * f;
+    let com = p.tx_power_w * p.v * (p.z as f64) * q / ctx.rate;
+    err + cmp + com
+}
+
+/// Largest integer q (≥1, ≤ q_cap) for which a feasible f exists;
+/// `None` when even q = 1 cannot meet C4′.
+pub fn q_max_feasible(p: &SystemParams, d_i: f64, rate: f64) -> Option<u32> {
+    if energy::s_of_q(p, d_i, 1, rate).is_none() {
+        return None;
+    }
+    // Deadline with f = f^max: v·T − v·τ^e γ D / f^max − Z − 32 ≥ Z·q.
+    let slack = rate * p.t_max - rate * p.tau_e as f64 * p.gamma * d_i / p.f_max
+        - p.z as f64
+        - 32.0;
+    let q = (slack / p.z as f64).floor();
+    if q < 1.0 {
+        None // s_of_q(1) succeeded ⇒ q ≥ 1; guard against fp edge.
+    } else {
+        Some((q as u32).min(p.q_cap).max(1))
+    }
+}
+
+/// The error-term coefficient `E = (λ2−ε2) w L (θ^max)²` and the cubic
+/// constant `A4 = v E ln2 / (4 p V)` (paper, below eq. (35)).
+fn a4(p: &SystemParams, lambda2: f64, ctx: &ClientCtx) -> f64 {
+    let e = (lambda2 - p.eps2) * ctx.w_round * p.lips * ctx.theta_max * ctx.theta_max;
+    ctx.rate * e * std::f64::consts::LN_2 / (4.0 * p.tx_power_w * p.v)
+}
+
+/// κ1 + pV from the q-stationarity row of eq. (33):
+/// `v E ln2 · 2^q / (4 (2^q − 1)³)` — the marginal value of raising q.
+fn marginal_value(p: &SystemParams, lambda2: f64, ctx: &ClientCtx, q: f64) -> f64 {
+    let e = (lambda2 - p.eps2) * ctx.w_round * p.lips * ctx.theta_max * ctx.theta_max;
+    let l = (2f64).powf(q) - 1.0;
+    ctx.rate * e * std::f64::consts::LN_2 * (2f64).powf(q) / (4.0 * l * l * l)
+}
+
+/// C4′-equality frequency for continuous q (no f^min clamp):
+/// `f(q) = v τ^e γ D / (v T^max − Z q − Z − 32)`; `None` if the payload
+/// alone exceeds the deadline.
+fn f_deadline(p: &SystemParams, ctx: &ClientCtx, q: f64) -> Option<f64> {
+    let den = ctx.rate * p.t_max - p.z as f64 * q - p.z as f64 - 32.0;
+    if den <= 0.0 {
+        return None;
+    }
+    Some(ctx.rate * p.tau_e as f64 * p.gamma * ctx.d_i / den)
+}
+
+/// The continuous solution (q̂, f̂) of P3.2″ via the 5 KKT cases.
+/// Returns `(q_hat, f_hat, case)`. `None` ⇒ q = 1 itself is infeasible.
+pub fn solve_continuous(
+    p: &SystemParams,
+    lambda2: f64,
+    ctx: &ClientCtx,
+    mode: Case5Mode,
+) -> Option<(f64, f64, CaseId)> {
+    // Feasibility gate: C4′ must admit q = 1 at some f ∈ [f^min, f^max].
+    let f1 = energy::s_of_q(p, ctx.d_i, 1, ctx.rate)?;
+
+    let a4v = a4(p, lambda2, ctx);
+
+    // ---- Case 1: C8′ strict (q̂ = 1). Pre1 ⇔ marginal value of q at
+    // q = 1 does not exceed the marginal comm cost ⇔ A4 ≤ 1/2.
+    // (Also fires whenever λ2 ≤ ε2, where the error term is worthless.)
+    if a4v <= 0.5 {
+        return Some((1.0, f1, 1));
+    }
+
+    // ---- Case 2: interior q, C4′ loose ⇒ f = f^min (Lemma 3).
+    let t = cubic::positive_root(a4v);
+    let q2 = (1.0 + t).log2();
+    if q2 > 1.0 {
+        // Pre2: C4′ loose at (f^min, q̂2).
+        let latency = p.tau_e as f64 * p.gamma * ctx.d_i / p.f_min
+            + (p.z as f64 * (q2 + 1.0) + 32.0) / ctx.rate;
+        if latency < p.t_max {
+            return Some((q2, p.f_min, 2));
+        }
+    }
+
+    // C4′ binds from here on: f = f(q) on the deadline surface.
+    // ---- Case 3: f pinned at f^max.
+    if let Some(q3) = deadline_q(p, ctx, p.f_max) {
+        if q3 > 1.0 {
+            let kappa1 = marginal_value(p, lambda2, ctx, q3) - p.tx_power_w * p.v;
+            if kappa1 >= 0.0 && kappa1 >= 2.0 * p.v * p.alpha * p.f_max.powi(3) {
+                return Some((q3, p.f_max, 3));
+            }
+        }
+    }
+
+    // ---- Case 4: f pinned at f^min.
+    if let Some(q4) = deadline_q(p, ctx, p.f_min) {
+        if q4 > 1.0 {
+            let kappa1 = marginal_value(p, lambda2, ctx, q4) - p.tx_power_w * p.v;
+            if kappa1 >= 0.0 && kappa1 <= 2.0 * p.v * p.alpha * p.f_min.powi(3) {
+                return Some((q4, p.f_min, 4));
+            }
+        }
+    }
+
+    // ---- Case 5: interior f on the deadline surface — eq. (38).
+    let q5 = match mode {
+        Case5Mode::Taylor => case5_taylor(p, lambda2, ctx),
+        Case5Mode::Bisect => case5_bisect(p, lambda2, ctx),
+    };
+    if let Some(q5) = q5 {
+        if q5 > 1.0 {
+            if let Some(f5) = f_deadline(p, ctx, q5) {
+                if f5 > p.f_min && f5 < p.f_max {
+                    return Some((q5, f5, 5));
+                }
+            }
+        }
+    }
+
+    // Numerical fallback (ill-conditioned boundaries): brute-force the
+    // integer problem directly; report the brute optimum as "case 0".
+    let (q, f, _) = solve_brute(p, lambda2, ctx)?;
+    Some((q as f64, f, 0))
+}
+
+/// q on the C4′ deadline at a pinned f (Cases 3 & 4):
+/// `q = (v T^max − v τ^e γ D / f − Z − 32) / Z`.
+fn deadline_q(p: &SystemParams, ctx: &ClientCtx, f: f64) -> Option<f64> {
+    let q = (ctx.rate * p.t_max - ctx.rate * p.tau_e as f64 * p.gamma * ctx.d_i / f
+        - p.z as f64
+        - 32.0)
+        / p.z as f64;
+    if q.is_finite() {
+        Some(q)
+    } else {
+        None
+    }
+}
+
+/// Paper eq. (39): one Newton/Taylor step of eq. (38) around q_prev.
+fn case5_taylor(p: &SystemParams, lambda2: f64, ctx: &ClientCtx) -> Option<f64> {
+    let qp = ctx.q_prev.max(1.0);
+    let fq = f_deadline(p, ctx, qp)?;
+    let e = (lambda2 - p.eps2) * ctx.w_round * p.lips * ctx.theta_max * ctx.theta_max;
+    let ln2 = std::f64::consts::LN_2;
+    let two_q = (2f64).powf(qp);
+    let l = two_q - 1.0;
+    // Numerator: g(q_prev) = RHS − LHS of eq. (38) at q_prev.
+    let rhs = ctx.rate * e * ln2 * two_q / (4.0 * p.v * l * l * l);
+    let num = rhs - 2.0 * p.alpha * fq.powi(3) - p.tx_power_w;
+    // Denominator: −g′(q_prev). Note a typo in the paper's eq. (39):
+    // it prints (2·2^{2q̂}+1) where differentiating eq. (38)'s RHS
+    // C·2^q/(2^q−1)³ gives −RHS′ = C ln2 · 2^q (2·2^q+1)/(2^q−1)⁴ —
+    // the paper's extra 2^q factor shrinks the Newton step by ~2^q and
+    // the across-round fixed-point iteration crawls. We use the correct
+    // derivative (DESIGN.md §6b).
+    let d_rhs = ctx.rate * e * ln2 * ln2 * (2.0 * two_q + 1.0) * two_q
+        / (4.0 * p.v * l * l * l * l);
+    let den_c4 = ctx.rate * p.t_max - p.z as f64 * qp - p.z as f64 - 32.0;
+    let d_lhs = 6.0 * p.alpha * p.z as f64 * (ctx.rate * p.tau_e as f64 * p.gamma * ctx.d_i).powi(3)
+        / den_c4.powi(4);
+    if d_rhs + d_lhs <= 0.0 {
+        return None;
+    }
+    Some(qp + num / (d_rhs + d_lhs))
+}
+
+/// Exact Case-5 root of eq. (38) by bisection: the residual
+/// `g(q) = RHS(q) − p − 2α f(q)³` is strictly decreasing in q.
+fn case5_bisect(p: &SystemParams, lambda2: f64, ctx: &ClientCtx) -> Option<f64> {
+    // Residual of eq. (38): RHS − LHS with RHS = marginal_value / V.
+    let g = |q: f64| -> Option<f64> {
+        let fq = f_deadline(p, ctx, q)?;
+        Some(marginal_value(p, lambda2, ctx, q) / p.v
+            - p.tx_power_w
+            - 2.0 * p.alpha * fq.powi(3))
+    };
+    // Upper bound: q where f(q) = f_max.
+    let q_hi = deadline_q(p, ctx, p.f_max)?;
+    let q_lo = 1.0;
+    if q_hi <= q_lo {
+        return None;
+    }
+    let g_lo = g(q_lo)?;
+    let g_hi = g(q_hi)?;
+    if g_lo <= 0.0 || g_hi >= 0.0 {
+        return None; // root not interior — another case applies
+    }
+    let (mut lo, mut hi) = (q_lo, q_hi);
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        match g(mid) {
+            Some(gm) if gm > 0.0 => lo = mid,
+            Some(_) => hi = mid,
+            None => hi = mid,
+        }
+        if hi - lo < 1e-10 {
+            break;
+        }
+    }
+    Some(0.5 * (lo + hi))
+}
+
+/// Theorem 3 (eq. (42)): integerize q̂ by comparing J₃ at ⌊q̂⌋ and ⌈q̂⌉
+/// with the per-q optimal frequency 𝒮(q).
+pub fn integer_round(
+    p: &SystemParams,
+    lambda2: f64,
+    ctx: &ClientCtx,
+    q_hat: f64,
+) -> Option<(u32, f64, f64)> {
+    let q_max = q_max_feasible(p, ctx.d_i, ctx.rate)?;
+    let lo = (q_hat.floor().max(1.0) as u32).min(q_max);
+    let hi = (q_hat.ceil().max(1.0) as u32).min(q_max);
+    let mut best: Option<(u32, f64, f64)> = None;
+    for q in [lo, hi] {
+        if let Some(f) = energy::s_of_q(p, ctx.d_i, q, ctx.rate) {
+            let val = j3(p, lambda2, ctx, q as f64, f);
+            if best.map(|(_, _, b)| val < b).unwrap_or(true) {
+                best = Some((q, f, val));
+            }
+        }
+    }
+    best
+}
+
+/// Full per-client solve: continuous KKT cases + Theorem-3 rounding.
+pub fn solve_client(
+    p: &SystemParams,
+    lambda2: f64,
+    ctx: &ClientCtx,
+    mode: Case5Mode,
+) -> Option<Decision> {
+    let (q_hat, _f_hat, case) = solve_continuous(p, lambda2, ctx, mode)?;
+    let (q, f, j) = integer_round(p, lambda2, ctx, q_hat)?;
+    Some(Decision { q, f, q_hat, case, j3: j })
+}
+
+/// Inverse of the q-stationarity condition: the λ2 at which the
+/// (unconstrained) continuous optimum equals `q` for a client with the
+/// given rate / weight / range. Used to warm-start the λ2 queue below
+/// its equilibrium so the level trajectory rises (Remark 1) instead of
+/// jumping to the stationary point.
+pub fn lambda2_for_target_q(
+    p: &SystemParams,
+    q: f64,
+    rate: f64,
+    w_round: f64,
+    theta_max: f64,
+) -> f64 {
+    // Stationarity: A4 = (2^q − 1)³ / 2^q with
+    // A4 = v (λ2 − ε2) w L θ² ln2 / (4 p V).
+    let two_q = (2f64).powf(q);
+    let l = two_q - 1.0;
+    let a4 = l * l * l / two_q;
+    p.eps2
+        + a4 * 4.0 * p.tx_power_w * p.v
+            / (rate * w_round * p.lips * theta_max * theta_max * std::f64::consts::LN_2)
+}
+
+/// Test oracle & fallback: exhaustive integer scan of q with f = 𝒮(q).
+pub fn solve_brute(p: &SystemParams, lambda2: f64, ctx: &ClientCtx) -> Option<(u32, f64, f64)> {
+    let q_max = q_max_feasible(p, ctx.d_i, ctx.rate)?;
+    let mut best: Option<(u32, f64, f64)> = None;
+    for q in 1..=q_max {
+        if let Some(f) = energy::s_of_q(p, ctx.d_i, q, ctx.rate) {
+            let val = j3(p, lambda2, ctx, q as f64, f);
+            if best.map(|(_, _, b)| val < b).unwrap_or(true) {
+                best = Some((q, f, val));
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,232 @@
+//! Solver unit + property tests. The key invariant: the closed-form KKT
+//! pipeline (5 cases + Theorem-3 rounding) must land on the brute-force
+//! integer optimum, across randomized channel/queue/dataset regimes.
+
+use super::*;
+use crate::util::prop;
+use crate::util::rng::Rng;
+
+fn params() -> SystemParams {
+    SystemParams::femnist_small()
+}
+
+fn ctx(d_i: f64, rate: f64) -> ClientCtx {
+    ClientCtx { d_i, w_round: 0.1, rate, theta_max: 0.5, q_prev: 6.0 }
+}
+
+fn rand_regime(rng: &mut Rng) -> (SystemParams, f64, ClientCtx) {
+    let mut p = params();
+    p.v = 10f64.powf(rng.range(0.0, 3.0));
+    let lambda2 = p.eps2 + 10f64.powf(rng.range(-3.0, 3.5)) - if rng.chance(0.15) { 2.0 * p.eps2 } else { 0.0 };
+    let c = ClientCtx {
+        d_i: rng.range(300.0, 2500.0),
+        w_round: rng.range(0.02, 0.5),
+        rate: rng.range(8e6, 40e6),
+        theta_max: rng.range(0.05, 2.0),
+        q_prev: rng.range(1.0, 14.0),
+    };
+    (p, lambda2, c)
+}
+
+#[test]
+fn q_max_feasible_monotone_in_rate() {
+    let p = params();
+    let q_lo = q_max_feasible(&p, 1200.0, 10e6);
+    let q_hi = q_max_feasible(&p, 1200.0, 30e6).unwrap();
+    if let Some(q_lo) = q_lo {
+        assert!(q_hi >= q_lo);
+    }
+    // Terrible rate ⇒ infeasible.
+    assert_eq!(q_max_feasible(&p, 1200.0, 0.2e6), None);
+}
+
+#[test]
+fn q_max_feasible_respects_deadline() {
+    let p = params();
+    let q = q_max_feasible(&p, 1200.0, 20e6).unwrap();
+    // The returned q must be feasible, q+1 must not be.
+    assert!(energy::s_of_q(&p, 1200.0, q, 20e6).is_some());
+    if q < p.q_cap {
+        assert!(energy::s_of_q(&p, 1200.0, q + 1, 20e6).is_none());
+    }
+}
+
+#[test]
+fn empty_queue_forces_q1() {
+    // λ2 = 0 < ε2 ⇒ error term worthless ⇒ Case 1, q = 1.
+    let p = params();
+    let d = solve_client(&p, 0.0, &ctx(1200.0, 20e6), Case5Mode::Bisect).unwrap();
+    assert_eq!(d.case, 1);
+    assert_eq!(d.q, 1);
+}
+
+#[test]
+fn huge_queue_pushes_q_up() {
+    let p = params();
+    let c = ctx(1200.0, 20e6);
+    let d_small = solve_client(&p, p.eps2 + 0.5, &c, Case5Mode::Bisect).unwrap();
+    let d_large = solve_client(&p, p.eps2 + 5e3, &c, Case5Mode::Bisect).unwrap();
+    assert!(
+        d_large.q > d_small.q,
+        "λ2 growth must raise q: {} vs {}",
+        d_large.q,
+        d_small.q
+    );
+}
+
+#[test]
+fn remark1_q_rises_with_queue_trajectory() {
+    // Remark 1: with λ2 rising (pre-equilibrium), q̂ rises.
+    let p = params();
+    let c = ctx(1200.0, 20e6);
+    let mut prev = 0.0;
+    for step in 1..8 {
+        let lambda2 = p.eps2 + (step as f64) * 2.0;
+        let (q_hat, _, _) = solve_continuous(&p, lambda2, &c, Case5Mode::Bisect).unwrap();
+        assert!(q_hat >= prev, "step {step}: q̂ {q_hat} < {prev}");
+        prev = q_hat;
+    }
+}
+
+#[test]
+fn remark2_q_negatively_correlated_with_dataset_size() {
+    // Remark 2: larger D_i ⇒ lower q (compute eats the latency budget).
+    let p = params();
+    let lambda2 = p.eps2 + 50.0;
+    let q_small_d = solve_client(&p, lambda2, &ctx(600.0, 15e6), Case5Mode::Bisect).unwrap();
+    let q_large_d = solve_client(&p, lambda2, &ctx(2400.0, 15e6), Case5Mode::Bisect).unwrap();
+    assert!(
+        q_small_d.q >= q_large_d.q,
+        "D=600 ⇒ q={}, D=2400 ⇒ q={}",
+        q_small_d.q,
+        q_large_d.q
+    );
+}
+
+#[test]
+fn infeasible_client_returns_none() {
+    let p = params();
+    // Rate so low the q=1 payload alone blows T^max.
+    assert!(solve_client(&p, 1.0, &ctx(1200.0, 0.5e6), Case5Mode::Bisect).is_none());
+    // Dataset so large computation alone blows T^max even at f^max:
+    // τ^e γ D / f^max > T^max ⇔ D > 0.02 * 1e9 / 2000 = 10 000.
+    assert!(solve_client(&p, 1.0, &ctx(50_000.0, 20e6), Case5Mode::Bisect).is_none());
+}
+
+#[test]
+fn decision_always_feasible() {
+    prop::check("decision-feasible", prop::iters(400), rand_regime, |(p, l2, c)| {
+        if let Some(d) = solve_client(p, *l2, c, Case5Mode::Bisect) {
+            let lat = energy::client_latency(p, c.d_i, d.f, d.q, c.rate);
+            if lat > p.t_max * (1.0 + 1e-9) {
+                return Err(format!("latency {lat} > {}", p.t_max));
+            }
+            if d.f < p.f_min * (1.0 - 1e-12) || d.f > p.f_max * (1.0 + 1e-12) {
+                return Err(format!("f {} out of range", d.f));
+            }
+            if d.q < 1 {
+                return Err("q < 1".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn closed_form_matches_brute_force() {
+    prop::check("kkt-vs-brute", prop::iters(400), rand_regime, |(p, l2, c)| {
+        let closed = solve_client(p, *l2, c, Case5Mode::Bisect);
+        let brute = solve_brute(p, *l2, c);
+        match (closed, brute) {
+            (None, None) => Ok(()),
+            (Some(d), Some((qb, _fb, jb))) => {
+                // Equal objective (ties between adjacent q are fine).
+                let rel = (d.j3 - jb).abs() / jb.abs().max(1e-12);
+                if rel < 1e-6 || d.q == qb {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "closed form q={} j3={} (case {}) vs brute q={qb} j3={jb}",
+                        d.q, d.j3, d.case
+                    ))
+                }
+            }
+            (a, b) => Err(format!("feasibility mismatch: {a:?} vs {b:?}")),
+        }
+    });
+}
+
+#[test]
+fn taylor_case5_close_to_exact_near_anchor() {
+    // Eq. (39) is a first-order step: with q_prev near the true root it
+    // must land close to the bisection answer.
+    let p = params();
+    let lambda2 = p.eps2 + 2e3;
+    let mut c = ctx(1600.0, 14e6);
+    // Find the exact case-5 root first.
+    if let Some((q_exact, _, case)) = solve_continuous(&p, lambda2, &c, Case5Mode::Bisect) {
+        if case == 5 {
+            c.q_prev = q_exact + 0.4;
+            let (q_taylor, _, case_t) =
+                solve_continuous(&p, lambda2, &c, Case5Mode::Taylor).unwrap();
+            if case_t == 5 {
+                assert!(
+                    (q_taylor - q_exact).abs() < 0.5,
+                    "taylor {q_taylor} vs exact {q_exact}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn integer_round_is_floor_or_ceil() {
+    prop::check("thm3-floor-ceil", prop::iters(300), rand_regime, |(p, l2, c)| {
+        if let Some((q_hat, _, _)) = solve_continuous(p, *l2, c, Case5Mode::Bisect) {
+            if let Some((q, _, _)) = integer_round(p, *l2, c, q_hat) {
+                let q_max = q_max_feasible(p, c.d_i, c.rate).unwrap();
+                let lo = (q_hat.floor().max(1.0) as u32).min(q_max);
+                let hi = (q_hat.ceil().max(1.0) as u32).min(q_max);
+                if q != lo && q != hi {
+                    return Err(format!("q={q} not in {{{lo},{hi}}} (q̂={q_hat})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cases_cover_all_regimes() {
+    // Over the random regimes, the solver must exercise several distinct
+    // KKT cases (not fall through to brute force everywhere).
+    let mut seen = [0usize; 6];
+    let mut rng = Rng::seed_from(77);
+    for _ in 0..600 {
+        let (p, l2, c) = rand_regime(&mut rng);
+        if let Some((_, _, case)) = solve_continuous(&p, l2, &c, Case5Mode::Bisect) {
+            seen[case] += 1;
+        }
+    }
+    let distinct = seen.iter().filter(|&&n| n > 0).count();
+    assert!(distinct >= 3, "case histogram {seen:?}");
+    assert!(seen[1] > 0, "case 1 never fired: {seen:?}");
+    // Brute fallback should be rare.
+    let total: usize = seen.iter().sum();
+    assert!(seen[0] * 10 <= total, "fallback dominates: {seen:?}");
+}
+
+#[test]
+fn j3_matches_formula() {
+    let p = params();
+    let c = ctx(1200.0, 20e6);
+    let lambda2 = p.eps2 + 3.0;
+    let q = 4.0;
+    let f = 5e8;
+    let l = 15.0;
+    let want = (lambda2 - p.eps2) * c.w_round * p.z as f64 * p.lips * c.theta_max * c.theta_max
+        / (8.0 * l * l)
+        + p.v * p.tau_e as f64 * p.alpha * p.gamma * c.d_i * f * f
+        + p.tx_power_w * p.v * p.z as f64 * q / c.rate;
+    assert!((j3(&p, lambda2, &c, q, f) - want).abs() < 1e-12);
+}

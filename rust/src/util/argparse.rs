@@ -1,0 +1,133 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `qccf <subcommand> [--key value]... [--flag]... [positional]...`
+//! Flags vs options are disambiguated by the caller: `get*` consumes an
+//! option with a value, `flag` tests presence.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub cmd: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else {
+                    // Value form: `--key value` if the next token isn't a flag.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.opts.insert(name.to_string(), v);
+                        }
+                        _ => out.flags.push(name.to_string()),
+                    }
+                }
+            } else if out.cmd.is_none() {
+                out.cmd = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated f64 list, e.g. `--v-values 1,10,100`.
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            Some(v) => v.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    /// Comma-separated string list.
+    pub fn get_str_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v.split(',').map(|t| t.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = args("fig3 --rounds 50 --beta 300 --quick");
+        assert_eq!(a.cmd.as_deref(), Some("fig3"));
+        assert_eq!(a.get_usize("rounds", 0), 50);
+        assert_eq!(a.get_f64("beta", 0.0), 300.0);
+        assert!(a.flag("quick"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = args("train --profile=small --v=100");
+        assert_eq!(a.get("profile"), Some("small"));
+        assert_eq!(a.get_f64("v", 0.0), 100.0);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = args("bench --quick");
+        assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = args("fig2 --v-values 1,10,100");
+        assert_eq!(a.get_f64_list("v-values", &[]), vec![1.0, 10.0, 100.0]);
+        assert_eq!(a.get_f64_list("other", &[5.0]), vec![5.0]);
+    }
+
+    #[test]
+    fn positionals() {
+        let a = args("run alpha beta --x 1");
+        assert_eq!(a.positionals, vec!["alpha", "beta"]);
+    }
+}

@@ -1,0 +1,75 @@
+//! Minimal CSV writer for metric traces (each experiment run dumps
+//! per-round rows that EXPERIMENTS.md references).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    ncol: usize,
+}
+
+fn escape(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, headers: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = CsvWriter {
+            out: BufWriter::new(File::create(path)?),
+            ncol: headers.len(),
+        };
+        w.write_raw(headers)?;
+        Ok(w)
+    }
+
+    fn write_raw(&mut self, cells: &[&str]) -> std::io::Result<()> {
+        let line: Vec<String> = cells.iter().map(|c| escape(c)).collect();
+        writeln!(self.out, "{}", line.join(","))
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> std::io::Result<()> {
+        debug_assert_eq!(cells.len(), self.ncol, "column count mismatch");
+        let refs: Vec<&str> = cells.iter().map(|s| s.as_str()).collect();
+        self.write_raw(&refs)
+    }
+
+    pub fn row_f64(&mut self, cells: &[f64]) -> std::io::Result<()> {
+        self.row(&cells.iter().map(|x| format!("{x}")).collect::<Vec<_>>())
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join("qccf_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["x,1".into(), "say \"hi\"".into()]).unwrap();
+            w.row_f64(&[1.5, 2.5]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            text,
+            "a,b\n\"x,1\",\"say \"\"hi\"\"\"\n1.5,2.5\n"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

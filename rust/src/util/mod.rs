@@ -1,0 +1,14 @@
+//! Offline substrates: everything a normal project would pull from
+//! crates.io (RNG, JSON, CSV, CLI parsing, logging, thread pool, stats,
+//! tables, property testing) built in-tree because this environment has
+//! no registry access. See DESIGN.md §3 "Offline substrates".
+
+pub mod argparse;
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;

@@ -1,0 +1,85 @@
+//! Property-test runner (proptest is unavailable offline).
+//!
+//! `check(name, iters, gen, prop)` draws `iters` random cases from `gen`
+//! and asserts `prop` on each; on failure it panics with the *case seed*
+//! so the exact case replays with `QCCF_PROP_SEED=<seed>`. A fixed default
+//! master seed keeps CI deterministic while `QCCF_PROP_ITERS` can crank
+//! coverage locally.
+
+use super::rng::Rng;
+
+fn master_seed() -> u64 {
+    std::env::var("QCCF_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x5EED_CAFE)
+}
+
+pub fn iters(default: usize) -> usize {
+    std::env::var("QCCF_PROP_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Run a property over random cases.
+///
+/// * `gen`: draws one case from an `Rng`.
+/// * `prop`: returns `Err(description)` when the property is violated.
+pub fn check<C, G, P>(name: &str, n: usize, mut gen: G, mut prop: P)
+where
+    C: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> C,
+    P: FnMut(&C) -> Result<(), String>,
+{
+    let base = master_seed();
+    for i in 0..n {
+        let case_seed = base.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::seed_from(case_seed);
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property `{name}` failed on iteration {i} \
+                 (replay with QCCF_PROP_SEED={case_seed} QCCF_PROP_ITERS=1):\n  \
+                 case: {case:?}\n  violation: {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("abs-nonneg", 200, |rng| rng.gaussian(0.0, 10.0), |x| {
+            if x.abs() >= 0.0 {
+                Ok(())
+            } else {
+                Err(format!("abs({x}) < 0"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn reports_failures() {
+        check("always-fails", 5, |rng| rng.uniform(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut first: Vec<f64> = Vec::new();
+        check("collect", 10, |rng| rng.uniform(), |x| {
+            first.push(*x);
+            Ok(())
+        });
+        let mut second: Vec<f64> = Vec::new();
+        check("collect", 10, |rng| rng.uniform(), |x| {
+            second.push(*x);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

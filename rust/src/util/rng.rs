@@ -1,0 +1,269 @@
+//! Deterministic PRNG substrate (crates.io is unavailable offline, so we
+//! carry our own): splitmix64 seeding + xoshiro256++ core, with the
+//! samplers the wireless/FL simulation needs — uniform, Gaussian
+//! (Box–Muller), Rician fading power gains, and integer helpers.
+//!
+//! Every stochastic component of the simulator (channel draws, dataset
+//! sizes, GA operators, quantization noise streams, data sampling) pulls
+//! from an explicitly seeded `Rng`, so full experiments replay
+//! bit-for-bit.
+
+/// xoshiro256++ PRNG (public-domain reference algorithm by Blackman/Vigna).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box–Muller variate.
+    spare: Option<f64>,
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[inline]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+impl Rng {
+    /// Seed via splitmix64 so similar seeds give uncorrelated streams.
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare: None }
+    }
+
+    /// Derive an independent child stream (used to give every client /
+    /// round its own noise stream without coupling draws).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let mix = self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Rng::seed_from(mix)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1) with 53 random bits.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1) (quantization-noise streams).
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection-free for our use).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Bernoulli(p).
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Standard normal via Box–Muller (cached spare).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// N(mu, sigma^2).
+    pub fn gaussian(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Rician fading **power** gain with K-factor `k` and mean power
+    /// `omega` (paper Table I: K = 4, zeta = omega = 1).
+    ///
+    /// Amplitude a = |nu + sigma*(N1 + j N2)| with nu^2 = K*omega/(K+1)
+    /// and sigma^2 = omega / (2(K+1)); returns a^2, so E[a^2] = omega.
+    pub fn rician_power(&mut self, k: f64, omega: f64) -> f64 {
+        let nu = (k * omega / (k + 1.0)).sqrt();
+        let sigma = (omega / (2.0 * (k + 1.0))).sqrt();
+        let x = nu + sigma * self.normal();
+        let y = sigma * self.normal();
+        x * x + y * y
+    }
+
+    /// Fill a f32 slice with uniforms in [0,1) (quantization noise).
+    pub fn fill_uniform_f32(&mut self, buf: &mut [f32]) {
+        for v in buf.iter_mut() {
+            *v = self.uniform_f32();
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// k distinct indices out of n (partial Fisher–Yates).
+    pub fn choose_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        let k = k.min(n);
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::seed_from(42);
+        let mut b = Rng::seed_from(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seed_from(1);
+        let mut b = Rng::seed_from(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval_and_well_spread() {
+        let mut rng = Rng::seed_from(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::seed_from(11);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn rician_mean_power_is_omega() {
+        let mut rng = Rng::seed_from(13);
+        let n = 50_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += rng.rician_power(4.0, 1.0);
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn rician_large_k_concentrates() {
+        // K -> inf approaches a pure LOS link: power ~ omega, low variance.
+        let mut rng = Rng::seed_from(17);
+        let mut var = 0.0;
+        let n = 20_000;
+        for _ in 0..n {
+            let p = rng.rician_power(1000.0, 1.0);
+            var += (p - 1.0) * (p - 1.0);
+        }
+        assert!((var / n as f64) < 0.01);
+    }
+
+    #[test]
+    fn choose_indices_distinct() {
+        let mut rng = Rng::seed_from(19);
+        for _ in 0..50 {
+            let picked = rng.choose_indices(20, 7);
+            assert_eq!(picked.len(), 7);
+            let mut sorted = picked.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 7);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::seed_from(23);
+        let mut xs: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_uncorrelated() {
+        let mut root = Rng::seed_from(29);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let mut same = 0;
+        for _ in 0..1000 {
+            if a.next_u64() == b.next_u64() {
+                same += 1;
+            }
+        }
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,89 @@
+//! Scoped data-parallel helper (tokio/rayon are unavailable offline).
+//!
+//! `parallel_map` fans a slice out over `n` scoped worker threads pulling
+//! indices from a shared atomic counter — enough for the coordinator's
+//! per-client train-step fan-out and GA fitness evaluation. On this 1-core
+//! box it mostly exercises the code path; on multi-core hosts it scales.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Apply `f` to every element, using up to `threads` workers.
+/// Results keep the input order.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled slot"))
+        .collect()
+}
+
+/// Number of worker threads to use by default (leave one core for the
+/// coordinator loop; minimum 1).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(&items, 4, |i, &x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(parallel_map(&empty, 4, |_, &x| x).is_empty());
+        assert_eq!(parallel_map(&[7u32], 4, |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let items = [1, 2, 3];
+        assert_eq!(parallel_map(&items, 1, |_, &x| x * x), vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn results_complete_under_contention() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |_, &x| x);
+        assert_eq!(out.len(), 1000);
+        assert!(out.iter().enumerate().all(|(i, &x)| i == x));
+    }
+}

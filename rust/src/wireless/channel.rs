@@ -1,0 +1,177 @@
+//! Per-round channel state: client placement, composite gains
+//! `h_{i,c}^n`, and uplink rates per (client, channel) pair.
+
+use crate::config::params::db_to_lin;
+use crate::config::SystemParams;
+use crate::util::rng::Rng;
+
+use super::{channel_rate, pathloss_gain};
+
+/// Static geometry + parameters; draws a fresh [`ChannelState`] each round.
+#[derive(Clone, Debug)]
+pub struct ChannelModel {
+    /// Distance of each client from the server (m).
+    pub distances_m: Vec<f64>,
+    /// Large-scale gain per client (pathloss × device gain), constant
+    /// over the run (client mobility is out of scope, as in the paper).
+    pub large_scale: Vec<f64>,
+    num_channels: usize,
+    bandwidth_hz: f64,
+    tx_power_w: f64,
+    noise_psd: f64,
+    rician_k: f64,
+    rician_zeta: f64,
+}
+
+impl ChannelModel {
+    /// Place `U` clients uniformly in the cell disk (area-uniform:
+    /// d = R·sqrt(u)) and precompute large-scale gains.
+    pub fn new(params: &SystemParams, rng: &mut Rng) -> ChannelModel {
+        let distances_m: Vec<f64> = (0..params.num_clients)
+            .map(|_| params.cell_radius_m * rng.uniform().sqrt())
+            .collect();
+        let gain = db_to_lin(params.gain_db);
+        let large_scale = distances_m
+            .iter()
+            .map(|&d| gain * pathloss_gain(d, params.carrier_ghz))
+            .collect();
+        ChannelModel {
+            distances_m,
+            large_scale,
+            num_channels: params.num_channels,
+            bandwidth_hz: params.bandwidth_hz,
+            tx_power_w: params.tx_power_w,
+            noise_psd: params.noise_psd_w_hz,
+            rician_k: params.rician_k,
+            rician_zeta: params.rician_zeta,
+        }
+    }
+
+    /// Draw the round's `h_{i,c}^n` (frequency-selective: independent
+    /// Rician power per channel) and the resulting per-pair rates.
+    pub fn draw(&self, rng: &mut Rng) -> ChannelState {
+        let u = self.large_scale.len();
+        let c = self.num_channels;
+        let mut gains = vec![0.0f64; u * c];
+        let mut rates = vec![0.0f64; u * c];
+        for i in 0..u {
+            for ch in 0..c {
+                let small = rng.rician_power(self.rician_k, self.rician_zeta);
+                let h = self.large_scale[i] * small;
+                gains[i * c + ch] = h;
+                rates[i * c + ch] =
+                    channel_rate(self.bandwidth_hz, self.tx_power_w, h, self.noise_psd);
+            }
+        }
+        ChannelState { num_clients: u, num_channels: c, gains, rates }
+    }
+}
+
+/// One round's channel realization.
+#[derive(Clone, Debug)]
+pub struct ChannelState {
+    pub num_clients: usize,
+    pub num_channels: usize,
+    /// Row-major `[client][channel]` composite power gains.
+    gains: Vec<f64>,
+    /// Row-major `[client][channel]` Shannon rates (bit/s).
+    rates: Vec<f64>,
+}
+
+impl ChannelState {
+    pub fn gain(&self, client: usize, channel: usize) -> f64 {
+        self.gains[client * self.num_channels + channel]
+    }
+
+    pub fn rate(&self, client: usize, channel: usize) -> f64 {
+        self.rates[client * self.num_channels + channel]
+    }
+
+    /// Best channel for a client (used by greedy baselines).
+    pub fn best_channel(&self, client: usize) -> usize {
+        (0..self.num_channels)
+            .max_by(|&a, &b| {
+                self.rate(client, a).partial_cmp(&self.rate(client, b)).unwrap()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Build directly from a rate matrix (testing / synthetic scenarios).
+    pub fn from_rates(num_clients: usize, num_channels: usize, rates: Vec<f64>) -> ChannelState {
+        assert_eq!(rates.len(), num_clients * num_channels);
+        ChannelState { num_clients, num_channels, gains: rates.clone(), rates }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> (ChannelModel, Rng) {
+        let params = SystemParams::femnist_small();
+        let mut rng = Rng::seed_from(5);
+        (ChannelModel::new(&params, &mut rng), rng)
+    }
+
+    #[test]
+    fn placement_within_cell() {
+        let (m, _) = model();
+        assert_eq!(m.distances_m.len(), 10);
+        assert!(m.distances_m.iter().all(|&d| (0.0..=500.0).contains(&d)));
+    }
+
+    #[test]
+    fn nearer_clients_have_higher_large_scale_gain() {
+        let (m, _) = model();
+        let mut pairs: Vec<(f64, f64)> =
+            m.distances_m.iter().cloned().zip(m.large_scale.iter().cloned()).collect();
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in pairs.windows(2) {
+            assert!(w[0].1 >= w[1].1, "gain should fall with distance");
+        }
+    }
+
+    #[test]
+    fn draw_shapes_and_positivity() {
+        let (m, mut rng) = model();
+        let st = m.draw(&mut rng);
+        assert_eq!((st.num_clients, st.num_channels), (10, 10));
+        for i in 0..10 {
+            for c in 0..10 {
+                assert!(st.gain(i, c) > 0.0);
+                assert!(st.rate(i, c) > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn draws_differ_across_rounds() {
+        let (m, mut rng) = model();
+        let a = m.draw(&mut rng);
+        let b = m.draw(&mut rng);
+        assert_ne!(a.gain(0, 0), b.gain(0, 0));
+    }
+
+    #[test]
+    fn rates_in_plausible_band() {
+        // Calibration check: with default params, rates should sit in the
+        // ~5–40 Mb/s band that makes q ∈ [1, 16] feasible for Z ≈ 20 k.
+        let (m, mut rng) = model();
+        let st = m.draw(&mut rng);
+        let mut all = Vec::new();
+        for i in 0..10 {
+            for c in 0..10 {
+                all.push(st.rate(i, c));
+            }
+        }
+        let mean = all.iter().sum::<f64>() / all.len() as f64;
+        assert!(mean > 5e6 && mean < 60e6, "mean rate {mean}");
+    }
+
+    #[test]
+    fn best_channel_is_argmax() {
+        let st = ChannelState::from_rates(2, 3, vec![1.0, 5.0, 2.0, 9.0, 1.0, 3.0]);
+        assert_eq!(st.best_channel(0), 1);
+        assert_eq!(st.best_channel(1), 0);
+    }
+}

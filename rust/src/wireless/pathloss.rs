@@ -1,0 +1,60 @@
+//! Large-scale fading: 3GPP TR 38.901-style UMa LOS pathloss
+//! `PL(dB) = 28.0 + 22 log10(d_3D) + 20 log10(f_GHz)` (the paper cites
+//! TR 38.901 for its large-scale model [32]).
+
+/// Pathloss in dB at 3D distance `d_m` meters, carrier `fc_ghz` GHz.
+/// Clamped below at 1 m to keep the formula sane for co-located clients.
+pub fn pathloss_db(d_m: f64, fc_ghz: f64) -> f64 {
+    let d = d_m.max(1.0);
+    28.0 + 22.0 * d.log10() + 20.0 * fc_ghz.log10()
+}
+
+/// Linear power *gain* (≤ 1) corresponding to [`pathloss_db`].
+pub fn pathloss_gain(d_m: f64, fc_ghz: f64) -> f64 {
+    10f64.powf(-pathloss_db(d_m, fc_ghz) / 10.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_in_distance() {
+        let near = pathloss_db(10.0, 2.4);
+        let far = pathloss_db(500.0, 2.4);
+        assert!(far > near);
+        // 22 dB/decade slope.
+        let d1 = pathloss_db(100.0, 2.4);
+        let d2 = pathloss_db(1000.0, 2.4);
+        assert!((d2 - d1 - 22.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn carrier_dependence() {
+        // 20 dB per decade of carrier frequency.
+        let a = pathloss_db(100.0, 1.0);
+        let b = pathloss_db(100.0, 10.0);
+        assert!((b - a - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gain_inverse_of_db() {
+        let db = pathloss_db(250.0, 2.4);
+        let g = pathloss_gain(250.0, 2.4);
+        assert!((-10.0 * g.log10() - db).abs() < 1e-9);
+        assert!(g > 0.0 && g < 1.0);
+    }
+
+    #[test]
+    fn clamps_below_one_meter() {
+        assert_eq!(pathloss_db(0.0, 2.4), pathloss_db(1.0, 2.4));
+    }
+
+    #[test]
+    fn expected_magnitude_at_cell_edge() {
+        // ~96 dB at 500 m / 2.4 GHz — the regime the calibration note in
+        // config/mod.rs reasons about.
+        let db = pathloss_db(500.0, 2.4);
+        assert!((db - 94.0).abs() < 4.0, "db={db}");
+    }
+}

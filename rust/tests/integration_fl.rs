@@ -1,0 +1,129 @@
+//! Full-stack FL integration: server loop over the tiny profile with
+//! every scheduler — loss must fall, accuracy must beat chance, energy
+//! accounting must be positive and finite, traces deterministic per seed.
+//!
+//! All tests no-op (with a note) when `make artifacts` hasn't run.
+
+use qccf::baselines::{make_scheduler, ALL_ALGORITHMS};
+use qccf::data::{self, DataGenConfig};
+use qccf::experiments::common::params_for;
+use qccf::experiments::Task;
+use qccf::fl::Server;
+use qccf::runtime::{artifacts_dir, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(&artifacts_dir(), "tiny").expect("load tiny runtime"))
+}
+
+fn make_server<'rt>(rt: &'rt Runtime, alg: &str, seed: u64) -> Server<'rt> {
+    let params = params_for(rt, Task::Femnist, 300.0);
+    let mut dcfg = DataGenConfig::new(params.num_clients, rt.info.image, rt.info.classes);
+    dcfg.size_mean = 300.0;
+    dcfg.size_std = 60.0;
+    dcfg.test_size = 128;
+    let fed = data::generate(&dcfg, seed);
+    let sched = make_scheduler(alg, seed).unwrap();
+    let mut s = Server::new(params, rt, fed, sched, seed).expect("server");
+    s.eval_every = 2;
+    s
+}
+
+#[test]
+fn qccf_learns_and_accounts_energy() {
+    let Some(rt) = runtime() else { return };
+    let mut server = make_server(&rt, "qccf", 1);
+    let trace = server.run(10).unwrap();
+    assert_eq!(trace.records.len(), 10);
+    let acc = trace.best_accuracy().expect("eval ran");
+    assert!(acc > 0.5, "accuracy {acc} not above chance");
+    assert!(trace.total_energy() > 0.0);
+    assert!(trace.total_energy().is_finite());
+    // Cumulative energy is monotone.
+    let mut prev = 0.0;
+    for r in &trace.records {
+        assert!(r.cum_energy >= prev);
+        prev = r.cum_energy;
+        assert!(r.lambda1.is_finite() && r.lambda2.is_finite());
+        assert!(r.lambda1 >= 0.0 && r.lambda2 >= 0.0);
+    }
+}
+
+#[test]
+fn every_scheduler_completes_rounds() {
+    let Some(rt) = runtime() else { return };
+    for alg in ALL_ALGORITHMS {
+        let mut server = make_server(&rt, alg, 2);
+        let trace = server.run(4).unwrap();
+        assert_eq!(trace.records.len(), 4, "{alg}");
+        let scheduled: usize = trace.records.iter().map(|r| r.scheduled).sum();
+        assert!(scheduled > 0, "{alg}: nothing ever scheduled");
+        assert!(trace.total_energy() > 0.0, "{alg}");
+        // Aggregated ≤ scheduled (dropouts possible but not negative).
+        for r in &trace.records {
+            assert!(r.aggregated <= r.scheduled, "{alg}");
+        }
+    }
+}
+
+#[test]
+fn traces_deterministic_per_seed() {
+    let Some(rt) = runtime() else { return };
+    let t1 = make_server(&rt, "qccf", 7).run(4).unwrap();
+    let t2 = make_server(&rt, "qccf", 7).run(4).unwrap();
+    for (a, b) in t1.records.iter().zip(&t2.records) {
+        assert_eq!(a.scheduled, b.scheduled);
+        assert_eq!(a.energy, b.energy);
+        assert_eq!(a.mean_q, b.mean_q);
+        assert_eq!(a.test_acc, b.test_acc);
+    }
+    let t3 = make_server(&rt, "qccf", 8).run(4).unwrap();
+    let same = t1
+        .records
+        .iter()
+        .zip(&t3.records)
+        .all(|(a, b)| a.energy == b.energy && a.mean_q == b.mean_q);
+    assert!(!same, "different seeds must diverge");
+}
+
+#[test]
+fn quantizing_schedulers_report_levels() {
+    let Some(rt) = runtime() else { return };
+    for alg in ["qccf", "channel-allocate", "principle", "same-size"] {
+        let trace = make_server(&rt, alg, 3).run(4).unwrap();
+        let any_q = trace.records.iter().any(|r| r.mean_q >= 1.0);
+        assert!(any_q, "{alg}: no quantization levels recorded");
+    }
+}
+
+#[test]
+fn no_quant_uploads_raw() {
+    let Some(rt) = runtime() else { return };
+    let trace = make_server(&rt, "no-quant", 4).run(3).unwrap();
+    for r in &trace.records {
+        // mean_q counts only quantized uploads (q ≥ 1) — none here.
+        assert_eq!(r.mean_q, 0.0);
+        for q in r.q_per_client.iter().flatten() {
+            assert_eq!(*q, 0, "raw upload sentinel");
+        }
+    }
+}
+
+#[test]
+fn queue_pressure_raises_q_over_time() {
+    // Remark 1 at system level: QCCF's mean q in late rounds should not
+    // be below its first-round value.
+    let Some(rt) = runtime() else { return };
+    let trace = make_server(&rt, "qccf", 5).run(10).unwrap();
+    let qs: Vec<f64> = trace.records.iter().filter(|r| r.mean_q > 0.0).map(|r| r.mean_q).collect();
+    assert!(qs.len() >= 3);
+    let early = qs[..2.min(qs.len())].iter().sum::<f64>() / 2.0;
+    let late = qs[qs.len().saturating_sub(2)..].iter().sum::<f64>() / 2.0;
+    assert!(
+        late >= early - 0.75,
+        "q collapsed over training: early {early:.2} late {late:.2} ({qs:?})"
+    );
+}

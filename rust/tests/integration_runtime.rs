@@ -1,0 +1,160 @@
+//! Integration tests over the AOT artifacts: Rust ⇄ PJRT ⇄ lowered
+//! JAX/Pallas. These are the cross-layer correctness guarantees — in
+//! particular that the Rust quantizer mirror and the Pallas kernel
+//! artifact agree **bit for bit** given the same noise stream.
+//!
+//! All tests no-op (with a note) when `make artifacts` hasn't run.
+
+use qccf::quant;
+use qccf::runtime::{artifacts_dir, Runtime};
+use qccf::util::rng::Rng;
+use qccf::util::stats::linf_norm;
+
+fn runtime() -> Option<Runtime> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(&artifacts_dir(), "tiny").expect("load tiny runtime"))
+}
+
+fn toy_batches(rt: &Runtime, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    // Class-prototype toy data (learnable in a few steps).
+    let info = &rt.info;
+    let pix = info.pix();
+    let mut rng = Rng::seed_from(seed);
+    let protos: Vec<f32> =
+        (0..info.classes * pix).map(|_| rng.gaussian(0.0, 1.0) as f32).collect();
+    let n = info.tau * info.batch;
+    let mut xs = Vec::with_capacity(n * pix);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let label = rng.below(info.classes);
+        ys.push(label as i32);
+        for p in 0..pix {
+            xs.push(protos[label * pix + p] + 0.1 * rng.gaussian(0.0, 1.0) as f32);
+        }
+    }
+    (xs, ys)
+}
+
+#[test]
+fn init_is_deterministic_and_sized() {
+    let Some(rt) = runtime() else { return };
+    let a = rt.init().unwrap();
+    let b = rt.init().unwrap();
+    assert_eq!(a.len(), rt.info.z);
+    assert_eq!(a, b);
+    assert!(linf_norm(&a) > 0.0);
+}
+
+#[test]
+fn train_step_learns_toy_task() {
+    let Some(rt) = runtime() else { return };
+    let mut theta = rt.init().unwrap();
+    let (xs, ys) = toy_batches(&rt, 3);
+    let first = rt.train_step(&theta, &xs, &ys, 0.05).unwrap();
+    assert_eq!(first.gnorms.len(), rt.info.tau);
+    assert!(first.gnorms.iter().all(|&g| g > 0.0));
+    theta = first.theta;
+    let mut last_loss = first.mean_loss;
+    for _ in 0..10 {
+        let out = rt.train_step(&theta, &xs, &ys, 0.05).unwrap();
+        theta = out.theta;
+        last_loss = out.mean_loss;
+    }
+    assert!(
+        last_loss < first.mean_loss * 0.7,
+        "loss did not decrease: {} -> {last_loss}",
+        first.mean_loss
+    );
+}
+
+#[test]
+fn train_step_zero_lr_identity() {
+    let Some(rt) = runtime() else { return };
+    let theta = rt.init().unwrap();
+    let (xs, ys) = toy_batches(&rt, 5);
+    let out = rt.train_step(&theta, &xs, &ys, 0.0).unwrap();
+    assert_eq!(out.theta, theta);
+}
+
+#[test]
+fn quantize_artifact_matches_rust_mirror_bitwise() {
+    // The L1 Pallas kernel (through HLO + PJRT) and quant::stochastic_
+    // quantize implement the same float ops in the same order; with the
+    // same noise they must agree exactly.
+    let Some(rt) = runtime() else { return };
+    let theta = rt.init().unwrap();
+    let mut rng = Rng::seed_from(11);
+    let mut noise = vec![0.0f32; rt.info.z];
+    for q in [1.0f32, 3.0, 8.0, 16.0] {
+        rng.fill_uniform_f32(&mut noise);
+        let (hlo, hlo_max) = rt.quantize(&theta, &noise, q).unwrap();
+        let (rust, rust_max) = quant::stochastic_quantize(&theta, &noise, q);
+        assert_eq!(hlo_max, rust_max, "theta_max mismatch at q={q}");
+        let diff = hlo.iter().zip(&rust).filter(|(a, b)| a != b).count();
+        assert_eq!(diff, 0, "{diff} mismatching elements at q={q}");
+    }
+}
+
+#[test]
+fn quantize_error_obeys_lemma1_bound() {
+    let Some(rt) = runtime() else { return };
+    let theta = rt.init().unwrap();
+    let mut rng = Rng::seed_from(13);
+    let mut noise = vec![0.0f32; rt.info.z];
+    for q in [2u32, 6] {
+        let mut mse = 0.0f64;
+        let reps = 20;
+        let mut tmax = 0.0f32;
+        for _ in 0..reps {
+            rng.fill_uniform_f32(&mut noise);
+            let (out, m) = rt.quantize(&theta, &noise, q as f32).unwrap();
+            tmax = m;
+            mse += out
+                .iter()
+                .zip(&theta)
+                .map(|(&o, &t)| ((o - t) as f64).powi(2))
+                .sum::<f64>();
+        }
+        let bound = quant::error_bound(rt.info.z, tmax as f64, q);
+        assert!(mse / reps as f64 <= bound * 1.05, "q={q}");
+    }
+}
+
+#[test]
+fn eval_masks_padding() {
+    let Some(rt) = runtime() else { return };
+    let theta = rt.init().unwrap();
+    let info = &rt.info;
+    let pix = info.pix();
+    let mut rng = Rng::seed_from(17);
+    let x: Vec<f32> =
+        (0..info.eval_batch * pix).map(|_| rng.gaussian(0.0, 1.0) as f32).collect();
+    let y: Vec<i32> = (0..info.eval_batch).map(|_| rng.below(info.classes) as i32).collect();
+    let half = info.eval_batch / 2;
+    let mut w = vec![0.0f32; info.eval_batch];
+    for v in w.iter_mut().take(half) {
+        *v = 1.0;
+    }
+    let (loss, correct, n) = rt.eval_chunk(&theta, &x, &y, &w).unwrap();
+    assert_eq!(n, half as f64);
+    assert!(correct <= half as f64);
+    assert!(loss.is_finite());
+}
+
+#[test]
+fn evaluate_full_set_chunks_and_pads() {
+    let Some(rt) = runtime() else { return };
+    let theta = rt.init().unwrap();
+    let pix = rt.info.pix();
+    let mut rng = Rng::seed_from(19);
+    // Deliberately not a multiple of eval_batch.
+    let n = rt.info.eval_batch + rt.info.eval_batch / 3 + 1;
+    let images: Vec<f32> = (0..n * pix).map(|_| rng.gaussian(0.0, 1.0) as f32).collect();
+    let labels: Vec<i32> = (0..n).map(|_| rng.below(rt.info.classes) as i32).collect();
+    let (loss, acc) = rt.evaluate(&theta, &images, &labels).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!((0.0..=1.0).contains(&acc));
+}

@@ -1,0 +1,315 @@
+//! Cross-module property tests (pure Rust — no artifacts needed):
+//! solver ∘ energy ∘ wireless ∘ GA invariants under randomized regimes.
+
+use qccf::config::SystemParams;
+use qccf::energy;
+use qccf::ga::Chromosome;
+use qccf::lyapunov::Queues;
+use qccf::quant;
+use qccf::sched::{evaluate_allocation, greedy_allocation, RoundInputs};
+use qccf::solver::{self, Case5Mode};
+use qccf::util::prop;
+use qccf::util::rng::Rng;
+use qccf::wireless::ChannelModel;
+
+struct Regime {
+    params: SystemParams,
+    rates: Vec<f64>, // flattened [client][channel]
+    sizes: Vec<f64>,
+    w_full: Vec<f64>,
+    g2: Vec<f64>,
+    sigma2: Vec<f64>,
+    theta_max: Vec<f64>,
+    q_prev: Vec<f64>,
+    queues: Queues,
+}
+
+impl std::fmt::Debug for Regime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Regime {{ v: {}, λ1: {:.3}, λ2: {:.3}, sizes: {:?} }}",
+            self.params.v, self.queues.lambda1, self.queues.lambda2, self.sizes
+        )
+    }
+}
+
+fn regime(rng: &mut Rng) -> Regime {
+    let mut params = SystemParams::femnist_small();
+    params.v = 10f64.powf(rng.range(0.0, 3.0));
+    let model = ChannelModel::new(&params, rng);
+    let state = model.draw(rng);
+    let u = params.num_clients;
+    let c = params.num_channels;
+    let mut rates = Vec::with_capacity(u * c);
+    for i in 0..u {
+        for ch in 0..c {
+            rates.push(state.rate(i, ch));
+        }
+    }
+    let sizes: Vec<f64> = (0..u).map(|_| rng.gaussian(1200.0, 300.0).max(64.0)).collect();
+    let total: f64 = sizes.iter().sum();
+    let w_full = sizes.iter().map(|d| d / total).collect();
+    let mut queues = Queues::new();
+    queues.lambda1 = 10f64.powf(rng.range(-1.0, 5.0));
+    queues.lambda2 = 10f64.powf(rng.range(-2.0, 4.0));
+    Regime {
+        params,
+        rates,
+        sizes,
+        w_full,
+        g2: (0..u).map(|_| rng.range(0.01, 25.0)).collect(),
+        sigma2: (0..u).map(|_| rng.range(0.01, 4.0)).collect(),
+        theta_max: (0..u).map(|_| rng.range(0.05, 2.0)).collect(),
+        q_prev: (0..u).map(|_| rng.range(1.0, 14.0)).collect(),
+        queues,
+    }
+}
+
+#[test]
+fn every_evaluated_decision_is_feasible() {
+    prop::check("eval-alloc-feasible", prop::iters(120), regime, |r| {
+        let state = qccf::wireless::ChannelState::from_rates(
+            r.params.num_clients,
+            r.params.num_channels,
+            r.rates.clone(),
+        );
+        let inp = RoundInputs {
+            params: &r.params,
+            round: 3,
+            channels: &state,
+            sizes: &r.sizes,
+            w_full: &r.w_full,
+            g2: &r.g2,
+            sigma2: &r.sigma2,
+            theta_max: &r.theta_max,
+            q_prev: &r.q_prev,
+            queues: &r.queues,
+        };
+        let chrom = greedy_allocation(&inp);
+        let (j0, assigns) = evaluate_allocation(&inp, &chrom, Case5Mode::Taylor);
+        if !j0.is_finite() && assigns.iter().flatten().count() > 0 {
+            return Err("finite participants but infinite J0".into());
+        }
+        let mut used = std::collections::BTreeSet::new();
+        for (i, d) in assigns.iter().enumerate() {
+            let Some(d) = d else { continue };
+            if !used.insert(d.channel) {
+                return Err(format!("channel {} reused (C3)", d.channel));
+            }
+            let q = d.q.unwrap();
+            let lat = energy::client_latency(&r.params, r.sizes[i], d.f, q, d.rate);
+            if lat > r.params.t_max * (1.0 + 1e-9) {
+                return Err(format!("client {i}: latency {lat} > T^max (C4)"));
+            }
+            if d.f < r.params.f_min - 1.0 || d.f > r.params.f_max + 1.0 {
+                return Err(format!("client {i}: f {} out of C5", d.f));
+            }
+            if q < 1 {
+                return Err("q < 1 (C8)".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn taylor_matches_bisect_near_anchor() {
+    // Eq. (39) is a first-order step around q from the client's last
+    // participation; the paper's premise is that models (hence optimal
+    // levels) move little between participations. On those terms — an
+    // anchor within ±1 level of the true root — Taylor must land within
+    // one integer level of the exact bisection answer.
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    prop::check("taylor-vs-bisect-near", prop::iters(250), regime, |r| {
+        let i = 0usize;
+        let rate = r.rates[i * r.params.num_channels];
+        let mut ctx = solver::ClientCtx {
+            d_i: r.sizes[i],
+            w_round: r.w_full[i],
+            rate,
+            theta_max: r.theta_max[i],
+            q_prev: r.q_prev[i],
+        };
+        let Some(db) = solver::solve_client(&r.params, r.queues.lambda2, &ctx, Case5Mode::Bisect)
+        else {
+            return Ok(());
+        };
+        // Anchor near the exact continuous optimum (paper's premise).
+        ctx.q_prev = (db.q_hat + (r.q_prev[i] - 7.0) / 7.0).max(1.0);
+        let Some(da) = solver::solve_client(&r.params, r.queues.lambda2, &ctx, Case5Mode::Taylor)
+        else {
+            return Err("taylor infeasible where bisect feasible".into());
+        };
+        total += 1;
+        if da.q == db.q {
+            agree += 1;
+        }
+        if da.q.abs_diff(db.q) > 1 {
+            Err(format!("taylor q={} vs bisect q={} (q̂={:.2})", da.q, db.q, db.q_hat))
+        } else {
+            Ok(())
+        }
+    });
+    assert!(agree * 10 >= total * 8, "agreement too low: {agree}/{total}");
+}
+
+#[test]
+fn taylor_iterates_to_bisect_fixed_point() {
+    // Across rounds the paper's scheme is a fixed-point iteration:
+    // repeatedly re-anchoring eq. (39) at its own output must converge
+    // to the exact root of eq. (38) whenever Case 5 governs.
+    prop::check("taylor-fixed-point", prop::iters(120), regime, |r| {
+        let i = 1usize;
+        let rate = r.rates[i * r.params.num_channels];
+        let mut ctx = solver::ClientCtx {
+            d_i: r.sizes[i],
+            w_round: r.w_full[i],
+            rate,
+            theta_max: r.theta_max[i],
+            q_prev: r.q_prev[i],
+        };
+        let exact = solver::solve_continuous(&r.params, r.queues.lambda2, &ctx, Case5Mode::Bisect);
+        let Some((q_exact, _, 5)) = exact else { return Ok(()) };
+        for _ in 0..30 {
+            match solver::solve_continuous(&r.params, r.queues.lambda2, &ctx, Case5Mode::Taylor) {
+                Some((q_hat, _, 5)) => ctx.q_prev = q_hat.max(1.0),
+                // A boundary case took over (numerically legitimate).
+                _ => return Ok(()),
+            }
+        }
+        if (ctx.q_prev - q_exact).abs() > 0.05 {
+            Err(format!("fixed point {:.4} vs exact {q_exact:.4}", ctx.q_prev))
+        } else {
+            Ok(())
+        }
+    });
+}
+
+#[test]
+fn wire_codec_roundtrip_random_vectors() {
+    prop::check(
+        "wire-roundtrip",
+        prop::iters(80),
+        |rng| {
+            let n = 1 + rng.below(3000);
+            let q = 1 + rng.below(16) as u32;
+            let scale = 10f64.powf(rng.range(-3.0, 3.0));
+            let theta: Vec<f32> =
+                (0..n).map(|_| (rng.gaussian(0.0, scale)) as f32).collect();
+            let mut noise = vec![0.0f32; n];
+            rng.fill_uniform_f32(&mut noise);
+            (theta, noise, q)
+        },
+        |(theta, noise, q)| {
+            let (deq, tmax) = quant::stochastic_quantize(theta, noise, *q as f32);
+            let (idx, signs, tmax2) = quant::knot_indices(theta, noise, *q);
+            if tmax != tmax2 {
+                return Err("tmax mismatch".into());
+            }
+            let bytes = quant::encode(tmax, &signs, &idx, *q);
+            if bytes.len() != (quant::encoded_bits(theta.len(), *q) + 7) / 8 {
+                return Err("eq. (5) length violated".into());
+            }
+            let (tmax3, decoded) = quant::decode(&bytes, theta.len(), *q);
+            if tmax3 != tmax {
+                return Err("range header corrupted".into());
+            }
+            for (i, (d, e)) in decoded.iter().zip(&deq).enumerate() {
+                if (d - e).abs() > 1e-5 * tmax.abs().max(1.0) {
+                    return Err(format!("element {i}: {d} vs {e}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn ga_never_worse_than_seeded_greedy() {
+    prop::check("ga-vs-greedy", prop::iters(25), regime, |r| {
+        let state = qccf::wireless::ChannelState::from_rates(
+            r.params.num_clients,
+            r.params.num_channels,
+            r.rates.clone(),
+        );
+        let inp = RoundInputs {
+            params: &r.params,
+            round: 3,
+            channels: &state,
+            sizes: &r.sizes,
+            w_full: &r.w_full,
+            g2: &r.g2,
+            sigma2: &r.sigma2,
+            theta_max: &r.theta_max,
+            q_prev: &r.q_prev,
+            queues: &r.queues,
+        };
+        let greedy = greedy_allocation(&inp);
+        let (jg, _) = evaluate_allocation(&inp, &greedy, Case5Mode::Taylor);
+        let mut sched = qccf::sched::qccf::QccfScheduler::new(13);
+        let dec = qccf::sched::Scheduler::decide(&mut sched, &inp);
+        if dec.j0.is_finite() && jg.is_finite() && dec.j0 > jg * (1.0 + 1e-9) + 1e-9 {
+            return Err(format!("GA {j} worse than greedy {jg}", j = dec.j0));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn queues_remain_stable_under_achievable_budgets() {
+    // Feed the queues the arrivals of a full-participation policy with
+    // ε set 2% above: λ must stay bounded (mean-rate stability, §V-A).
+    prop::check("queue-stability", prop::iters(40), regime, |r| {
+        let mut p = r.params.clone();
+        let u = p.num_clients;
+        let participating = vec![true; u];
+        let data = qccf::convergence::data_term(
+            &p,
+            &participating,
+            &r.w_full,
+            &r.w_full,
+            &r.g2,
+            &r.sigma2,
+        );
+        p.eps1 = data * 1.02;
+        p.eps2 = 0.1;
+        let mut queues = Queues::new();
+        for _ in 0..500 {
+            queues.update(&p, data, p.eps2 * 0.9);
+        }
+        if queues.lambda1 > data {
+            return Err(format!("λ1 {} unbounded", queues.lambda1));
+        }
+        if queues.lambda2 != 0.0 {
+            return Err("λ2 should drain to zero".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn chromosome_channel_of_consistency() {
+    prop::check(
+        "chromosome-consistency",
+        prop::iters(150),
+        |rng| Chromosome::random(1 + rng.below(16), 1 + rng.below(16), rng),
+        |c| {
+            let u = 16;
+            let parts = c.participants(u);
+            for (i, &p) in parts.iter().enumerate() {
+                match (p, c.channel_of(i)) {
+                    (true, Some(ch)) => {
+                        if c.alloc[ch] != Some(i) {
+                            return Err(format!("channel_of({i}) inconsistent"));
+                        }
+                    }
+                    (false, None) => {}
+                    (a, b) => return Err(format!("client {i}: participant={a} channel={b:?}")),
+                }
+            }
+            Ok(())
+        },
+    );
+}
