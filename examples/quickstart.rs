@@ -12,7 +12,7 @@
 
 use anyhow::Result;
 
-use qccf::baselines::make_scheduler;
+use qccf::baselines::make_scheduler_with_threads;
 use qccf::data::{self, DataGenConfig};
 use qccf::experiments::common::params_for;
 use qccf::experiments::Task;
@@ -37,9 +37,14 @@ fn main() -> Result<()> {
         fed.sizes().iter().map(|d| *d as usize).collect::<Vec<_>>()
     );
 
-    let sched = make_scheduler("qccf", 1).unwrap();
+    // Round engine fan-out: scheduled clients train/quantize in
+    // parallel; any thread count (including 1) is bit-identical.
+    let threads = qccf::util::threadpool::default_threads();
+    let sched = make_scheduler_with_threads("qccf", 1, threads).unwrap();
     let mut server = Server::new(params, &rt, fed, sched, 1)?;
     server.eval_every = 2;
+    server.threads = threads;
+    println!("round engine: {threads} worker thread(s)");
 
     println!("\nround  sched  aggr  mean_q   energy(J)  cum(J)    acc");
     let mut cum = 0.0;

@@ -66,5 +66,20 @@ fn main() {
             .best_j0
         });
     }
+    {
+        // Parallel fitness fan-out (same trajectory, different wall
+        // clock — see GaParams::threads).
+        let par = GaParams {
+            threads: qccf::util::threadpool::default_threads(),
+            ..GaParams::default()
+        };
+        let mut r = Rng::seed_from(11);
+        set.bench("algorithm1_full_run_parallel", || {
+            ga::optimize(10, 10, &par, &mut r, |c| {
+                evaluate_allocation(&inputs, c, Case5Mode::Taylor).0
+            })
+            .best_j0
+        });
+    }
     set.finish();
 }

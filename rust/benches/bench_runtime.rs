@@ -5,6 +5,7 @@
 use qccf::bench::BenchSet;
 use qccf::runtime::{artifacts_dir, Runtime};
 use qccf::util::rng::Rng;
+use qccf::util::threadpool;
 
 fn main() {
     if !artifacts_dir().join("manifest.json").exists() {
@@ -34,6 +35,31 @@ fn main() {
         set.bench("train_step_tau6", || rt.train_step(&theta, &xs, &ys, 0.05).unwrap().mean_loss);
         set.bench("quantize_q8", || rt.quantize(&theta, &noise, 8.0).unwrap().1);
         set.bench("eval_chunk", || rt.eval_chunk(&theta, &ex, &ey, &ew).unwrap().1);
+
+        // Parallel-vs-serial round fan-out: 8 simulated clients (fixed
+        // seeds) through the engine's worker pool. The jsonl pair
+        // tracks the staged-engine speedup from this PR on — expect
+        // parity on a 1-core CI box, ~min(8, cores−1)× elsewhere.
+        let clients: Vec<(Vec<f32>, Vec<i32>)> = (0..8u64)
+            .map(|k| {
+                let mut crng = Rng::seed_from(1000 + k);
+                let cxs: Vec<f32> = (0..info.tau * info.batch * pix)
+                    .map(|_| crng.gaussian(0.0, 1.0) as f32)
+                    .collect();
+                let cys: Vec<i32> =
+                    (0..info.tau * info.batch).map(|_| crng.below(info.classes) as i32).collect();
+                (cxs, cys)
+            })
+            .collect();
+        for (name, threads) in
+            [("round8_serial", 1), ("round8_parallel", threadpool::default_threads())]
+        {
+            set.bench(name, || {
+                threadpool::parallel_map(&clients, threads, |_, (cxs, cys)| {
+                    rt.train_step(&theta, cxs, cys, 0.05).unwrap().mean_loss
+                })
+            });
+        }
         set.finish();
     }
 }

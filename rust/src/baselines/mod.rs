@@ -68,6 +68,12 @@ impl ChannelAllocateScheduler {
     pub fn new(seed: u64) -> Self {
         ChannelAllocateScheduler { ga: GaParams::default(), rng: Rng::seed_from(seed) }
     }
+
+    /// Fan GA fitness evaluations out over `threads` workers.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.ga.threads = threads.max(1);
+        self
+    }
 }
 
 impl Scheduler for ChannelAllocateScheduler {
@@ -189,6 +195,12 @@ impl SameSizeScheduler {
             rng: Rng::seed_from(seed),
         }
     }
+
+    /// Fan GA fitness evaluations out over `threads` workers.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.ga.threads = threads.max(1);
+        self
+    }
 }
 
 impl Scheduler for SameSizeScheduler {
@@ -242,14 +254,29 @@ impl Scheduler for SameSizeScheduler {
     }
 }
 
-/// Factory used by the CLI / experiment harness.
+/// Factory used by the CLI / experiment harness (serial GA fitness).
 pub fn make_scheduler(name: &str, seed: u64) -> Option<Box<dyn Scheduler>> {
+    make_scheduler_with_threads(name, seed, 1)
+}
+
+/// [`make_scheduler`] with an explicit worker count for the GA fitness
+/// fan-out of the GA-based schedulers (deterministic for any value;
+/// the non-GA baselines ignore it).
+pub fn make_scheduler_with_threads(
+    name: &str,
+    seed: u64,
+    threads: usize,
+) -> Option<Box<dyn Scheduler>> {
     match name {
-        "qccf" => Some(Box::new(crate::sched::qccf::QccfScheduler::new(seed))),
+        "qccf" => {
+            Some(Box::new(crate::sched::qccf::QccfScheduler::new(seed).with_threads(threads)))
+        }
         "no-quant" => Some(Box::new(NoQuantScheduler)),
-        "channel-allocate" => Some(Box::new(ChannelAllocateScheduler::new(seed))),
+        "channel-allocate" => {
+            Some(Box::new(ChannelAllocateScheduler::new(seed).with_threads(threads)))
+        }
         "principle" => Some(Box::new(PrincipleScheduler::new())),
-        "same-size" => Some(Box::new(SameSizeScheduler::new(seed))),
+        "same-size" => Some(Box::new(SameSizeScheduler::new(seed).with_threads(threads))),
         _ => None,
     }
 }

@@ -3,7 +3,7 @@
 
 use anyhow::Result;
 
-use crate::baselines::make_scheduler;
+use crate::baselines::make_scheduler_with_threads;
 use crate::config::SystemParams;
 use crate::data::{self, DataGenConfig};
 use crate::fl::Server;
@@ -33,6 +33,9 @@ pub struct RunSpec {
     pub mu: f64,
     pub seed: u64,
     pub eval_every: usize,
+    /// Worker threads for the round engine and GA fitness fan-out
+    /// (`1` = legacy serial path; results are identical either way).
+    pub threads: usize,
 }
 
 impl RunSpec {
@@ -46,6 +49,7 @@ impl RunSpec {
             mu: 1200.0,
             seed: 1,
             eval_every: 2,
+            threads: crate::util::threadpool::default_threads(),
         }
     }
 }
@@ -80,10 +84,15 @@ pub fn run_one(rt: &Runtime, spec: &RunSpec) -> Result<Trace> {
     dcfg.size_mean = spec.mu;
     dcfg.size_std = spec.beta;
     let fed = data::generate(&dcfg, spec.seed);
-    let sched = make_scheduler(&spec.algorithm, spec.seed.wrapping_mul(31).wrapping_add(7))
-        .ok_or_else(|| anyhow::anyhow!("unknown algorithm `{}`", spec.algorithm))?;
+    let sched = make_scheduler_with_threads(
+        &spec.algorithm,
+        spec.seed.wrapping_mul(31).wrapping_add(7),
+        spec.threads,
+    )
+    .ok_or_else(|| anyhow::anyhow!("unknown algorithm `{}`", spec.algorithm))?;
     let mut server = Server::new(params, rt, fed, sched, spec.seed)?;
     server.eval_every = spec.eval_every;
+    server.threads = spec.threads;
     server.run(spec.rounds)
 }
 

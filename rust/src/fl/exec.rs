@@ -1,0 +1,445 @@
+//! Client-side round execution (stage 2 of the round engine): everything
+//! a *scheduled client* does — sample → τ local SGD steps → quantize →
+//! latency/energy accounting → C4 deadline check — packaged as a pure
+//! `ClientTask → ClientOutcome` function so the server can fan the
+//! scheduled set out over a worker pool.
+//!
+//! # Determinism contract
+//!
+//! A parallel round produces **bit-identical** results to the serial
+//! round, for any thread count:
+//!
+//! * every client trains and quantizes on its own forked RNG stream
+//!   (`rng.fork(1000 + id)` at server construction), carried *inside*
+//!   the task and returned advanced in the outcome — no draw ever
+//!   depends on scheduling order;
+//! * C4 survival is a pure function of the decision (`t_cmp + ℓ/rate`),
+//!   so the renormalized aggregation weights over the surviving uploads
+//!   are known **before** any training runs;
+//! * uploads therefore stream into an [`StreamingAggregator`] that
+//!   folds models in ascending client order no matter which worker
+//!   finishes first, reproducing the serial f32 summation exactly.
+//!
+//! The streaming fold also replaces the old `Vec<(id, model, w)>` of
+//! full-model clones: peak memory drops from `O(scheduled × Z)` to
+//! `O(threads × Z)` (`O(Z)` on the serial path), because each model is
+//! dropped the moment it is folded into the running sum.
+
+use std::collections::BTreeMap;
+use std::sync::{Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::config::SystemParams;
+use crate::data::ClientData;
+use crate::energy;
+use crate::runtime::Runtime;
+use crate::sched::ClientDecision;
+use crate::util::rng::Rng;
+use crate::util::stats::linf_norm;
+use crate::util::threadpool;
+
+/// One scheduled client's work order, built by the server's decision
+/// stage. Owns the client's private RNG stream for the duration of the
+/// round; the advanced stream comes back in [`ClientOutcome::rng`].
+pub struct ClientTask<'a> {
+    pub id: usize,
+    /// D_i.
+    pub size: f64,
+    pub decision: ClientDecision,
+    /// Round-wide C4 exemption (No-Quantization baseline).
+    pub deadline_exempt: bool,
+    pub data: &'a ClientData,
+    pub rng: Rng,
+}
+
+/// Everything the coordinator learns from one client's round.
+pub struct ClientOutcome {
+    pub id: usize,
+    pub mean_loss: f64,
+    /// Per-local-step gradient norms (feeds `GradStats`).
+    pub gnorms: Vec<f32>,
+    /// Realized θ^max of the upload.
+    pub theta_max: f64,
+    /// Realized level (`None` = raw upload).
+    pub q: Option<u32>,
+    pub latency: f64,
+    pub energy: f64,
+    /// The (de)quantized model; present iff the upload made the C4
+    /// deadline (energy is spent either way), and taken by the
+    /// streaming aggregator before the outcome reaches the server.
+    pub upload: Option<Vec<f32>>,
+    /// The client's RNG stream, advanced exactly as in a serial round.
+    pub rng: Rng,
+}
+
+/// ℓ of the decision's payload: eq. (5) for quantized uploads, the raw
+/// 32-bit payload otherwise.
+fn decision_payload_bits(p: &SystemParams, d: &ClientDecision) -> f64 {
+    match d.q {
+        Some(q) => p.payload_bits(q),
+        None => p.raw_payload_bits(),
+    }
+}
+
+/// Latency the decision realizes on a client with dataset size `size`
+/// (eqs. (14), (16)). A pure function of the decision — this is what
+/// makes C4 survival computable before training.
+pub fn realized_latency(p: &SystemParams, size: f64, d: &ClientDecision) -> f64 {
+    energy::t_cmp(p, size, d.f) + decision_payload_bits(p, d) / d.rate
+}
+
+/// Energy the decision costs (eqs. (15), (17)) — spent whether or not
+/// the upload survives C4.
+pub fn realized_energy(p: &SystemParams, size: f64, d: &ClientDecision) -> f64 {
+    energy::e_cmp(p, size, d.f) + energy::e_com(p, decision_payload_bits(p, d) / d.rate)
+}
+
+/// C4 with a 1e-9 relative tolerance: uploads that *exactly* meet the
+/// budget (decisions at the 𝒮(q) frequency) must not drop to float
+/// noise. The No-Quantization baseline is exempt (no latency design).
+pub fn survives_deadline(p: &SystemParams, latency: f64, exempt: bool) -> bool {
+    exempt || latency <= p.t_max * (1.0 + 1e-9)
+}
+
+/// Run one client: τ local steps through the AOT `train_step`, then the
+/// Pallas quantizer artifact (or a raw upload), then the wireless
+/// bookkeeping. Pure in the coordinator's state — everything it needs
+/// arrives in the task, everything it learns leaves in the outcome.
+///
+/// `survived` is the client's C4 verdict, computed **once** by the
+/// caller (from [`survives_deadline`]∘[`realized_latency`]) — the same
+/// computation that fixed the aggregation weights — so upload retention
+/// and fold weights can never diverge.
+pub fn run_client(
+    p: &SystemParams,
+    rt: &Runtime,
+    theta: &[f32],
+    mut task: ClientTask<'_>,
+    survived: bool,
+) -> Result<ClientOutcome> {
+    let info = &rt.info;
+    let d = task.decision;
+
+    // Local update (τ steps through the AOT train_step).
+    let (xs, ys) = task.data.sample_batches(&mut task.rng, info.tau, info.batch, info.pix());
+    let out = rt.train_step(theta, &xs, &ys, info.lr as f32)?;
+
+    // Quantize (or raw upload).
+    let (upload, theta_max) = match d.q {
+        Some(q) => {
+            let mut noise = vec![0.0f32; info.z];
+            task.rng.fill_uniform_f32(&mut noise);
+            let (qtheta, tmax) = rt.quantize(&out.theta, &noise, q as f32)?;
+            (qtheta, tmax as f64)
+        }
+        None => {
+            let tmax = linf_norm(&out.theta) as f64;
+            (out.theta, tmax)
+        }
+    };
+
+    let latency = realized_latency(p, task.size, &d);
+    Ok(ClientOutcome {
+        id: task.id,
+        mean_loss: out.mean_loss as f64,
+        gnorms: out.gnorms,
+        theta_max,
+        q: d.q,
+        latency,
+        energy: realized_energy(p, task.size, &d),
+        upload: survived.then_some(upload),
+        rng: task.rng,
+    })
+}
+
+/// Order-preserving streaming weighted accumulator for eq. (2).
+///
+/// Workers commit slots in completion order; models are folded into the
+/// running `Σ w·θ` strictly in ascending slot order, so the f32
+/// additions happen in exactly the serial loop's order and θ^{n+1} is
+/// bit-identical for any thread count. Out-of-order arrivals wait in
+/// `pending`, and a committer running more than `max_lag` slots ahead
+/// of the fold cursor blocks until the cursor catches up — so live full
+/// models are genuinely bounded by `max_lag + workers`, even when one
+/// slow client stalls the cursor while the rest of the pool races
+/// ahead.
+pub struct StreamingAggregator {
+    inner: Mutex<AggState>,
+    /// Signaled whenever the fold cursor advances.
+    drained: Condvar,
+    /// Max slots a commit may run ahead of the cursor before blocking.
+    max_lag: usize,
+}
+
+struct AggState {
+    /// Running Σ w·θ over committed surviving uploads.
+    acc: Vec<f32>,
+    /// Next slot to fold.
+    next: usize,
+    /// Total slots expected.
+    total: usize,
+    /// Finished-but-not-yet-foldable slots (`None` = no upload).
+    pending: BTreeMap<usize, Option<(f32, Vec<f32>)>>,
+}
+
+impl StreamingAggregator {
+    /// `max_lag` trades buffering for stall tolerance; a single-threaded
+    /// committer must use `max_lag ≥ total` if it commits out of order
+    /// (nobody else can advance the cursor for it).
+    pub fn new(z: usize, total: usize, max_lag: usize) -> StreamingAggregator {
+        StreamingAggregator {
+            inner: Mutex::new(AggState {
+                acc: vec![0.0; z],
+                next: 0,
+                total,
+                pending: BTreeMap::new(),
+            }),
+            drained: Condvar::new(),
+            max_lag,
+        }
+    }
+
+    /// Commit slot `seq` with its weighted upload (`None` when the
+    /// upload missed the deadline or its client failed — the slot still
+    /// advances the fold cursor). Blocks only while `seq` is more than
+    /// `max_lag` slots ahead of the cursor; the cursor's own slot never
+    /// blocks, so the pipeline always progresses as long as every slot
+    /// is eventually committed exactly once.
+    pub fn commit(&self, seq: usize, upload: Option<(f32, Vec<f32>)>) {
+        let mut guard = self.inner.lock().unwrap();
+        while seq > guard.next + self.max_lag {
+            guard = self.drained.wait(guard).unwrap();
+        }
+        let st = &mut *guard;
+        debug_assert!(seq >= st.next, "slot {seq} committed twice");
+        st.pending.insert(seq, upload);
+        let mut advanced = false;
+        while let Some(entry) = st.pending.remove(&st.next) {
+            if let Some((w, model)) = entry {
+                for (a, m) in st.acc.iter_mut().zip(model.iter()) {
+                    *a += w * m;
+                }
+            }
+            st.next += 1;
+            advanced = true;
+        }
+        if advanced {
+            self.drained.notify_all();
+        }
+    }
+
+    /// The accumulated Σ w·θ. Panics if a slot was never committed —
+    /// only call after every worker returned.
+    pub fn finish(self) -> Vec<f32> {
+        let st = self.inner.into_inner().unwrap();
+        assert_eq!(st.next, st.total, "uncommitted upload slots");
+        st.acc
+    }
+}
+
+/// Commits `seq` as a no-upload slot on drop unless disarmed — so a
+/// *panic* inside a client worker (not just an `Err`) still advances
+/// the fold cursor. Without this, peer workers past the `max_lag`
+/// window would wait on the condvar forever and `thread::scope` would
+/// join blocked threads instead of re-raising the panic.
+struct CommitOnDrop<'a> {
+    agg: &'a StreamingAggregator,
+    seq: usize,
+    armed: bool,
+}
+
+impl Drop for CommitOnDrop<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.agg.commit(self.seq, None);
+        }
+    }
+}
+
+/// The executed round, reduced to what the server's later stages need.
+/// Per-client detail stays in `outcomes` (ascending client id).
+pub struct ExecOutput {
+    pub outcomes: Vec<ClientOutcome>,
+    /// θ^{n+1} per eq. (2) over surviving uploads (`None` = keep θ^n).
+    pub aggregate: Option<Vec<f32>>,
+    pub scheduled: usize,
+    pub aggregated: usize,
+    pub round_energy: f64,
+    pub max_latency: f64,
+    pub loss_sum: f64,
+    pub loss_n: usize,
+    /// Filled by the server around the fan-out.
+    pub compute_seconds: f64,
+}
+
+/// Fan the scheduled clients out over `threads` workers (1 = the legacy
+/// serial path through the same code). Tasks must arrive in ascending
+/// client id — that order defines the aggregation fold.
+pub fn execute_round(
+    p: &SystemParams,
+    rt: &Runtime,
+    theta: &[f32],
+    tasks: Vec<ClientTask<'_>>,
+    threads: usize,
+) -> Result<ExecOutput> {
+    let scheduled = tasks.len();
+
+    // C4 survival — and with it the renormalized aggregation weights —
+    // is decided by (f, q, rate) alone, so compute both up front and
+    // let uploads stream straight into the accumulator.
+    let survive: Vec<bool> = tasks
+        .iter()
+        .map(|t| survives_deadline(p, realized_latency(p, t.size, &t.decision), t.deadline_exempt))
+        .collect();
+    let d_surv: f64 =
+        tasks.iter().zip(&survive).filter(|(_, s)| **s).map(|(t, _)| t.size).sum();
+    let weights: Vec<f32> = tasks
+        .iter()
+        .zip(&survive)
+        .map(|(t, s)| if *s { (t.size / d_surv) as f32 } else { 0.0 })
+        .collect();
+
+    // `max_lag` of ~2× the pool keeps every worker busy without letting
+    // a straggling fold cursor pile up full models (the O(threads × Z)
+    // peak-memory bound; serial path = O(Z)).
+    let agg = StreamingAggregator::new(theta.len(), scheduled, threads.max(1) * 2);
+    let results = threadpool::parallel_map_owned(tasks, threads, |seq, task| -> Result<ClientOutcome> {
+        // Hand the model to the fold the moment it exists, and commit
+        // the slot even on failure or panic — an uncommitted slot
+        // would stall the cursor and block the rest of the pool in
+        // `commit`. On `Err` we bail below before touching the (then
+        // meaningless) aggregate.
+        let mut fallback = CommitOnDrop { agg: &agg, seq, armed: true };
+        let mut oc = run_client(p, rt, theta, task, survive[seq])?;
+        fallback.armed = false;
+        agg.commit(seq, oc.upload.take().map(|m| (weights[seq], m)));
+        Ok(oc)
+    });
+    let outcomes: Vec<ClientOutcome> = results.into_iter().collect::<Result<_>>()?;
+
+    let aggregated = survive.iter().filter(|&&s| s).count();
+    let aggregate = if aggregated > 0 { Some(agg.finish()) } else { None };
+
+    let mut out = ExecOutput {
+        outcomes,
+        aggregate,
+        scheduled,
+        aggregated,
+        round_energy: 0.0,
+        max_latency: 0.0,
+        loss_sum: 0.0,
+        loss_n: 0,
+        compute_seconds: 0.0,
+    };
+    // Scalar reductions in client-id order (same arithmetic as serial).
+    for oc in &out.outcomes {
+        out.round_energy += oc.energy;
+        out.max_latency = out.max_latency.max(oc.latency);
+        out.loss_sum += oc.mean_loss;
+        out.loss_n += 1;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fold_serial(uploads: &[Option<(f32, Vec<f32>)>], z: usize) -> Vec<f32> {
+        let mut acc = vec![0.0f32; z];
+        for u in uploads.iter().flatten() {
+            for (a, m) in acc.iter_mut().zip(&u.1) {
+                *a += u.0 * m;
+            }
+        }
+        acc
+    }
+
+    fn toy_uploads(n: usize, z: usize) -> Vec<Option<(f32, Vec<f32>)>> {
+        let mut rng = Rng::seed_from(99);
+        (0..n)
+            .map(|i| {
+                if i % 4 == 3 {
+                    None // dropped upload
+                } else {
+                    let w = 1.0 / (i + 1) as f32;
+                    let m: Vec<f32> = (0..z).map(|_| rng.gaussian(0.0, 1.0) as f32).collect();
+                    Some((w, m))
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn aggregator_in_order_matches_serial() {
+        let (n, z) = (9, 37);
+        let uploads = toy_uploads(n, z);
+        let want = fold_serial(&uploads, z);
+        let agg = StreamingAggregator::new(z, n, n);
+        for (i, u) in uploads.into_iter().enumerate() {
+            agg.commit(i, u);
+        }
+        let got = agg.finish();
+        assert_eq!(
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn aggregator_out_of_order_is_bit_identical() {
+        let (n, z) = (8, 21);
+        let uploads = toy_uploads(n, z);
+        let want = fold_serial(&uploads, z);
+        // Adversarial arrival order: reverse, then interleaved. A lone
+        // committer needs max_lag ≥ n (nobody else advances the cursor).
+        for order in [vec![7, 6, 5, 4, 3, 2, 1, 0], vec![1, 0, 3, 2, 5, 4, 7, 6]] {
+            let agg = StreamingAggregator::new(z, n, n);
+            for &i in &order {
+                agg.commit(i, uploads[i].clone());
+            }
+            let got = agg.finish();
+            assert_eq!(
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn aggregator_concurrent_commits_match_serial() {
+        // Tight max_lag (2) forces the backpressure path under real
+        // thread contention; the fold must still be bit-exact.
+        let (n, z) = (64, 130);
+        let uploads = toy_uploads(n, z);
+        let want = fold_serial(&uploads, z);
+        let agg = StreamingAggregator::new(z, n, 2);
+        let slots: Vec<Option<(f32, Vec<f32>)>> = uploads;
+        threadpool::parallel_map_owned(
+            slots.into_iter().enumerate().collect::<Vec<_>>(),
+            8,
+            |_, (i, u)| agg.commit(i, u),
+        );
+        let got = agg.finish();
+        assert_eq!(
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn survival_is_decision_pure() {
+        let p = SystemParams::femnist_small();
+        let fast = ClientDecision { channel: 0, q: Some(4), f: p.f_max, rate: 25e6 };
+        let slow = ClientDecision { channel: 1, q: Some(4), f: p.f_max, rate: 1.0 };
+        let lat_fast = realized_latency(&p, 1200.0, &fast);
+        let lat_slow = realized_latency(&p, 1200.0, &slow);
+        assert!(survives_deadline(&p, lat_fast, false), "lat={lat_fast}");
+        assert!(!survives_deadline(&p, lat_slow, false), "lat={lat_slow}");
+        // Exemption overrides C4 (No-Quantization baseline).
+        assert!(survives_deadline(&p, lat_slow, true));
+        // Energy is spent either way and scales with the airtime.
+        assert!(realized_energy(&p, 1200.0, &slow) > realized_energy(&p, 1200.0, &fast));
+    }
+}

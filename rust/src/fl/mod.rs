@@ -1,28 +1,48 @@
-//! The FL server loop (paper §II-A, Fig. 1): per communication round —
-//! **decision → broadcast → local update → quantize → upload →
-//! aggregate** — with the wireless/energy bookkeeping and Lyapunov queue
-//! updates of §IV–§V.
+//! The FL server loop (paper §II-A, Fig. 1), restructured as a staged
+//! **round-execution engine**: per communication round —
+//! **decide → execute (parallel fan-out) → aggregate → queue update** —
+//! with the wireless/energy bookkeeping and Lyapunov queue updates of
+//! §IV–§V.
 //!
-//! The server *realizes* whatever the scheduler intended: it trains the
-//! scheduled clients through the PJRT runtime, quantizes their uploads
-//! through the Pallas-kernel artifact, re-checks the latency budget C4
-//! with the client's actual D_i (so wireless-oblivious baselines pay for
-//! timeouts exactly as in §VI), accounts energy with eqs. (14)–(17), and
-//! aggregates per eq. (2) over the uploads that made the deadline.
+//! Stage 1 (decision) realizes whatever the scheduler intended. Stage 2
+//! fans the scheduled clients out over a worker pool ([`exec`]): each
+//! client trains through the PJRT runtime, quantizes through the
+//! Pallas-kernel artifact, re-checks the latency budget C4 with its
+//! actual D_i (so wireless-oblivious baselines pay for timeouts exactly
+//! as in §VI), and accounts energy with eqs. (14)–(17). Stage 3
+//! installs the streamed weighted mean (eq. (2)) over the uploads that
+//! made the deadline; stage 4 updates the virtual queues. The engine is
+//! deterministic: any [`Server::threads`] value yields bit-identical
+//! traces (see `fl::exec` for the contract).
+
+pub mod exec;
 
 use anyhow::Result;
 
 use crate::config::SystemParams;
 use crate::convergence::{self, GradStats};
 use crate::data::Federation;
-use crate::energy;
 use crate::lyapunov::Queues;
 use crate::metrics::{RoundRecord, Trace};
 use crate::runtime::Runtime;
 use crate::sched::{RoundDecision, RoundInputs, Scheduler};
 use crate::util::rng::Rng;
 use crate::util::stats::linf_norm;
+use crate::util::threadpool;
 use crate::wireless::ChannelModel;
+
+/// `q` bookkeeping sentinels — unified here so the Case-5 anchor can
+/// never mistake a raw upload for a real quantization level:
+///
+/// * [`Q_RECORD_RAW`] (`0`) marks a raw upload in
+///   `RoundRecord::q_per_client` (`None` there = not scheduled).
+/// * [`ClientState::q_prev`] warm-starts at [`Q_PREV_WARM_START`] and
+///   is advanced only by **quantized** uploads. A raw upload carries no
+///   quantization information, so it leaves the anchor untouched —
+///   previously it wrote a literal `32` that the Taylor expansion in
+///   `solver` (eq. (39)) would silently expand around.
+pub const Q_RECORD_RAW: u32 = 0;
+pub const Q_PREV_WARM_START: f64 = 4.0;
 
 /// Per-client coordinator-side state.
 #[derive(Clone, Debug)]
@@ -33,10 +53,21 @@ pub struct ClientState {
     pub stats: GradStats,
     /// θ^max estimate used at decision time (from the global model).
     pub theta_max: f64,
-    /// q from the last participation (Case-5 anchor).
+    /// q from the last *quantized* participation (Case-5 anchor; see
+    /// [`Q_PREV_WARM_START`]).
     pub q_prev: f64,
-    /// Private noise stream for quantization.
+    /// Private noise stream for data sampling + quantization.
     pub rng: Rng,
+}
+
+/// Decision-stage byproducts the later stages need — all captured from
+/// coordinator state *before* any client work runs (the queue update
+/// must use the decision-time Ĝ/σ̂, not the post-round ones).
+struct DecideCtx {
+    w_full: Vec<f64>,
+    g2: Vec<f64>,
+    sigma2: Vec<f64>,
+    decide_seconds: f64,
 }
 
 /// The FL server.
@@ -54,6 +85,9 @@ pub struct Server<'rt> {
     rng: Rng,
     /// Evaluate every k rounds (0 = never).
     pub eval_every: usize,
+    /// Worker threads for the execution stage (`1` = legacy serial
+    /// path). Any value produces bit-identical traces — see `fl::exec`.
+    pub threads: usize,
 }
 
 impl<'rt> Server<'rt> {
@@ -77,7 +111,7 @@ impl<'rt> Server<'rt> {
                 size: cd.size as f64,
                 stats: GradStats::prior(),
                 theta_max: theta_max0,
-                q_prev: 4.0,
+                q_prev: Q_PREV_WARM_START,
                 rng: rng.fork(1000 + id as u64),
             })
             .collect();
@@ -128,6 +162,7 @@ impl<'rt> Server<'rt> {
             round: 0,
             rng,
             eval_every: 2,
+            threads: threadpool::default_threads(),
         })
     }
 
@@ -164,21 +199,10 @@ impl<'rt> Server<'rt> {
         );
     }
 
-    /// Run one communication round; returns its record.
-    pub fn run_round(&mut self) -> Result<RoundRecord> {
-        self.round += 1;
-        // ε tracking (see `SystemParams::auto_eps`): gradient norms decay
-        // as training converges, so a fixed ε1 calibrated early becomes
-        // asymptotically slack and the C6 pressure vanishes (the queue
-        // drains and scheduling collapses); tracking the current Ĝ/σ̂
-        // keeps C6/C7 tight-but-satisfiable all along the run.
-        if self.params.auto_eps && self.round >= 2 {
-            self.recalibrate_eps();
-        }
+    /// Stage 1 — draw the round's channels and let the scheduler decide
+    /// participation, channel allocation, quantization and frequency.
+    fn stage_decide(&mut self) -> (RoundDecision, DecideCtx) {
         let p = self.params.clone();
-        let u = p.num_clients;
-
-        // --- Step 1: decision ------------------------------------------
         let channels = self.channel_model.draw(&mut self.rng);
         let sizes: Vec<f64> = self.clients.iter().map(|c| c.size).collect();
         let d_total: f64 = sizes.iter().sum();
@@ -223,135 +247,144 @@ impl<'rt> Server<'rt> {
                 p.eps2
             );
         }
+        (decision, DecideCtx { w_full, g2, sigma2, decide_seconds })
+    }
 
-        // --- Steps 2–4: broadcast, local update, quantize, upload ------
+    /// Stage 2 — fan the scheduled clients out over the worker pool
+    /// (`self.threads`; 1 = serial) and write the advanced per-client
+    /// state back in client-id order, exactly as the serial loop did.
+    fn stage_execute(&mut self, decision: &RoundDecision) -> Result<exec::ExecOutput> {
         let t_compute = std::time::Instant::now();
-        let info = &self.runtime.info;
-        let pix = info.pix();
-        let mut uploads: Vec<(usize, Vec<f32>, f64)> = Vec::new(); // (client, model, w-unnormalized)
-        let mut scheduled = 0usize;
-        let mut round_energy = 0.0f64;
-        let mut max_latency = 0.0f64;
-        let mut loss_sum = 0.0f64;
-        let mut loss_n = 0usize;
-        let mut q_per_client: Vec<Option<u32>> = vec![None; u];
-        let mut realized_q: Vec<Option<u32>> = vec![None; u];
-        let mut w_round = vec![0.0f64; u];
-        let mut realized_theta_max = vec![0.0f64; u];
-        let mut participating = vec![false; u];
-
-        // w_i^n over scheduled clients (the aggregation weights the
-        // server *intends*; uploads that time out are renormalized out).
-        let d_sched: f64 = decision
-            .assignments
-            .iter()
-            .enumerate()
-            .filter(|(_, d)| d.is_some())
-            .map(|(i, _)| sizes[i])
-            .sum();
-
+        let mut tasks: Vec<exec::ClientTask<'_>> = Vec::new();
         for (i, d) in decision.assignments.iter().enumerate() {
             let Some(d) = d else { continue };
-            scheduled += 1;
-            participating[i] = true;
-            w_round[i] = sizes[i] / d_sched;
-
-            // Local update (τ steps through the AOT train_step).
-            let (xs, ys) =
-                self.fed.clients[i].sample_batches(&mut self.clients[i].rng, info.tau, info.batch, pix);
-            let out = self.runtime.train_step(&self.theta, &xs, &ys, info.lr as f32)?;
-            self.clients[i].stats.update(&out.gnorms);
-            loss_sum += out.mean_loss as f64;
-            loss_n += 1;
-
-            // Quantize (or raw upload).
-            let (upload, tmax, bits) = match d.q {
-                Some(q) => {
-                    let mut noise = vec![0.0f32; info.z];
-                    self.clients[i].rng.fill_uniform_f32(&mut noise);
-                    let (qtheta, tmax) = self.runtime.quantize(&out.theta, &noise, q as f32)?;
-                    (qtheta, tmax as f64, p.payload_bits(q))
-                }
-                None => {
-                    let tmax = linf_norm(&out.theta) as f64;
-                    (out.theta.clone(), tmax, p.raw_payload_bits())
-                }
-            };
-            realized_theta_max[i] = tmax;
-            self.clients[i].theta_max = tmax;
-            q_per_client[i] = Some(d.q.unwrap_or(0));
-            realized_q[i] = d.q;
-            self.clients[i].q_prev = d.q.unwrap_or(32) as f64;
-
-            // Latency & energy with the *actual* D_i and decision (f, q).
-            let t_cmp = energy::t_cmp(&p, sizes[i], d.f);
-            let t_com = bits / d.rate;
-            let latency = t_cmp + t_com;
-            max_latency = max_latency.max(latency);
-            round_energy += energy::e_cmp(&p, sizes[i], d.f) + energy::e_com(&p, t_com);
-
-            // C4 check: uploads past the deadline are dropped (energy
-            // already spent) — the paper's timeout/dropout mechanism.
-            // The No-Quantization baseline is exempt (no latency design).
-            if decision.deadline_exempt || latency <= p.t_max * (1.0 + 1e-9) {
-                uploads.push((i, upload, sizes[i]));
+            tasks.push(exec::ClientTask {
+                id: i,
+                size: self.clients[i].size,
+                decision: *d,
+                deadline_exempt: decision.deadline_exempt,
+                data: &self.fed.clients[i],
+                rng: self.clients[i].rng.clone(),
+            });
+        }
+        let mut out =
+            exec::execute_round(&self.params, self.runtime, &self.theta, tasks, self.threads)?;
+        for oc in &out.outcomes {
+            let c = &mut self.clients[oc.id];
+            c.rng = oc.rng.clone();
+            c.stats.update(&oc.gnorms);
+            c.theta_max = oc.theta_max;
+            if let Some(q) = oc.q {
+                c.q_prev = q as f64;
             }
         }
-        let compute_seconds = t_compute.elapsed().as_secs_f64();
+        out.compute_seconds = t_compute.elapsed().as_secs_f64();
+        Ok(out)
+    }
 
-        // --- Step 5: aggregation (eq. (2)) ------------------------------
-        let aggregated = uploads.len();
-        if aggregated > 0 {
-            let w_total: f64 = uploads.iter().map(|(_, _, w)| w).sum();
-            let mut next = vec![0.0f32; self.theta.len()];
-            for (_, model, w) in &uploads {
-                let wf = (*w / w_total) as f32;
-                for (n, m) in next.iter_mut().zip(model.iter()) {
-                    *n += wf * m;
-                }
-            }
+    /// Stage 3 — install the streamed weighted mean as θ^{n+1}
+    /// (eq. (2)). Uploads past the C4 deadline were never committed to
+    /// the fold, so the weights already renormalize over the survivors;
+    /// an empty survivor set keeps the previous global model.
+    fn stage_aggregate(&mut self, exec_out: &mut exec::ExecOutput) {
+        if let Some(next) = exec_out.aggregate.take() {
             self.theta = next;
         }
+    }
 
-        // --- Queue updates (eqs. (23)–(24)) with realized terms ---------
-        let data = convergence::data_term(&p, &participating, &w_full, &w_round, &g2, &sigma2);
-        let quant = convergence::quant_term(&p, &w_round, &realized_theta_max, &realized_q);
-        self.queues.update(&p, data, quant);
+    /// Stage 4 — queue updates (eqs. (23)–(24)) with the realized
+    /// participation/levels, then refresh the decision-time θ^max
+    /// estimates from the new global model.
+    fn stage_update_queues(&mut self, ctx: &DecideCtx, exec_out: &exec::ExecOutput) {
+        let u = self.params.num_clients;
+        let d_sched: f64 = exec_out.outcomes.iter().map(|oc| self.clients[oc.id].size).sum();
+        let mut participating = vec![false; u];
+        let mut w_round = vec![0.0f64; u];
+        let mut realized_theta_max = vec![0.0f64; u];
+        let mut realized_q: Vec<Option<u32>> = vec![None; u];
+        for oc in &exec_out.outcomes {
+            participating[oc.id] = true;
+            // w_i^n the server *intended* (over all scheduled clients).
+            w_round[oc.id] = self.clients[oc.id].size / d_sched;
+            realized_theta_max[oc.id] = oc.theta_max;
+            realized_q[oc.id] = oc.q;
+        }
+        let data = convergence::data_term(
+            &self.params,
+            &participating,
+            &ctx.w_full,
+            &w_round,
+            &ctx.g2,
+            &ctx.sigma2,
+        );
+        let quant =
+            convergence::quant_term(&self.params, &w_round, &realized_theta_max, &realized_q);
+        self.queues.update(&self.params, data, quant);
 
-        // Refresh decision-time θ^max estimates from the new global model.
         let tmax_global = linf_norm(&self.theta) as f64;
         for c in self.clients.iter_mut() {
-            c.theta_max = if c.theta_max > 0.0 { 0.5 * c.theta_max + 0.5 * tmax_global } else { tmax_global };
+            c.theta_max =
+                if c.theta_max > 0.0 { 0.5 * c.theta_max + 0.5 * tmax_global } else { tmax_global };
         }
+    }
 
-        // --- Evaluation --------------------------------------------------
+    /// Evaluation + record assembly.
+    fn finish_round(&mut self, ctx: &DecideCtx, exec_out: &exec::ExecOutput) -> Result<RoundRecord> {
         let (test_loss, test_acc) = if self.eval_every > 0 && self.round % self.eval_every == 0 {
-            let (l, a) = self.runtime.evaluate(&self.theta, &self.fed.test.images, &self.fed.test.labels)?;
+            let (l, a) =
+                self.runtime.evaluate(&self.theta, &self.fed.test.images, &self.fed.test.labels)?;
             (Some(l), Some(a))
         } else {
             (None, None)
         };
 
-        let qs: Vec<f64> = realized_q.iter().flatten().map(|&q| q as f64).collect();
+        let qs: Vec<f64> =
+            exec_out.outcomes.iter().filter_map(|oc| oc.q).map(|q| q as f64).collect();
         let mean_q = if qs.is_empty() { 0.0 } else { qs.iter().sum::<f64>() / qs.len() as f64 };
+        let mut q_per_client: Vec<Option<u32>> = vec![None; self.params.num_clients];
+        for oc in &exec_out.outcomes {
+            q_per_client[oc.id] = Some(oc.q.unwrap_or(Q_RECORD_RAW));
+        }
 
         Ok(RoundRecord {
             round: self.round,
-            scheduled,
-            aggregated,
-            energy: round_energy,
+            scheduled: exec_out.scheduled,
+            aggregated: exec_out.aggregated,
+            energy: exec_out.round_energy,
             cum_energy: 0.0, // filled by run()
-            train_loss: if loss_n > 0 { loss_sum / loss_n as f64 } else { f64::NAN },
+            train_loss: if exec_out.loss_n > 0 {
+                exec_out.loss_sum / exec_out.loss_n as f64
+            } else {
+                f64::NAN
+            },
             test_loss,
             test_acc,
             mean_q,
             q_per_client,
             lambda1: self.queues.lambda1,
             lambda2: self.queues.lambda2,
-            max_latency,
-            decide_seconds,
-            compute_seconds,
+            max_latency: exec_out.max_latency,
+            decide_seconds: ctx.decide_seconds,
+            compute_seconds: exec_out.compute_seconds,
         })
+    }
+
+    /// Run one communication round; returns its record.
+    pub fn run_round(&mut self) -> Result<RoundRecord> {
+        self.round += 1;
+        // ε tracking (see `SystemParams::auto_eps`): gradient norms decay
+        // as training converges, so a fixed ε1 calibrated early becomes
+        // asymptotically slack and the C6 pressure vanishes (the queue
+        // drains and scheduling collapses); tracking the current Ĝ/σ̂
+        // keeps C6/C7 tight-but-satisfiable all along the run.
+        if self.params.auto_eps && self.round >= 2 {
+            self.recalibrate_eps();
+        }
+        let (decision, ctx) = self.stage_decide();
+        let mut exec_out = self.stage_execute(&decision)?;
+        self.stage_aggregate(&mut exec_out);
+        self.stage_update_queues(&ctx, &exec_out);
+        self.finish_round(&ctx, &exec_out)
     }
 
     /// Run `rounds` communication rounds and return the trace.

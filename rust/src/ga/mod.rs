@@ -10,6 +10,7 @@
 //! closed-form solver per candidate).
 
 use crate::util::rng::Rng;
+use crate::util::threadpool;
 
 /// One channel-allocation chromosome.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -101,6 +102,10 @@ pub struct GaParams {
     pub iota: f64,
     /// Elites copied unchanged each generation.
     pub elites: usize,
+    /// Worker threads for fitness evaluation (1 = serial). Population
+    /// evals are independent and results keep population order, so any
+    /// thread count yields an identical GA trajectory.
+    pub threads: usize,
 }
 
 impl Default for GaParams {
@@ -112,6 +117,7 @@ impl Default for GaParams {
             mutation_p: 0.08,
             iota: 2.0,
             elites: 2,
+            threads: 1,
         }
     }
 }
@@ -127,8 +133,22 @@ pub struct GaOutcome {
     pub evals: usize,
 }
 
+/// Score a population. Fitness evaluations are independent, so they
+/// fan out over `threads` workers ([`GaParams::threads`]); results stay
+/// in population order, keeping the GA deterministic per seed for any
+/// thread count.
+fn eval_population<F>(pop: &[Chromosome], threads: usize, evals: &mut usize, eval: &F) -> Vec<f64>
+where
+    F: Fn(&Chromosome) -> f64 + Sync,
+{
+    *evals += pop.len();
+    threadpool::parallel_map(pop, threads, |_, c| eval(c))
+}
+
 /// Run Algorithm 1. `eval` returns J0 (lower = better); infeasible
 /// allocations should return `f64::INFINITY` (fitness 0 per the paper).
+/// `eval` must be `Fn + Sync` so the fitness loop — the decision-stage
+/// hot path — can fan out over [`GaParams::threads`] workers.
 pub fn optimize<F>(
     num_channels: usize,
     num_clients: usize,
@@ -137,7 +157,7 @@ pub fn optimize<F>(
     eval: F,
 ) -> GaOutcome
 where
-    F: FnMut(&Chromosome) -> f64,
+    F: Fn(&Chromosome) -> f64 + Sync,
 {
     optimize_with_seeds(num_channels, num_clients, params, rng, &[], eval)
 }
@@ -151,10 +171,10 @@ pub fn optimize_with_seeds<F>(
     params: &GaParams,
     rng: &mut Rng,
     seeds: &[Chromosome],
-    mut eval: F,
+    eval: F,
 ) -> GaOutcome
 where
-    F: FnMut(&Chromosome) -> f64,
+    F: Fn(&Chromosome) -> f64 + Sync,
 {
     let mut evals = 0usize;
     let mut pop: Vec<Chromosome> = (0..params.population)
@@ -176,13 +196,7 @@ where
         }
     }
 
-    let mut score: Vec<f64> = pop
-        .iter()
-        .map(|c| {
-            evals += 1;
-            eval(c)
-        })
-        .collect();
+    let mut score: Vec<f64> = eval_population(&pop, params.threads, &mut evals, &eval);
     let mut history = Vec::with_capacity(params.generations);
     let (mut best, mut best_j0) = best_of(&pop, &score);
 
@@ -226,13 +240,7 @@ where
             }
         }
         pop = next;
-        score = pop
-            .iter()
-            .map(|c| {
-                evals += 1;
-                eval(c)
-            })
-            .collect();
+        score = eval_population(&pop, params.threads, &mut evals, &eval);
         let (gen_best, gen_j0) = best_of(&pop, &score);
         if gen_j0 < best_j0 {
             best = gen_best;
@@ -415,5 +423,22 @@ mod tests {
         let o2 = optimize(6, 6, &GaParams::default(), &mut r2, eval);
         assert_eq!(o1.best, o2.best);
         assert_eq!(o1.best_j0, o2.best_j0);
+    }
+
+    #[test]
+    fn parallel_fitness_matches_serial() {
+        // The fan-out only reorders *when* evals run, never their
+        // inputs or how results are consumed — trajectories must match.
+        let eval = |c: &Chromosome| -> f64 {
+            c.alloc.iter().flatten().map(|&i| ((i * i) % 7) as f64).sum()
+        };
+        let serial = GaParams::default();
+        let par = GaParams { threads: 8, ..GaParams::default() };
+        let o1 = optimize(8, 8, &serial, &mut Rng::seed_from(31), eval);
+        let o8 = optimize(8, 8, &par, &mut Rng::seed_from(31), eval);
+        assert_eq!(o1.best, o8.best);
+        assert_eq!(o1.best_j0, o8.best_j0);
+        assert_eq!(o1.history, o8.history);
+        assert_eq!(o1.evals, o8.evals);
     }
 }

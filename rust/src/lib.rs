@@ -9,12 +9,22 @@
 //!   matmul (`python/compile/kernels/`);
 //! * **Layer 2** (build-time Python) — the paper's CNNs with a flat
 //!   parameter interface, AOT-lowered to HLO text (`python/compile/`);
-//! * **Layer 3** (this crate) — the paper's actual contribution: the
-//!   per-round **QCCF** decision pipeline (Lyapunov virtual queues →
-//!   genetic channel allocation → closed-form KKT quantization/frequency
-//!   control → Theorem-3 integer rounding), the wireless/energy models,
-//!   the FL server loop, the four baselines, and the experiment harness
-//!   that regenerates every figure in §VI.
+//! * **Layer 3** (this crate) — the paper's actual contribution, run
+//!   through a staged **round-execution engine**: per round, a
+//!   *decision* stage (Lyapunov virtual queues → genetic channel
+//!   allocation → closed-form KKT quantization/frequency control →
+//!   Theorem-3 integer rounding, with GA fitness fanned out over a
+//!   worker pool), a *parallel execution* stage (`fl::exec`: every
+//!   scheduled client trains, quantizes, and accounts
+//!   latency/energy independently on its private RNG stream), a
+//!   streaming *aggregation* stage (eq. (2) folded in client order;
+//!   `O(Z)` memory serial, `O(threads × Z)` parallel), and the
+//!   *queue-update* stage. The engine's
+//!   determinism contract: any `--threads` value — including the
+//!   `1`-thread legacy path — produces bit-identical models and
+//!   traces. Around it sit the wireless/energy models, the four
+//!   baselines, and the experiment harness that regenerates every
+//!   figure in §VI.
 //!
 //! Python never runs on the round loop: `make artifacts` lowers once and
 //! the `qccf` binary executes the HLO through the PJRT CPU client.

@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   params                       print Table I as configured
 //!   train   [--algorithm A] [--profile P] [--rounds N] [--beta B] [--v V] [--seed S]
+//!           [--threads T]        worker threads for the round engine
+//!                                (default: all cores minus one; 1 = serial
+//!                                legacy path; any value is bit-identical)
 //!   fig2    [--profile P] [--v-values 1,10,100,1000] [--rounds N] [--quick]
 //!   fig3    [--profile P] [--betas 150,300] [--rounds N] [--quick]
 //!   fig4    [--profile P] [--betas 150,300] [--rounds N] [--quick]
@@ -112,9 +115,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     spec.mu = args.get_f64("mu", 1200.0);
     spec.seed = args.get_u64("seed", 1);
     spec.eval_every = args.get_usize("eval-every", 2);
+    spec.threads = args.get_usize("threads", spec.threads).max(1);
     if let Some(v) = args.get("v") {
         spec.v = v.parse().ok();
     }
+    info!("main", "round engine threads: {}", spec.threads);
     let trace = run_one(&rt, &spec)?;
     let row = fig3::summarize(&trace, spec.beta);
     fig3::print(std::slice::from_ref(&row), &format!("train — {}", spec.algorithm));

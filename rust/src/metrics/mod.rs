@@ -29,8 +29,14 @@ pub struct RoundRecord {
     pub lambda2: f64,
     /// Max realized latency among participants (s).
     pub max_latency: f64,
-    /// Wall-clock spent deciding (scheduler) and training (runtime), s.
+    /// Wall-clock spent deciding (scheduler), s.
     pub decide_seconds: f64,
+    /// Wall-clock of the execution stage, s: client fan-out
+    /// (train/quantize/accounting) *including* the streaming
+    /// aggregation fold, which overlaps with client compute in the
+    /// staged engine. (Pre-engine traces timed training only, with
+    /// aggregation outside the measurement — compare across versions
+    /// accordingly.)
     pub compute_seconds: f64,
 }
 

@@ -9,12 +9,18 @@
 pub mod manifest;
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use anyhow::{anyhow, Context, Result};
 
 pub use manifest::{artifacts_dir, load_profile, ProfileInfo};
 
 /// Compiled executables for one model profile.
+///
+/// A single `Runtime` is shared by reference across the round engine's
+/// worker threads (`fl::exec`), which call [`Runtime::train_step`] /
+/// [`Runtime::quantize`] concurrently for different clients.
 pub struct Runtime {
     client: xla::PjRtClient,
     pub info: ProfileInfo,
@@ -22,9 +28,33 @@ pub struct Runtime {
     train_step: xla::PjRtLoadedExecutable,
     eval_step: xla::PjRtLoadedExecutable,
     quantize: xla::PjRtLoadedExecutable,
-    /// Wall-time accounting (perf pass): cumulative seconds per entry.
-    pub exec_seconds: std::cell::RefCell<[f64; 4]>,
+    /// Wall-time accounting (perf pass): cumulative **nanoseconds** per
+    /// entry point, atomically accumulated so concurrent `execute`
+    /// calls profile lock-free (was a `RefCell`, which kept the whole
+    /// round loop single-threaded).
+    exec_nanos: [AtomicU64; 4],
+    /// Escape hatch: `QCCF_PJRT_SERIALIZE=1` wraps every execute in a
+    /// process-wide lock for PJRT plugins that are not safe under
+    /// concurrent `Execute` (the bundled CPU client is).
+    exec_lock: Option<Mutex<()>>,
 }
+
+// SAFETY: all interior mutability in `Runtime` is the atomic profiling
+// counters and the optional serialization mutex; the remaining fields
+// are immutable after `load`. Two layers must be race-free for this to
+// be sound: (1) PJRT itself — its API contract makes clients and
+// loaded executables thread-safe (concurrent `Execute` on one
+// `PjRtLoadedExecutable` is supported; the CPU plugin synchronizes
+// internally); (2) the `xla` binding layer, which wraps raw handles
+// and does not derive `Send`/`Sync` — this impl asserts its handle
+// types are not non-atomically reference-counted. That second claim is
+// checked empirically by `integration_runtime.rs::
+// concurrent_execute_matches_serial`; if a binding revision ever
+// introduces `Rc`-style sharing, set `QCCF_PJRT_SERIALIZE=1` (coarse
+// per-execute lock) while the binding is fixed — the rest of the
+// parallel round pipeline keeps working.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
 
 /// Result of one local training round on a client.
 #[derive(Clone, Debug)]
@@ -59,7 +89,17 @@ impl Runtime {
             quantize: get("quantize")?,
             client,
             info,
-            exec_seconds: std::cell::RefCell::new([0.0; 4]),
+            exec_nanos: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+            exec_lock: matches!(
+                std::env::var("QCCF_PJRT_SERIALIZE").as_deref(),
+                Ok("1")
+            )
+            .then(|| Mutex::new(())),
         })
     }
 
@@ -79,6 +119,7 @@ impl Runtime {
         args: &[xla::Literal],
     ) -> Result<Vec<xla::Literal>> {
         let t0 = std::time::Instant::now();
+        let _serial = self.exec_lock.as_ref().map(|m| m.lock().unwrap());
         let out = exe
             .execute::<xla::Literal>(args)
             .map_err(|e| anyhow!("execute: {e:?}"))?;
@@ -86,7 +127,7 @@ impl Runtime {
             .to_literal_sync()
             .map_err(|e| anyhow!("fetch result: {e:?}"))?;
         let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        self.exec_seconds.borrow_mut()[which] += t0.elapsed().as_secs_f64();
+        self.exec_nanos[which].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         Ok(parts)
     }
 
@@ -201,6 +242,7 @@ impl Runtime {
     /// Cumulative execution seconds per entry point
     /// `(init, train_step, eval, quantize)` — perf-pass accounting.
     pub fn exec_profile(&self) -> [f64; 4] {
-        *self.exec_seconds.borrow()
+        let sec = |i: usize| self.exec_nanos[i].load(Ordering::Relaxed) as f64 * 1e-9;
+        [sec(0), sec(1), sec(2), sec(3)]
     }
 }

@@ -27,6 +27,14 @@ impl QccfScheduler {
         self.case5 = mode;
         self
     }
+
+    /// Fan the GA fitness evaluations out over `threads` workers (the
+    /// per-candidate closed-form solve × U clients is the decision hot
+    /// path). Deterministic for any value.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.ga.threads = threads.max(1);
+        self
+    }
 }
 
 impl Scheduler for QccfScheduler {
@@ -43,9 +51,13 @@ impl Scheduler for QccfScheduler {
         // Fitness memoization: GA populations converge, so late
         // generations re-evaluate the same chromosomes; the inner
         // closed-form solve × U clients is the decision hot path
-        // (EXPERIMENTS.md §Perf) and duplicates are pure waste.
-        let mut cache: std::collections::HashMap<Vec<Option<usize>>, f64> =
-            std::collections::HashMap::new();
+        // (EXPERIMENTS.md §Perf) and duplicates are pure waste. The
+        // mutex makes the cache shareable across the parallel fitness
+        // workers; two workers may race to fill the same key, but J0 is
+        // a pure function of the chromosome, so last-write-wins is
+        // value-identical.
+        let cache: std::sync::Mutex<std::collections::HashMap<Vec<Option<usize>>, f64>> =
+            std::sync::Mutex::new(std::collections::HashMap::new());
         let outcome = ga::optimize_with_seeds(
             p.num_channels,
             p.num_clients,
@@ -53,9 +65,12 @@ impl Scheduler for QccfScheduler {
             &mut self.rng,
             std::slice::from_ref(&greedy),
             |c| {
-                *cache
-                    .entry(c.alloc.clone())
-                    .or_insert_with(|| evaluate_allocation(inp, c, mode).0)
+                if let Some(&hit) = cache.lock().unwrap().get(&c.alloc) {
+                    return hit;
+                }
+                let j0 = evaluate_allocation(inp, c, mode).0;
+                cache.lock().unwrap().insert(c.alloc.clone(), j0);
+                j0
             },
         );
         let (j0, assignments) = evaluate_allocation(inp, &outcome.best, mode);
@@ -107,5 +122,19 @@ mod tests {
         let d1 = QccfScheduler::new(5).decide(&inp);
         let d2 = QccfScheduler::new(5).decide(&inp);
         assert_eq!(d1.j0, d2.j0);
+    }
+
+    #[test]
+    fn parallel_fitness_same_decision() {
+        let fx = Fixture::new(14);
+        let inp = fx.inputs();
+        let serial = QccfScheduler::new(5).decide(&inp);
+        let parallel = QccfScheduler::new(5).with_threads(8).decide(&inp);
+        assert_eq!(serial.j0, parallel.j0);
+        assert_eq!(serial.evals, parallel.evals);
+        let chans = |d: &crate::sched::RoundDecision| -> Vec<Option<usize>> {
+            d.assignments.iter().map(|a| a.map(|x| x.channel)).collect()
+        };
+        assert_eq!(chans(&serial), chans(&parallel));
     }
 }

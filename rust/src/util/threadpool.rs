@@ -10,6 +10,12 @@ use std::sync::Mutex;
 
 /// Apply `f` to every element, using up to `threads` workers.
 /// Results keep the input order.
+///
+/// Deliberately *not* routed through [`parallel_map_owned`]: this is
+/// the GA-fitness hot path (population-sized calls every generation of
+/// every round's decision), and the borrowed form reads the slice
+/// lock-free where the owned form pays a `Mutex<Option<T>>` hand-off
+/// per element.
 pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -35,6 +41,45 @@ where
                 }
                 let r = f(i, &items[i]);
                 *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled slot"))
+        .collect()
+}
+
+/// [`parallel_map`] over owned items: each element is handed to exactly
+/// one worker by value. The round engine needs this because a client
+/// task owns its private RNG stream, which must be advanced in place
+/// and returned with the result.
+pub fn parallel_map_owned<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.into_iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let inputs: Vec<Mutex<Option<T>>> = items.into_iter().map(|x| Mutex::new(Some(x))).collect();
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let x = inputs[i].lock().unwrap().take().expect("item taken once");
+                *slots[i].lock().unwrap() = Some(f(i, x));
             });
         }
     });
@@ -85,5 +130,22 @@ mod tests {
         let out = parallel_map(&items, 8, |_, &x| x);
         assert_eq!(out.len(), 1000);
         assert!(out.iter().enumerate().all(|(i, &x)| i == x));
+    }
+
+    #[test]
+    fn owned_moves_each_item_once() {
+        // Non-Clone payloads prove by-value delivery.
+        let items: Vec<Box<usize>> = (0..200).map(Box::new).collect();
+        let out = parallel_map_owned(items, 4, |i, x| {
+            assert_eq!(i, *x);
+            *x + 1
+        });
+        assert_eq!(out, (1..=200).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn owned_single_thread_and_empty() {
+        assert!(parallel_map_owned(Vec::<u8>::new(), 4, |_, x| x).is_empty());
+        assert_eq!(parallel_map_owned(vec![1, 2, 3], 1, |_, x| x * 10), vec![10, 20, 30]);
     }
 }

@@ -4,12 +4,13 @@
 //!
 //! All tests no-op (with a note) when `make artifacts` hasn't run.
 
-use qccf::baselines::{make_scheduler, ALL_ALGORITHMS};
+use qccf::baselines::{make_scheduler_with_threads, ALL_ALGORITHMS};
 use qccf::data::{self, DataGenConfig};
 use qccf::experiments::common::params_for;
 use qccf::experiments::Task;
 use qccf::fl::Server;
 use qccf::runtime::{artifacts_dir, Runtime};
+use qccf::sched::{ClientDecision, RoundDecision, RoundInputs, Scheduler};
 
 fn runtime() -> Option<Runtime> {
     if !artifacts_dir().join("manifest.json").exists() {
@@ -19,17 +20,22 @@ fn runtime() -> Option<Runtime> {
     Some(Runtime::load(&artifacts_dir(), "tiny").expect("load tiny runtime"))
 }
 
-fn make_server<'rt>(rt: &'rt Runtime, alg: &str, seed: u64) -> Server<'rt> {
+fn make_server_threads<'rt>(rt: &'rt Runtime, alg: &str, seed: u64, threads: usize) -> Server<'rt> {
     let params = params_for(rt, Task::Femnist, 300.0);
     let mut dcfg = DataGenConfig::new(params.num_clients, rt.info.image, rt.info.classes);
     dcfg.size_mean = 300.0;
     dcfg.size_std = 60.0;
     dcfg.test_size = 128;
     let fed = data::generate(&dcfg, seed);
-    let sched = make_scheduler(alg, seed).unwrap();
+    let sched = make_scheduler_with_threads(alg, seed, threads).unwrap();
     let mut s = Server::new(params, rt, fed, sched, seed).expect("server");
     s.eval_every = 2;
+    s.threads = threads;
     s
+}
+
+fn make_server<'rt>(rt: &'rt Runtime, alg: &str, seed: u64) -> Server<'rt> {
+    make_server_threads(rt, alg, seed, 1)
 }
 
 #[test]
@@ -110,6 +116,101 @@ fn no_quant_uploads_raw() {
             assert_eq!(*q, 0, "raw upload sentinel");
         }
     }
+}
+
+#[test]
+fn parallel_round_bit_identical_to_serial() {
+    // The engine's determinism contract (see fl::exec): `threads = N`
+    // must produce bit-identical θ and identical Trace records to the
+    // legacy serial path, GA fitness fan-out included.
+    let Some(rt) = runtime() else { return };
+    let mut serial = make_server_threads(&rt, "qccf", 11, 1);
+    let mut parallel = make_server_threads(&rt, "qccf", 11, 4);
+    let t1 = serial.run(4).unwrap();
+    let t4 = parallel.run(4).unwrap();
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&serial.theta), bits(&parallel.theta), "theta diverged");
+    assert_eq!(t1.records.len(), t4.records.len());
+    for (a, b) in t1.records.iter().zip(&t4.records) {
+        assert_eq!(a.scheduled, b.scheduled);
+        assert_eq!(a.aggregated, b.aggregated);
+        assert_eq!(a.energy, b.energy);
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert_eq!(a.test_loss, b.test_loss);
+        assert_eq!(a.test_acc, b.test_acc);
+        assert_eq!(a.mean_q, b.mean_q);
+        assert_eq!(a.q_per_client, b.q_per_client);
+        assert_eq!(a.lambda1, b.lambda1);
+        assert_eq!(a.lambda2, b.lambda2);
+        assert_eq!(a.max_latency, b.max_latency);
+    }
+}
+
+/// Test-only scheduler that replays a fixed decision every round.
+struct FixedScheduler {
+    assignments: Vec<Option<ClientDecision>>,
+}
+
+impl Scheduler for FixedScheduler {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+    fn decide(&mut self, _inp: &RoundInputs<'_>) -> RoundDecision {
+        RoundDecision {
+            assignments: self.assignments.clone(),
+            j0: f64::NAN,
+            evals: 0,
+            deadline_exempt: false,
+        }
+    }
+}
+
+#[test]
+fn timed_out_uploads_renormalized_out_of_aggregation() {
+    // C4 regression: a client past T^max spends its energy but must be
+    // renormalized out of eq. (2). The aggregate must equal the weighted
+    // mean over the *surviving* uploads only — i.e. bit-identical to a
+    // round that never scheduled the straggler at all.
+    let Some(rt) = runtime() else { return };
+    let params = params_for(&rt, Task::Femnist, 300.0);
+    let u = params.num_clients;
+    let good = |ch: usize| {
+        Some(ClientDecision { channel: ch, q: Some(4), f: params.f_max, rate: 50e6 })
+    };
+    let mut with_straggler: Vec<Option<ClientDecision>> = vec![None; u];
+    with_straggler[0] = good(0);
+    with_straggler[1] = good(1);
+    // 1 bit/s: communication alone exceeds T^max by orders of magnitude.
+    with_straggler[2] =
+        Some(ClientDecision { channel: 2, q: Some(4), f: params.f_max, rate: 1.0 });
+    let mut without_straggler: Vec<Option<ClientDecision>> = vec![None; u];
+    without_straggler[0] = good(0);
+    without_straggler[1] = good(1);
+
+    let run = |assignments: Vec<Option<ClientDecision>>| {
+        let mut dcfg = DataGenConfig::new(params.num_clients, rt.info.image, rt.info.classes);
+        dcfg.size_mean = 300.0;
+        dcfg.size_std = 60.0;
+        dcfg.test_size = 128;
+        let fed = data::generate(&dcfg, 6);
+        let mut server =
+            Server::new(params.clone(), &rt, fed, Box::new(FixedScheduler { assignments }), 6)
+                .unwrap();
+        server.eval_every = 0;
+        let rec = server.run_round().unwrap();
+        (server.theta.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(), rec)
+    };
+    let (theta_a, rec_a) = run(with_straggler);
+    let (theta_b, rec_b) = run(without_straggler);
+
+    assert_eq!(rec_a.scheduled, 3);
+    assert_eq!(rec_a.aggregated, 2, "straggler was not dropped");
+    assert!(rec_a.aggregated < rec_a.scheduled);
+    assert_eq!(rec_b.scheduled, 2);
+    assert_eq!(rec_b.aggregated, 2, "survivors unexpectedly dropped");
+    // Straggler energy is spent even though its upload is dropped.
+    assert!(rec_a.energy > rec_b.energy);
+    assert_eq!(theta_a, theta_b, "aggregate not renormalized over survivors");
 }
 
 #[test]

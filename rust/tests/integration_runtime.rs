@@ -9,6 +9,7 @@ use qccf::quant;
 use qccf::runtime::{artifacts_dir, Runtime};
 use qccf::util::rng::Rng;
 use qccf::util::stats::linf_norm;
+use qccf::util::threadpool;
 
 fn runtime() -> Option<Runtime> {
     if !artifacts_dir().join("manifest.json").exists() {
@@ -77,6 +78,27 @@ fn train_step_zero_lr_identity() {
     let (xs, ys) = toy_batches(&rt, 5);
     let out = rt.train_step(&theta, &xs, &ys, 0.0).unwrap();
     assert_eq!(out.theta, theta);
+}
+
+#[test]
+fn concurrent_execute_matches_serial() {
+    // The round engine shares one &Runtime across workers: concurrent
+    // `execute` through the PJRT CPU client must yield the same bits as
+    // back-to-back serial calls (PJRT thread-safety contract; see the
+    // `unsafe impl Sync for Runtime` note and QCCF_PJRT_SERIALIZE).
+    let Some(rt) = runtime() else { return };
+    let theta = rt.init().unwrap();
+    let batches: Vec<(Vec<f32>, Vec<i32>)> = (0..8u64).map(|k| toy_batches(&rt, 50 + k)).collect();
+    let step = |xs: &[f32], ys: &[i32]| -> Vec<u32> {
+        let out = rt.train_step(&theta, xs, ys, 0.05).unwrap();
+        out.theta.iter().map(|x| x.to_bits()).collect()
+    };
+    let serial: Vec<Vec<u32>> = batches.iter().map(|(xs, ys)| step(xs, ys)).collect();
+    for threads in [2, 4, 8] {
+        let parallel: Vec<Vec<u32>> =
+            threadpool::parallel_map(&batches, threads, |_, (xs, ys)| step(xs, ys));
+        assert_eq!(serial, parallel, "divergence at {threads} threads");
+    }
 }
 
 #[test]

@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Tier-1 gate in one command (see ROADMAP.md):
+#
+#   ./verify.sh
+#
+# Runs the release build, the full test suite, and clippy with warnings
+# denied, from wherever the Cargo manifest lives relative to this repo.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+# The crate roots at the repo top level (rust/src via the manifest); fall
+# back to rust/ if a standalone manifest is ever introduced there. The
+# authoring container has no cargo toolchain — this gate is for the CI /
+# toolchain image that carries the manifest and the vendored xla crate.
+if [ -f Cargo.toml ]; then
+    :
+elif [ -f rust/Cargo.toml ]; then
+    cd rust
+else
+    echo "verify.sh: no Cargo.toml found at repo root or rust/" >&2
+    echo "verify.sh: run from the toolchain image (see ROADMAP.md tier-1)" >&2
+    exit 1
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+echo "== cargo test -q =="
+cargo test -q
+echo "== cargo clippy --all-targets -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+echo "== verify OK =="
