@@ -65,6 +65,7 @@ pub struct ChannelAllocateScheduler {
 }
 
 impl ChannelAllocateScheduler {
+    /// Scheduler with the default GA budget.
     pub fn new(seed: u64) -> Self {
         ChannelAllocateScheduler { ga: GaParams::default(), rng: Rng::seed_from(seed) }
     }
@@ -129,6 +130,7 @@ pub struct PrincipleScheduler {
 }
 
 impl PrincipleScheduler {
+    /// The paper-calibrated ramp (q ≈ 2 → 14 over 40 rounds).
     pub fn new() -> Self {
         // q climbs ~2 → ~14 over a 40-round run at D_i = D̄, so
         // large-dataset clients cross the C4 wall late in training —
@@ -188,6 +190,7 @@ pub struct SameSizeScheduler {
 }
 
 impl SameSizeScheduler {
+    /// Scheduler with the default GA budget and Taylor Case-5 mode.
     pub fn new(seed: u64) -> Self {
         SameSizeScheduler {
             ga: GaParams::default(),
@@ -285,6 +288,18 @@ pub fn make_scheduler_with_threads(
 pub const ALL_ALGORITHMS: [&str; 5] =
     ["qccf", "no-quant", "channel-allocate", "principle", "same-size"];
 
+/// Expand an algorithm-list spec: the keyword `all` →
+/// [`ALL_ALGORITHMS`], otherwise a comma-separated list of names
+/// (names are **not** validated here — scenario/sweep validation
+/// reports unknown ones with context).
+pub fn algorithm_list(spec: &str) -> Vec<String> {
+    if spec == "all" {
+        ALL_ALGORITHMS.iter().map(|s| s.to_string()).collect()
+    } else {
+        spec.split(',').map(|s| s.trim().to_string()).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,6 +311,13 @@ mod tests {
             assert!(make_scheduler(name, 1).is_some(), "{name}");
         }
         assert!(make_scheduler("bogus", 1).is_none());
+    }
+
+    #[test]
+    fn algorithm_list_expands_all_and_splits() {
+        assert_eq!(algorithm_list("all"), ALL_ALGORITHMS.to_vec());
+        assert_eq!(algorithm_list("qccf, same-size"), vec!["qccf", "same-size"]);
+        assert_eq!(algorithm_list("typo"), vec!["typo"]); // validated downstream
     }
 
     #[test]

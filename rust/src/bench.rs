@@ -13,16 +13,24 @@ use std::time::{Duration, Instant};
 
 use crate::util::stats;
 
+/// One benchmark's timing summary.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// `group/name` identifier.
     pub name: String,
+    /// Iterations measured.
     pub iters: u64,
+    /// Mean per-iteration wall time (ns).
     pub mean_ns: f64,
+    /// Median per-iteration wall time (ns).
     pub p50_ns: f64,
+    /// 95th-percentile per-iteration wall time (ns).
     pub p95_ns: f64,
+    /// Fastest iteration (ns).
     pub min_ns: f64,
 }
 
+/// A named group of benchmarks sharing warmup/measure budgets.
 pub struct BenchSet {
     group: String,
     warmup: Duration,
@@ -43,6 +51,7 @@ fn fmt_ns(ns: f64) -> String {
 }
 
 impl BenchSet {
+    /// New group; budgets come from `QCCF_BENCH_*_MS` or defaults.
     pub fn new(group: &str) -> BenchSet {
         // Defaults keep `cargo bench` wall time sane on 1 core; override
         // with QCCF_BENCH_MEASURE_MS / QCCF_BENCH_WARMUP_MS.

@@ -10,12 +10,22 @@ pub struct SystemParams {
     // ----- topology (§VI) -----
     /// U — number of clients (paper: 10).
     pub num_clients: usize,
-    /// C — OFDMA channels (paper doesn't state; we default to U so full
-    /// participation is possible, which the aggregation eq. (2) assumes
-    /// in the no-quantization baseline).
+    /// C — OFDMA channels (paper doesn't state; the Table-I constructors
+    /// set C = U so full participation is possible, which the
+    /// aggregation eq. (2) assumes in the no-quantization baseline).
+    /// Scenario files must set this **explicitly** (see
+    /// `docs/SCENARIOS.md`); [`SystemParams::validate`] rejects C = 0
+    /// and C > U.
     pub num_channels: usize,
     /// Cell radius in meters (paper: 500 m circular area).
     pub cell_radius_m: f64,
+    /// Number of access points serving the area. `1` is the paper's
+    /// single-cell layout (distance measured from the cell center);
+    /// values > 1 enable the *cell-free lite* layout of the scenario
+    /// subsystem — APs are placed uniformly in the disk and each
+    /// client's pathloss is taken to its **nearest** AP (cf. the
+    /// cell-free adaptive-quantization setting of arXiv:2412.20785).
+    pub num_aps: usize,
 
     // ----- communication (Table I) -----
     /// B — per-channel bandwidth in Hz (1 MHz).
@@ -33,20 +43,43 @@ pub struct SystemParams {
     /// h^Gain in dB — device/antenna gain "and other settings". The
     /// calibration knob (see module docs).
     pub gain_db: f64,
+    /// Fraction of clients in a *deep-fade* class: a heavy extra
+    /// large-scale attenuation (shadowed basements, body blockage) on
+    /// top of pathloss. `0.0` — the default — reproduces the paper's
+    /// homogeneous channel statistics. Class membership is
+    /// deterministic (see [`SystemParams::in_deep_fade`]).
+    pub deep_fade_frac: f64,
+    /// Extra attenuation (dB) applied to the deep-fade class.
+    pub deep_fade_db: f64,
 
     // ----- computation (Table I) -----
     /// α — energy coefficient (1e−26).
     pub alpha: f64,
     /// γ — CPU cycles per sample (1000 FEMNIST / 2000 CIFAR-10).
     pub gamma: f64,
-    /// f^min, f^max — CPU frequency range in Hz (2e8 .. 1e9).
+    /// f^min — lower end of the CPU DVFS range in Hz (2e8).
     pub f_min: f64,
+    /// f^max — upper end of the CPU DVFS range in Hz (1e9).
     pub f_max: f64,
     /// τ — local updates per round (6); τ^e — local epochs (2).
     pub tau: usize,
+    /// τ^e — local epochs per round (2).
     pub tau_e: usize,
     /// T^max — per-round latency budget in seconds (0.02 FEMNIST).
     pub t_max: f64,
+    /// Fraction of clients in a *CPU-straggler* class: devices whose
+    /// **realized** frequency is the decided `f` scaled by
+    /// [`SystemParams::straggler_slowdown`] (thermal throttling,
+    /// background load). Decisions stay oblivious — as with real
+    /// stragglers, the scheduler plans at nominal capability and the
+    /// realized latency/energy pay the difference (cf. the
+    /// heterogeneous-device setting of arXiv:2012.11070). `0.0`
+    /// disables the class. Membership is deterministic (see
+    /// [`SystemParams::cpu_scale`]).
+    pub straggler_frac: f64,
+    /// Realized-frequency multiplier for the straggler class, in
+    /// (0, 1]. `1.0` (the default) is a no-op.
+    pub straggler_slowdown: f64,
 
     // ----- model -----
     /// Z — model dimension count (profile-dependent; Table I lists
@@ -86,6 +119,7 @@ impl SystemParams {
             num_clients: 10,
             num_channels: 10,
             cell_radius_m: 500.0,
+            num_aps: 1,
             bandwidth_hz: 1e6,
             tx_power_w: 0.2,
             noise_psd_w_hz: dbm_per_hz_to_w_per_hz(-174.0),
@@ -93,6 +127,8 @@ impl SystemParams {
             rician_zeta: 1.0,
             carrier_ghz: 2.4,
             gain_db: 10.0,
+            deep_fade_frac: 0.0,
+            deep_fade_db: 0.0,
             alpha: 1e-26,
             gamma: 1000.0,
             f_min: 2e8,
@@ -100,6 +136,8 @@ impl SystemParams {
             tau: 6,
             tau_e: 2,
             t_max: 0.02,
+            straggler_frac: 0.0,
+            straggler_slowdown: 1.0,
             z: 20_522,
             eta: 0.05,
             lips: 1.0,
@@ -148,6 +186,44 @@ impl SystemParams {
         p
     }
 
+    /// Size of a deterministic client class covering fraction `frac` of
+    /// the federation: `ceil(frac · U)` clients, so any positive
+    /// fraction yields a non-empty class (a `round()` here would let a
+    /// small `frac` silently produce a fully homogeneous run). Client
+    /// placement and data are drawn per seed, so a fixed id range is an
+    /// arbitrary — but reproducible and documentation-friendly —
+    /// subset.
+    fn class_count(&self, frac: f64) -> usize {
+        if frac <= 0.0 {
+            return 0;
+        }
+        ((frac * self.num_clients as f64).ceil() as usize).min(self.num_clients)
+    }
+
+    /// Whether `client` belongs to the deep-fade class: the **first**
+    /// `ceil(deep_fade_frac · U)` client ids (see
+    /// [`SystemParams::deep_fade_frac`]).
+    pub fn in_deep_fade(&self, client: usize) -> bool {
+        client < self.class_count(self.deep_fade_frac)
+    }
+
+    /// Realized-frequency multiplier of `client`:
+    /// [`SystemParams::straggler_slowdown`] for the straggler class,
+    /// `1.0` otherwise. The class is the **last**
+    /// `ceil(straggler_frac · U)` client ids — the opposite end of the
+    /// id range from the deep-fade class, so enabling both knobs keeps
+    /// the two heterogeneity axes disjoint (until the fractions sum
+    /// past 1) instead of silently confounding them on the same
+    /// clients.
+    pub fn cpu_scale(&self, client: usize) -> f64 {
+        let k = self.class_count(self.straggler_frac);
+        if client >= self.num_clients.saturating_sub(k) && client < self.num_clients {
+            self.straggler_slowdown
+        } else {
+            1.0
+        }
+    }
+
     /// Nominal CPU frequency used by wireless-oblivious baselines that
     /// perform no frequency control (§VI: the Principle and
     /// No-Quantization baselines have no f design; a device default in
@@ -189,6 +265,35 @@ impl SystemParams {
         }
         if self.num_channels == 0 || self.num_clients == 0 {
             errs.push("need at least one client and one channel".into());
+        }
+        if self.num_channels > self.num_clients {
+            errs.push(format!(
+                "C = {} channels exceeds U = {} clients (idle channels are \
+                 unreachable by C1–C3; set C <= U explicitly)",
+                self.num_channels, self.num_clients
+            ));
+        }
+        if self.num_aps == 0 {
+            errs.push("need at least one access point".into());
+        }
+        if !(0.0..=1.0).contains(&self.deep_fade_frac) {
+            errs.push(format!("deep_fade_frac = {} outside [0, 1]", self.deep_fade_frac));
+        }
+        if self.deep_fade_db < 0.0 {
+            errs.push(format!(
+                "deep_fade_db = {} must be non-negative (the class is an *attenuation*; \
+                 a negative value would silently amplify it)",
+                self.deep_fade_db
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.straggler_frac) {
+            errs.push(format!("straggler_frac = {} outside [0, 1]", self.straggler_frac));
+        }
+        if !(self.straggler_slowdown > 0.0 && self.straggler_slowdown <= 1.0) {
+            errs.push(format!(
+                "straggler_slowdown = {} outside (0, 1]",
+                self.straggler_slowdown
+            ));
         }
         if self.t_max <= 0.0 {
             errs.push("T^max must be positive".into());
@@ -299,6 +404,65 @@ mod tests {
         let mut p = SystemParams::femnist_small();
         p.eta = 0.2;
         p.lips = 2.0;
+        assert!(!p.validate().is_empty());
+    }
+
+    #[test]
+    fn validate_catches_channel_count_misuse() {
+        let mut p = SystemParams::femnist_small();
+        p.num_channels = 0;
+        assert!(p.validate().iter().any(|e| e.contains("at least one")));
+        p.num_channels = p.num_clients + 1;
+        assert!(p.validate().iter().any(|e| e.contains("exceeds U")), "{:?}", p.validate());
+        p.num_channels = p.num_clients;
+        assert!(p.validate().is_empty());
+    }
+
+    #[test]
+    fn heterogeneity_classes_deterministic_and_disjoint() {
+        let mut p = SystemParams::femnist_small();
+        // Defaults: nobody faded, nobody throttled.
+        assert!((0..10).all(|i| !p.in_deep_fade(i)));
+        assert!((0..10).all(|i| p.cpu_scale(i) == 1.0));
+        p.deep_fade_frac = 0.3;
+        p.deep_fade_db = 18.0;
+        p.straggler_frac = 0.2;
+        p.straggler_slowdown = 0.5;
+        assert!(p.validate().is_empty());
+        assert_eq!((0..10).filter(|&i| p.in_deep_fade(i)).count(), 3);
+        assert_eq!((0..10).filter(|&i| p.cpu_scale(i) < 1.0).count(), 2);
+        // Fade is an id-prefix, stragglers an id-suffix — the two axes
+        // stay disjoint instead of confounding on the same clients.
+        assert!(p.in_deep_fade(0) && !p.in_deep_fade(3));
+        assert_eq!(p.cpu_scale(8), 0.5);
+        assert_eq!(p.cpu_scale(9), 0.5);
+        assert_eq!(p.cpu_scale(0), 1.0);
+        assert!((0..10).all(|i| !(p.in_deep_fade(i) && p.cpu_scale(i) < 1.0)));
+    }
+
+    #[test]
+    fn small_positive_fractions_still_populate_classes() {
+        // ceil semantics: any frac > 0 yields at least one member — a
+        // round() here made straggler_frac = 0.04 silently homogeneous.
+        let mut p = SystemParams::femnist_small();
+        p.straggler_frac = 0.04;
+        p.straggler_slowdown = 0.5;
+        p.deep_fade_frac = 0.04;
+        p.deep_fade_db = 10.0;
+        assert_eq!((0..10).filter(|&i| p.cpu_scale(i) < 1.0).count(), 1);
+        assert_eq!((0..10).filter(|&i| p.in_deep_fade(i)).count(), 1);
+        // frac = 1.0 covers everyone.
+        p.straggler_frac = 1.0;
+        assert!((0..10).all(|i| p.cpu_scale(i) < 1.0));
+    }
+
+    #[test]
+    fn validate_catches_bad_class_knobs() {
+        let mut p = SystemParams::femnist_small();
+        p.straggler_slowdown = 0.0;
+        assert!(!p.validate().is_empty());
+        let mut p = SystemParams::femnist_small();
+        p.deep_fade_frac = 1.5;
         assert!(!p.validate().is_empty());
     }
 

@@ -113,10 +113,12 @@ impl GradStats {
         }
     }
 
+    /// Current Ĝ² estimate.
     pub fn g2(&self) -> f64 {
         self.g * self.g
     }
 
+    /// Current σ̂² estimate.
     pub fn sigma2(&self) -> f64 {
         self.sigma * self.sigma
     }

@@ -23,21 +23,55 @@ pub struct ClientData {
 /// The federation: U client datasets + a balanced test set.
 #[derive(Clone, Debug)]
 pub struct Federation {
+    /// (H, W, C) image dimensions.
     pub image_dims: (usize, usize, usize),
+    /// Number of label classes.
     pub num_classes: usize,
+    /// The U client datasets.
     pub clients: Vec<ClientData>,
+    /// Balanced held-out test set.
     pub test: ClientData,
+}
+
+/// How per-client dataset sizes `D_i` are drawn (the paper studies the
+/// Gaussian case; the scenario subsystem adds the heavier-tailed shapes
+/// that related work sweeps — see `docs/SCENARIOS.md`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SizeDist {
+    /// `D_i ~ N(µ, β)` using [`DataGenConfig::size_mean`] /
+    /// [`DataGenConfig::size_std`] — the paper's §VI setting.
+    Gaussian,
+    /// `D_i ~ U[lo, hi)` — bounded heterogeneity.
+    Uniform {
+        /// Lower bound (samples).
+        lo: f64,
+        /// Upper bound (samples).
+        hi: f64,
+    },
+    /// Zipf by client rank: `D_i ∝ (i+1)^{-s}`, scaled so the mean over
+    /// the federation equals [`DataGenConfig::size_mean`]. Deterministic
+    /// given the client index — no RNG draw is consumed — which makes
+    /// the skew identical across seeds (only placement/labels vary).
+    Zipf {
+        /// Skew exponent `s` (> 0; larger = heavier head).
+        exponent: f64,
+    },
 }
 
 /// Generation parameters.
 #[derive(Clone, Debug)]
 pub struct DataGenConfig {
+    /// U — number of clients to generate.
     pub num_clients: usize,
+    /// (H, W, C) image dimensions (from the artifact profile).
     pub image_dims: (usize, usize, usize),
+    /// Number of label classes.
     pub num_classes: usize,
+    /// How `D_i` is distributed across clients.
+    pub size_dist: SizeDist,
     /// µ — mean dataset size (paper: 1200).
     pub size_mean: f64,
-    /// β — dataset size std (paper: 150 / 300).
+    /// β — dataset size std (paper: 150 / 300; Gaussian only).
     pub size_std: f64,
     /// Dirichlet concentration for label skew (smaller = more skewed).
     pub dirichlet_alpha: f64,
@@ -50,11 +84,14 @@ pub struct DataGenConfig {
 }
 
 impl DataGenConfig {
+    /// Defaults matching the paper's §VI setting (Gaussian sizes,
+    /// µ = 1200, β = 150, Dirichlet(0.5) label skew).
     pub fn new(num_clients: usize, image_dims: (usize, usize, usize), num_classes: usize) -> Self {
         DataGenConfig {
             num_clients,
             image_dims,
             num_classes,
+            size_dist: SizeDist::Gaussian,
             size_mean: 1200.0,
             size_std: 150.0,
             dirichlet_alpha: 0.5,
@@ -112,14 +149,28 @@ pub fn generate(cfg: &DataGenConfig, seed: u64) -> Federation {
         }
     };
 
+    let zipf_norm = match cfg.size_dist {
+        SizeDist::Zipf { exponent } => {
+            (1..=cfg.num_clients).map(|k| (k as f64).powf(-exponent)).sum::<f64>()
+        }
+        _ => f64::NAN,
+    };
     let mut clients = Vec::with_capacity(cfg.num_clients);
     for ci in 0..cfg.num_clients {
         let mut crng = rng.fork(ci as u64 + 1);
-        // D_i ~ N(µ, β), floored.
-        let size = crng
-            .gaussian(cfg.size_mean, cfg.size_std)
-            .round()
-            .max(cfg.min_size as f64) as usize;
+        // D_i per the configured distribution, floored at min_size. The
+        // Gaussian arm consumes exactly the draws the pre-scenario code
+        // did, so Gaussian federations are bit-identical across versions.
+        let size = match cfg.size_dist {
+            SizeDist::Gaussian => crng.gaussian(cfg.size_mean, cfg.size_std),
+            SizeDist::Uniform { lo, hi } => crng.range(lo, hi),
+            SizeDist::Zipf { exponent } => {
+                cfg.size_mean * cfg.num_clients as f64
+                    * ((ci + 1) as f64).powf(-exponent)
+                    / zipf_norm
+            }
+        };
+        let size = size.round().max(cfg.min_size as f64) as usize;
         // Label-skew mixture for this client.
         let mix = dirichlet(&mut crng, cfg.dirichlet_alpha, cfg.num_classes);
         let mut images = Vec::with_capacity(size * pix);
@@ -187,10 +238,12 @@ impl ClientData {
 }
 
 impl Federation {
+    /// Per-client dataset sizes D_i.
     pub fn sizes(&self) -> Vec<f64> {
         self.clients.iter().map(|c| c.size as f64).collect()
     }
 
+    /// Floats per image (H·W·C).
     pub fn pix(&self) -> usize {
         let (h, w, c) = self.image_dims;
         h * w * c
@@ -231,6 +284,47 @@ mod tests {
         let std = (sizes.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / sizes.len() as f64).sqrt();
         assert!((mean - 300.0).abs() < 20.0, "mean={mean}");
         assert!((std - 60.0).abs() < 15.0, "std={std}");
+    }
+
+    #[test]
+    fn zipf_sizes_skewed_and_mean_preserving() {
+        let mut c = cfg();
+        c.num_clients = 50;
+        c.size_mean = 400.0;
+        c.min_size = 1;
+        c.size_dist = SizeDist::Zipf { exponent: 1.1 };
+        let fed = generate(&c, 1);
+        let sizes = fed.sizes();
+        // Monotone non-increasing by rank, heavy head.
+        for w in sizes.windows(2) {
+            assert!(w[0] >= w[1], "{sizes:?}");
+        }
+        assert!(sizes[0] > 4.0 * sizes[sizes.len() - 1], "not skewed: {sizes:?}");
+        // Mean preserved up to rounding.
+        let mean = sizes.iter().sum::<f64>() / sizes.len() as f64;
+        assert!((mean - 400.0).abs() < 5.0, "mean={mean}");
+    }
+
+    #[test]
+    fn uniform_sizes_within_bounds() {
+        let mut c = cfg();
+        c.num_clients = 100;
+        c.min_size = 1;
+        c.size_dist = SizeDist::Uniform { lo: 100.0, hi: 200.0 };
+        let fed = generate(&c, 2);
+        assert!(fed.sizes().iter().all(|&d| (100.0..=200.0).contains(&d)), "{:?}", fed.sizes());
+    }
+
+    #[test]
+    fn gaussian_dist_matches_legacy_default() {
+        // SizeDist::Gaussian must reproduce the pre-scenario generator
+        // exactly (same RNG consumption) — the fig-regression anchor.
+        let a = generate(&cfg(), 7);
+        let mut c2 = cfg();
+        c2.size_dist = SizeDist::Gaussian;
+        let b = generate(&c2, 7);
+        assert_eq!(a.sizes(), b.sizes());
+        assert_eq!(a.clients[3].images, b.clients[3].images);
     }
 
     #[test]

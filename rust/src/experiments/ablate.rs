@@ -18,10 +18,13 @@ use crate::util::stats;
 use crate::util::table;
 use crate::wireless::ChannelModel;
 
+/// One GA-budget ablation row.
 pub struct GaBudgetRow {
+    /// Budget label (population × generations).
     pub label: String,
     /// Mean relative J0 improvement over greedy (percent).
     pub mean_gain_pct: f64,
+    /// 95th-percentile relative J0 improvement (percent).
     pub p95_gain_pct: f64,
     /// Mean fitness evaluations per decision.
     pub mean_evals: f64,
@@ -117,10 +120,15 @@ pub fn ga_budget(draws: usize, seed: u64) -> Vec<GaBudgetRow> {
     rows
 }
 
+/// Aggregate Taylor-vs-bisect comparison over sampled Case-5 regimes.
 pub struct Case5Row {
+    /// Case-5 regimes sampled.
     pub regimes: usize,
+    /// Regimes where both solvers found a feasible q.
     pub both_feasible: usize,
+    /// Regimes where both picked the same integer level.
     pub same_q: usize,
+    /// Largest |q_taylor − q_bisect| observed.
     pub max_q_gap: u32,
     /// Mean relative J3 regret of Taylor vs bisect (percent).
     pub mean_regret_pct: f64,
@@ -172,6 +180,7 @@ pub fn case5_modes(draws: usize, seed: u64) -> Case5Row {
     row
 }
 
+/// Print ablation A (GA budget vs greedy).
 pub fn print_ga(rows: &[GaBudgetRow]) {
     let body: Vec<Vec<String>> = rows
         .iter()
@@ -191,6 +200,7 @@ pub fn print_ga(rows: &[GaBudgetRow]) {
     );
 }
 
+/// Print ablation B (Case-5 solver modes).
 pub fn print_case5(r: &Case5Row) {
     println!("Ablation B — Case-5: paper Taylor step (eq. 39) vs exact bisection");
     let body = vec![vec![

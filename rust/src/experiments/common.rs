@@ -1,14 +1,18 @@
-//! Shared experiment runner: profile → SystemParams mapping, federation
-//! generation, server construction, trace capture.
+//! Shared experiment runner. Since the scenario subsystem landed this
+//! is a thin layer: [`RunSpec`] is a *preset* over the paper scenarios
+//! ([`RunSpec::to_scenario`]), and every run — figure harness, `train`
+//! subcommand, sweep — goes through [`run_scenario`], the one function
+//! that turns a [`Scenario`] + (algorithm, seed) into a [`Trace`].
 
 use anyhow::Result;
 
 use crate::baselines::make_scheduler_with_threads;
 use crate::config::SystemParams;
-use crate::data::{self, DataGenConfig};
+use crate::data;
 use crate::fl::Server;
 use crate::metrics::Trace;
 use crate::runtime::Runtime;
+use crate::scenario::{registry, Scenario};
 
 /// Which Table-I column drives the wireless/compute constants.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -19,11 +23,17 @@ pub enum Task {
     Cifar,
 }
 
-/// One experiment run.
+/// One experiment run, as the fig harnesses and the `train` subcommand
+/// parameterize it. This is sugar: [`RunSpec::to_scenario`] maps it
+/// onto the corresponding paper scenario and [`run_one`] executes that
+/// scenario — there is no second run path.
 #[derive(Clone, Debug)]
 pub struct RunSpec {
+    /// Scheduling algorithm (see `baselines`).
     pub algorithm: String,
+    /// Which Table-I column (selects the paper scenario).
     pub task: Task,
+    /// Communication rounds.
     pub rounds: usize,
     /// Lyapunov penalty weight V (None = task default).
     pub v: Option<f64>,
@@ -31,7 +41,9 @@ pub struct RunSpec {
     pub beta: f64,
     /// µ — dataset-size mean.
     pub mu: f64,
+    /// Master seed.
     pub seed: u64,
+    /// Evaluate every k rounds (0 = never).
     pub eval_every: usize,
     /// Worker threads for the round engine and GA fitness fan-out
     /// (`1` = legacy serial path; results are identical either way).
@@ -39,6 +51,7 @@ pub struct RunSpec {
 }
 
 impl RunSpec {
+    /// Paper defaults (40 rounds, µ = 1200, β = 150, eval every 2).
     pub fn new(algorithm: &str, task: Task) -> RunSpec {
         RunSpec {
             algorithm: algorithm.to_string(),
@@ -52,48 +65,72 @@ impl RunSpec {
             threads: crate::util::threadpool::default_threads(),
         }
     }
+
+    /// The scenario this spec denotes: the task's paper scenario with
+    /// the spec's µ/β/V/rounds/eval cadence applied and the algorithm
+    /// list narrowed to this run's algorithm.
+    pub fn to_scenario(&self) -> Scenario {
+        let mut sc = match self.task {
+            Task::Femnist => registry::paper_femnist(),
+            Task::Cifar => registry::paper_cifar10(),
+        };
+        sc.data.size_mean = self.mu;
+        sc.data.size_std = self.beta;
+        sc.train.v = self.v;
+        sc.train.rounds = self.rounds;
+        sc.train.eval_every = self.eval_every;
+        sc.train.algorithms = vec![self.algorithm.clone()];
+        sc
+    }
 }
 
 /// Table-I parameters for `task`, adapted to the loaded profile's Z
 /// (T^max scales with Z per the calibration note in `config`).
+///
+/// Equivalent to `spec.to_scenario().params_for_runtime(rt)` for a
+/// default spec — kept public because examples/tests build servers
+/// directly from it.
 pub fn params_for(rt: &Runtime, task: Task, mu: f64) -> SystemParams {
-    let mut p = match task {
-        Task::Femnist => SystemParams::femnist_small(),
-        Task::Cifar => SystemParams::cifar_small(),
+    let mut sc = match task {
+        Task::Femnist => Scenario::defaults("params-for", Task::Femnist),
+        Task::Cifar => Scenario::defaults("params-for", Task::Cifar),
     };
-    let z_ref = p.z;
-    p.z = rt.info.z;
-    p.t_max *= rt.info.z as f64 / z_ref as f64;
-    // Keep computation inside the scaled budget: T^max must leave head
-    // room for τ^e γ µ / f^max (matters for the tiny test profile).
-    let t_cmp_min = p.tau_e as f64 * p.gamma * mu / p.f_max;
-    if p.t_max < 2.0 * t_cmp_min {
-        p.t_max = 2.0 * t_cmp_min;
-    }
-    p.eta = rt.info.lr;
-    p
+    sc.data.size_mean = mu;
+    sc.params_for_runtime(rt)
 }
 
-/// Run one (algorithm, task, β, V, seed) experiment on a loaded runtime.
-pub fn run_one(rt: &Runtime, spec: &RunSpec) -> Result<Trace> {
-    let mut params = params_for(rt, spec.task, spec.mu);
-    if let Some(v) = spec.v {
-        params.v = v;
-    }
-    let mut dcfg = DataGenConfig::new(params.num_clients, rt.info.image, rt.info.classes);
-    dcfg.size_mean = spec.mu;
-    dcfg.size_std = spec.beta;
-    let fed = data::generate(&dcfg, spec.seed);
+/// Run `algorithm` under `scenario` with `seed` on a loaded runtime —
+/// the single execution path behind figures, `train`, and `sweep`.
+/// `threads` is an engine knob, not part of the scenario: any value
+/// (including 1) produces a bit-identical trace (PR-1 contract).
+pub fn run_scenario(
+    rt: &Runtime,
+    scenario: &Scenario,
+    algorithm: &str,
+    seed: u64,
+    threads: usize,
+) -> Result<Trace> {
+    let errs = scenario.validate();
+    anyhow::ensure!(errs.is_empty(), "scenario `{}` invalid: {}", scenario.name, errs.join("; "));
+    let params = scenario.params_for_runtime(rt);
+    let dcfg = scenario.datagen(rt);
+    let fed = data::generate(&dcfg, seed);
     let sched = make_scheduler_with_threads(
-        &spec.algorithm,
-        spec.seed.wrapping_mul(31).wrapping_add(7),
-        spec.threads,
+        algorithm,
+        seed.wrapping_mul(31).wrapping_add(7),
+        threads,
     )
-    .ok_or_else(|| anyhow::anyhow!("unknown algorithm `{}`", spec.algorithm))?;
-    let mut server = Server::new(params, rt, fed, sched, spec.seed)?;
-    server.eval_every = spec.eval_every;
-    server.threads = spec.threads;
-    server.run(spec.rounds)
+    .ok_or_else(|| anyhow::anyhow!("unknown algorithm `{algorithm}`"))?;
+    let mut server = Server::new(params, rt, fed, sched, seed)?;
+    server.eval_every = scenario.train.eval_every;
+    server.threads = threads;
+    server.run(scenario.train.rounds)
+}
+
+/// Run one (algorithm, task, β, V, seed) experiment on a loaded runtime
+/// — [`run_scenario`] over [`RunSpec::to_scenario`].
+pub fn run_one(rt: &Runtime, spec: &RunSpec) -> Result<Trace> {
+    run_scenario(rt, &spec.to_scenario(), &spec.algorithm, spec.seed, spec.threads)
 }
 
 /// Results directory (`$QCCF_RESULTS` or `./results`).

@@ -1,6 +1,10 @@
 //! Fig. 2 — trade-off between energy consumption and FL performance:
 //! sweep the Lyapunov penalty weight V and report final accuracy and
 //! accumulated energy of QCCF (paper: both descend as V grows).
+//!
+//! A thin preset over the `paper-femnist`/`paper-cifar10` scenarios:
+//! each grid point is a [`RunSpec`] routed through
+//! [`super::common::run_scenario`].
 
 use anyhow::Result;
 
@@ -9,14 +13,20 @@ use crate::runtime::Runtime;
 use crate::util::csv::CsvWriter;
 use crate::util::table;
 
+/// One V grid point's outcome.
 #[derive(Clone, Debug)]
 pub struct Fig2Row {
+    /// The Lyapunov weight V of this run.
     pub v: f64,
+    /// Last observed test accuracy.
     pub final_acc: f64,
+    /// Best test accuracy over the run.
     pub best_acc: f64,
+    /// Accumulated energy (J).
     pub cum_energy: f64,
 }
 
+/// Run QCCF once per V value; each run's full trace also lands in CSV.
 pub fn run(rt: &Runtime, task: Task, v_values: &[f64], rounds: usize, seed: u64) -> Result<Vec<Fig2Row>> {
     let mut rows = Vec::new();
     for &v in v_values {
@@ -37,6 +47,7 @@ pub fn run(rt: &Runtime, task: Task, v_values: &[f64], rounds: usize, seed: u64)
     Ok(rows)
 }
 
+/// Print the V grid as a table.
 pub fn print(rows: &[Fig2Row]) {
     let body: Vec<Vec<String>> = rows
         .iter()
@@ -53,6 +64,7 @@ pub fn print(rows: &[Fig2Row]) {
     println!("{}", table::render(&["V", "final acc", "best acc", "energy (J)"], &body));
 }
 
+/// Write the grid summary CSV into the results directory.
 pub fn write_summary(rows: &[Fig2Row], task: Task) -> Result<()> {
     let path = results_dir().join(format!("fig2_{task:?}_summary.csv"));
     let mut w = CsvWriter::create(&path, &["v", "final_acc", "best_acc", "cum_energy_j"])?;

@@ -13,17 +13,26 @@ use crate::runtime::Runtime;
 use crate::util::csv::CsvWriter;
 use crate::util::table;
 
+/// One (algorithm, β) grid cell's outcome.
 #[derive(Clone, Debug)]
 pub struct AlgRow {
+    /// Scheduling algorithm.
     pub algorithm: String,
+    /// β — dataset-size std of the run.
     pub beta: f64,
+    /// Last observed test accuracy.
     pub final_acc: f64,
+    /// Best test accuracy over the run.
     pub best_acc: f64,
+    /// Accumulated energy (J).
     pub cum_energy: f64,
+    /// Total dropouts (scheduled − aggregated).
     pub dropouts: usize,
+    /// Rounds until accuracy first reached 0.5 (convergence speed).
     pub rounds_to_half: Option<usize>,
 }
 
+/// Reduce a trace to its grid-cell row.
 pub fn summarize(trace: &Trace, beta: f64) -> AlgRow {
     AlgRow {
         algorithm: trace.algorithm.clone(),
@@ -36,6 +45,8 @@ pub fn summarize(trace: &Trace, beta: f64) -> AlgRow {
     }
 }
 
+/// Run every algorithm × β cell (a preset over the task's paper
+/// scenario); each cell's full trace also lands in CSV under `tag`.
 pub fn run_grid(
     rt: &Runtime,
     task: Task,
@@ -67,6 +78,7 @@ pub fn run_grid(
     Ok(rows)
 }
 
+/// Print the grid plus the paper's headline energy-savings comparison.
 pub fn print(rows: &[AlgRow], title: &str) {
     let body: Vec<Vec<String>> = rows
         .iter()
@@ -111,6 +123,7 @@ pub fn print(rows: &[AlgRow], title: &str) {
     }
 }
 
+/// Write the grid summary CSV into the results directory.
 pub fn write_summary(rows: &[AlgRow], tag: &str) -> Result<()> {
     let path = results_dir().join(format!("{tag}_summary.csv"));
     let mut w = CsvWriter::create(

@@ -9,14 +9,17 @@ use super::common::Task;
 use super::fig3::{self, AlgRow};
 use crate::runtime::Runtime;
 
+/// The fig3 grid under the CIFAR column (the `paper-cifar10` preset).
 pub fn run_grid(rt: &Runtime, betas: &[f64], rounds: usize, seed: u64) -> Result<Vec<AlgRow>> {
     fig3::run_grid(rt, Task::Cifar, betas, rounds, seed, "fig4")
 }
 
+/// Print the grid (fig3 layout, CIFAR title).
 pub fn print(rows: &[AlgRow]) {
     fig3::print(rows, "Fig. 4 — CIFAR-sim: accuracy & accumulated energy (5 algorithms)");
 }
 
+/// Write the grid summary CSV into the results directory.
 pub fn write_summary(rows: &[AlgRow]) -> Result<()> {
     fig3::write_summary(rows, "fig4")
 }

@@ -18,8 +18,10 @@ use crate::util::table;
 /// Quantizing algorithms shown in Fig. 5 (no-quant has no q).
 pub const QUANTIZING: [&str; 4] = ["qccf", "channel-allocate", "principle", "same-size"];
 
+/// One algorithm's quantization-level series.
 #[derive(Clone, Debug)]
 pub struct Fig5Data {
+    /// Scheduling algorithm.
     pub algorithm: String,
     /// (round, mean q) series — Fig. 5(a).
     pub q_by_round: Vec<(usize, f64)>,
@@ -89,15 +91,10 @@ pub fn run(rt: &Runtime, rounds: usize, seeds: &[u64]) -> Result<Vec<Fig5Data>> 
                     None => traj_sum.push((round, q, 1)),
                 }
             }
-            // Recover the D_i of this run (same data seed ⇒ same sizes).
-            let mut dcfg = crate::data::DataGenConfig::new(
-                crate::config::SystemParams::femnist_small().num_clients,
-                rt.info.image,
-                rt.info.classes,
-            );
-            dcfg.size_mean = spec.mu;
-            dcfg.size_std = spec.beta;
-            let sizes = crate::data::generate(&dcfg, seed).sizes();
+            // Recover the D_i of this run (same data seed ⇒ same
+            // sizes) through the run's own scenario, so this stays in
+            // lock-step with whatever `run_one` generated.
+            let sizes = crate::data::generate(&spec.to_scenario().datagen(rt), seed).sizes();
             cloud.extend(per_client_mean_q(&trace, &sizes));
         }
         traj_sum.sort_by_key(|(r, _, _)| *r);
@@ -110,6 +107,7 @@ pub fn run(rt: &Runtime, rounds: usize, seeds: &[u64]) -> Result<Vec<Fig5Data>> 
     Ok(out)
 }
 
+/// Print the level trajectory and the Remark-2 correlation verdicts.
 pub fn print(data: &[Fig5Data]) {
     println!("Fig. 5(a) — mean quantization level vs communication round");
     let mut body = Vec::new();
@@ -146,6 +144,7 @@ pub fn print(data: &[Fig5Data]) {
     println!("{}", table::render(&["algorithm", "corr(q, D_i)", "verdict"], &body));
 }
 
+/// Write the (a)/(b) series CSVs into the results directory.
 pub fn write_csv(data: &[Fig5Data]) -> Result<()> {
     let dir = results_dir();
     let mut w = CsvWriter::create(dir.join("fig5a_q_by_round.csv"), &["algorithm", "round", "mean_q"])?;

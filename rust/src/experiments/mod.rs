@@ -1,11 +1,16 @@
 //! Experiment harness: regenerates every figure of the paper's §VI
 //! (see DESIGN.md §6 for the experiment index and EXPERIMENTS.md for
-//! recorded paper-vs-measured outcomes).
+//! recorded paper-vs-measured outcomes), plus the scenario sweep
+//! runner. Every harness funnels into [`common::run_scenario`] — the
+//! figures are *presets* over the paper scenarios of
+//! [`crate::scenario::registry`], not a separate code path.
 //!
 //! * [`fig2`] — V trade-off (accuracy & accumulated energy vs V);
 //! * [`fig3`] — FEMNIST-sim: accuracy + energy, 5 algorithms, β ∈ {150, 300};
 //! * [`fig4`] — CIFAR-sim: same grid under the CIFAR wireless column;
-//! * [`fig5`] — quantization-level dynamics (vs round, vs dataset size).
+//! * [`fig5`] — quantization-level dynamics (vs round, vs dataset size);
+//! * [`sweep`] — scenarios × seeds × algorithms, fanned out in
+//!   parallel, JSONL + CSV traces per run.
 
 pub mod ablate;
 pub mod common;
@@ -13,5 +18,6 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
+pub mod sweep;
 
-pub use common::{run_one, RunSpec, Task};
+pub use common::{run_one, run_scenario, RunSpec, Task};

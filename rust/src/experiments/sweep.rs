@@ -1,0 +1,385 @@
+//! Parallel **sweep runner**: cross-product scenarios × seeds ×
+//! algorithms, fan the independent runs out over the thread pool, and
+//! write structured traces (JSONL per run + one summary CSV) to an
+//! output directory.
+//!
+//! # Determinism
+//!
+//! Each unit runs with engine `threads = 1` and the sweep parallelizes
+//! *across* units; since a single run is bit-identical for any engine
+//! thread count (the PR-1 contract) and each unit owns its output file,
+//! the bytes under `--out` are identical for any sweep `--threads`
+//! value. Unit order — and with it `summary.csv` row order — is the
+//! deterministic (scenario, algorithm, seed) nesting of [`expand`].
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::metrics::Trace;
+use crate::runtime::Runtime;
+use crate::scenario::Scenario;
+use crate::util::csv::CsvWriter;
+use crate::util::json;
+use crate::util::table;
+use crate::util::threadpool;
+
+use super::common::run_scenario;
+
+/// What to sweep: the cross product of `scenarios × seeds ×` (each
+/// scenario's algorithm list, unless overridden).
+pub struct SweepConfig {
+    /// Scenarios to run (built-ins and/or file-loaded).
+    pub scenarios: Vec<Scenario>,
+    /// Master seeds; every (scenario, algorithm) pair runs once per
+    /// seed.
+    pub seeds: Vec<u64>,
+    /// When set, overrides every scenario's own algorithm list.
+    pub algorithms: Option<Vec<String>>,
+    /// When set, overrides every scenario's round count (the `--quick`
+    /// smoke path).
+    pub rounds: Option<usize>,
+    /// Output directory for the JSONL traces and `summary.csv`.
+    pub out_dir: PathBuf,
+    /// Sweep-level worker threads (how many *runs* execute at once).
+    pub threads: usize,
+}
+
+/// One completed run's summary row.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    /// Scenario name.
+    pub scenario: String,
+    /// Algorithm name.
+    pub algorithm: String,
+    /// Master seed of the run.
+    pub seed: u64,
+    /// Rounds executed.
+    pub rounds: usize,
+    /// Last observed test accuracy (NaN if evaluation was off).
+    pub final_acc: f64,
+    /// Best test accuracy (NaN if evaluation was off).
+    pub best_acc: f64,
+    /// Accumulated energy (J).
+    pub cum_energy: f64,
+    /// Total dropouts (scheduled − aggregated).
+    pub dropouts: usize,
+    /// Where the JSONL trace was written.
+    pub trace_path: PathBuf,
+}
+
+/// Expand the cross product into concrete (scenario, algorithm, seed)
+/// units, applying the config's rounds/algorithms overrides. The
+/// nesting order (scenarios, then algorithms, then seeds) is the
+/// deterministic unit order of the whole sweep.
+pub fn expand(cfg: &SweepConfig) -> Vec<(Scenario, String, u64)> {
+    let mut units = Vec::new();
+    for base in &cfg.scenarios {
+        let mut sc = base.clone();
+        if let Some(r) = cfg.rounds {
+            sc.train.rounds = r;
+        }
+        let algorithms =
+            cfg.algorithms.clone().unwrap_or_else(|| sc.train.algorithms.clone());
+        for alg in &algorithms {
+            for &seed in &cfg.seeds {
+                units.push((sc.clone(), alg.clone(), seed));
+            }
+        }
+    }
+    units
+}
+
+/// Everything wrong with a sweep config: per-scenario validation,
+/// duplicate names (trace paths derive from the name — a duplicate
+/// would have two parallel workers writing the same file), and the
+/// algorithm/round overrides (applied per unit in [`expand`], so they
+/// must be checked before any run starts, not after the valid units
+/// already executed). Empty = good.
+pub fn config_errors(cfg: &SweepConfig) -> Vec<String> {
+    let mut errs = Vec::new();
+    if cfg.scenarios.is_empty() {
+        errs.push("no scenarios selected".into());
+    }
+    if cfg.seeds.is_empty() {
+        errs.push("no seeds given".into());
+    }
+    // Every (scenario, algorithm, seed) unit owns one trace file, so
+    // any duplicated cross-product axis would race two workers on the
+    // same path — reject them all up front.
+    let mut seen_seeds = std::collections::BTreeSet::new();
+    for &seed in &cfg.seeds {
+        if !seen_seeds.insert(seed) {
+            errs.push(format!("--seeds: seed {seed} given twice"));
+        }
+        // Seeds are recorded as JSON numbers in the traces; past 2^53
+        // the f64 round-trip would silently record a different seed.
+        if seed >= (1u64 << 53) {
+            errs.push(format!(
+                "--seeds: seed {seed} exceeds 2^53 and would lose precision in the \
+                 JSONL trace metadata"
+            ));
+        }
+    }
+    if let Some(algorithms) = &cfg.algorithms {
+        if algorithms.is_empty() {
+            errs.push("--algorithms: empty override".into());
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for alg in algorithms {
+            if !seen.insert(alg.as_str()) {
+                errs.push(format!("--algorithms: `{alg}` given twice"));
+            }
+            if !crate::baselines::ALL_ALGORITHMS.contains(&alg.as_str()) {
+                errs.push(format!(
+                    "--algorithms: unknown algorithm `{alg}` (known: {})",
+                    crate::baselines::ALL_ALGORITHMS.join(", ")
+                ));
+            }
+        }
+    }
+    let mut seen_names = std::collections::BTreeSet::new();
+    for sc in &cfg.scenarios {
+        if !seen_names.insert(sc.name.as_str()) {
+            errs.push(format!(
+                "{}: selected twice (scenario names must be unique within a sweep)",
+                sc.name
+            ));
+        }
+        for e in sc.validate() {
+            errs.push(format!("{}: {e}", sc.name));
+        }
+    }
+    if cfg.rounds == Some(0) {
+        errs.push("--rounds: must be at least 1".into());
+    }
+    errs
+}
+
+/// Run the sweep. Fails fast on an invalid config — scenarios,
+/// duplicate names, and overrides are all checked via
+/// [`config_errors`] before any run starts; a failing *run* aborts the
+/// sweep with its unit named. Returns one row per unit in [`expand`]
+/// order.
+pub fn run(rt: &Runtime, cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
+    let all_errs = config_errors(cfg);
+    anyhow::ensure!(all_errs.is_empty(), "invalid sweep:\n  {}", all_errs.join("\n  "));
+
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let units = expand(cfg);
+    crate::info!(
+        "sweep",
+        "{} runs ({} scenarios x algorithms x {} seeds), {} worker thread(s), out {}",
+        units.len(),
+        cfg.scenarios.len(),
+        cfg.seeds.len(),
+        cfg.threads.max(1),
+        cfg.out_dir.display()
+    );
+    let results: Vec<Result<SweepRow>> =
+        threadpool::parallel_map(&units, cfg.threads.max(1), |_, (sc, alg, seed)| {
+            let trace = run_scenario(rt, sc, alg, *seed, 1)
+                .map_err(|e| anyhow::anyhow!("{}/{alg}/seed{seed}: {e:#}", sc.name))?;
+            let path = cfg.out_dir.join(format!("{}__{alg}__seed{seed}.jsonl", sc.name));
+            trace
+                .write_jsonl(
+                    &path,
+                    &[
+                        ("scenario", json::s(&sc.name)),
+                        ("algorithm", json::s(alg)),
+                        ("seed", json::num(*seed as f64)),
+                    ],
+                )
+                .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
+            Ok(summarize(&trace, sc, alg, *seed, path))
+        });
+    let rows: Vec<SweepRow> = results.into_iter().collect::<Result<_>>()?;
+    write_summary(&rows, &cfg.out_dir)?;
+    Ok(rows)
+}
+
+fn summarize(trace: &Trace, sc: &Scenario, alg: &str, seed: u64, path: PathBuf) -> SweepRow {
+    SweepRow {
+        scenario: sc.name.clone(),
+        algorithm: alg.to_string(),
+        seed,
+        rounds: trace.records.len(),
+        final_acc: trace.final_accuracy().unwrap_or(f64::NAN),
+        best_acc: trace.best_accuracy().unwrap_or(f64::NAN),
+        cum_energy: trace.total_energy(),
+        dropouts: trace.total_dropouts(),
+        trace_path: path,
+    }
+}
+
+/// Write `summary.csv` (one row per run, unit order) into `out_dir`.
+pub fn write_summary(rows: &[SweepRow], out_dir: &std::path::Path) -> Result<()> {
+    let path = out_dir.join("summary.csv");
+    let mut w = CsvWriter::create(
+        &path,
+        &[
+            "scenario",
+            "algorithm",
+            "seed",
+            "rounds",
+            "final_acc",
+            "best_acc",
+            "cum_energy_j",
+            "dropouts",
+            "trace_file",
+        ],
+    )?;
+    for r in rows {
+        w.row(&[
+            r.scenario.clone(),
+            r.algorithm.clone(),
+            r.seed.to_string(),
+            r.rounds.to_string(),
+            format!("{:.6}", r.final_acc),
+            format!("{:.6}", r.best_acc),
+            format!("{:.9}", r.cum_energy),
+            r.dropouts.to_string(),
+            r.trace_path
+                .file_name()
+                .map(|f| f.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        ])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Print the run summaries as a table.
+pub fn print(rows: &[SweepRow]) {
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.scenario.clone(),
+                r.algorithm.clone(),
+                r.seed.to_string(),
+                r.rounds.to_string(),
+                format!("{:.4}", r.final_acc),
+                format!("{:.4}", r.best_acc),
+                table::fnum(r.cum_energy),
+                r.dropouts.to_string(),
+            ]
+        })
+        .collect();
+    println!("sweep — one row per (scenario, algorithm, seed) run");
+    println!(
+        "{}",
+        table::render(
+            &["scenario", "algorithm", "seed", "rounds", "final acc", "best acc", "energy (J)", "dropouts"],
+            &body
+        )
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::registry;
+
+    fn cfg(scenarios: Vec<Scenario>) -> SweepConfig {
+        SweepConfig {
+            scenarios,
+            seeds: vec![1, 2],
+            algorithms: None,
+            rounds: None,
+            out_dir: PathBuf::from("/tmp/unused"),
+            threads: 1,
+        }
+    }
+
+    #[test]
+    fn expand_cross_products_in_deterministic_order() {
+        let mut c = cfg(vec![registry::paper_femnist(), registry::zipf_skew()]);
+        c.algorithms = Some(vec!["qccf".into()]);
+        let units = expand(&c);
+        // 2 scenarios x 1 algorithm x 2 seeds.
+        assert_eq!(units.len(), 4);
+        let keys: Vec<(String, String, u64)> =
+            units.iter().map(|(s, a, z)| (s.name.clone(), a.clone(), *z)).collect();
+        assert_eq!(keys[0], ("paper-femnist".into(), "qccf".into(), 1));
+        assert_eq!(keys[1], ("paper-femnist".into(), "qccf".into(), 2));
+        assert_eq!(keys[2], ("zipf-skew".into(), "qccf".into(), 1));
+        assert_eq!(keys[3], ("zipf-skew".into(), "qccf".into(), 2));
+    }
+
+    #[test]
+    fn expand_uses_scenario_algorithms_and_round_override() {
+        let mut c = cfg(vec![registry::zipf_skew()]);
+        c.rounds = Some(2);
+        let units = expand(&c);
+        // zipf-skew declares two algorithms.
+        assert_eq!(units.len(), 2 * 2);
+        assert!(units.iter().all(|(s, _, _)| s.train.rounds == 2));
+        let algs: Vec<&str> = units.iter().map(|(_, a, _)| a.as_str()).collect();
+        assert!(algs.contains(&"qccf") && algs.contains(&"same-size"));
+    }
+
+    #[test]
+    fn config_errors_catch_duplicates_and_bad_overrides() {
+        let good = cfg(vec![registry::paper_femnist(), registry::zipf_skew()]);
+        assert!(config_errors(&good).is_empty(), "{:?}", config_errors(&good));
+
+        // Duplicate names would race on the same trace file.
+        let dup = cfg(vec![registry::zipf_skew(), registry::zipf_skew()]);
+        assert!(config_errors(&dup).iter().any(|e| e.contains("selected twice")));
+
+        // Overrides are validated up front, not per unit mid-sweep.
+        let mut bad_alg = cfg(vec![registry::paper_femnist()]);
+        bad_alg.algorithms = Some(vec!["qccf".into(), "typo".into()]);
+        assert!(config_errors(&bad_alg).iter().any(|e| e.contains("unknown algorithm `typo`")));
+        let mut zero_rounds = cfg(vec![registry::paper_femnist()]);
+        zero_rounds.rounds = Some(0);
+        assert!(config_errors(&zero_rounds).iter().any(|e| e.contains("--rounds")));
+        let mut empty = cfg(vec![]);
+        empty.seeds = vec![];
+        let errs = config_errors(&empty);
+        assert!(errs.iter().any(|e| e.contains("no scenarios")));
+        assert!(errs.iter().any(|e| e.contains("no seeds")));
+
+        // Duplicate seeds or override algorithms would race two units
+        // on the same trace path; huge seeds lose f64 precision in the
+        // JSONL metadata.
+        let mut dup_seed = cfg(vec![registry::paper_femnist()]);
+        dup_seed.seeds = vec![1, 2, 1];
+        assert!(config_errors(&dup_seed).iter().any(|e| e.contains("seed 1 given twice")));
+        let mut dup_alg = cfg(vec![registry::paper_femnist()]);
+        dup_alg.algorithms = Some(vec!["qccf".into(), "qccf".into()]);
+        assert!(config_errors(&dup_alg).iter().any(|e| e.contains("given twice")));
+        let mut big_seed = cfg(vec![registry::paper_femnist()]);
+        big_seed.seeds = vec![1u64 << 53];
+        assert!(config_errors(&big_seed).iter().any(|e| e.contains("2^53")));
+        let mut dup_in_scenario = cfg(vec![registry::paper_femnist()]);
+        dup_in_scenario.scenarios[0].train.algorithms = vec!["qccf".into(), "qccf".into()];
+        assert!(config_errors(&dup_in_scenario)
+            .iter()
+            .any(|e| e.contains("listed twice")));
+    }
+
+    #[test]
+    fn summary_csv_shape() {
+        let rows = vec![SweepRow {
+            scenario: "s".into(),
+            algorithm: "qccf".into(),
+            seed: 1,
+            rounds: 2,
+            final_acc: 0.5,
+            best_acc: 0.6,
+            cum_energy: 1.25,
+            dropouts: 0,
+            trace_path: PathBuf::from("x/s__qccf__seed1.jsonl"),
+        }];
+        let dir = std::env::temp_dir().join("qccf_sweep_summary_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_summary(&rows, &dir).unwrap();
+        let text = std::fs::read_to_string(dir.join("summary.csv")).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.lines().next().unwrap().starts_with("scenario,algorithm,seed"));
+        assert!(text.contains("s__qccf__seed1.jsonl"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -43,19 +43,32 @@ use crate::util::threadpool;
 /// stage. Owns the client's private RNG stream for the duration of the
 /// round; the advanced stream comes back in [`ClientOutcome::rng`].
 pub struct ClientTask<'a> {
+    /// Client id (ascending task order defines the aggregation fold).
     pub id: usize,
     /// D_i.
     pub size: f64,
+    /// The scheduler's intended (channel, q, f, rate) for this client.
     pub decision: ClientDecision,
     /// Round-wide C4 exemption (No-Quantization baseline).
     pub deadline_exempt: bool,
+    /// Realized-frequency multiplier in (0, 1]
+    /// ([`SystemParams::cpu_scale`]): the device runs at
+    /// `decision.f × cpu_scale`, so straggler-class clients blow
+    /// through the latency the scheduler planned for — decisions stay
+    /// oblivious, execution pays.
+    pub cpu_scale: f64,
+    /// The client's local dataset.
     pub data: &'a ClientData,
+    /// The client's private RNG stream (advanced copy returned in the
+    /// outcome).
     pub rng: Rng,
 }
 
 /// Everything the coordinator learns from one client's round.
 pub struct ClientOutcome {
+    /// Client id (matches the task).
     pub id: usize,
+    /// Mean training loss over the τ local steps.
     pub mean_loss: f64,
     /// Per-local-step gradient norms (feeds `GradStats`).
     pub gnorms: Vec<f32>,
@@ -63,7 +76,9 @@ pub struct ClientOutcome {
     pub theta_max: f64,
     /// Realized level (`None` = raw upload).
     pub q: Option<u32>,
+    /// Realized round latency (s), eqs. (14) + (16).
     pub latency: f64,
+    /// Realized round energy (J), eqs. (15) + (17).
     pub energy: f64,
     /// The (de)quantized model; present iff the upload made the C4
     /// deadline (energy is spent either way), and taken by the
@@ -83,16 +98,21 @@ fn decision_payload_bits(p: &SystemParams, d: &ClientDecision) -> f64 {
 }
 
 /// Latency the decision realizes on a client with dataset size `size`
-/// (eqs. (14), (16)). A pure function of the decision — this is what
-/// makes C4 survival computable before training.
-pub fn realized_latency(p: &SystemParams, size: f64, d: &ClientDecision) -> f64 {
-    energy::t_cmp(p, size, d.f) + decision_payload_bits(p, d) / d.rate
+/// (eqs. (14), (16)) at effective frequency `f × cpu_scale`
+/// (`cpu_scale = 1` outside the straggler class). A pure function of
+/// the decision and the static class assignment — this is what makes
+/// C4 survival computable before training.
+pub fn realized_latency(p: &SystemParams, size: f64, d: &ClientDecision, cpu_scale: f64) -> f64 {
+    energy::t_cmp(p, size, d.f * cpu_scale) + decision_payload_bits(p, d) / d.rate
 }
 
-/// Energy the decision costs (eqs. (15), (17)) — spent whether or not
-/// the upload survives C4.
-pub fn realized_energy(p: &SystemParams, size: f64, d: &ClientDecision) -> f64 {
-    energy::e_cmp(p, size, d.f) + energy::e_com(p, decision_payload_bits(p, d) / d.rate)
+/// Energy the decision costs (eqs. (15), (17)) at the effective
+/// frequency — spent whether or not the upload survives C4. A throttled
+/// device burns *less* compute energy (f² scaling) but risks the
+/// deadline, exactly the straggler trade-off the scenario studies.
+pub fn realized_energy(p: &SystemParams, size: f64, d: &ClientDecision, cpu_scale: f64) -> f64 {
+    energy::e_cmp(p, size, d.f * cpu_scale)
+        + energy::e_com(p, decision_payload_bits(p, d) / d.rate)
 }
 
 /// C4 with a 1e-9 relative tolerance: uploads that *exactly* meet the
@@ -139,7 +159,7 @@ pub fn run_client(
         }
     };
 
-    let latency = realized_latency(p, task.size, &d);
+    let latency = realized_latency(p, task.size, &d, task.cpu_scale);
     Ok(ClientOutcome {
         id: task.id,
         mean_loss: out.mean_loss as f64,
@@ -147,7 +167,7 @@ pub fn run_client(
         theta_max,
         q: d.q,
         latency,
-        energy: realized_energy(p, task.size, &d),
+        energy: realized_energy(p, task.size, &d, task.cpu_scale),
         upload: survived.then_some(upload),
         rng: task.rng,
     })
@@ -260,14 +280,21 @@ impl Drop for CommitOnDrop<'_> {
 /// The executed round, reduced to what the server's later stages need.
 /// Per-client detail stays in `outcomes` (ascending client id).
 pub struct ExecOutput {
+    /// Per-client outcomes in ascending client-id order.
     pub outcomes: Vec<ClientOutcome>,
     /// θ^{n+1} per eq. (2) over surviving uploads (`None` = keep θ^n).
     pub aggregate: Option<Vec<f32>>,
+    /// Clients scheduled this round.
     pub scheduled: usize,
+    /// Uploads that survived C4 (dropouts = scheduled − aggregated).
     pub aggregated: usize,
+    /// Σ realized energy over scheduled clients (J).
     pub round_energy: f64,
+    /// Max realized latency among scheduled clients (s).
     pub max_latency: f64,
+    /// Σ mean training loss over scheduled clients.
     pub loss_sum: f64,
+    /// Count behind [`ExecOutput::loss_sum`].
     pub loss_n: usize,
     /// Filled by the server around the fan-out.
     pub compute_seconds: f64,
@@ -290,7 +317,13 @@ pub fn execute_round(
     // let uploads stream straight into the accumulator.
     let survive: Vec<bool> = tasks
         .iter()
-        .map(|t| survives_deadline(p, realized_latency(p, t.size, &t.decision), t.deadline_exempt))
+        .map(|t| {
+            survives_deadline(
+                p,
+                realized_latency(p, t.size, &t.decision, t.cpu_scale),
+                t.deadline_exempt,
+            )
+        })
         .collect();
     let d_surv: f64 =
         tasks.iter().zip(&survive).filter(|(_, s)| **s).map(|(t, _)| t.size).sum();
@@ -433,13 +466,37 @@ mod tests {
         let p = SystemParams::femnist_small();
         let fast = ClientDecision { channel: 0, q: Some(4), f: p.f_max, rate: 25e6 };
         let slow = ClientDecision { channel: 1, q: Some(4), f: p.f_max, rate: 1.0 };
-        let lat_fast = realized_latency(&p, 1200.0, &fast);
-        let lat_slow = realized_latency(&p, 1200.0, &slow);
+        let lat_fast = realized_latency(&p, 1200.0, &fast, 1.0);
+        let lat_slow = realized_latency(&p, 1200.0, &slow, 1.0);
         assert!(survives_deadline(&p, lat_fast, false), "lat={lat_fast}");
         assert!(!survives_deadline(&p, lat_slow, false), "lat={lat_slow}");
         // Exemption overrides C4 (No-Quantization baseline).
         assert!(survives_deadline(&p, lat_slow, true));
         // Energy is spent either way and scales with the airtime.
-        assert!(realized_energy(&p, 1200.0, &slow) > realized_energy(&p, 1200.0, &fast));
+        assert!(realized_energy(&p, 1200.0, &slow, 1.0) > realized_energy(&p, 1200.0, &fast, 1.0));
+    }
+
+    #[test]
+    fn cpu_throttle_stretches_latency_and_saves_compute_energy() {
+        let p = SystemParams::femnist_small();
+        let d = ClientDecision { channel: 0, q: Some(4), f: p.f_max, rate: 25e6 };
+        let full = realized_latency(&p, 1200.0, &d, 1.0);
+        let half = realized_latency(&p, 1200.0, &d, 0.5);
+        // Compute latency doubles at half the frequency; airtime fixed.
+        let t_cmp_full = crate::energy::t_cmp(&p, 1200.0, d.f);
+        assert!((half - full - t_cmp_full).abs() < 1e-12, "full={full} half={half}");
+        // f² energy scaling: throttled compute costs a quarter.
+        let e_full = realized_energy(&p, 1200.0, &d, 1.0);
+        let e_half = realized_energy(&p, 1200.0, &d, 0.5);
+        assert!(e_half < e_full);
+        // A throttle can flip the C4 verdict the scheduler planned on.
+        let tight = ClientDecision {
+            channel: 0,
+            q: Some(4),
+            f: crate::energy::s_of_q(&p, 1200.0, 4, 25e6).unwrap(),
+            rate: 25e6,
+        };
+        assert!(survives_deadline(&p, realized_latency(&p, 1200.0, &tight, 1.0), false));
+        assert!(!survives_deadline(&p, realized_latency(&p, 1200.0, &tight, 0.4), false));
     }
 }

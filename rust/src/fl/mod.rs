@@ -42,14 +42,17 @@ use crate::wireless::ChannelModel;
 ///   previously it wrote a literal `32` that the Taylor expansion in
 ///   `solver` (eq. (39)) would silently expand around.
 pub const Q_RECORD_RAW: u32 = 0;
+/// Warm-start value for [`ClientState::q_prev`] (see above).
 pub const Q_PREV_WARM_START: f64 = 4.0;
 
 /// Per-client coordinator-side state.
 #[derive(Clone, Debug)]
 pub struct ClientState {
+    /// Client id.
     pub id: usize,
     /// D_i.
     pub size: f64,
+    /// Running Ĝ²/σ̂² gradient-statistics estimates.
     pub stats: GradStats,
     /// θ^max estimate used at decision time (from the global model).
     pub theta_max: f64,
@@ -72,11 +75,15 @@ struct DecideCtx {
 
 /// The FL server.
 pub struct Server<'rt> {
+    /// System parameters (ε1/ε2 may be recalibrated in place when
+    /// [`SystemParams::auto_eps`] is set).
     pub params: SystemParams,
     runtime: &'rt Runtime,
     fed: Federation,
+    /// Coordinator-side per-client state.
     pub clients: Vec<ClientState>,
     channel_model: ChannelModel,
+    /// The Lyapunov virtual queues λ1/λ2.
     pub queues: Queues,
     scheduler: Box<dyn Scheduler>,
     /// Global model θ^n.
@@ -91,6 +98,9 @@ pub struct Server<'rt> {
 }
 
 impl<'rt> Server<'rt> {
+    /// Build a server over a loaded runtime, a generated federation and
+    /// a scheduler; `seed` drives placement, channel draws and the
+    /// per-client RNG streams.
     pub fn new(
         params: SystemParams,
         runtime: &'rt Runtime,
@@ -166,6 +176,7 @@ impl<'rt> Server<'rt> {
         })
     }
 
+    /// Name of the scheduler driving the decisions.
     pub fn scheduler_name(&self) -> &'static str {
         self.scheduler.name()
     }
@@ -263,6 +274,7 @@ impl<'rt> Server<'rt> {
                 size: self.clients[i].size,
                 decision: *d,
                 deadline_exempt: decision.deadline_exempt,
+                cpu_scale: self.params.cpu_scale(i),
                 data: &self.fed.clients[i],
                 rng: self.clients[i].rng.clone(),
             });
@@ -400,6 +412,7 @@ impl<'rt> Server<'rt> {
         Ok(trace)
     }
 
+    /// Communication rounds completed so far.
     pub fn round(&self) -> usize {
         self.round
     }

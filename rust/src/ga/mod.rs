@@ -20,6 +20,7 @@ pub struct Chromosome {
 }
 
 impl Chromosome {
+    /// Number of channels this chromosome allocates over.
     pub fn num_channels(&self) -> usize {
         self.alloc.len()
     }
@@ -92,7 +93,9 @@ impl Chromosome {
 /// U = C = 10 where the search space is ~10! permutation-like).
 #[derive(Clone, Copy, Debug)]
 pub struct GaParams {
+    /// Population size per generation.
     pub population: usize,
+    /// Generations to evolve.
     pub generations: usize,
     /// p^c — crossover probability.
     pub crossover_p: f64,
@@ -125,7 +128,9 @@ impl Default for GaParams {
 /// Result of a GA run.
 #[derive(Clone, Debug)]
 pub struct GaOutcome {
+    /// Best chromosome found.
     pub best: Chromosome,
+    /// Its objective value J0.
     pub best_j0: f64,
     /// Best J0 per generation (convergence diagnostics / ablations).
     pub history: Vec<f64>,

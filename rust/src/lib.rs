@@ -29,8 +29,18 @@
 //! Python never runs on the round loop: `make artifacts` lowers once and
 //! the `qccf` binary executes the HLO through the PJRT CPU client.
 //!
+//! Workloads are **declarative**: a [`scenario::Scenario`] (built-in,
+//! file-loaded, or a fig-harness preset) describes topology,
+//! heterogeneity, algorithms and hyperparameters, and the `sweep`
+//! runner ([`experiments::sweep`]) fans scenario × seed × algorithm
+//! grids out over the worker pool with per-run determinism.
+//!
 //! Start with [`config::SystemParams`] (paper Table I), then
-//! [`fl::Server`] for the training loop, or the `examples/`.
+//! [`fl::Server`] for the training loop, or the `examples/`. The full
+//! layer-by-layer tour — AOT pipeline, artifacts, PJRT runtime,
+//! decision pipeline, round engine — lives in `docs/ARCHITECTURE.md`;
+//! the scenario-file reference is `docs/SCENARIOS.md`.
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod util;
@@ -47,6 +57,7 @@ pub mod lyapunov;
 pub mod metrics;
 pub mod quant;
 pub mod runtime;
+pub mod scenario;
 pub mod sched;
 pub mod solver;
 pub mod wireless;

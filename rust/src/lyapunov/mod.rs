@@ -16,6 +16,7 @@ pub struct Queues {
 }
 
 impl Queues {
+    /// Both queues at zero (callers may warm-start the fields).
     pub fn new() -> Queues {
         Queues { lambda1: 0.0, lambda2: 0.0, history: vec![(0.0, 0.0)] }
     }
@@ -34,6 +35,7 @@ impl Queues {
         (self.lambda1 / n, self.lambda2 / n)
     }
 
+    /// (λ1, λ2) after every update, starting at (0, 0).
     pub fn history(&self) -> &[(f64, f64)] {
         &self.history
     }

@@ -3,29 +3,48 @@
 //! Subcommands:
 //!   params                       print Table I as configured
 //!   train   [--algorithm A] [--profile P] [--rounds N] [--beta B] [--v V] [--seed S]
-//!           [--threads T]        worker threads for the round engine
-//!                                (default: all cores minus one; 1 = serial
-//!                                legacy path; any value is bit-identical)
+//!           [--threads T]        worker threads for the round engine and
+//!                                GA fitness fan-out (default: all cores
+//!                                minus one; 1 = serial legacy path; any
+//!                                value is bit-identical)
 //!   fig2    [--profile P] [--v-values 1,10,100,1000] [--rounds N] [--quick]
 //!   fig3    [--profile P] [--betas 150,300] [--rounds N] [--quick]
 //!   fig4    [--profile P] [--betas 150,300] [--rounds N] [--quick]
-//!   fig5    [--profile P] [--rounds N] [--quick]
+//!   fig5    [--profile P] [--rounds N] [--seeds K] [--quick]
+//!   sweep   [--scenarios a,b,...] [--scenario-file f.scn,...] [--seeds 1,2,...]
+//!           [--algorithms all|x,y] [--rounds N] [--out DIR] [--threads T]
+//!           [--quick] [--list]   scenario sweep: cross-product scenarios ×
+//!                                seeds × algorithms, runs fanned out over
+//!                                the thread pool, one JSONL trace per run
+//!                                plus summary.csv under --out (bit-identical
+//!                                for any --threads). `--list` prints the
+//!                                built-ins; format reference: docs/SCENARIOS.md
 //!   decide  [--profile P] [--seed S]    one-round decision demo (all algorithms)
+//!   ablate  [--draws N] [--seed S] [--quick]   design-choice ablations (no artifacts)
 //!
-//! Requires `make artifacts` (HLO text under ./artifacts).
+//! The fig2..fig5 harnesses are presets over the `paper-femnist` /
+//! `paper-cifar10` scenarios — the same path `sweep` runs (see
+//! docs/ARCHITECTURE.md).
+//!
+//! Requires `make artifacts` (HLO text under ./artifacts), except
+//! `ablate` and `sweep --list`.
+
+use std::path::PathBuf;
 
 use anyhow::Result;
 
 use qccf::baselines::{make_scheduler, ALL_ALGORITHMS};
 use qccf::config::SystemParams;
-use qccf::experiments::{common, fig2, fig3, fig4, fig5, run_one, RunSpec, Task};
+use qccf::experiments::{common, fig2, fig3, fig4, fig5, run_one, sweep, RunSpec, Task};
 use qccf::info;
 use qccf::lyapunov::Queues;
 use qccf::runtime::Runtime;
+use qccf::scenario::{self, ScenarioRegistry};
 use qccf::sched::RoundInputs;
 use qccf::util::argparse::Args;
 use qccf::util::rng::Rng;
 use qccf::util::table;
+use qccf::util::threadpool;
 use qccf::wireless::ChannelModel;
 
 fn main() {
@@ -56,12 +75,13 @@ fn run(args: &Args) -> Result<()> {
         Some("fig3") => cmd_fig3(args),
         Some("fig4") => cmd_fig4(args),
         Some("fig5") => cmd_fig5(args),
+        Some("sweep") => cmd_sweep(args),
         Some("decide") => cmd_decide(args),
         Some("ablate") => cmd_ablate(args),
         Some(other) => anyhow::bail!("unknown subcommand `{other}` (see README)"),
         None => {
-            println!("usage: qccf <params|train|fig2|fig3|fig4|fig5|decide> [options]");
-            println!("see README.md for the full option list");
+            println!("usage: qccf <params|train|fig2|fig3|fig4|fig5|sweep|decide|ablate> [options]");
+            println!("see README.md for the full option list; `qccf sweep --list` shows scenarios");
             Ok(())
         }
     }
@@ -174,6 +194,104 @@ fn cmd_fig5(args: &Args) -> Result<()> {
     let data = fig5::run(&rt, rounds, &seeds)?;
     fig5::print(&data);
     fig5::write_csv(&data)
+}
+
+fn print_sweep_usage() {
+    println!("usage: qccf sweep --scenarios a,b[,...] [options]");
+    println!("  --scenarios a,b       built-in scenarios to run (`sweep --list` to enumerate)");
+    println!("  --scenario-file p,... scenario files to load (KV-text; see docs/SCENARIOS.md)");
+    println!("  --seeds 1,2           master seeds (default: 1)");
+    println!("  --algorithms all|x,y  override each scenario's own algorithm list");
+    println!("  --rounds N            override each scenario's round count");
+    println!("  --out DIR             output directory (default: results/sweep)");
+    println!("  --threads T           concurrent runs (default: cores - 1); outputs are");
+    println!("                        bit-identical for any value");
+    println!("  --quick               2-round smoke (tier-1 uses this; see verify.sh)");
+    println!("  --profile P           artifact profile (default: small)");
+    println!("scenario format + every built-in's rationale: docs/SCENARIOS.md");
+}
+
+/// Scenario sweep: cross-product scenarios × seeds × algorithms, fan
+/// the runs out, write one JSONL trace per run + summary.csv.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let registry = ScenarioRegistry::builtin();
+    if args.flag("list") {
+        println!("built-in scenarios (docs/SCENARIOS.md has the full rationale):");
+        for sc in registry.all() {
+            println!("\n  {} — U={} C={} aps={} rounds={} algs=[{}]", sc.name,
+                     sc.topology.clients, sc.topology.channels, sc.topology.aps,
+                     sc.train.rounds, sc.train.algorithms.join(","));
+            println!("    {}", sc.description);
+        }
+        return Ok(());
+    }
+    if args.flag("help") {
+        print_sweep_usage();
+        return Ok(());
+    }
+    let mut scenarios = Vec::new();
+    for name in args.get_str_list("scenarios", &[]) {
+        let sc = registry.get(&name).cloned().ok_or_else(|| {
+            anyhow::anyhow!("unknown scenario `{name}` — `qccf sweep --list` enumerates the built-ins")
+        })?;
+        scenarios.push(sc);
+    }
+    for path in args.get_str_list("scenario-file", &[]) {
+        scenarios.push(
+            scenario::load_file(std::path::Path::new(&path)).map_err(|e| anyhow::anyhow!(e))?,
+        );
+    }
+    if scenarios.is_empty() {
+        print_sweep_usage();
+        anyhow::bail!("no scenarios selected (use --scenarios and/or --scenario-file)");
+    }
+    // Strict numeric options: a typo'd value must not silently fall
+    // back and run each scenario at its full default round count.
+    let rounds = match args.get("rounds") {
+        Some(v) => {
+            Some(v.parse::<usize>().map_err(|_| anyhow::anyhow!("--rounds: bad value `{v}`"))?)
+        }
+        None if args.flag("quick") => Some(2),
+        None => None,
+    };
+    let algorithms = args.get("algorithms").map(qccf::baselines::algorithm_list);
+    // Seeds too: the lenient list helpers would drop a bad token and
+    // shrink the run set without a word.
+    let seeds_raw = args.get_or("seeds", "1");
+    let seeds: Vec<u64> = seeds_raw
+        .split(',')
+        .map(|t| {
+            let t = t.trim();
+            t.parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--seeds: bad seed `{t}` in `{seeds_raw}`"))
+        })
+        .collect::<Result<_>>()?;
+    // And --threads: a typo here should not silently fan out over all
+    // cores on a box the user was trying to protect.
+    let threads = match args.get("threads") {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("--threads: bad value `{v}`"))?
+            .max(1),
+        None => threadpool::default_threads(),
+    };
+    let cfg = sweep::SweepConfig {
+        scenarios,
+        seeds,
+        algorithms,
+        rounds,
+        out_dir: PathBuf::from(args.get_or("out", "results/sweep")),
+        threads,
+    };
+    let rt = load_runtime(args)?;
+    let rows = sweep::run(&rt, &cfg)?;
+    sweep::print(&rows);
+    println!(
+        "wrote {} JSONL trace(s) + summary.csv under {}",
+        rows.len(),
+        cfg.out_dir.display()
+    );
+    Ok(())
 }
 
 /// Design-choice ablations (no artifacts needed — pure decision math).

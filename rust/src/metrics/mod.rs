@@ -1,31 +1,39 @@
 //! Per-round metric records + trace recorder (CSV/JSON export). The
 //! experiment harness aggregates these into the paper's figure series.
 
+use std::collections::BTreeMap;
+use std::io::Write as _;
 use std::path::Path;
 
 use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
 
 /// Everything measured in one communication round.
 #[derive(Clone, Debug, Default)]
 pub struct RoundRecord {
+    /// 1-based communication-round index.
     pub round: usize,
-    /// Participants scheduled / uploads aggregated (dropouts = diff).
+    /// Participants scheduled this round.
     pub scheduled: usize,
+    /// Uploads aggregated (dropouts = scheduled − aggregated).
     pub aggregated: usize,
-    /// Energy spent this round (J) and cumulative (J).
+    /// Energy spent this round (J).
     pub energy: f64,
+    /// Cumulative energy through this round (J).
     pub cum_energy: f64,
     /// Mean training loss reported by participating clients.
     pub train_loss: f64,
-    /// Test metrics (only on eval rounds).
+    /// Test loss (only on eval rounds).
     pub test_loss: Option<f64>,
+    /// Test accuracy (only on eval rounds).
     pub test_acc: Option<f64>,
     /// Mean quantization level among quantizing participants.
     pub mean_q: f64,
     /// Per-client levels (None = not scheduled; Some(0) = raw upload).
     pub q_per_client: Vec<Option<u32>>,
-    /// Virtual queues after the round.
+    /// λ1 (data-property queue) after the round.
     pub lambda1: f64,
+    /// λ2 (quantization-error queue) after the round.
     pub lambda2: f64,
     /// Max realized latency among participants (s).
     pub max_latency: f64,
@@ -43,19 +51,24 @@ pub struct RoundRecord {
 /// A full experiment trace.
 #[derive(Clone, Debug, Default)]
 pub struct Trace {
+    /// Scheduler name that produced the trace.
     pub algorithm: String,
+    /// One record per communication round, in order.
     pub records: Vec<RoundRecord>,
 }
 
 impl Trace {
+    /// Empty trace for `algorithm`.
     pub fn new(algorithm: &str) -> Trace {
         Trace { algorithm: algorithm.to_string(), records: Vec::new() }
     }
 
+    /// Append one round's record.
     pub fn push(&mut self, rec: RoundRecord) {
         self.records.push(rec);
     }
 
+    /// Final cumulative energy (J).
     pub fn total_energy(&self) -> f64 {
         self.records.last().map(|r| r.cum_energy).unwrap_or(0.0)
     }
@@ -131,6 +144,62 @@ impl Trace {
         }
         w.flush()
     }
+
+    /// Dump per-round rows as JSONL (one self-describing JSON object
+    /// per line), prefixing every row with the `meta` key/value pairs
+    /// (the sweep runner passes scenario/algorithm/seed).
+    ///
+    /// Deliberately excludes the wall-clock fields
+    /// (`decide_seconds`/`compute_seconds`): everything written here is
+    /// a deterministic function of (scenario, algorithm, seed), which
+    /// is what makes sweep outputs bit-identical across `--threads`
+    /// values. Non-finite values (e.g. an empty round's NaN loss)
+    /// serialize as `null` to keep every line valid JSON.
+    pub fn write_jsonl(&self, path: &Path, meta: &[(&str, Json)]) -> std::io::Result<()> {
+        fn num_or_null(x: f64) -> Json {
+            if x.is_finite() {
+                Json::Num(x)
+            } else {
+                Json::Null
+            }
+        }
+        fn opt(x: Option<f64>) -> Json {
+            x.map(num_or_null).unwrap_or(Json::Null)
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+        for r in &self.records {
+            let mut m: BTreeMap<String, Json> = BTreeMap::new();
+            for (k, v) in meta {
+                m.insert((*k).to_string(), v.clone());
+            }
+            m.insert("round".into(), Json::Num(r.round as f64));
+            m.insert("scheduled".into(), Json::Num(r.scheduled as f64));
+            m.insert("aggregated".into(), Json::Num(r.aggregated as f64));
+            m.insert("energy_j".into(), num_or_null(r.energy));
+            m.insert("cum_energy_j".into(), num_or_null(r.cum_energy));
+            m.insert("train_loss".into(), num_or_null(r.train_loss));
+            m.insert("test_loss".into(), opt(r.test_loss));
+            m.insert("test_acc".into(), opt(r.test_acc));
+            m.insert("mean_q".into(), num_or_null(r.mean_q));
+            m.insert(
+                "q_per_client".into(),
+                Json::Arr(
+                    r.q_per_client
+                        .iter()
+                        .map(|q| q.map(|q| Json::Num(q as f64)).unwrap_or(Json::Null))
+                        .collect(),
+                ),
+            );
+            m.insert("lambda1".into(), num_or_null(r.lambda1));
+            m.insert("lambda2".into(), num_or_null(r.lambda2));
+            m.insert("max_latency_s".into(), num_or_null(r.max_latency));
+            writeln!(out, "{}", Json::Obj(m).to_string_compact())?;
+        }
+        out.flush()
+    }
 }
 
 #[cfg(test)]
@@ -162,6 +231,52 @@ mod tests {
         assert_eq!(t.rounds_to_accuracy(0.75), Some(3));
         assert_eq!(t.rounds_to_accuracy(0.95), None);
         assert_eq!(t.total_dropouts(), 4);
+    }
+
+    #[test]
+    fn jsonl_lines_valid_and_meta_prefixed() {
+        let mut t = Trace::new("qccf");
+        let mut r1 = rec(1, None, 1.0, 1.0);
+        r1.train_loss = f64::NAN; // empty round — must serialize as null
+        r1.q_per_client = vec![Some(4), None, Some(0)];
+        t.push(r1);
+        t.push(rec(2, Some(0.5), 1.0, 2.0));
+        let dir = std::env::temp_dir().join("qccf_metrics_jsonl_test");
+        let path = dir.join("t.jsonl");
+        t.write_jsonl(&path, &[("scenario", crate::util::json::s("demo")), ("seed", crate::util::json::num(3.0))])
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for (i, line) in lines.iter().enumerate() {
+            let v = crate::util::json::parse(line).unwrap();
+            assert_eq!(v.get("scenario").and_then(|x| x.as_str()), Some("demo"));
+            assert_eq!(v.get("seed").and_then(|x| x.as_f64()), Some(3.0));
+            assert_eq!(v.get("round").and_then(|x| x.as_usize()), Some(i + 1));
+            for key in [
+                "scheduled",
+                "aggregated",
+                "energy_j",
+                "cum_energy_j",
+                "train_loss",
+                "test_loss",
+                "test_acc",
+                "mean_q",
+                "q_per_client",
+                "lambda1",
+                "lambda2",
+                "max_latency_s",
+            ] {
+                assert!(v.get(key).is_some(), "line {i} missing `{key}`");
+            }
+        }
+        // NaN loss became null; q_per_client keeps the raw-upload 0.
+        let first = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("train_loss"), Some(&crate::util::json::Json::Null));
+        let q = first.get("q_per_client").unwrap().as_arr().unwrap();
+        assert_eq!(q.len(), 3);
+        assert_eq!(q[2].as_f64(), Some(0.0));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

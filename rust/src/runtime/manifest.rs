@@ -8,6 +8,7 @@ use crate::util::json::{parse, Json};
 /// One profile's stanza from the manifest.
 #[derive(Clone, Debug)]
 pub struct ProfileInfo {
+    /// Profile name (manifest key).
     pub name: String,
     /// Z — flat parameter count.
     pub z: usize,
@@ -21,6 +22,7 @@ pub struct ProfileInfo {
     pub eval_batch: usize,
     /// (H, W, C).
     pub image: (usize, usize, usize),
+    /// Number of label classes.
     pub classes: usize,
     /// Default learning rate η the model was tuned with.
     pub lr: f64,
@@ -29,10 +31,12 @@ pub struct ProfileInfo {
 }
 
 impl ProfileInfo {
+    /// Floats per image (H·W·C).
     pub fn pix(&self) -> usize {
         self.image.0 * self.image.1 * self.image.2
     }
 
+    /// Path of the named HLO artifact, if present.
     pub fn file(&self, name: &str) -> Option<&Path> {
         self.files.iter().find(|(n, _)| n == name).map(|(_, p)| p.as_path())
     }

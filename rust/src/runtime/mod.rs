@@ -23,6 +23,7 @@ pub use manifest::{artifacts_dir, load_profile, ProfileInfo};
 /// [`Runtime::quantize`] concurrently for different clients.
 pub struct Runtime {
     client: xla::PjRtClient,
+    /// The loaded profile's metadata.
     pub info: ProfileInfo,
     init: xla::PjRtLoadedExecutable,
     train_step: xla::PjRtLoadedExecutable,
@@ -59,8 +60,11 @@ unsafe impl Sync for Runtime {}
 /// Result of one local training round on a client.
 #[derive(Clone, Debug)]
 pub struct TrainOut {
+    /// Updated local model after τ steps.
     pub theta: Vec<f32>,
+    /// Mean loss over the τ steps.
     pub mean_loss: f32,
+    /// Per-step gradient norms.
     pub gnorms: Vec<f32>,
 }
 
@@ -108,6 +112,7 @@ impl Runtime {
         Self::load(&artifacts_dir(), profile)
     }
 
+    /// PJRT platform name (diagnostics).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

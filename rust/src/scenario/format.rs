@@ -1,0 +1,433 @@
+//! Scenario **file format**: a tiny sectioned KV-text dialect (TOML-ish;
+//! serde/toml are unavailable offline, so this reuses the hand-rolled
+//! parsing style of `util::argparse`). The full key reference with
+//! defaults and paper cross-references lives in `docs/SCENARIOS.md`.
+//!
+//! ```text
+//! # Full-line comments start with '#' (no inline comments).
+//! # Values are bare tokens or "quoted strings".
+//! [scenario]
+//! name = "zipf-skew"
+//! base = femnist
+//!
+//! [topology]
+//! clients = 20
+//! # channels is REQUIRED whenever clients is set:
+//! channels = 12
+//! ```
+//!
+//! Parsing is strict: unknown sections/keys are errors (catching typos
+//! beats silently running the wrong physics), and setting `clients`
+//! without `channels` is rejected — the legacy "C silently defaults to
+//! U" behavior is exactly what made contention scenarios unreachable.
+//!
+//! [`render`] emits the canonical form; `parse(render(s)) == s` for
+//! every valid scenario (the registry round-trip test pins this).
+
+use std::fmt::Write as _;
+
+use crate::experiments::Task;
+
+use super::{Scenario, SizeDistKind};
+
+/// Parse one scenario document. Returns a descriptive error with the
+/// 1-based line number. The result is **not** validated — callers run
+/// [`Scenario::validate`] (as [`super::load_file`] does) so presets
+/// under construction can round-trip through text while still invalid.
+pub fn parse_scenario(text: &str) -> Result<Scenario, String> {
+    // Pass 1: (section, key, value) triples in file order.
+    let mut entries: Vec<(String, String, String)> = Vec::new();
+    let mut section = String::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        let lineno = idx + 1;
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {lineno}: unterminated [section] header"))?;
+            section = name.trim().to_string();
+            // Reject unknown sections at the header, not only via their
+            // keys — an empty typo'd section would otherwise slip
+            // through the strict grammar.
+            const SECTIONS: [&str; 6] =
+                ["scenario", "topology", "data", "wireless", "compute", "train"];
+            if !SECTIONS.contains(&section.as_str()) {
+                return Err(format!(
+                    "line {lineno}: unknown section `[{section}]` (known: {})",
+                    SECTIONS.join(", ")
+                ));
+            }
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {lineno}: expected `key = value` or `[section]`"))?;
+        if section.is_empty() {
+            return Err(format!("line {lineno}: key `{}` before any [section]", k.trim()));
+        }
+        let value = parse_value(v.trim()).map_err(|e| format!("line {lineno}: {e}"))?;
+        let key = k.trim().to_string();
+        // Strict like the rest of the grammar: a duplicated key would
+        // otherwise resolve inconsistently (`base` is consumed before
+        // the defaults are built, everything else after), and "which
+        // assignment won?" is exactly the silent-wrong-physics failure
+        // this parser exists to prevent.
+        if entries.iter().any(|(s, k2, _)| *s == section && *k2 == key) {
+            return Err(format!("line {lineno}: duplicate key `[{section}] {key}`"));
+        }
+        entries.push((section.clone(), key, value));
+    }
+
+    // The base column decides every default, so resolve it first.
+    fn find<'a>(
+        entries: &'a [(String, String, String)],
+        sec: &str,
+        key: &str,
+    ) -> Option<&'a str> {
+        entries.iter().find(|(s, k, _)| s == sec && k == key).map(|(_, _, v)| v.as_str())
+    }
+    let base = match find(&entries, "scenario", "base") {
+        None | Some("femnist") => Task::Femnist,
+        Some("cifar") | Some("cifar10") => Task::Cifar,
+        Some(other) => return Err(format!("unknown base `{other}` (femnist|cifar)")),
+    };
+    let name = find(&entries, "scenario", "name")
+        .ok_or("missing `[scenario] name`")?
+        .to_string();
+
+    let mut sc = Scenario::defaults(&name, base);
+    let (mut saw_clients, mut saw_channels) = (false, false);
+    for (section, key, value) in &entries {
+        apply(&mut sc, section, key, value, &mut saw_clients, &mut saw_channels)?;
+    }
+    if saw_clients && !saw_channels {
+        return Err(
+            "`[topology] clients` set without `channels` — the channel count must be \
+             explicit in scenario files (C silently defaulting to U is exactly the \
+             bug that hid contention scenarios; see docs/SCENARIOS.md)"
+                .into(),
+        );
+    }
+    Ok(sc)
+}
+
+/// Apply one `[section] key = value` entry onto the scenario.
+fn apply(
+    sc: &mut Scenario,
+    section: &str,
+    key: &str,
+    value: &str,
+    saw_clients: &mut bool,
+    saw_channels: &mut bool,
+) -> Result<(), String> {
+    let bad_num = |v: &str| format!("`[{section}] {key}`: bad number `{v}`");
+    let f = |v: &str| v.parse::<f64>().map_err(|_| bad_num(v));
+    let n = |v: &str| v.parse::<usize>().map_err(|_| bad_num(v));
+    match (section, key) {
+        ("scenario", "name") => sc.name = value.to_string(),
+        ("scenario", "description") => sc.description = value.to_string(),
+        ("scenario", "base") => {} // consumed before defaults were built
+        ("topology", "clients") => {
+            sc.topology.clients = n(value)?;
+            *saw_clients = true;
+        }
+        ("topology", "channels") => {
+            sc.topology.channels = n(value)?;
+            *saw_channels = true;
+        }
+        ("topology", "cell_radius_m") => sc.topology.cell_radius_m = f(value)?,
+        ("topology", "aps") => sc.topology.aps = n(value)?,
+        ("data", "size_dist") => {
+            sc.data.dist = match value {
+                "gaussian" => SizeDistKind::Gaussian,
+                "uniform" => SizeDistKind::Uniform,
+                "zipf" => SizeDistKind::Zipf,
+                other => {
+                    return Err(format!(
+                        "`[data] size_dist`: unknown distribution `{other}` \
+                         (gaussian|uniform|zipf)"
+                    ))
+                }
+            }
+        }
+        ("data", "size_mean") => sc.data.size_mean = f(value)?,
+        ("data", "size_std") => sc.data.size_std = f(value)?,
+        ("data", "uniform_lo") => sc.data.uniform_lo = f(value)?,
+        ("data", "uniform_hi") => sc.data.uniform_hi = f(value)?,
+        ("data", "zipf_exponent") => sc.data.zipf_exponent = f(value)?,
+        ("data", "dirichlet_alpha") => sc.data.dirichlet_alpha = f(value)?,
+        ("data", "test_size") => sc.data.test_size = n(value)?,
+        ("wireless", "gain_db") => sc.wireless.gain_db = f(value)?,
+        ("wireless", "carrier_ghz") => sc.wireless.carrier_ghz = f(value)?,
+        ("wireless", "rician_k") => sc.wireless.rician_k = f(value)?,
+        ("wireless", "deep_fade_frac") => sc.wireless.deep_fade_frac = f(value)?,
+        ("wireless", "deep_fade_db") => sc.wireless.deep_fade_db = f(value)?,
+        ("compute", "gamma") => sc.compute.gamma = f(value)?,
+        ("compute", "f_min") => sc.compute.f_min = f(value)?,
+        ("compute", "f_max") => sc.compute.f_max = f(value)?,
+        ("compute", "straggler_frac") => sc.compute.straggler_frac = f(value)?,
+        ("compute", "straggler_slowdown") => sc.compute.straggler_slowdown = f(value)?,
+        ("train", "algorithms") => {
+            sc.train.algorithms = crate::baselines::algorithm_list(value)
+        }
+        ("train", "rounds") => sc.train.rounds = n(value)?,
+        ("train", "v") => sc.train.v = Some(f(value)?),
+        ("train", "tau") => sc.train.tau = Some(n(value)?),
+        ("train", "eval_every") => sc.train.eval_every = n(value)?,
+        _ => {
+            return Err(format!(
+                "unknown key `[{section}] {key}` (see docs/SCENARIOS.md for the reference)"
+            ))
+        }
+    }
+    Ok(())
+}
+
+/// Decode a value token: `"..."` with `\"`/`\\`/`\n` escapes, or a bare
+/// token taken verbatim.
+fn parse_value(v: &str) -> Result<String, String> {
+    if let Some(rest) = v.strip_prefix('"') {
+        let mut out = String::new();
+        let mut chars = rest.chars();
+        loop {
+            match chars.next() {
+                None => return Err("unterminated quoted value".into()),
+                Some('"') => {
+                    let tail: String = chars.collect();
+                    if !tail.trim().is_empty() {
+                        return Err(format!("trailing data after quoted value: `{tail}`"));
+                    }
+                    return Ok(out);
+                }
+                Some('\\') => match chars.next() {
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    Some('n') => out.push('\n'),
+                    other => return Err(format!("bad escape `\\{}`", other.unwrap_or(' '))),
+                },
+                Some(c) => out.push(c),
+            }
+        }
+    } else if v.contains('"') {
+        Err(format!("stray quote in bare value `{v}`"))
+    } else {
+        Ok(v.to_string())
+    }
+}
+
+/// Encode for [`render`]: bare when safe, quoted otherwise.
+fn render_value(v: &str) -> String {
+    let bare_safe = !v.is_empty()
+        && !v.contains(|c: char| c.is_whitespace() || c == '"' || c == '#' || c == '=');
+    if bare_safe {
+        v.to_string()
+    } else {
+        let mut out = String::from("\"");
+        for c in v.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+        out
+    }
+}
+
+/// Render the canonical scenario-file form (every key explicit, so a
+/// rendered file doubles as a fully-specified record of the run).
+/// Round-trips: `parse_scenario(render(sc)) == sc`.
+pub fn render(sc: &Scenario) -> String {
+    let mut o = String::new();
+    let _ = writeln!(o, "# scenario `{}` (format reference: docs/SCENARIOS.md)", sc.name);
+    let _ = writeln!(o, "[scenario]");
+    let _ = writeln!(o, "name = {}", render_value(&sc.name));
+    let _ = writeln!(o, "description = {}", render_value(&sc.description));
+    let base = match sc.base {
+        Task::Femnist => "femnist",
+        Task::Cifar => "cifar",
+    };
+    let _ = writeln!(o, "base = {base}");
+    let _ = writeln!(o);
+    let t = &sc.topology;
+    let _ = writeln!(o, "[topology]");
+    let _ = writeln!(o, "clients = {}", t.clients);
+    let _ = writeln!(o, "channels = {}", t.channels);
+    let _ = writeln!(o, "cell_radius_m = {}", t.cell_radius_m);
+    let _ = writeln!(o, "aps = {}", t.aps);
+    let _ = writeln!(o);
+    let d = &sc.data;
+    let _ = writeln!(o, "[data]");
+    let dist = match d.dist {
+        SizeDistKind::Gaussian => "gaussian",
+        SizeDistKind::Uniform => "uniform",
+        SizeDistKind::Zipf => "zipf",
+    };
+    let _ = writeln!(o, "size_dist = {dist}");
+    let _ = writeln!(o, "size_mean = {}", d.size_mean);
+    let _ = writeln!(o, "size_std = {}", d.size_std);
+    let _ = writeln!(o, "uniform_lo = {}", d.uniform_lo);
+    let _ = writeln!(o, "uniform_hi = {}", d.uniform_hi);
+    let _ = writeln!(o, "zipf_exponent = {}", d.zipf_exponent);
+    let _ = writeln!(o, "dirichlet_alpha = {}", d.dirichlet_alpha);
+    let _ = writeln!(o, "test_size = {}", d.test_size);
+    let _ = writeln!(o);
+    let w = &sc.wireless;
+    let _ = writeln!(o, "[wireless]");
+    let _ = writeln!(o, "gain_db = {}", w.gain_db);
+    let _ = writeln!(o, "carrier_ghz = {}", w.carrier_ghz);
+    let _ = writeln!(o, "rician_k = {}", w.rician_k);
+    let _ = writeln!(o, "deep_fade_frac = {}", w.deep_fade_frac);
+    let _ = writeln!(o, "deep_fade_db = {}", w.deep_fade_db);
+    let _ = writeln!(o);
+    let c = &sc.compute;
+    let _ = writeln!(o, "[compute]");
+    let _ = writeln!(o, "gamma = {}", c.gamma);
+    let _ = writeln!(o, "f_min = {}", c.f_min);
+    let _ = writeln!(o, "f_max = {}", c.f_max);
+    let _ = writeln!(o, "straggler_frac = {}", c.straggler_frac);
+    let _ = writeln!(o, "straggler_slowdown = {}", c.straggler_slowdown);
+    let _ = writeln!(o);
+    let tr = &sc.train;
+    let _ = writeln!(o, "[train]");
+    let _ = writeln!(o, "algorithms = {}", tr.algorithms.join(","));
+    let _ = writeln!(o, "rounds = {}", tr.rounds);
+    if let Some(v) = tr.v {
+        let _ = writeln!(o, "v = {v}");
+    }
+    if let Some(tau) = tr.tau {
+        let _ = writeln!(o, "tau = {tau}");
+    }
+    let _ = writeln!(o, "eval_every = {}", tr.eval_every);
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_file_inherits_base_defaults() {
+        let sc = parse_scenario("[scenario]\nname = tiny-check\n").unwrap();
+        assert_eq!(sc.name, "tiny-check");
+        assert_eq!(sc.base, Task::Femnist);
+        assert_eq!(sc.topology.clients, 10);
+        assert_eq!(sc.data.size_mean, 1200.0);
+        assert_eq!(sc.train.algorithms, vec!["qccf"]);
+    }
+
+    #[test]
+    fn full_file_parses() {
+        let text = r#"
+            # a contention scenario
+            [scenario]
+            name = "contended"
+            description = "C < U with a \"quoted\" word"
+            base = cifar
+
+            [topology]
+            clients = 24
+            channels = 8
+            cell_radius_m = 750
+            aps = 2
+
+            [data]
+            size_dist = zipf
+            zipf_exponent = 1.3
+            size_mean = 900
+
+            [train]
+            algorithms = qccf, same-size
+            rounds = 12
+            v = 25
+        "#;
+        let sc = parse_scenario(text).unwrap();
+        assert_eq!(sc.base, Task::Cifar);
+        assert_eq!((sc.topology.clients, sc.topology.channels, sc.topology.aps), (24, 8, 2));
+        assert_eq!(sc.data.dist, SizeDistKind::Zipf);
+        assert_eq!(sc.data.zipf_exponent, 1.3);
+        assert_eq!(sc.description, "C < U with a \"quoted\" word");
+        assert_eq!(sc.train.algorithms, vec!["qccf", "same-size"]);
+        assert_eq!(sc.train.v, Some(25.0));
+        // Base (cifar) fills what the file leaves out.
+        assert_eq!(sc.compute.gamma, 2000.0);
+        assert!(sc.validate().is_empty(), "{:?}", sc.validate());
+    }
+
+    #[test]
+    fn clients_without_channels_rejected() {
+        let text = "[scenario]\nname = x\n[topology]\nclients = 50\n";
+        let err = parse_scenario(text).unwrap_err();
+        assert!(err.contains("channels"), "{err}");
+    }
+
+    #[test]
+    fn unknown_keys_and_sections_rejected() {
+        let err =
+            parse_scenario("[scenario]\nname = x\n[topology]\nclientz = 5\n").unwrap_err();
+        assert!(err.contains("unknown key"), "{err}");
+        // Unknown sections fail at the header — even when empty.
+        let err = parse_scenario("[scenario]\nname = x\n[mystery]\nfoo = 1\n").unwrap_err();
+        assert!(err.contains("unknown section"), "{err}");
+        let err = parse_scenario("[scenario]\nname = x\n[wirelss]\n").unwrap_err();
+        assert!(err.contains("unknown section"), "{err}");
+        let err = parse_scenario("name = x\n").unwrap_err();
+        assert!(err.contains("before any"), "{err}");
+        assert!(parse_scenario("[scenario]\nrounds\n").is_err());
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let err = parse_scenario("[scenario]\nname = x\nname = y\n").unwrap_err();
+        assert!(err.contains("duplicate key"), "{err}");
+        let err =
+            parse_scenario("[scenario]\nname = x\nbase = femnist\nbase = cifar\n").unwrap_err();
+        assert!(err.contains("duplicate key"), "{err}");
+        // Same key in different sections is fine (none exist today, but
+        // the check is per (section, key)).
+        assert!(parse_scenario("[scenario]\nname = x\n[train]\nrounds = 3\n").is_ok());
+    }
+
+    #[test]
+    fn missing_name_rejected() {
+        assert!(parse_scenario("[scenario]\nbase = femnist\n").unwrap_err().contains("name"));
+    }
+
+    #[test]
+    fn algorithms_all_expands() {
+        let sc = parse_scenario("[scenario]\nname = x\n[train]\nalgorithms = all\n").unwrap();
+        assert_eq!(sc.train.algorithms.len(), crate::baselines::ALL_ALGORITHMS.len());
+    }
+
+    #[test]
+    fn value_quoting_roundtrips() {
+        for v in ["plain", "two words", "esc \" and \\ and\nnewline", "# hash", "a=b"] {
+            let enc = render_value(v);
+            assert_eq!(parse_value(&enc).unwrap(), v, "enc={enc}");
+        }
+        assert!(parse_value("\"unterminated").is_err());
+        assert!(parse_value("stray\"quote").is_err());
+    }
+
+    #[test]
+    fn render_parse_roundtrip_with_overrides() {
+        let mut sc = Scenario::defaults("rt-check", Task::Cifar);
+        sc.description = "multi word, with = sign".into();
+        sc.topology.clients = 64;
+        sc.topology.channels = 16;
+        sc.data.dist = SizeDistKind::Uniform;
+        sc.train.v = Some(12.5);
+        sc.train.tau = Some(6);
+        sc.train.algorithms = vec!["qccf".into(), "principle".into()];
+        let text = render(&sc);
+        let back = parse_scenario(&text).unwrap();
+        assert_eq!(back, sc);
+        // And canonical text is a fixed point.
+        assert_eq!(render(&back), text);
+    }
+}

@@ -1,0 +1,520 @@
+//! Declarative **scenario subsystem**: one [`Scenario`] value describes
+//! a complete workload — topology (clients, channels, cell layout),
+//! heterogeneity profiles (dataset-size distribution, channel-gain
+//! classes, CPU classes), algorithm list and hyperparameters (β, V, τ),
+//! and scale knobs — and converts into the [`SystemParams`] +
+//! [`DataGenConfig`] pair the round engine runs on.
+//!
+//! Scenarios come from three places:
+//!
+//! * the [`registry::ScenarioRegistry`] of built-ins (the two Table-I
+//!   profiles plus six stress/heterogeneity workloads motivated by the
+//!   related work — see `docs/SCENARIOS.md` for each one's rationale);
+//! * KV-text **scenario files** ([`format::parse_scenario`] /
+//!   `--scenario-file` on the CLI) — the format reference lives in
+//!   `docs/SCENARIOS.md`;
+//! * the fig harnesses, whose [`crate::experiments::RunSpec`] is now a
+//!   thin preset over [`registry::paper_femnist`] /
+//!   [`registry::paper_cifar10`] (so every figure reproduces through
+//!   the same path a custom scenario takes).
+//!
+//! The `sweep` CLI subcommand cross-products scenarios × seeds ×
+//! algorithms and fans the runs out over the thread pool
+//! ([`crate::experiments::sweep`]); each run inherits the round
+//! engine's per-run determinism contract, so sweep outputs are
+//! bit-identical for any `--threads` value.
+
+pub mod format;
+pub mod registry;
+
+use std::path::Path;
+
+use crate::baselines::ALL_ALGORITHMS;
+use crate::config::SystemParams;
+use crate::data::{DataGenConfig, SizeDist};
+use crate::experiments::Task;
+use crate::runtime::Runtime;
+
+pub use format::{parse_scenario, render};
+pub use registry::ScenarioRegistry;
+
+/// Which dataset-size distribution a scenario uses (the spec-level
+/// mirror of [`SizeDist`]; the numeric knobs live in [`DataSpec`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SizeDistKind {
+    /// `D_i ~ N(µ, β)` — the paper's §VI setting.
+    Gaussian,
+    /// `D_i ~ U[uniform_lo, uniform_hi)`.
+    Uniform,
+    /// `D_i ∝ rank^{-zipf_exponent}`, mean-preserving.
+    Zipf,
+}
+
+/// Topology: federation size, spectrum, and cell layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    /// U — number of clients (scale knob; 10 in the paper, up to ~1000
+    /// for stress scenarios — data is synthetic, so any U works on any
+    /// artifact profile).
+    pub clients: usize,
+    /// C — OFDMA channels. **Must be explicit in scenario files** and
+    /// satisfy `1 <= C <= U` ([`Scenario::validate`]); `C < U` creates
+    /// the contention regime the paper's C1–C3 constraints are about.
+    pub channels: usize,
+    /// Deployment radius in meters (paper: 500 m disk).
+    pub cell_radius_m: f64,
+    /// Access points: `1` = single cell (paper), `> 1` = cell-free
+    /// lite — nearest-AP pathloss (cf. arXiv:2412.20785).
+    pub aps: usize,
+}
+
+/// Data heterogeneity profile.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataSpec {
+    /// Which size distribution applies.
+    pub dist: SizeDistKind,
+    /// µ — mean dataset size (all distributions).
+    pub size_mean: f64,
+    /// β — dataset-size std (Gaussian only; the paper sweeps 150/300).
+    pub size_std: f64,
+    /// Lower size bound (Uniform only).
+    pub uniform_lo: f64,
+    /// Upper size bound (Uniform only).
+    pub uniform_hi: f64,
+    /// Skew exponent (Zipf only; > 0, larger = heavier head).
+    pub zipf_exponent: f64,
+    /// Dirichlet concentration for label skew (smaller = more non-IID).
+    pub dirichlet_alpha: f64,
+    /// Balanced test-set size.
+    pub test_size: usize,
+}
+
+/// Wireless profile: calibration knobs plus the deep-fade class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WirelessSpec {
+    /// h^Gain in dB (the calibration knob; see `config` module docs).
+    pub gain_db: f64,
+    /// Carrier frequency in GHz.
+    pub carrier_ghz: f64,
+    /// Rician K-factor.
+    pub rician_k: f64,
+    /// Fraction of clients in the deep-fade class (0 disables).
+    pub deep_fade_frac: f64,
+    /// Extra large-scale attenuation (dB) for that class.
+    pub deep_fade_db: f64,
+}
+
+/// Compute profile: DVFS range, workload constant, and the straggler
+/// class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ComputeSpec {
+    /// γ — CPU cycles per sample.
+    pub gamma: f64,
+    /// f^min — DVFS lower bound (Hz).
+    pub f_min: f64,
+    /// f^max — DVFS upper bound (Hz).
+    pub f_max: f64,
+    /// Fraction of clients whose realized frequency is throttled
+    /// (0 disables; see [`SystemParams::straggler_frac`]).
+    pub straggler_frac: f64,
+    /// Realized-frequency multiplier for the straggler class, (0, 1].
+    pub straggler_slowdown: f64,
+}
+
+/// What to run: algorithms and training hyperparameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainSpec {
+    /// Scheduling algorithms to run (subset of
+    /// [`ALL_ALGORITHMS`]; `all` in a scenario file expands to the full
+    /// list).
+    pub algorithms: Vec<String>,
+    /// Communication rounds per run.
+    pub rounds: usize,
+    /// V — Lyapunov penalty weight (`None` = the base column's
+    /// default: 100 for FEMNIST, 10 for CIFAR).
+    pub v: Option<f64>,
+    /// τ — local updates per round at the *decision* layer (`None` =
+    /// base default). Note the artifact's train-step count is fixed at
+    /// AOT time; this knob only moves the latency/energy accounting
+    /// and the theorem constants.
+    pub tau: Option<usize>,
+    /// Evaluate every k rounds (0 = never — decision-only runs).
+    pub eval_every: usize,
+}
+
+/// A complete declarative workload description. See the module docs for
+/// where scenarios come from and `docs/SCENARIOS.md` for the file
+/// format; [`Scenario::params`] / [`Scenario::datagen`] are the bridges
+/// into the run path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// Unique kebab-case name (file stem for sweep traces).
+    pub name: String,
+    /// One-paragraph rationale (shown by `sweep --list`).
+    pub description: String,
+    /// Which Table-I column supplies the unlisted constants
+    /// (`femnist` or `cifar`).
+    pub base: Task,
+    /// Federation size, spectrum and layout.
+    pub topology: Topology,
+    /// Dataset-size / label-skew heterogeneity.
+    pub data: DataSpec,
+    /// Channel statistics and gain classes.
+    pub wireless: WirelessSpec,
+    /// DVFS range and CPU classes.
+    pub compute: ComputeSpec,
+    /// Algorithms + hyperparameters.
+    pub train: TrainSpec,
+}
+
+impl Scenario {
+    /// A scenario named `name` whose every knob equals the `base`
+    /// Table-I column (plus the paper's data defaults µ = 1200,
+    /// β = 150, Dirichlet 0.5). Built-ins and file parsing start here
+    /// and override.
+    pub fn defaults(name: &str, base: Task) -> Scenario {
+        let p = match base {
+            Task::Femnist => SystemParams::femnist_small(),
+            Task::Cifar => SystemParams::cifar_small(),
+        };
+        Scenario {
+            name: name.to_string(),
+            description: String::new(),
+            base,
+            topology: Topology {
+                clients: p.num_clients,
+                channels: p.num_channels,
+                cell_radius_m: p.cell_radius_m,
+                aps: p.num_aps,
+            },
+            data: DataSpec {
+                dist: SizeDistKind::Gaussian,
+                size_mean: 1200.0,
+                size_std: 150.0,
+                uniform_lo: 600.0,
+                uniform_hi: 1800.0,
+                zipf_exponent: 1.1,
+                dirichlet_alpha: 0.5,
+                test_size: 512,
+            },
+            wireless: WirelessSpec {
+                gain_db: p.gain_db,
+                carrier_ghz: p.carrier_ghz,
+                rician_k: p.rician_k,
+                deep_fade_frac: p.deep_fade_frac,
+                deep_fade_db: p.deep_fade_db,
+            },
+            compute: ComputeSpec {
+                gamma: p.gamma,
+                f_min: p.f_min,
+                f_max: p.f_max,
+                straggler_frac: p.straggler_frac,
+                straggler_slowdown: p.straggler_slowdown,
+            },
+            train: TrainSpec {
+                algorithms: vec!["qccf".to_string()],
+                rounds: 40,
+                v: None,
+                tau: None,
+                eval_every: 2,
+            },
+        }
+    }
+
+    /// The raw [`SystemParams`] this scenario describes: the base
+    /// Table-I column with every scenario knob applied. Use
+    /// [`Scenario::params_for_runtime`] on the run path — it also
+    /// adapts T^max/η to the loaded artifact profile.
+    pub fn params(&self) -> SystemParams {
+        let mut p = match self.base {
+            Task::Femnist => SystemParams::femnist_small(),
+            Task::Cifar => SystemParams::cifar_small(),
+        };
+        p.num_clients = self.topology.clients;
+        p.num_channels = self.topology.channels;
+        p.cell_radius_m = self.topology.cell_radius_m;
+        p.num_aps = self.topology.aps;
+        p.gain_db = self.wireless.gain_db;
+        p.carrier_ghz = self.wireless.carrier_ghz;
+        p.rician_k = self.wireless.rician_k;
+        p.deep_fade_frac = self.wireless.deep_fade_frac;
+        p.deep_fade_db = self.wireless.deep_fade_db;
+        p.gamma = self.compute.gamma;
+        p.f_min = self.compute.f_min;
+        p.f_max = self.compute.f_max;
+        p.straggler_frac = self.compute.straggler_frac;
+        p.straggler_slowdown = self.compute.straggler_slowdown;
+        if let Some(v) = self.train.v {
+            p.v = v;
+        }
+        if let Some(tau) = self.train.tau {
+            p.tau = tau;
+        }
+        p
+    }
+
+    /// [`Scenario::params`] adapted to a loaded runtime, mirroring the
+    /// historical `params_for` calibration exactly: T^max scales with
+    /// the profile's Z (same per-dimension latency pressure), keeps
+    /// 2× headroom over the minimum compute latency at µ, and η comes
+    /// from the artifact's tuned learning rate.
+    pub fn params_for_runtime(&self, rt: &Runtime) -> SystemParams {
+        let mut p = self.params();
+        let z_ref = p.z;
+        p.z = rt.info.z;
+        p.t_max *= rt.info.z as f64 / z_ref as f64;
+        let t_cmp_min = p.tau_e as f64 * p.gamma * self.data.size_mean / p.f_max;
+        if p.t_max < 2.0 * t_cmp_min {
+            p.t_max = 2.0 * t_cmp_min;
+        }
+        p.eta = rt.info.lr;
+        p
+    }
+
+    /// The [`SizeDist`] value [`Scenario::datagen`] installs.
+    pub fn size_dist(&self) -> SizeDist {
+        match self.data.dist {
+            SizeDistKind::Gaussian => SizeDist::Gaussian,
+            SizeDistKind::Uniform => SizeDist::Uniform {
+                lo: self.data.uniform_lo,
+                hi: self.data.uniform_hi,
+            },
+            SizeDistKind::Zipf => SizeDist::Zipf { exponent: self.data.zipf_exponent },
+        }
+    }
+
+    /// Federation-generation config for this scenario on a loaded
+    /// runtime (image dims / class count come from the artifact).
+    pub fn datagen(&self, rt: &Runtime) -> DataGenConfig {
+        let mut d = DataGenConfig::new(self.topology.clients, rt.info.image, rt.info.classes);
+        d.size_dist = self.size_dist();
+        d.size_mean = self.data.size_mean;
+        d.size_std = self.data.size_std;
+        d.dirichlet_alpha = self.data.dirichlet_alpha;
+        d.test_size = self.data.test_size;
+        d
+    }
+
+    /// Validate the scenario; returns the violated conditions (empty =
+    /// good). Includes [`SystemParams::validate`] on the derived
+    /// parameters, so theorem prerequisites and the explicit-C rule
+    /// (C = 0 or C > U is an error) are enforced on every path.
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        // The name becomes a trace-file stem under the sweep's --out
+        // directory, so it must not be able to traverse out of it.
+        let name_ok = !self.name.is_empty()
+            && self
+                .name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+            && !self.name.contains("..");
+        if !name_ok {
+            errs.push(format!(
+                "name `{}` must be non-empty, use only [A-Za-z0-9._-], and not contain `..` \
+                 (it becomes a file stem)",
+                self.name
+            ));
+        }
+        let t = &self.topology;
+        if t.clients == 0 {
+            errs.push("topology: need at least one client".into());
+        }
+        if t.channels == 0 {
+            errs.push(
+                "topology: C = 0 channels — no round could schedule anyone; \
+                 set `channels` explicitly (1 ..= clients)"
+                    .into(),
+            );
+        }
+        if t.channels > t.clients {
+            errs.push(format!(
+                "topology: C = {} channels > U = {} clients — idle channels are \
+                 unreachable under C1–C3; set channels <= clients",
+                t.channels, t.clients
+            ));
+        }
+        if t.cell_radius_m <= 0.0 {
+            errs.push("topology: cell_radius_m must be positive".into());
+        }
+        let d = &self.data;
+        if d.size_mean <= 0.0 {
+            errs.push("data: size_mean must be positive".into());
+        }
+        match d.dist {
+            SizeDistKind::Gaussian => {
+                if d.size_std < 0.0 {
+                    errs.push("data: size_std must be non-negative".into());
+                }
+            }
+            SizeDistKind::Uniform => {
+                if !(d.uniform_lo > 0.0 && d.uniform_lo <= d.uniform_hi) {
+                    errs.push(format!(
+                        "data: need 0 < uniform_lo <= uniform_hi (got {} .. {})",
+                        d.uniform_lo, d.uniform_hi
+                    ));
+                }
+            }
+            SizeDistKind::Zipf => {
+                if d.zipf_exponent <= 0.0 {
+                    errs.push("data: zipf_exponent must be positive".into());
+                }
+            }
+        }
+        if d.test_size == 0 {
+            errs.push("data: test_size must be at least 1".into());
+        }
+        let tr = &self.train;
+        if tr.rounds == 0 {
+            errs.push("train: rounds must be at least 1".into());
+        }
+        if tr.algorithms.is_empty() {
+            errs.push("train: need at least one algorithm".into());
+        }
+        let mut seen_algs = std::collections::BTreeSet::new();
+        for alg in &tr.algorithms {
+            if !ALL_ALGORITHMS.contains(&alg.as_str()) {
+                errs.push(format!(
+                    "train: unknown algorithm `{alg}` (known: {})",
+                    ALL_ALGORITHMS.join(", ")
+                ));
+            }
+            if !seen_algs.insert(alg.as_str()) {
+                errs.push(format!(
+                    "train: algorithm `{alg}` listed twice (each (scenario, algorithm, \
+                     seed) run owns one trace file)"
+                ));
+            }
+        }
+        // Derived-parameter checks (C bounds again with the base U, the
+        // heterogeneity-class knobs, τ/τ^e divisibility, theorem
+        // prerequisites, physical sanity).
+        for e in self.params().validate() {
+            let msg = format!("params: {e}");
+            if !errs.contains(&msg) {
+                errs.push(msg);
+            }
+        }
+        errs
+    }
+}
+
+/// Load and validate a scenario file (the KV-text format of
+/// `docs/SCENARIOS.md`).
+pub fn load_file(path: &Path) -> Result<Scenario, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    let sc = format::parse_scenario(&text)?;
+    let errs = sc.validate();
+    if !errs.is_empty() {
+        return Err(format!("scenario `{}` invalid: {}", sc.name, errs.join("; ")));
+    }
+    Ok(sc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_base_columns() {
+        let sc = Scenario::defaults("x", Task::Femnist);
+        let p = sc.params();
+        let want = SystemParams::femnist_small();
+        assert_eq!(p.num_clients, want.num_clients);
+        assert_eq!(p.num_channels, want.num_channels);
+        assert_eq!(p.gamma, want.gamma);
+        assert_eq!(p.t_max, want.t_max);
+        assert_eq!(p.v, want.v);
+        let sc = Scenario::defaults("y", Task::Cifar);
+        let p = sc.params();
+        let want = SystemParams::cifar_small();
+        assert_eq!(p.gamma, want.gamma);
+        assert_eq!(p.t_max, want.t_max);
+        assert_eq!(p.v, want.v);
+    }
+
+    #[test]
+    fn overrides_flow_into_params() {
+        let mut sc = Scenario::defaults("x", Task::Femnist);
+        sc.topology.clients = 40;
+        sc.topology.channels = 12;
+        sc.topology.aps = 4;
+        sc.wireless.deep_fade_frac = 0.25;
+        sc.wireless.deep_fade_db = 15.0;
+        sc.compute.straggler_frac = 0.1;
+        sc.compute.straggler_slowdown = 0.5;
+        sc.train.v = Some(37.0);
+        let p = sc.params();
+        assert_eq!((p.num_clients, p.num_channels, p.num_aps), (40, 12, 4));
+        assert_eq!((p.deep_fade_frac, p.deep_fade_db), (0.25, 15.0));
+        assert_eq!((p.straggler_frac, p.straggler_slowdown), (0.1, 0.5));
+        assert_eq!(p.v, 37.0);
+        assert!(sc.validate().is_empty(), "{:?}", sc.validate());
+    }
+
+    #[test]
+    fn validate_rejects_channel_misuse() {
+        let mut sc = Scenario::defaults("x", Task::Femnist);
+        sc.topology.channels = 0;
+        assert!(sc.validate().iter().any(|e| e.contains("C = 0")), "{:?}", sc.validate());
+        sc.topology.channels = sc.topology.clients + 5;
+        assert!(sc.validate().iter().any(|e| e.contains("channels")), "{:?}", sc.validate());
+    }
+
+    #[test]
+    fn validate_rejects_bad_dist_and_algorithms() {
+        let mut sc = Scenario::defaults("x", Task::Femnist);
+        sc.data.dist = SizeDistKind::Uniform;
+        sc.data.uniform_lo = 500.0;
+        sc.data.uniform_hi = 100.0;
+        assert!(!sc.validate().is_empty());
+        let mut sc = Scenario::defaults("x", Task::Femnist);
+        sc.train.algorithms = vec!["nonsense".into()];
+        assert!(sc.validate().iter().any(|e| e.contains("unknown algorithm")));
+        let mut sc = Scenario::defaults("bad name", Task::Femnist);
+        sc.name = "bad name".into();
+        assert!(!sc.validate().is_empty());
+    }
+
+    #[test]
+    fn validate_rejects_path_escaping_names() {
+        // The name is a sweep trace-file stem; it must not traverse.
+        for bad in ["../evil", "a/b", "a\\b", "..", ""] {
+            let mut sc = Scenario::defaults("x", Task::Femnist);
+            sc.name = bad.to_string();
+            assert!(
+                sc.validate().iter().any(|e| e.contains("file stem")),
+                "`{bad}` accepted: {:?}",
+                sc.validate()
+            );
+        }
+        let sc = Scenario::defaults("ok-name_v1.2", Task::Femnist);
+        assert!(sc.validate().is_empty(), "{:?}", sc.validate());
+    }
+
+    #[test]
+    fn validate_rejects_negative_fade() {
+        let mut sc = Scenario::defaults("x", Task::Femnist);
+        sc.wireless.deep_fade_frac = 0.3;
+        sc.wireless.deep_fade_db = -18.0;
+        assert!(
+            sc.validate().iter().any(|e| e.contains("deep_fade_db")),
+            "{:?}",
+            sc.validate()
+        );
+    }
+
+    #[test]
+    fn size_dist_maps_kind_to_knobs() {
+        let mut sc = Scenario::defaults("x", Task::Femnist);
+        assert_eq!(sc.size_dist(), SizeDist::Gaussian);
+        sc.data.dist = SizeDistKind::Zipf;
+        sc.data.zipf_exponent = 1.4;
+        assert_eq!(sc.size_dist(), SizeDist::Zipf { exponent: 1.4 });
+        sc.data.dist = SizeDistKind::Uniform;
+        assert_eq!(
+            sc.size_dist(),
+            SizeDist::Uniform { lo: sc.data.uniform_lo, hi: sc.data.uniform_hi }
+        );
+    }
+}

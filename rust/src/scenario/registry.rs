@@ -1,0 +1,263 @@
+//! Built-in scenario registry: the two paper profiles plus six
+//! stress/heterogeneity workloads drawn from the related work. Each
+//! builder documents *why* the scenario exists; `docs/SCENARIOS.md`
+//! carries the same rationale next to a rendered copy of each file.
+
+use crate::baselines::ALL_ALGORITHMS;
+use crate::experiments::Task;
+
+use super::{Scenario, SizeDistKind};
+
+/// Name-indexed collection of scenarios (built-ins by default; callers
+/// may [`ScenarioRegistry::add`] file-loaded ones).
+pub struct ScenarioRegistry {
+    scenarios: Vec<Scenario>,
+}
+
+impl ScenarioRegistry {
+    /// The eight built-in scenarios, in documentation order.
+    pub fn builtin() -> ScenarioRegistry {
+        ScenarioRegistry {
+            scenarios: vec![
+                paper_femnist(),
+                paper_cifar10(),
+                megacell_100(),
+                zipf_skew(),
+                deep_fade(),
+                cpu_straggler(),
+                cell_free_lite(),
+                stress_1000(),
+            ],
+        }
+    }
+
+    /// Look a scenario up by name.
+    pub fn get(&self, name: &str) -> Option<&Scenario> {
+        self.scenarios.iter().find(|s| s.name == name)
+    }
+
+    /// All scenarios in registration order.
+    pub fn all(&self) -> &[Scenario] {
+        &self.scenarios
+    }
+
+    /// Registered names, in order.
+    pub fn names(&self) -> Vec<&str> {
+        self.scenarios.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    /// Register an additional scenario (e.g. from `--scenario-file`);
+    /// replaces any existing scenario of the same name.
+    pub fn add(&mut self, sc: Scenario) {
+        self.scenarios.retain(|s| s.name != sc.name);
+        self.scenarios.push(sc);
+    }
+}
+
+/// Table I, FEMNIST column — the paper's §VI headline setting
+/// (U = C = 10, Gaussian D_i with µ = 1200 / β = 150, V = 100), all
+/// five algorithms. `fig2`/`fig3`/`fig5` are thin presets over this
+/// scenario; its trace is the cross-version regression anchor.
+pub fn paper_femnist() -> Scenario {
+    let mut sc = Scenario::defaults("paper-femnist", Task::Femnist);
+    sc.description = "Paper Table I, FEMNIST column: U = C = 10 over a 500 m cell, \
+                      Gaussian dataset sizes (1200 +/- 150), all five algorithms. \
+                      The fig2/fig3/fig5 harnesses preset this scenario."
+        .into();
+    sc.train.algorithms = ALL_ALGORITHMS.iter().map(|s| s.to_string()).collect();
+    sc
+}
+
+/// Table I, CIFAR-10 column (γ = 2000 cycles/sample, T^max = 0.05 s,
+/// V = 10) — the `fig4` preset.
+pub fn paper_cifar10() -> Scenario {
+    let mut sc = Scenario::defaults("paper-cifar10", Task::Cifar);
+    sc.description = "Paper Table I, CIFAR-10 column: gamma = 2000, T^max = 0.05 s, \
+                      V = 10, all five algorithms (the fig4 preset)."
+        .into();
+    sc.train.algorithms = ALL_ALGORITHMS.iter().map(|s| s.to_string()).collect();
+    sc
+}
+
+/// 100 clients contending for 24 channels in a bigger cell — the
+/// scheduling constraints C1–C3 finally bind (the paper's U = C = 10
+/// never exercises them), so participation selection matters every
+/// round. Scale regime of the multi-device designs in arXiv:2012.11070.
+pub fn megacell_100() -> Scenario {
+    let mut sc = Scenario::defaults("megacell-100", Task::Femnist);
+    sc.description = "100 clients, 24 channels, 900 m cell: C < U makes channel \
+                      contention and participation selection real (cf. \
+                      arXiv:2012.11070's many-device regime)."
+        .into();
+    sc.topology.clients = 100;
+    sc.topology.channels = 24;
+    sc.topology.cell_radius_m = 900.0;
+    sc.train.rounds = 20;
+    sc
+}
+
+/// Zipf-distributed dataset sizes: a heavy-headed federation where a
+/// few clients hold most data — harsher than the paper's Gaussian β
+/// sweep and exactly where size-aware quantization (Remark 2) should
+/// shine while the equal-size assumption of Same-Size breaks.
+pub fn zipf_skew() -> Scenario {
+    let mut sc = Scenario::defaults("zipf-skew", Task::Femnist);
+    sc.description = "20 clients, 12 channels, Zipf(1.1) dataset sizes: the heavy \
+                      head stresses Remark-2 size-adaptivity; same-size runs for \
+                      contrast (its equal-D assumption is maximally wrong here)."
+        .into();
+    sc.topology.clients = 20;
+    sc.topology.channels = 12;
+    sc.data.dist = SizeDistKind::Zipf;
+    sc.data.zipf_exponent = 1.1;
+    sc.train.algorithms = vec!["qccf".into(), "same-size".into()];
+    sc.train.rounds = 30;
+    sc
+}
+
+/// A 30% deep-fade class (18 dB extra attenuation): bimodal channel
+/// statistics like the shadowed users of cell-free studies
+/// (arXiv:2412.20785). Channel-aware methods should route around the
+/// faded class; channel-oblivious ones pay in dropouts.
+pub fn deep_fade() -> Scenario {
+    let mut sc = Scenario::defaults("deep-fade", Task::Femnist);
+    sc.description = "30% of clients carry 18 dB extra attenuation: bimodal channel \
+                      quality (cf. arXiv:2412.20785's shadowed users). Contrasts \
+                      channel-aware qccf with channel-allocate."
+        .into();
+    sc.wireless.deep_fade_frac = 0.3;
+    sc.wireless.deep_fade_db = 18.0;
+    sc.train.algorithms = vec!["qccf".into(), "channel-allocate".into()];
+    sc.train.rounds = 30;
+    sc
+}
+
+/// A 20% CPU-straggler class throttled to 45% of the decided frequency:
+/// the scheduler plans at nominal capability, realized latency pays —
+/// the compute-heterogeneity analog of the paper's large-D timeout
+/// analysis (and of arXiv:2012.11070's heterogeneous mobile devices).
+pub fn cpu_straggler() -> Scenario {
+    let mut sc = Scenario::defaults("cpu-straggler", Task::Femnist);
+    sc.description = "20% of clients throttled to 45% realized CPU frequency: \
+                      oblivious decisions meet heterogeneous compute (cf. \
+                      arXiv:2012.11070). Principle's deadline-blind ramp is the \
+                      natural victim baseline."
+        .into();
+    sc.compute.straggler_frac = 0.2;
+    sc.compute.straggler_slowdown = 0.45;
+    sc.train.algorithms = vec!["qccf".into(), "principle".into()];
+    sc.train.rounds = 30;
+    sc
+}
+
+/// Cell-free lite: 24 clients served by the nearest of 4 APs in an
+/// 800 m area — pathloss variance collapses versus a single cell, the
+/// setting of adaptive quantization for cell-free massive MIMO
+/// (arXiv:2412.20785).
+pub fn cell_free_lite() -> Scenario {
+    let mut sc = Scenario::defaults("cell-free-lite", Task::Femnist);
+    sc.description = "24 clients, 12 channels, 4 access points (nearest-AP \
+                      pathloss, 800 m area): the cell-free topology of \
+                      arXiv:2412.20785, lite — fading stays per-channel Rician."
+        .into();
+    sc.topology.clients = 24;
+    sc.topology.channels = 12;
+    sc.topology.aps = 4;
+    sc.topology.cell_radius_m = 800.0;
+    sc.train.rounds = 20;
+    sc
+}
+
+/// 1000 clients / 64 channels: the ROADMAP's scale direction. Synthetic
+/// data covers any U on any artifact profile, so this exercises the
+/// decision pipeline (GA over a 64-channel allocation, 1000-client
+/// bookkeeping) and the sweep fan-out rather than model quality —
+/// rounds are few and evaluation is off by default.
+pub fn stress_1000() -> Scenario {
+    let mut sc = Scenario::defaults("stress-1000", Task::Femnist);
+    sc.description = "1000 clients, 64 channels, 1200 m cell, 3 rounds, no eval: \
+                      a decision-pipeline and sweep-runner scale smoke (synthetic \
+                      data covers any U, so no artifact change is needed)."
+        .into();
+    sc.topology.clients = 1000;
+    sc.topology.channels = 64;
+    sc.topology.cell_radius_m = 1200.0;
+    sc.train.rounds = 3;
+    sc.train.eval_every = 0;
+    sc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::format;
+
+    #[test]
+    fn builtins_present_and_valid() {
+        let reg = ScenarioRegistry::builtin();
+        let names = reg.names();
+        for want in [
+            "paper-femnist",
+            "paper-cifar10",
+            "megacell-100",
+            "zipf-skew",
+            "deep-fade",
+            "cpu-straggler",
+            "cell-free-lite",
+            "stress-1000",
+        ] {
+            assert!(names.contains(&want), "missing builtin `{want}`");
+            let sc = reg.get(want).unwrap();
+            assert!(sc.validate().is_empty(), "{want}: {:?}", sc.validate());
+            assert!(!sc.description.is_empty(), "{want} undocumented");
+        }
+        assert_eq!(reg.all().len(), 8);
+    }
+
+    #[test]
+    fn builtins_roundtrip_through_text() {
+        // parse(render(s)) == s for every builtin — the registry
+        // round-trip contract of the scenario file format.
+        for sc in ScenarioRegistry::builtin().all() {
+            let text = format::render(sc);
+            let back = format::parse_scenario(&text)
+                .unwrap_or_else(|e| panic!("{}: {e}", sc.name));
+            assert_eq!(&back, sc, "{} did not round-trip", sc.name);
+        }
+    }
+
+    #[test]
+    fn paper_preset_matches_table_i() {
+        let sc = paper_femnist();
+        let p = sc.params();
+        let want = crate::config::SystemParams::femnist_small();
+        assert_eq!(p.num_clients, want.num_clients);
+        assert_eq!(p.num_channels, want.num_channels);
+        assert_eq!(p.gamma, want.gamma);
+        assert_eq!(p.t_max, want.t_max);
+        assert_eq!(p.v, want.v);
+        assert_eq!(sc.train.algorithms.len(), 5);
+        let p = paper_cifar10().params();
+        assert_eq!(p.gamma, 2000.0);
+        assert_eq!(p.v, 10.0);
+    }
+
+    #[test]
+    fn add_replaces_same_name() {
+        let mut reg = ScenarioRegistry::builtin();
+        let mut sc = paper_femnist();
+        sc.train.rounds = 7;
+        reg.add(sc);
+        assert_eq!(reg.all().len(), 8);
+        assert_eq!(reg.get("paper-femnist").unwrap().train.rounds, 7);
+    }
+
+    #[test]
+    fn contention_scenarios_have_c_below_u() {
+        let reg = ScenarioRegistry::builtin();
+        for name in ["megacell-100", "zipf-skew", "cell-free-lite", "stress-1000"] {
+            let t = &reg.get(name).unwrap().topology;
+            assert!(t.channels < t.clients, "{name} should exercise C < U");
+        }
+    }
+}

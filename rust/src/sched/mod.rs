@@ -19,8 +19,11 @@ use crate::wireless::ChannelState;
 
 /// Everything a scheduler may look at when deciding round n.
 pub struct RoundInputs<'a> {
+    /// System parameters.
     pub params: &'a SystemParams,
+    /// Communication-round index n.
     pub round: usize,
+    /// This round's channel realization.
     pub channels: &'a ChannelState,
     /// D_i for every client.
     pub sizes: &'a [f64],
@@ -34,12 +37,14 @@ pub struct RoundInputs<'a> {
     pub theta_max: &'a [f64],
     /// Last-participation q per client (Case-5 anchor).
     pub q_prev: &'a [f64],
+    /// The virtual queues λ1/λ2.
     pub queues: &'a Queues,
 }
 
 /// Per-client intended decision.
 #[derive(Clone, Copy, Debug)]
 pub struct ClientDecision {
+    /// Allocated OFDMA channel index.
     pub channel: usize,
     /// Quantization level; `None` = raw 32-bit upload (No-Quantization).
     pub q: Option<u32>,
@@ -52,6 +57,7 @@ pub struct ClientDecision {
 /// The round's decision vector + diagnostics.
 #[derive(Clone, Debug, Default)]
 pub struct RoundDecision {
+    /// Per-client decision (`None` = not scheduled this round).
     pub assignments: Vec<Option<ClientDecision>>,
     /// Objective value J0 the scheduler believed it achieved (if any).
     pub j0: f64,
@@ -66,7 +72,9 @@ pub struct RoundDecision {
 
 /// A per-round decision policy.
 pub trait Scheduler {
+    /// Stable algorithm name (trace/CSV key).
     fn name(&self) -> &'static str;
+    /// Decide round n's participation, channels, levels and frequencies.
     fn decide(&mut self, inp: &RoundInputs<'_>) -> RoundDecision;
 }
 

@@ -7,22 +7,29 @@ use crate::ga::{self, GaParams};
 use crate::solver::Case5Mode;
 use crate::util::rng::Rng;
 
+/// The QCCF scheduler (paper Algorithm 1 wrapped around the
+/// closed-form per-client solver).
 pub struct QccfScheduler {
+    /// GA hyperparameters for the channel-allocation search.
     pub ga: GaParams,
+    /// Case-5 solver mode (paper Taylor step vs exact bisection).
     pub case5: Case5Mode,
     rng: Rng,
 }
 
 impl QccfScheduler {
+    /// Scheduler with default GA budget and the paper's Taylor mode.
     pub fn new(seed: u64) -> QccfScheduler {
         QccfScheduler { ga: GaParams::default(), case5: Case5Mode::Taylor, rng: Rng::seed_from(seed) }
     }
 
+    /// Replace the GA hyperparameters.
     pub fn with_ga(mut self, ga: GaParams) -> Self {
         self.ga = ga;
         self
     }
 
+    /// Select the Case-5 solver mode.
     pub fn with_case5(mut self, mode: Case5Mode) -> Self {
         self.case5 = mode;
         self

@@ -6,11 +6,15 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: subcommand, `--key value` options, `--flag`
+/// switches, and positionals.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// The subcommand (first non-option token), if any.
     pub cmd: Option<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Non-option tokens after the subcommand.
     pub positionals: Vec<String>,
 }
 
@@ -42,30 +46,37 @@ impl Args {
         out
     }
 
+    /// Parse from the process arguments.
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Whether `--name` was given as a flag (or `--name=true`).
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name) || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
     }
 
+    /// Raw value of option `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// Option value with a default.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// `f64` option with a default (unparseable values fall back).
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `usize` option with a default (unparseable values fall back).
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `u64` option with a default (unparseable values fall back).
     pub fn get_u64(&self, name: &str, default: u64) -> u64 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }

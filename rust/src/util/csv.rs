@@ -5,6 +5,7 @@ use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
+/// Buffered CSV writer with a fixed column count.
 pub struct CsvWriter {
     out: BufWriter<File>,
     ncol: usize,
@@ -19,6 +20,7 @@ fn escape(cell: &str) -> String {
 }
 
 impl CsvWriter {
+    /// Create (parents included) and write the header row.
     pub fn create<P: AsRef<Path>>(path: P, headers: &[&str]) -> std::io::Result<CsvWriter> {
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir)?;
@@ -36,16 +38,19 @@ impl CsvWriter {
         writeln!(self.out, "{}", line.join(","))
     }
 
+    /// Write one row (must match the header's column count).
     pub fn row(&mut self, cells: &[String]) -> std::io::Result<()> {
         debug_assert_eq!(cells.len(), self.ncol, "column count mismatch");
         let refs: Vec<&str> = cells.iter().map(|s| s.as_str()).collect();
         self.write_raw(&refs)
     }
 
+    /// Write one row of numbers.
     pub fn row_f64(&mut self, cells: &[f64]) -> std::io::Result<()> {
         self.row(&cells.iter().map(|x| format!("{x}")).collect::<Vec<_>>())
     }
 
+    /// Flush the underlying buffer.
     pub fn flush(&mut self) -> std::io::Result<()> {
         self.out.flush()
     }

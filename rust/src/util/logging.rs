@@ -6,12 +6,18 @@ use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
+/// Log severity (ascending verbosity).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
+    /// Unrecoverable problems.
     Error = 0,
+    /// Suspicious-but-continuing conditions.
     Warn = 1,
+    /// Run-level progress (the default).
     Info = 2,
+    /// Per-round diagnostics.
     Debug = 3,
+    /// Per-client firehose.
     Trace = 4,
 }
 
@@ -36,14 +42,17 @@ pub fn init() {
     }
 }
 
+/// Set the global log level.
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Whether `level` currently prints.
 pub fn enabled(level: Level) -> bool {
     level as u8 <= LEVEL.load(Ordering::Relaxed)
 }
 
+/// Emit one log line (use the `info!`/`warn_log!`/`debug_log!` macros).
 pub fn log(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
     if !enabled(level) {
         return;
@@ -59,6 +68,7 @@ pub fn log(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
     eprintln!("[{t:9.3}s {tag} {target}] {msg}");
 }
 
+/// Log at [`util::logging::Level::Info`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! info {
     ($target:expr, $($arg:tt)*) => {
@@ -67,6 +77,7 @@ macro_rules! info {
     };
 }
 
+/// Log at [`util::logging::Level::Warn`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! warn_log {
     ($target:expr, $($arg:tt)*) => {
@@ -75,6 +86,7 @@ macro_rules! warn_log {
     };
 }
 
+/// Log at [`util::logging::Level::Debug`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! debug_log {
     ($target:expr, $($arg:tt)*) => {

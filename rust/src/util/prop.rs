@@ -15,6 +15,7 @@ fn master_seed() -> u64 {
         .unwrap_or(0x5EED_CAFE)
 }
 
+/// Iteration count: `QCCF_PROP_ITERS` or `default`.
 pub fn iters(default: usize) -> usize {
     std::env::var("QCCF_PROP_ITERS")
         .ok()

@@ -50,6 +50,7 @@ impl Rng {
         Rng::seed_from(mix)
     }
 
+    /// Next raw 64-bit draw (xoshiro256++ step).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);

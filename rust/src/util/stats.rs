@@ -12,10 +12,12 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// Fresh accumulator.
     pub fn new() -> Self {
         Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one observation in.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -25,10 +27,12 @@ impl Welford {
         self.max = self.max.max(x);
     }
 
+    /// Number of observations.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -51,18 +55,22 @@ impl Welford {
         }
     }
 
+    /// Population standard deviation.
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest observation.
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest observation.
     pub fn max(&self) -> f64 {
         self.max
     }
 
+    /// Fold another accumulator in (parallel Welford combine).
     pub fn merge(&mut self, other: &Welford) {
         if other.n == 0 {
             return;
@@ -93,6 +101,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     v[rank.min(v.len() - 1)]
 }
 
+/// Arithmetic mean (NaN for an empty slice).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
@@ -100,6 +109,7 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
+/// Sample standard deviation (0 below two observations).
 pub fn std(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
         return 0.0;

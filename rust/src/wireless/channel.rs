@@ -26,14 +26,53 @@ pub struct ChannelModel {
 impl ChannelModel {
     /// Place `U` clients uniformly in the cell disk (area-uniform:
     /// d = R·sqrt(u)) and precompute large-scale gains.
+    ///
+    /// Two scenario-subsystem extensions, both inert at the Table-I
+    /// defaults (they consume **no** extra RNG draws when disabled, so
+    /// paper-profile channel realizations are unchanged):
+    ///
+    /// * `params.num_aps > 1` — *cell-free lite*: APs are placed
+    ///   area-uniformly in the same disk and each client's serving
+    ///   distance is to its **nearest** AP (the pathloss side of a
+    ///   cell-free deployment; small-scale fading stays per-channel
+    ///   Rician);
+    /// * `params.deep_fade_frac > 0` — the deep-fade client class gets
+    ///   `deep_fade_db` of extra large-scale attenuation
+    ///   ([`SystemParams::in_deep_fade`]).
     pub fn new(params: &SystemParams, rng: &mut Rng) -> ChannelModel {
-        let distances_m: Vec<f64> = (0..params.num_clients)
-            .map(|_| params.cell_radius_m * rng.uniform().sqrt())
-            .collect();
+        let distances_m: Vec<f64> = if params.num_aps <= 1 {
+            (0..params.num_clients)
+                .map(|_| params.cell_radius_m * rng.uniform().sqrt())
+                .collect()
+        } else {
+            let place = |rng: &mut Rng| -> (f64, f64) {
+                let r = params.cell_radius_m * rng.uniform().sqrt();
+                let a = std::f64::consts::TAU * rng.uniform();
+                (r * a.cos(), r * a.sin())
+            };
+            let aps: Vec<(f64, f64)> = (0..params.num_aps).map(|_| place(rng)).collect();
+            (0..params.num_clients)
+                .map(|_| {
+                    let (x, y) = place(rng);
+                    aps.iter()
+                        .map(|&(ax, ay)| ((x - ax).powi(2) + (y - ay).powi(2)).sqrt())
+                        .fold(f64::INFINITY, f64::min)
+                })
+                .collect()
+        };
         let gain = db_to_lin(params.gain_db);
+        let fade = db_to_lin(-params.deep_fade_db);
         let large_scale = distances_m
             .iter()
-            .map(|&d| gain * pathloss_gain(d, params.carrier_ghz))
+            .enumerate()
+            .map(|(i, &d)| {
+                let g = gain * pathloss_gain(d, params.carrier_ghz);
+                if params.in_deep_fade(i) {
+                    g * fade
+                } else {
+                    g
+                }
+            })
             .collect();
         ChannelModel {
             distances_m,
@@ -70,7 +109,9 @@ impl ChannelModel {
 /// One round's channel realization.
 #[derive(Clone, Debug)]
 pub struct ChannelState {
+    /// U — clients in this realization.
     pub num_clients: usize,
+    /// C — channels in this realization.
     pub num_channels: usize,
     /// Row-major `[client][channel]` composite power gains.
     gains: Vec<f64>,
@@ -79,10 +120,12 @@ pub struct ChannelState {
 }
 
 impl ChannelState {
+    /// Composite power gain `h_{i,c}^n`.
     pub fn gain(&self, client: usize, channel: usize) -> f64 {
         self.gains[client * self.num_channels + channel]
     }
 
+    /// Shannon rate of the (client, channel) pair (bit/s).
     pub fn rate(&self, client: usize, channel: usize) -> f64 {
         self.rates[client * self.num_channels + channel]
     }
@@ -166,6 +209,49 @@ mod tests {
         }
         let mean = all.iter().sum::<f64>() / all.len() as f64;
         assert!(mean > 5e6 && mean < 60e6, "mean rate {mean}");
+    }
+
+    #[test]
+    fn deep_fade_class_attenuated() {
+        let mut params = SystemParams::femnist_small();
+        params.deep_fade_frac = 0.3;
+        params.deep_fade_db = 20.0;
+        // Same seed with and without the fade: the class loses exactly
+        // 20 dB of large-scale gain, everyone else is untouched.
+        let mut rng_a = Rng::seed_from(9);
+        let faded = ChannelModel::new(&params, &mut rng_a);
+        let mut rng_b = Rng::seed_from(9);
+        let baseline = ChannelModel::new(&SystemParams::femnist_small(), &mut rng_b);
+        for i in 0..10 {
+            let ratio = faded.large_scale[i] / baseline.large_scale[i];
+            if params.in_deep_fade(i) {
+                assert!((ratio - 0.01).abs() < 1e-9, "client {i}: ratio {ratio}");
+            } else {
+                assert!((ratio - 1.0).abs() < 1e-12, "client {i}: ratio {ratio}");
+            }
+        }
+    }
+
+    #[test]
+    fn cell_free_layout_shrinks_serving_distance() {
+        // With many APs scattered in the disk the nearest-AP distance
+        // is stochastically much smaller than the distance to a single
+        // central BS; check the aggregate effect over several seeds.
+        let mut cf = SystemParams::femnist_small();
+        cf.num_aps = 8;
+        let single = SystemParams::femnist_small();
+        let (mut d_cf, mut d_sc) = (0.0, 0.0);
+        for seed in 0..5u64 {
+            let mut r1 = Rng::seed_from(seed);
+            d_cf += ChannelModel::new(&cf, &mut r1).distances_m.iter().sum::<f64>();
+            let mut r2 = Rng::seed_from(seed);
+            d_sc += ChannelModel::new(&single, &mut r2).distances_m.iter().sum::<f64>();
+        }
+        assert!(d_cf < d_sc, "cell-free mean distance {d_cf} !< single-cell {d_sc}");
+        // Serving distances stay inside the deployment area.
+        let mut r = Rng::seed_from(3);
+        let m = ChannelModel::new(&cf, &mut r);
+        assert!(m.distances_m.iter().all(|&d| (0.0..=2.0 * 500.0).contains(&d)));
     }
 
     #[test]

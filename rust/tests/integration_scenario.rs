@@ -1,0 +1,224 @@
+//! Scenario-subsystem integration: registry round-trips through the
+//! file format, scenario files load from disk, the fig harnesses
+//! reproduce their pre-refactor traces through the scenario path, and
+//! `sweep` emits deterministic, schema-valid JSONL for any thread
+//! count.
+//!
+//! Runtime-dependent tests no-op (with a note) when `make artifacts`
+//! hasn't run, same as the other integration suites.
+
+use std::path::PathBuf;
+
+use qccf::baselines::make_scheduler_with_threads;
+use qccf::data::{self, DataGenConfig};
+use qccf::experiments::common::params_for;
+use qccf::experiments::{run_one, run_scenario, sweep, RunSpec, Task};
+use qccf::fl::Server;
+use qccf::metrics::Trace;
+use qccf::runtime::{artifacts_dir, Runtime};
+use qccf::scenario::{self, registry, ScenarioRegistry};
+use qccf::util::json;
+
+fn runtime() -> Option<Runtime> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(&artifacts_dir(), "tiny").expect("load tiny runtime"))
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qccf_scn_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn registry_roundtrip_parse_render_parse() {
+    // parse → render → parse must be the identity for every builtin.
+    for sc in ScenarioRegistry::builtin().all() {
+        let text = scenario::render(sc);
+        let once = scenario::parse_scenario(&text).expect(&sc.name);
+        assert_eq!(&once, sc, "{}: parse(render(s)) != s", sc.name);
+        let twice = scenario::parse_scenario(&scenario::render(&once)).unwrap();
+        assert_eq!(twice, once, "{}: second round-trip diverged", sc.name);
+    }
+}
+
+#[test]
+fn scenario_file_loads_from_disk() {
+    let dir = tmp_dir("file");
+    let path = dir.join("custom.scn");
+    std::fs::write(
+        &path,
+        "[scenario]\nname = disk-check\nbase = femnist\n\
+         [topology]\nclients = 30\nchannels = 10\n\
+         [data]\nsize_dist = uniform\nuniform_lo = 200\nuniform_hi = 400\n\
+         [train]\nalgorithms = qccf\nrounds = 5\n",
+    )
+    .unwrap();
+    let sc = scenario::load_file(&path).unwrap();
+    assert_eq!(sc.name, "disk-check");
+    assert_eq!((sc.topology.clients, sc.topology.channels), (30, 10));
+    assert_eq!(sc.train.rounds, 5);
+
+    // Invalid files are rejected with the validation message.
+    let bad = dir.join("bad.scn");
+    std::fs::write(&bad, "[scenario]\nname = broken\n[topology]\nclients = 4\nchannels = 9\n")
+        .unwrap();
+    let err = scenario::load_file(&bad).unwrap_err();
+    assert!(err.contains("channels"), "{err}");
+    assert!(scenario::load_file(&dir.join("missing.scn")).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fig_regression_scenario_path_matches_pre_refactor_runner() {
+    // The paper-femnist profile through the scenario path must equal
+    // the pre-refactor `run_one` (replicated inline below exactly as it
+    // was: params_for → DataGenConfig → scheduler(seed*31+7) → Server)
+    // — this is the fig2 grid point (qccf, V = 10, seed 7).
+    let Some(rt) = runtime() else { return };
+    let (seed, rounds, v) = (7u64, 3usize, 10.0);
+
+    let mut params = params_for(&rt, Task::Femnist, 1200.0);
+    params.v = v;
+    let mut dcfg = DataGenConfig::new(params.num_clients, rt.info.image, rt.info.classes);
+    dcfg.size_mean = 1200.0;
+    dcfg.size_std = 150.0;
+    let fed = data::generate(&dcfg, seed);
+    let sched =
+        make_scheduler_with_threads("qccf", seed.wrapping_mul(31).wrapping_add(7), 1).unwrap();
+    let mut server = Server::new(params, &rt, fed, sched, seed).expect("server");
+    server.eval_every = 2;
+    server.threads = 1;
+    let legacy = server.run(rounds).unwrap();
+
+    let mut spec = RunSpec::new("qccf", Task::Femnist);
+    spec.rounds = rounds;
+    spec.v = Some(v);
+    spec.seed = seed;
+    spec.threads = 1;
+    let via_scenario = run_one(&rt, &spec).unwrap();
+
+    assert_traces_identical(&legacy, &via_scenario);
+
+    // And the same through an explicit registry scenario.
+    let mut sc = registry::paper_femnist();
+    sc.train.rounds = rounds;
+    sc.train.v = Some(v);
+    let via_registry = run_scenario(&rt, &sc, "qccf", seed, 1).unwrap();
+    assert_traces_identical(&legacy, &via_registry);
+}
+
+fn assert_traces_identical(a: &Trace, b: &Trace) {
+    assert_eq!(a.records.len(), b.records.len());
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.scheduled, y.scheduled);
+        assert_eq!(x.aggregated, y.aggregated);
+        assert_eq!(x.energy.to_bits(), y.energy.to_bits());
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
+        assert_eq!(x.test_loss, y.test_loss);
+        assert_eq!(x.test_acc, y.test_acc);
+        assert_eq!(x.mean_q, y.mean_q);
+        assert_eq!(x.q_per_client, y.q_per_client);
+        assert_eq!(x.lambda1.to_bits(), y.lambda1.to_bits());
+        assert_eq!(x.lambda2.to_bits(), y.lambda2.to_bits());
+        assert_eq!(x.max_latency.to_bits(), y.max_latency.to_bits());
+    }
+}
+
+fn sweep_cfg(out_dir: PathBuf, threads: usize) -> sweep::SweepConfig {
+    sweep::SweepConfig {
+        scenarios: vec![registry::paper_femnist(), registry::zipf_skew()],
+        seeds: vec![1, 2],
+        algorithms: Some(vec!["qccf".to_string()]),
+        rounds: Some(2),
+        out_dir,
+        threads,
+    }
+}
+
+#[test]
+fn sweep_deterministic_across_threads_and_schema_valid() {
+    let Some(rt) = runtime() else { return };
+    let dir_serial = tmp_dir("sweep1");
+    let dir_parallel = tmp_dir("sweep3");
+    let rows_serial = sweep::run(&rt, &sweep_cfg(dir_serial.clone(), 1)).unwrap();
+    let rows_parallel = sweep::run(&rt, &sweep_cfg(dir_parallel.clone(), 3)).unwrap();
+
+    // One JSONL per (scenario, seed, algorithm) unit + identical rows.
+    assert_eq!(rows_serial.len(), 4);
+    assert_eq!(rows_parallel.len(), 4);
+    for (a, b) in rows_serial.iter().zip(&rows_parallel) {
+        assert_eq!((&a.scenario, &a.algorithm, a.seed), (&b.scenario, &b.algorithm, b.seed));
+        assert_eq!(a.cum_energy.to_bits(), b.cum_energy.to_bits());
+    }
+
+    // Bit-identical output trees for any --threads value.
+    let mut names: Vec<String> = std::fs::read_dir(&dir_serial)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+    assert_eq!(names.len(), 5, "4 traces + summary.csv: {names:?}");
+    assert!(names.contains(&"summary.csv".to_string()));
+    assert!(names.contains(&"paper-femnist__qccf__seed1.jsonl".to_string()));
+    assert!(names.contains(&"zipf-skew__qccf__seed2.jsonl".to_string()));
+    for name in &names {
+        let a = std::fs::read(dir_serial.join(name)).unwrap();
+        let b = std::fs::read(dir_parallel.join(name)).unwrap();
+        assert_eq!(a, b, "{name} differs across sweep --threads");
+    }
+
+    // Schema check: every JSONL line parses and carries the required
+    // keys with consistent meta.
+    for name in names.iter().filter(|n| n.ends_with(".jsonl")) {
+        let text = std::fs::read_to_string(dir_serial.join(name)).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "{name}: expected 2 rounds");
+        for (i, line) in lines.iter().enumerate() {
+            let v = json::parse(line).unwrap_or_else(|e| panic!("{name} line {i}: {e}"));
+            for key in [
+                "scenario",
+                "algorithm",
+                "seed",
+                "round",
+                "scheduled",
+                "aggregated",
+                "energy_j",
+                "cum_energy_j",
+                "mean_q",
+                "q_per_client",
+                "lambda1",
+                "lambda2",
+                "max_latency_s",
+            ] {
+                assert!(v.get(key).is_some(), "{name} line {i}: missing `{key}`");
+            }
+            assert_eq!(v.get("round").and_then(|x| x.as_usize()), Some(i + 1));
+            assert!(name.starts_with(v.get("scenario").unwrap().as_str().unwrap()));
+        }
+    }
+    std::fs::remove_dir_all(&dir_serial).ok();
+    std::fs::remove_dir_all(&dir_parallel).ok();
+}
+
+#[test]
+fn heterogeneity_scenarios_run_end_to_end() {
+    // The class-based scenarios must execute through the real engine:
+    // deep-fade (channel classes) and cpu-straggler (throttled realized
+    // frequency) for 2 rounds each on the tiny profile.
+    let Some(rt) = runtime() else { return };
+    for name in ["deep-fade", "cpu-straggler"] {
+        let mut sc = ScenarioRegistry::builtin().get(name).unwrap().clone();
+        sc.train.rounds = 2;
+        let trace = run_scenario(&rt, &sc, "qccf", 3, 1)
+            .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(trace.records.len(), 2, "{name}");
+        let scheduled: usize = trace.records.iter().map(|r| r.scheduled).sum();
+        assert!(scheduled > 0, "{name}: nothing scheduled");
+        assert!(trace.total_energy() > 0.0 && trace.total_energy().is_finite(), "{name}");
+    }
+}

@@ -28,4 +28,24 @@ echo "== cargo test -q =="
 cargo test -q
 echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
+echo "== cargo doc --no-deps (warnings denied) =="
+RUSTDOCFLAGS="${RUSTDOCFLAGS:-} -D warnings" cargo doc --no-deps --quiet
+
+# Scenario-path smoke: two built-in scenarios through the sweep runner
+# (2 rounds, tiny profile). Needs artifacts, like the integration tests.
+if [ -f artifacts/manifest.json ]; then
+    echo "== sweep --quick smoke (paper-femnist, zipf-skew) =="
+    SWEEP_OUT="$(mktemp -d)"
+    trap 'rm -rf "$SWEEP_OUT"' EXIT
+    cargo run --release --quiet -- sweep \
+        --scenarios paper-femnist,zipf-skew --algorithms qccf \
+        --seeds 1 --quick --profile tiny --threads 2 --out "$SWEEP_OUT"
+    for f in "$SWEEP_OUT"/paper-femnist__qccf__seed1.jsonl \
+             "$SWEEP_OUT"/zipf-skew__qccf__seed1.jsonl \
+             "$SWEEP_OUT"/summary.csv; do
+        [ -s "$f" ] || { echo "verify.sh: sweep smoke missing $f" >&2; exit 1; }
+    done
+else
+    echo "== sweep smoke skipped (no artifacts/manifest.json — run make artifacts) =="
+fi
 echo "== verify OK =="
