@@ -22,7 +22,13 @@ fn main() {
             quant::encode(tmax, &signs, &idx, 8)
         });
         let bytes = quant::encode(tmax, &signs, &idx, 8);
-        set.bench(&format!("wire_decode_z{z}_q8"), || quant::decode(&bytes, z, 8));
+        set.bench(&format!("wire_decode_z{z}_q8"), || quant::decode(&bytes, z, 8).unwrap());
+        // The transport hot path: fold w·(idx·Δ) straight out of the
+        // bitstream (no dequantized Vec<f32> materialized).
+        let mut acc = vec![0.0f32; z];
+        set.bench(&format!("wire_decode_fold_z{z}_q8"), || {
+            quant::wire::fold_into(&mut acc, 0.25, &bytes, 8).unwrap()
+        });
     }
     // Noise-stream generation (runs once per upload on the hot path).
     {

@@ -123,6 +123,81 @@ impl BenchSet {
     }
 }
 
+/// One row of the wire-transport perf baseline (`BENCH_wire.json`).
+#[derive(Clone, Debug)]
+pub struct WireBenchRow {
+    /// `wire/<op>_z<Z>_q<q>` identifier.
+    pub name: String,
+    /// Iterations measured.
+    pub iters: u64,
+    /// Mean per-iteration wall time (ns).
+    pub mean_ns: f64,
+    /// Mean wall time per model dimension (ns/elem) — the
+    /// size-independent number later PRs regress against.
+    pub ns_per_elem: f64,
+}
+
+/// Run the byte-transport microbench: `quant::wire::encode` and the
+/// fused decode-fold (`quant::wire::fold_into`) over a Z-dimensional
+/// model at each level in `qs`. Pure Rust — no artifacts needed — so
+/// `verify.sh` can run it as a tier-1 smoke (see the `bench-wire` CLI
+/// subcommand, which writes the rows to `BENCH_wire.json`).
+pub fn run_wire_bench(z: usize, qs: &[u32]) -> Vec<WireBenchRow> {
+    let mut set = BenchSet::new("wire");
+    let mut rng = crate::util::rng::Rng::seed_from(0xB17E);
+    let theta: Vec<f32> = (0..z).map(|_| rng.gaussian(0.0, 0.5) as f32).collect();
+    let mut noise = vec![0.0f32; z];
+    rng.fill_uniform_f32(&mut noise);
+    for &q in qs {
+        let (idx, signs, tmax) = crate::quant::knot_indices(&theta, &noise, q);
+        set.bench(&format!("encode_z{z}_q{q}"), || crate::quant::encode(tmax, &signs, &idx, q));
+        let bytes = crate::quant::encode(tmax, &signs, &idx, q);
+        let mut acc = vec![0.0f32; z];
+        set.bench(&format!("decode_fold_z{z}_q{q}"), || {
+            crate::quant::wire::fold_into(&mut acc, 0.25, &bytes, q).unwrap()
+        });
+    }
+    set.results
+        .iter()
+        .map(|r| WireBenchRow {
+            name: r.name.clone(),
+            iters: r.iters,
+            mean_ns: r.mean_ns,
+            ns_per_elem: r.mean_ns / z.max(1) as f64,
+        })
+        .collect()
+}
+
+/// Write wire-bench rows as a single JSON document (`BENCH_wire.json`):
+/// `{"z": Z, "benches": [{name, iters, mean_ns, ns_per_elem}, ...]}` —
+/// the perf baseline subsequent PRs diff against.
+pub fn write_wire_bench_json(
+    path: &std::path::Path,
+    z: usize,
+    rows: &[WireBenchRow],
+) -> std::io::Result<()> {
+    use crate::util::json::{self, Json};
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let benches = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("name", json::s(&r.name)),
+                    ("iters", json::num(r.iters as f64)),
+                    ("mean_ns", json::num(r.mean_ns)),
+                    ("ns_per_elem", json::num(r.ns_per_elem)),
+                ])
+            })
+            .collect(),
+    );
+    let doc = json::obj(vec![("z", json::num(z as f64)), ("benches", benches)]);
+    std::fs::write(path, format!("{}\n", doc.to_string_compact()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +215,25 @@ mod tests {
         assert_eq!(set.results.len(), 1);
         assert!(set.results[0].iters > 0);
         assert!(set.results[0].mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn wire_bench_rows_and_json() {
+        std::env::set_var("QCCF_BENCH_WARMUP_MS", "1");
+        std::env::set_var("QCCF_BENCH_MEASURE_MS", "5");
+        let rows = run_wire_bench(512, &[4, 8]);
+        assert_eq!(rows.len(), 4, "encode + decode-fold per q");
+        assert!(rows.iter().all(|r| r.iters > 0 && r.ns_per_elem >= 0.0));
+        assert!(rows.iter().any(|r| r.name.contains("encode_z512_q4")));
+        assert!(rows.iter().any(|r| r.name.contains("decode_fold_z512_q8")));
+        let dir = std::env::temp_dir().join("qccf_wire_bench_test");
+        let path = dir.join("BENCH_wire.json");
+        write_wire_bench_json(&path, 512, &rows).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::parse(text.trim()).unwrap();
+        assert_eq!(doc.get("z").and_then(|x| x.as_usize()), Some(512));
+        assert_eq!(doc.get("benches").and_then(|x| x.as_arr()).map(|a| a.len()), Some(4));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

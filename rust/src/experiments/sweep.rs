@@ -62,6 +62,10 @@ pub struct SweepRow {
     pub best_acc: f64,
     /// Accumulated energy (J).
     pub cum_energy: f64,
+    /// Total realized bytes on the wire across the run (the byte
+    /// transport's physical payload; `ceil(eq. (5)/8)` per quantized
+    /// upload).
+    pub wire_bytes: u64,
     /// Total dropouts (scheduled − aggregated).
     pub dropouts: usize,
     /// Where the JSONL trace was written.
@@ -207,6 +211,7 @@ fn summarize(trace: &Trace, sc: &Scenario, alg: &str, seed: u64, path: PathBuf) 
         final_acc: trace.final_accuracy().unwrap_or(f64::NAN),
         best_acc: trace.best_accuracy().unwrap_or(f64::NAN),
         cum_energy: trace.total_energy(),
+        wire_bytes: trace.total_wire_bytes(),
         dropouts: trace.total_dropouts(),
         trace_path: path,
     }
@@ -225,6 +230,7 @@ pub fn write_summary(rows: &[SweepRow], out_dir: &std::path::Path) -> Result<()>
             "final_acc",
             "best_acc",
             "cum_energy_j",
+            "wire_bytes",
             "dropouts",
             "trace_file",
         ],
@@ -238,6 +244,7 @@ pub fn write_summary(rows: &[SweepRow], out_dir: &std::path::Path) -> Result<()>
             format!("{:.6}", r.final_acc),
             format!("{:.6}", r.best_acc),
             format!("{:.9}", r.cum_energy),
+            r.wire_bytes.to_string(),
             r.dropouts.to_string(),
             r.trace_path
                 .file_name()
@@ -262,6 +269,7 @@ pub fn print(rows: &[SweepRow]) {
                 format!("{:.4}", r.final_acc),
                 format!("{:.4}", r.best_acc),
                 table::fnum(r.cum_energy),
+                table::fnum(r.wire_bytes as f64),
                 r.dropouts.to_string(),
             ]
         })
@@ -270,7 +278,17 @@ pub fn print(rows: &[SweepRow]) {
     println!(
         "{}",
         table::render(
-            &["scenario", "algorithm", "seed", "rounds", "final acc", "best acc", "energy (J)", "dropouts"],
+            &[
+                "scenario",
+                "algorithm",
+                "seed",
+                "rounds",
+                "final acc",
+                "best acc",
+                "energy (J)",
+                "wire (B)",
+                "dropouts"
+            ],
             &body
         )
     );
@@ -370,6 +388,7 @@ mod tests {
             final_acc: 0.5,
             best_acc: 0.6,
             cum_energy: 1.25,
+            wire_bytes: 4242,
             dropouts: 0,
             trace_path: PathBuf::from("x/s__qccf__seed1.jsonl"),
         }];

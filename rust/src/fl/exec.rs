@@ -20,10 +20,24 @@
 //!   folds models in ascending client order no matter which worker
 //!   finishes first, reproducing the serial f32 summation exactly.
 //!
+//! # Byte-faithful transport
+//!
+//! What moves between [`run_client`] and the aggregator is what the
+//! paper meters: a quantized upload is the eq. (5) bit-packed payload
+//! ([`Upload::Wire`], `ceil((Z·q + Z + 32)/8)` bytes — the thing whose
+//! airtime eqs. (14)–(15) charge), not a dequantized `Vec<f32>`; only
+//! the No-Quantization baseline ships raw 32-bit floats
+//! ([`Upload::Raw`]). The aggregator folds `w·(idx·Δ)` straight out of
+//! the bitstream (`quant::wire::fold_into`), so in-flight memory per
+//! upload drops from 32 bits/dim to ~(q+1) bits/dim while the fold
+//! arithmetic — and therefore θ^{n+1} — stays bit-identical to the old
+//! `Vec<f32>` path (pinned by `tests/integration_fl.rs::
+//! wire_transport_bit_identical_to_kernel_dequantize_fold`).
+//!
 //! The streaming fold also replaces the old `Vec<(id, model, w)>` of
 //! full-model clones: peak memory drops from `O(scheduled × Z)` to
-//! `O(threads × Z)` (`O(Z)` on the serial path), because each model is
-//! dropped the moment it is folded into the running sum.
+//! `O(threads × Z·(q+1)/32)` (`O(Z)` on the serial path), because each
+//! payload is dropped the moment it is folded into the running sum.
 
 use std::collections::BTreeMap;
 use std::sync::{Condvar, Mutex};
@@ -33,6 +47,7 @@ use anyhow::Result;
 use crate::config::SystemParams;
 use crate::data::ClientData;
 use crate::energy;
+use crate::quant::{self, wire};
 use crate::runtime::Runtime;
 use crate::sched::ClientDecision;
 use crate::util::rng::Rng;
@@ -64,6 +79,46 @@ pub struct ClientTask<'a> {
     pub rng: Rng,
 }
 
+/// A client's upload as it crosses the (simulated) uplink — the byte
+/// transport stage. Quantized uploads are the eq. (5) bit-packed
+/// payload; only the No-Quantization baseline ships raw floats.
+#[derive(Clone, Debug)]
+pub enum Upload {
+    /// Bit-packed quantized payload (`quant::wire`): 32-bit θ^max
+    /// header + Z sign bits + Z q-bit knot indices.
+    Wire {
+        /// The `ceil(encoded_bits(Z, q) / 8)` payload bytes.
+        bytes: Vec<u8>,
+        /// Quantization level the payload was packed at.
+        q: u32,
+    },
+    /// Raw 32-bit float upload (No-Quantization baseline).
+    Raw(Vec<f32>),
+}
+
+impl Upload {
+    /// Realized bytes on the wire for this upload.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Upload::Wire { bytes, .. } => bytes.len(),
+            Upload::Raw(model) => 4 * model.len(),
+        }
+    }
+}
+
+/// Per-worker reusable buffers for the execution stage: the
+/// quantization noise stream and the wire-encode staging (knot indices
+/// + sign bits). One instance per worker thread, reused across every
+/// client the worker processes — and across rounds, since the server
+/// owns the pool — so the hot path's only per-upload allocation is the
+/// payload that actually crosses the uplink.
+#[derive(Debug, Default)]
+pub struct WorkerScratch {
+    noise: Vec<f32>,
+    idx: Vec<u32>,
+    signs: Vec<bool>,
+}
+
 /// Everything the coordinator learns from one client's round.
 pub struct ClientOutcome {
     /// Client id (matches the task).
@@ -80,10 +135,14 @@ pub struct ClientOutcome {
     pub latency: f64,
     /// Realized round energy (J), eqs. (15) + (17).
     pub energy: f64,
-    /// The (de)quantized model; present iff the upload made the C4
-    /// deadline (energy is spent either way), and taken by the
-    /// streaming aggregator before the outcome reaches the server.
-    pub upload: Option<Vec<f32>>,
+    /// Realized bytes on the wire — `ceil(eq. (5)/8)` for quantized
+    /// uploads, `4·Z` raw. Counted whether or not the upload made the
+    /// C4 deadline: the airtime (and its energy) is spent either way.
+    pub payload_bytes: usize,
+    /// The upload payload; present iff it made the C4 deadline, and
+    /// taken by the streaming aggregator before the outcome reaches
+    /// the server.
+    pub upload: Option<Upload>,
     /// The client's RNG stream, advanced exactly as in a serial round.
     pub rng: Rng,
 }
@@ -122,10 +181,18 @@ pub fn survives_deadline(p: &SystemParams, latency: f64, exempt: bool) -> bool {
     exempt || latency <= p.t_max * (1.0 + 1e-9)
 }
 
-/// Run one client: τ local steps through the AOT `train_step`, then the
-/// Pallas quantizer artifact (or a raw upload), then the wireless
+/// Run one client: τ local steps through the AOT `train_step`, then
+/// quantize-and-wire-encode (or a raw upload), then the wireless
 /// bookkeeping. Pure in the coordinator's state — everything it needs
 /// arrives in the task, everything it learns leaves in the outcome.
+///
+/// The quantized path packs the upload via `quant::knot_indices_into` —
+/// the bit-exact Rust mirror of the Pallas kernel (agreement pinned by
+/// `integration_runtime.rs::quantize_artifact_matches_rust_mirror_bitwise`)
+/// — because the wire needs the knot *indices*, which the dequantizing
+/// kernel artifact does not emit. The dequantized `Vec<f32>` is never
+/// materialized client-side; the server's fused fold reconstructs the
+/// exact same f32 values from the bitstream.
 ///
 /// `survived` is the client's C4 verdict, computed **once** by the
 /// caller (from [`survives_deadline`]∘[`realized_latency`]) — the same
@@ -137,6 +204,7 @@ pub fn run_client(
     theta: &[f32],
     mut task: ClientTask<'_>,
     survived: bool,
+    scratch: &mut WorkerScratch,
 ) -> Result<ClientOutcome> {
     let info = &rt.info;
     let d = task.decision;
@@ -145,19 +213,57 @@ pub fn run_client(
     let (xs, ys) = task.data.sample_batches(&mut task.rng, info.tau, info.batch, info.pix());
     let out = rt.train_step(theta, &xs, &ys, info.lr as f32)?;
 
-    // Quantize (or raw upload).
+    // Quantize + wire-encode (or raw upload). The noise stream draws
+    // exactly Z uniforms from the client's RNG, as the kernel path did.
     let (upload, theta_max) = match d.q {
         Some(q) => {
-            let mut noise = vec![0.0f32; info.z];
-            task.rng.fill_uniform_f32(&mut noise);
-            let (qtheta, tmax) = rt.quantize(&out.theta, &noise, q as f32)?;
-            (qtheta, tmax as f64)
+            // The q-bit wire format cannot represent non-finite values
+            // (a NaN weight would pack as knot 0 and silently decode to
+            // +0.0 — where the old dequantize path propagated the NaN
+            // into θ and made the divergence visible). Fail loudly
+            // instead: a diverged local model is not a valid upload.
+            anyhow::ensure!(
+                out.theta.iter().all(|x| x.is_finite()),
+                "client {}: non-finite model weights after local training — refusing to \
+                 wire-encode a diverged upload",
+                task.id
+            );
+            if scratch.noise.len() != info.z {
+                scratch.noise.resize(info.z, 0.0);
+            }
+            task.rng.fill_uniform_f32(&mut scratch.noise);
+            let tmax = quant::knot_indices_into(
+                &out.theta,
+                &scratch.noise,
+                q,
+                &mut scratch.idx,
+                &mut scratch.signs,
+            );
+            let bytes = wire::encode(tmax, &scratch.signs, &scratch.idx, q);
+            (Upload::Wire { bytes, q }, tmax as f64)
         }
         None => {
             let tmax = linf_norm(&out.theta) as f64;
-            (out.theta, tmax)
+            (Upload::Raw(out.theta), tmax)
         }
     };
+
+    // eq. (5) invariant: the bytes put on the wire must be exactly the
+    // ceil of the analytic bit count the latency/energy math charged —
+    // the thing we meter is the thing we move. `params.z` drives the
+    // analytic side, the loaded profile's Z drove the encoder, so this
+    // also catches the two drifting apart.
+    let payload_bytes = upload.wire_bytes();
+    let analytic_bytes = match d.q {
+        Some(q) => wire::encoded_len(p.z, q),
+        None => (p.raw_payload_bits() as usize + 7) / 8,
+    };
+    anyhow::ensure!(
+        payload_bytes == analytic_bytes,
+        "client {}: realized payload {payload_bytes} B != analytic eq. (5) {analytic_bytes} B \
+         — params.z out of sync with the loaded profile?",
+        task.id
+    );
 
     let latency = realized_latency(p, task.size, &d, task.cpu_scale);
     Ok(ClientOutcome {
@@ -168,22 +274,27 @@ pub fn run_client(
         q: d.q,
         latency,
         energy: realized_energy(p, task.size, &d, task.cpu_scale),
+        payload_bytes,
         upload: survived.then_some(upload),
         rng: task.rng,
     })
 }
 
-/// Order-preserving streaming weighted accumulator for eq. (2).
+/// Order-preserving streaming weighted accumulator for eq. (2), with a
+/// **fused decode-and-fold** path for wire payloads.
 ///
-/// Workers commit slots in completion order; models are folded into the
-/// running `Σ w·θ` strictly in ascending slot order, so the f32
+/// Workers commit slots in completion order; payloads are folded into
+/// the running `Σ w·θ` strictly in ascending slot order, so the f32
 /// additions happen in exactly the serial loop's order and θ^{n+1} is
-/// bit-identical for any thread count. Out-of-order arrivals wait in
-/// `pending`, and a committer running more than `max_lag` slots ahead
-/// of the fold cursor blocks until the cursor catches up — so live full
-/// models are genuinely bounded by `max_lag + workers`, even when one
-/// slow client stalls the cursor while the rest of the pool races
-/// ahead.
+/// bit-identical for any thread count. An [`Upload::Wire`] payload is
+/// folded straight out of its bitstream (`quant::wire::fold_into`) —
+/// the dequantized `Vec<f32>` is never materialized, so a buffered
+/// quantized upload costs ~(q+1)/32 of a raw one. Out-of-order arrivals
+/// wait in `pending`, and a committer running more than `max_lag` slots
+/// ahead of the fold cursor blocks until the cursor catches up — so
+/// live payloads are genuinely bounded by `max_lag + workers`, even
+/// when one slow client stalls the cursor while the rest of the pool
+/// races ahead.
 pub struct StreamingAggregator {
     inner: Mutex<AggState>,
     /// Signaled whenever the fold cursor advances.
@@ -200,7 +311,7 @@ struct AggState {
     /// Total slots expected.
     total: usize,
     /// Finished-but-not-yet-foldable slots (`None` = no upload).
-    pending: BTreeMap<usize, Option<(f32, Vec<f32>)>>,
+    pending: BTreeMap<usize, Option<(f32, Upload)>>,
 }
 
 impl StreamingAggregator {
@@ -226,7 +337,7 @@ impl StreamingAggregator {
     /// `max_lag` slots ahead of the cursor; the cursor's own slot never
     /// blocks, so the pipeline always progresses as long as every slot
     /// is eventually committed exactly once.
-    pub fn commit(&self, seq: usize, upload: Option<(f32, Vec<f32>)>) {
+    pub fn commit(&self, seq: usize, upload: Option<(f32, Upload)>) {
         let mut guard = self.inner.lock().unwrap();
         while seq > guard.next + self.max_lag {
             guard = self.drained.wait(guard).unwrap();
@@ -236,10 +347,24 @@ impl StreamingAggregator {
         st.pending.insert(seq, upload);
         let mut advanced = false;
         while let Some(entry) = st.pending.remove(&st.next) {
-            if let Some((w, model)) = entry {
-                for (a, m) in st.acc.iter_mut().zip(model.iter()) {
-                    *a += w * m;
+            match entry {
+                Some((w, Upload::Wire { bytes, q })) => {
+                    // Fused decode-fold: same per-element f32 value and
+                    // the same `acc += w·v` addition the materializing
+                    // path performed — bit-identical, minus the Vec.
+                    wire::fold_into(&mut st.acc, w, &bytes, q)
+                        .expect("wire payload validated against eq. (5) at encode time");
                 }
+                Some((w, Upload::Raw(model))) => {
+                    // Same hardening as the wire path: a mis-sized raw
+                    // upload must fail loudly, not zip-truncate into a
+                    // silently half-folded θ.
+                    assert_eq!(model.len(), st.acc.len(), "raw upload length != Z");
+                    for (a, m) in st.acc.iter_mut().zip(model.iter()) {
+                        *a += w * m;
+                    }
+                }
+                None => {}
             }
             st.next += 1;
             advanced = true;
@@ -288,6 +413,10 @@ pub struct ExecOutput {
     pub scheduled: usize,
     /// Uploads that survived C4 (dropouts = scheduled − aggregated).
     pub aggregated: usize,
+    /// Σ realized payload bytes over scheduled clients (transmitted
+    /// whether or not the upload survived C4 — airtime is spent either
+    /// way). Per upload this equals `ceil(eq. (5)/8)`.
+    pub wire_bytes: usize,
     /// Σ realized energy over scheduled clients (J).
     pub round_energy: f64,
     /// Max realized latency among scheduled clients (s).
@@ -300,21 +429,47 @@ pub struct ExecOutput {
     pub compute_seconds: f64,
 }
 
+/// Renormalized eq. (2) fold weights over the surviving slots:
+/// `w_i = D_i / Σ_surv D` for survivors, `0` otherwise. Returns `None`
+/// when the surviving data mass is zero — an empty survivor set, or
+/// survivors that all carry zero-size datasets — because the weights
+/// are then `0/0` (NaN) and a fold would silently poison θ; the caller
+/// must treat the round as no-aggregate and keep θ^n.
+pub fn survivor_weights(sizes: &[f64], survive: &[bool]) -> Option<Vec<f32>> {
+    let d_surv: f64 = sizes.iter().zip(survive).filter(|(_, s)| **s).map(|(d, _)| *d).sum();
+    if !d_surv.is_finite() || d_surv <= 0.0 {
+        return None;
+    }
+    Some(
+        sizes
+            .iter()
+            .zip(survive)
+            .map(|(d, s)| if *s { (d / d_surv) as f32 } else { 0.0 })
+            .collect(),
+    )
+}
+
 /// Fan the scheduled clients out over `threads` workers (1 = the legacy
 /// serial path through the same code). Tasks must arrive in ascending
-/// client id — that order defines the aggregation fold.
+/// client id — that order defines the aggregation fold. `scratch` is
+/// the caller-owned per-worker buffer pool (grown to the worker count
+/// on demand; the server keeps it alive across rounds).
 pub fn execute_round(
     p: &SystemParams,
     rt: &Runtime,
     theta: &[f32],
     tasks: Vec<ClientTask<'_>>,
     threads: usize,
+    scratch: &mut Vec<WorkerScratch>,
 ) -> Result<ExecOutput> {
     let scheduled = tasks.len();
 
     // C4 survival — and with it the renormalized aggregation weights —
     // is decided by (f, q, rate) alone, so compute both up front and
-    // let uploads stream straight into the accumulator.
+    // let uploads stream straight into the accumulator. A zero
+    // surviving data mass (all survivors empty) yields no weights at
+    // all: the fold runs with w = 0 and the aggregate is discarded
+    // below, instead of dividing by zero into NaN weights.
     let survive: Vec<bool> = tasks
         .iter()
         .map(|t| {
@@ -325,40 +480,47 @@ pub fn execute_round(
             )
         })
         .collect();
-    let d_surv: f64 =
-        tasks.iter().zip(&survive).filter(|(_, s)| **s).map(|(t, _)| t.size).sum();
-    let weights: Vec<f32> = tasks
-        .iter()
-        .zip(&survive)
-        .map(|(t, s)| if *s { (t.size / d_surv) as f32 } else { 0.0 })
-        .collect();
+    let sizes: Vec<f64> = tasks.iter().map(|t| t.size).collect();
+    let weights = survivor_weights(&sizes, &survive);
+    let has_data_mass = weights.is_some();
+    let weights: Vec<f32> = weights.unwrap_or_else(|| vec![0.0; scheduled]);
 
+    let workers = threads.max(1);
+    if scratch.len() < workers {
+        scratch.resize_with(workers, WorkerScratch::default);
+    }
     // `max_lag` of ~2× the pool keeps every worker busy without letting
-    // a straggling fold cursor pile up full models (the O(threads × Z)
-    // peak-memory bound; serial path = O(Z)).
-    let agg = StreamingAggregator::new(theta.len(), scheduled, threads.max(1) * 2);
-    let results = threadpool::parallel_map_owned(tasks, threads, |seq, task| -> Result<ClientOutcome> {
-        // Hand the model to the fold the moment it exists, and commit
-        // the slot even on failure or panic — an uncommitted slot
-        // would stall the cursor and block the rest of the pool in
-        // `commit`. On `Err` we bail below before touching the (then
-        // meaningless) aggregate.
-        let mut fallback = CommitOnDrop { agg: &agg, seq, armed: true };
-        let mut oc = run_client(p, rt, theta, task, survive[seq])?;
-        fallback.armed = false;
-        agg.commit(seq, oc.upload.take().map(|m| (weights[seq], m)));
-        Ok(oc)
-    });
+    // a straggling fold cursor pile up payloads (the O(threads × Z·
+    // (q+1)/32) peak-memory bound; serial path = O(Z)).
+    let agg = StreamingAggregator::new(theta.len(), scheduled, workers * 2);
+    let results = threadpool::parallel_map_owned_with(
+        tasks,
+        &mut scratch[..workers],
+        |seq, task, ws| -> Result<ClientOutcome> {
+            // Hand the payload to the fold the moment it exists, and
+            // commit the slot even on failure or panic — an uncommitted
+            // slot would stall the cursor and block the rest of the
+            // pool in `commit`. On `Err` we bail below before touching
+            // the (then meaningless) aggregate.
+            let mut fallback = CommitOnDrop { agg: &agg, seq, armed: true };
+            let mut oc = run_client(p, rt, theta, task, survive[seq], ws)?;
+            fallback.armed = false;
+            agg.commit(seq, oc.upload.take().map(|u| (weights[seq], u)));
+            Ok(oc)
+        },
+    );
     let outcomes: Vec<ClientOutcome> = results.into_iter().collect::<Result<_>>()?;
 
     let aggregated = survive.iter().filter(|&&s| s).count();
-    let aggregate = if aggregated > 0 { Some(agg.finish()) } else { None };
+    let aggregate =
+        if aggregated > 0 && has_data_mass { Some(agg.finish()) } else { None };
 
     let mut out = ExecOutput {
         outcomes,
         aggregate,
         scheduled,
         aggregated,
+        wire_bytes: 0,
         round_energy: 0.0,
         max_latency: 0.0,
         loss_sum: 0.0,
@@ -367,6 +529,7 @@ pub fn execute_round(
     };
     // Scalar reductions in client-id order (same arithmetic as serial).
     for oc in &out.outcomes {
+        out.wire_bytes += oc.payload_bytes;
         out.round_energy += oc.energy;
         out.max_latency = out.max_latency.max(oc.latency);
         out.loss_sum += oc.mean_loss;
@@ -379,17 +542,24 @@ pub fn execute_round(
 mod tests {
     use super::*;
 
-    fn fold_serial(uploads: &[Option<(f32, Vec<f32>)>], z: usize) -> Vec<f32> {
+    fn fold_serial(uploads: &[Option<(f32, Upload)>], z: usize) -> Vec<f32> {
         let mut acc = vec![0.0f32; z];
-        for u in uploads.iter().flatten() {
-            for (a, m) in acc.iter_mut().zip(&u.1) {
-                *a += u.0 * m;
+        for (w, u) in uploads.iter().flatten() {
+            match u {
+                Upload::Raw(m) => {
+                    for (a, m) in acc.iter_mut().zip(m) {
+                        *a += w * m;
+                    }
+                }
+                Upload::Wire { bytes, q } => {
+                    wire::fold_into(&mut acc, *w, bytes, *q).unwrap();
+                }
             }
         }
         acc
     }
 
-    fn toy_uploads(n: usize, z: usize) -> Vec<Option<(f32, Vec<f32>)>> {
+    fn toy_uploads(n: usize, z: usize) -> Vec<Option<(f32, Upload)>> {
         let mut rng = Rng::seed_from(99);
         (0..n)
             .map(|i| {
@@ -398,7 +568,17 @@ mod tests {
                 } else {
                     let w = 1.0 / (i + 1) as f32;
                     let m: Vec<f32> = (0..z).map(|_| rng.gaussian(0.0, 1.0) as f32).collect();
-                    Some((w, m))
+                    if i % 3 == 1 {
+                        // Wire-encode every third upload so the fused
+                        // decode-fold runs in the ordering tests too.
+                        let mut noise = vec![0.0f32; z];
+                        rng.fill_uniform_f32(&mut noise);
+                        let (idx, signs, tmax) = quant::knot_indices(&m, &noise, 6);
+                        let bytes = wire::encode(tmax, &signs, &idx, 6);
+                        Some((w, Upload::Wire { bytes, q: 6 }))
+                    } else {
+                        Some((w, Upload::Raw(m)))
+                    }
                 }
             })
             .collect()
@@ -448,7 +628,7 @@ mod tests {
         let uploads = toy_uploads(n, z);
         let want = fold_serial(&uploads, z);
         let agg = StreamingAggregator::new(z, n, 2);
-        let slots: Vec<Option<(f32, Vec<f32>)>> = uploads;
+        let slots: Vec<Option<(f32, Upload)>> = uploads;
         threadpool::parallel_map_owned(
             slots.into_iter().enumerate().collect::<Vec<_>>(),
             8,
@@ -459,6 +639,61 @@ mod tests {
             got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
             want.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn wire_commit_matches_raw_commit_bitwise() {
+        // Committing the eq. (5) bytes must fold to exactly the same
+        // bits as committing the materialized dequantized model — the
+        // transport changes the representation, not the arithmetic.
+        let z = 333;
+        let mut rng = Rng::seed_from(5);
+        let theta: Vec<f32> = (0..z).map(|_| rng.gaussian(0.0, 1.3) as f32).collect();
+        let mut noise = vec![0.0f32; z];
+        rng.fill_uniform_f32(&mut noise);
+        for q in [1u32, 4, 9] {
+            let (deq, tmax) = quant::stochastic_quantize(&theta, &noise, q as f32);
+            let (idx, signs, tmax2) = quant::knot_indices(&theta, &noise, q);
+            assert_eq!(tmax.to_bits(), tmax2.to_bits());
+            let bytes = wire::encode(tmax, &signs, &idx, q);
+            let w = 0.31f32;
+            let a_wire = StreamingAggregator::new(z, 1, 1);
+            a_wire.commit(0, Some((w, Upload::Wire { bytes, q })));
+            let a_raw = StreamingAggregator::new(z, 1, 1);
+            a_raw.commit(0, Some((w, Upload::Raw(deq))));
+            assert_eq!(
+                a_wire.finish().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                a_raw.finish().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "q={q}"
+            );
+        }
+    }
+
+    #[test]
+    fn upload_wire_bytes_match_eq5() {
+        let z = 1242usize;
+        let raw = Upload::Raw(vec![0.0f32; z]);
+        assert_eq!(raw.wire_bytes(), 4 * z);
+        for q in [1u32, 4, 8, 32] {
+            let up = Upload::Wire { bytes: vec![0u8; quant::encoded_len(z, q)], q };
+            assert_eq!(up.wire_bytes(), (z * q as usize + z + 32 + 7) / 8);
+        }
+    }
+
+    #[test]
+    fn survivor_weights_guard_zero_mass() {
+        // All-zero surviving data mass (or no survivors at all) must
+        // yield no weights — the 0/0 NaN from the unguarded division
+        // used to poison θ through the fold.
+        assert!(survivor_weights(&[0.0, 0.0], &[true, true]).is_none());
+        assert!(survivor_weights(&[5.0, 3.0], &[false, false]).is_none());
+        assert!(survivor_weights(&[], &[]).is_none());
+        assert!(survivor_weights(&[0.0, 7.0], &[true, false]).is_none());
+        let w = survivor_weights(&[6.0, 5.0, 2.0], &[true, false, true]).unwrap();
+        assert_eq!(w[0], 0.75);
+        assert_eq!(w[1], 0.0);
+        assert_eq!(w[2], 0.25);
+        assert!(w.iter().all(|x| x.is_finite()));
     }
 
     #[test]

@@ -6,14 +6,18 @@
 //!
 //! Stage 1 (decision) realizes whatever the scheduler intended. Stage 2
 //! fans the scheduled clients out over a worker pool ([`exec`]): each
-//! client trains through the PJRT runtime, quantizes through the
-//! Pallas-kernel artifact, re-checks the latency budget C4 with its
-//! actual D_i (so wireless-oblivious baselines pay for timeouts exactly
-//! as in §VI), and accounts energy with eqs. (14)–(17). Stage 3
-//! installs the streamed weighted mean (eq. (2)) over the uploads that
-//! made the deadline; stage 4 updates the virtual queues. The engine is
-//! deterministic: any [`Server::threads`] value yields bit-identical
-//! traces (see `fl::exec` for the contract).
+//! client trains through the PJRT runtime, quantizes and **wire-encodes
+//! its upload into the eq. (5) bit-packed payload** (raw f32 only for
+//! the No-Quantization baseline), re-checks the latency budget C4 with
+//! its actual D_i (so wireless-oblivious baselines pay for timeouts
+//! exactly as in §VI), and accounts energy with eqs. (14)–(17). Stage 3
+//! installs the streamed weighted mean (eq. (2)), folded straight out
+//! of the bitstreams of the uploads that made the deadline; stage 4
+//! updates the virtual queues. The engine is deterministic: any
+//! [`Server::threads`] value yields bit-identical traces (see
+//! `fl::exec` for the contract), and the realized bytes on the wire are
+//! recorded per round (`RoundRecord::wire_bytes`) with an invariant
+//! check against the analytic eq. (5) accounting.
 
 pub mod exec;
 
@@ -95,6 +99,9 @@ pub struct Server<'rt> {
     /// Worker threads for the execution stage (`1` = legacy serial
     /// path). Any value produces bit-identical traces — see `fl::exec`.
     pub threads: usize,
+    /// Per-worker reusable encode/noise buffers, kept alive across
+    /// rounds (grown on demand when `threads` changes).
+    scratch: Vec<exec::WorkerScratch>,
 }
 
 impl<'rt> Server<'rt> {
@@ -173,6 +180,7 @@ impl<'rt> Server<'rt> {
             rng,
             eval_every: 2,
             threads: threadpool::default_threads(),
+            scratch: Vec::new(),
         })
     }
 
@@ -279,8 +287,14 @@ impl<'rt> Server<'rt> {
                 rng: self.clients[i].rng.clone(),
             });
         }
-        let mut out =
-            exec::execute_round(&self.params, self.runtime, &self.theta, tasks, self.threads)?;
+        let mut out = exec::execute_round(
+            &self.params,
+            self.runtime,
+            &self.theta,
+            tasks,
+            self.threads,
+            &mut self.scratch,
+        )?;
         for oc in &out.outcomes {
             let c = &mut self.clients[oc.id];
             c.rng = oc.rng.clone();
@@ -297,7 +311,9 @@ impl<'rt> Server<'rt> {
     /// Stage 3 — install the streamed weighted mean as θ^{n+1}
     /// (eq. (2)). Uploads past the C4 deadline were never committed to
     /// the fold, so the weights already renormalize over the survivors;
-    /// an empty survivor set keeps the previous global model.
+    /// an empty survivor set — or one whose data mass is zero, where
+    /// the renormalized weights would be 0/0 — keeps the previous
+    /// global model (see `exec::survivor_weights`).
     fn stage_aggregate(&mut self, exec_out: &mut exec::ExecOutput) {
         if let Some(next) = exec_out.aggregate.take() {
             self.theta = next;
@@ -362,6 +378,7 @@ impl<'rt> Server<'rt> {
             round: self.round,
             scheduled: exec_out.scheduled,
             aggregated: exec_out.aggregated,
+            wire_bytes: exec_out.wire_bytes,
             energy: exec_out.round_energy,
             cum_energy: 0.0, // filled by run()
             train_loss: if exec_out.loss_n > 0 {

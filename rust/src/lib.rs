@@ -15,10 +15,12 @@
 //!   allocation → closed-form KKT quantization/frequency control →
 //!   Theorem-3 integer rounding, with GA fitness fanned out over a
 //!   worker pool), a *parallel execution* stage (`fl::exec`: every
-//!   scheduled client trains, quantizes, and accounts
+//!   scheduled client trains, quantizes, **wire-encodes its upload
+//!   into the eq. (5) bit-packed payload**, and accounts
 //!   latency/energy independently on its private RNG stream), a
-//!   streaming *aggregation* stage (eq. (2) folded in client order;
-//!   `O(Z)` memory serial, `O(threads × Z)` parallel), and the
+//!   streaming *aggregation* stage (eq. (2) folded in client order
+//!   straight out of the upload bitstreams — buffered quantized
+//!   uploads cost ~(q+1) bits/dim, `O(Z)` fold memory serial), and the
 //!   *queue-update* stage. The engine's
 //!   determinism contract: any `--threads` value — including the
 //!   `1`-thread legacy path — produces bit-identical models and

@@ -21,13 +21,17 @@
 //!                                built-ins; format reference: docs/SCENARIOS.md
 //!   decide  [--profile P] [--seed S]    one-round decision demo (all algorithms)
 //!   ablate  [--draws N] [--seed S] [--quick]   design-choice ablations (no artifacts)
+//!   bench-wire [--z Z] [--qs 4,8] [--out F]    wire-codec microbench (encode +
+//!                                fused decode-fold), written as BENCH_wire.json
+//!                                (default target/BENCH_wire.json; no artifacts) —
+//!                                the byte-transport perf baseline verify.sh seeds
 //!
 //! The fig2..fig5 harnesses are presets over the `paper-femnist` /
 //! `paper-cifar10` scenarios — the same path `sweep` runs (see
 //! docs/ARCHITECTURE.md).
 //!
 //! Requires `make artifacts` (HLO text under ./artifacts), except
-//! `ablate` and `sweep --list`.
+//! `ablate`, `bench-wire` and `sweep --list`.
 
 use std::path::PathBuf;
 
@@ -78,9 +82,10 @@ fn run(args: &Args) -> Result<()> {
         Some("sweep") => cmd_sweep(args),
         Some("decide") => cmd_decide(args),
         Some("ablate") => cmd_ablate(args),
+        Some("bench-wire") => cmd_bench_wire(args),
         Some(other) => anyhow::bail!("unknown subcommand `{other}` (see README)"),
         None => {
-            println!("usage: qccf <params|train|fig2|fig3|fig4|fig5|sweep|decide|ablate> [options]");
+            println!("usage: qccf <params|train|fig2|fig3|fig4|fig5|sweep|decide|ablate|bench-wire> [options]");
             println!("see README.md for the full option list; `qccf sweep --list` shows scenarios");
             Ok(())
         }
@@ -291,6 +296,22 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         rows.len(),
         cfg.out_dir.display()
     );
+    Ok(())
+}
+
+/// Wire-codec microbench (no artifacts needed — pure Rust): encode +
+/// fused decode-fold at the requested Z and levels, emitted as
+/// `BENCH_wire.json` so later PRs have a perf baseline to diff against
+/// (verify.sh runs this as a quick smoke).
+fn cmd_bench_wire(args: &Args) -> Result<()> {
+    let z = args.get_usize("z", 20_000);
+    let qs: Vec<u32> = args.get_f64_list("qs", &[4.0, 8.0]).into_iter().map(|q| q as u32).collect();
+    anyhow::ensure!(!qs.is_empty(), "--qs: need at least one level");
+    anyhow::ensure!(qs.iter().all(|&q| (1..=32).contains(&q)), "--qs: levels must be in 1..=32");
+    let out = PathBuf::from(args.get_or("out", "target/BENCH_wire.json"));
+    let rows = qccf::bench::run_wire_bench(z, &qs);
+    qccf::bench::write_wire_bench_json(&out, z, &rows)?;
+    println!("wrote {} ({} benchmarks)", out.display(), rows.len());
     Ok(())
 }
 

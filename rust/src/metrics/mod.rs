@@ -17,6 +17,12 @@ pub struct RoundRecord {
     pub scheduled: usize,
     /// Uploads aggregated (dropouts = scheduled − aggregated).
     pub aggregated: usize,
+    /// Realized bytes on the wire this round, summed over scheduled
+    /// uploads: `ceil(eq. (5)/8)` per quantized upload, `4·Z` per raw
+    /// one. This is the *transmitted* payload (airtime is spent even by
+    /// C4 dropouts), checked at encode time against the analytic
+    /// accounting the latency/energy math uses.
+    pub wire_bytes: usize,
     /// Energy spent this round (J).
     pub energy: f64,
     /// Cumulative energy through this round (J).
@@ -96,6 +102,12 @@ impl Trace {
         self.records.iter().map(|r| r.scheduled - r.aggregated).sum()
     }
 
+    /// Total realized bytes on the wire across the run (the physical
+    /// quantity behind the paper's communication-energy accounting).
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.records.iter().map(|r| r.wire_bytes as u64).sum()
+    }
+
     /// Mean q trajectory (round, mean_q) for quantizing algorithms.
     pub fn q_trajectory(&self) -> Vec<(usize, f64)> {
         self.records.iter().filter(|r| r.mean_q > 0.0).map(|r| (r.round, r.mean_q)).collect()
@@ -116,6 +128,7 @@ impl Trace {
                 "test_loss",
                 "test_acc",
                 "mean_q",
+                "wire_bytes",
                 "lambda1",
                 "lambda2",
                 "max_latency_s",
@@ -135,6 +148,7 @@ impl Trace {
                 r.test_loss.map(|x| format!("{x:.6}")).unwrap_or_default(),
                 r.test_acc.map(|x| format!("{x:.6}")).unwrap_or_default(),
                 format!("{:.4}", r.mean_q),
+                r.wire_bytes.to_string(),
                 format!("{:.6}", r.lambda1),
                 format!("{:.6}", r.lambda2),
                 format!("{:.6}", r.max_latency),
@@ -184,6 +198,7 @@ impl Trace {
             m.insert("test_loss".into(), opt(r.test_loss));
             m.insert("test_acc".into(), opt(r.test_acc));
             m.insert("mean_q".into(), num_or_null(r.mean_q));
+            m.insert("wire_bytes".into(), Json::Num(r.wire_bytes as f64));
             m.insert(
                 "q_per_client".into(),
                 Json::Arr(
@@ -214,6 +229,7 @@ mod tests {
             cum_energy: cum,
             scheduled: 10,
             aggregated: 9,
+            wire_bytes: 1500,
             ..Default::default()
         }
     }
@@ -231,6 +247,7 @@ mod tests {
         assert_eq!(t.rounds_to_accuracy(0.75), Some(3));
         assert_eq!(t.rounds_to_accuracy(0.95), None);
         assert_eq!(t.total_dropouts(), 4);
+        assert_eq!(t.total_wire_bytes(), 4 * 1500);
     }
 
     #[test]
@@ -262,6 +279,7 @@ mod tests {
                 "test_loss",
                 "test_acc",
                 "mean_q",
+                "wire_bytes",
                 "q_per_client",
                 "lambda1",
                 "lambda2",

@@ -1,18 +1,21 @@
 //! Stochastic quantization on the Rust side (paper §II-B).
 //!
-//! The *hot path* quantizes through the AOT-lowered Pallas kernel
-//! (`runtime::Runtime::quantize`); this module provides
+//! This module provides
 //!
-//! * a bit-exact Rust mirror of the kernel ([`stochastic_quantize`]) used
-//!   to cross-validate the HLO artifact and by pure-Rust tests/benches,
-//! * the actual **wire codec** ([`encode`]/[`decode`]) — range float +
-//!   sign bits + knot indices — whose encoded length *is* eq. (5)'s
-//!   `ℓ = Z·q + Z + 32` bits, proving the payload accounting,
+//! * a bit-exact Rust mirror of the AOT-lowered Pallas kernel
+//!   ([`stochastic_quantize`]; the agreement is pinned bitwise by
+//!   `tests/integration_runtime.rs::quantize_artifact_matches_rust_mirror_bitwise`),
+//! * the actual **wire codec** ([`encode`]/[`decode`]/[`wire::fold_into`])
+//!   — range float + sign bits + knot indices — whose encoded length
+//!   *is* eq. (5)'s `ℓ = Z·q + Z + 32` bits. Since the byte-transport
+//!   PR this is the round engine's *upload path*: `fl::exec` packs each
+//!   quantized upload via [`knot_indices_into`] + [`encode`] and the
+//!   server folds eq. (2) straight out of the bitstream,
 //! * Lemma 1's variance bound ([`error_bound`]).
 
 pub mod wire;
 
-pub use wire::{decode, encode, encoded_bits};
+pub use wire::{decode, decode_indices, encode, encoded_bits, encoded_len, WireError};
 
 /// Quantization knot count minus one: `2^q − 1` intervals.
 pub fn levels(q: u32) -> f64 {
@@ -68,20 +71,54 @@ fn sign_f32(x: f32) -> f32 {
 /// Knot index of each element (what actually goes on the wire), plus the
 /// sign bit. `index ∈ [0, 2^q − 1]`.
 pub fn knot_indices(theta: &[f32], noise: &[f32], q: u32) -> (Vec<u32>, Vec<bool>, f32) {
+    let mut idx = Vec::new();
+    let mut signs = Vec::new();
+    let theta_max = knot_indices_into(theta, noise, q, &mut idx, &mut signs);
+    (idx, signs, theta_max)
+}
+
+/// [`knot_indices`] into caller-owned buffers (cleared and refilled) —
+/// the round engine's per-worker scratch path, so the only allocation
+/// per upload is the payload that actually crosses the uplink.
+///
+/// The knot arithmetic is the kernel mirror's, element for element, so
+/// `wire::decode(wire::encode(·))` reproduces [`stochastic_quantize`]'s
+/// output bit for bit. One wire-specific guard: for q ≥ 25 the f32
+/// `levels = 2^q − 1` itself rounds up to `2^q`, so the top knot would
+/// overflow its q-bit field — it is clamped to the field's max value,
+/// which dequantizes to the *same* f32 (the two integers are not
+/// distinguishable at f32 precision), keeping the wire bit-faithful.
+///
+/// Finite inputs only: a non-finite `theta` element has no knot and
+/// would pack as index 0 (decoding to +0.0). The round engine
+/// (`fl::exec::run_client`) rejects non-finite models before packing;
+/// callers bypassing it must do the same.
+pub fn knot_indices_into(
+    theta: &[f32],
+    noise: &[f32],
+    q: u32,
+    idx: &mut Vec<u32>,
+    signs: &mut Vec<bool>,
+) -> f32 {
+    assert!((1..=32).contains(&q), "q = {q} outside the wire format's 1..=32");
+    assert_eq!(theta.len(), noise.len());
     let theta_max = theta.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
     let levels = (2f32).powf(q as f32) - 1.0;
     let safe_max = if theta_max > 0.0 { theta_max } else { 1.0 };
-    let mut idx = Vec::with_capacity(theta.len());
-    let mut signs = Vec::with_capacity(theta.len());
+    let field_max: u32 = (u64::MAX >> (64 - q)) as u32;
+    idx.clear();
+    signs.clear();
+    idx.reserve(theta.len());
+    signs.reserve(theta.len());
     for (&t, &u) in theta.iter().zip(noise.iter()) {
         let scaled = t.abs() / safe_max * levels;
         let low = scaled.floor();
         let frac = scaled - low;
         let knot = low + if u < frac { 1.0 } else { 0.0 };
-        idx.push(knot as u32);
+        idx.push((knot as u32).min(field_max));
         signs.push(t < 0.0);
     }
-    (idx, signs, theta_max)
+    theta_max
 }
 
 #[cfg(test)]

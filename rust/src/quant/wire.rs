@@ -4,11 +4,70 @@
 //!
 //! `encoded_bits(z, q) == Z·q + Z + 32` exactly, so the simulator's
 //! latency/energy math (which uses eq. (5) analytically) matches what a
-//! real radio would transmit.
+//! real radio would transmit. Since the byte-transport PR this codec
+//! *is* the upload path: `fl::exec::run_client` encodes every quantized
+//! upload into these bytes and the `StreamingAggregator` folds eq. (2)
+//! straight out of the bitstream ([`fold_into`]) without materializing
+//! the dequantized `Vec<f32>`.
+//!
+//! # Hardening invariants
+//!
+//! * Every read-side entry point ([`decode`], [`decode_indices`],
+//!   [`fold_into`]) validates `bytes.len() == ceil(encoded_bits / 8)`
+//!   **up front** and returns [`WireError`] otherwise — a truncated
+//!   buffer is rejected, never silently zero-filled.
+//! * Dequantization uses the exact op order of the Pallas-kernel mirror
+//!   (`knot / levels * θ^max`, see `quant::stochastic_quantize`), so
+//!   `decode ∘ encode ∘ knot_indices` reproduces the quantized model
+//!   **bit for bit** (`to_bits()` equality, pinned by tests here and in
+//!   `tests/integration_fl.rs`).
 
 /// Exact encoded length in bits (eq. (5)).
 pub fn encoded_bits(z: usize, q: u32) -> usize {
     z * q as usize + z + 32
+}
+
+/// Exact encoded length in bytes: `ceil(encoded_bits / 8)` — what
+/// actually crosses the (simulated) uplink.
+pub fn encoded_len(z: usize, q: u32) -> usize {
+    (encoded_bits(z, q) + 7) / 8
+}
+
+/// A malformed wire payload (the codec's only failure mode: the buffer
+/// does not have the exact eq. (5) length for the declared `(z, q)`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// Buffer length differs from `ceil(encoded_bits(z, q) / 8)` —
+    /// truncated (or padded) in flight, or decoded with the wrong
+    /// `(z, q)` pair.
+    Length {
+        /// Bytes eq. (5) requires for the declared `(z, q)`.
+        expected: usize,
+        /// Bytes actually presented.
+        got: usize,
+    },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Length { expected, got } => write!(
+                f,
+                "wire payload is {got} bytes but eq. (5) requires exactly {expected} \
+                 (truncated/padded buffer, or wrong (Z, q) declared)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+fn check_len(bytes: &[u8], z: usize, q: u32) -> Result<(), WireError> {
+    let expected = encoded_len(z, q);
+    if bytes.len() != expected {
+        return Err(WireError::Length { expected, got: bytes.len() });
+    }
+    Ok(())
 }
 
 /// Streaming bit writer over a little-endian byte buffer: accumulates
@@ -28,6 +87,7 @@ impl BitWriter {
     #[inline]
     fn push(&mut self, value: u64, width: u32) {
         debug_assert!(width <= 32);
+        debug_assert!(width == 64 || value < (1u64 << width), "value overflows width");
         self.acc |= value << self.nbits;
         self.nbits += width;
         while self.nbits >= 8 {
@@ -45,7 +105,9 @@ impl BitWriter {
     }
 }
 
-/// Streaming bit reader (inverse of [`BitWriter`]).
+/// Streaming bit reader (inverse of [`BitWriter`]). Callers validate
+/// the buffer against eq. (5) via [`check_len`] *before* any pull, so
+/// the reader itself never has to invent bits past the end.
 struct BitReader<'a> {
     bytes: &'a [u8],
     byte_pos: usize,
@@ -58,9 +120,23 @@ impl<'a> BitReader<'a> {
         BitReader { bytes, byte_pos: 0, acc: 0, nbits: 0 }
     }
 
+    /// Reader positioned at absolute `bit` — lets the fused fold walk
+    /// the sign region and the index region of one buffer in lockstep.
+    fn at_bit(bytes: &'a [u8], bit: usize) -> BitReader<'a> {
+        let mut r = BitReader { bytes, byte_pos: bit / 8, acc: 0, nbits: 0 };
+        let skew = (bit % 8) as u32;
+        if skew > 0 {
+            r.pull(skew);
+        }
+        r
+    }
+
     #[inline]
     fn pull(&mut self, width: u32) -> u64 {
         while self.nbits < width {
+            // In range by construction: the buffer length was validated
+            // against eq. (5) before the first pull (see `check_len`).
+            debug_assert!(self.byte_pos < self.bytes.len(), "BitReader past validated end");
             let b = self.bytes.get(self.byte_pos).copied().unwrap_or(0) as u64;
             self.acc |= b << self.nbits;
             self.byte_pos += 1;
@@ -77,6 +153,7 @@ impl<'a> BitReader<'a> {
 /// Bit-pack a quantized model: `(theta_max, signs, knot indices)` →
 /// little-endian byte vector of `ceil(encoded_bits / 8)` bytes.
 pub fn encode(theta_max: f32, signs: &[bool], indices: &[u32], q: u32) -> Vec<u8> {
+    assert!((1..=32).contains(&q), "q = {q} outside the wire format's 1..=32");
     assert_eq!(signs.len(), indices.len());
     let z = signs.len();
     let total_bits = encoded_bits(z, q);
@@ -87,28 +164,73 @@ pub fn encode(theta_max: f32, signs: &[bool], indices: &[u32], q: u32) -> Vec<u8
     }
     for &idx in indices {
         debug_assert!(q == 32 || idx < (1u32 << q), "index {idx} overflows q={q}");
-        w.push(idx as u64, q);
+        w.push((idx as u64) & (u64::MAX >> (64 - q)), q);
     }
     let out = w.finish();
     debug_assert_eq!(out.len(), (total_bits + 7) / 8);
     out
 }
 
-/// Inverse of [`encode`]; reconstructs the dequantized values directly
-/// (what the server aggregates, eq. (2)).
-pub fn decode(bytes: &[u8], z: usize, q: u32) -> (f32, Vec<f32>) {
-    let mut r = BitReader::new(bytes);
-    let theta_max = f32::from_le_bytes((r.pull(32) as u32).to_le_bytes());
-    let signs: Vec<bool> = (0..z).map(|_| r.pull(1) == 1).collect();
-    let levels = (2f32).powi(q as i32) - 1.0;
-    let inv = theta_max / levels;
-    let mut values = Vec::with_capacity(z);
-    for &s in signs.iter() {
-        let idx = r.pull(q);
-        let mag = idx as f32 * inv;
-        values.push(if s { -mag } else { mag });
+/// The decoder core: validated-length bitstream → per-element f32
+/// values, emitted in index order. The value arithmetic is the exact op
+/// order of `quant::stochastic_quantize` (`idx / levels * θ^max`), so
+/// the emitted stream is bit-identical to the quantized model the
+/// client held.
+fn stream_values<F: FnMut(usize, f32)>(bytes: &[u8], z: usize, q: u32, mut emit: F) -> f32 {
+    let mut signs = BitReader::new(bytes);
+    let theta_max = f32::from_le_bytes((signs.pull(32) as u32).to_le_bytes());
+    let mut indices = BitReader::at_bit(bytes, 32 + z);
+    let levels = (2f32).powf(q as f32) - 1.0;
+    for i in 0..z {
+        let neg = signs.pull(1) == 1;
+        let idx = indices.pull(q) as u32;
+        let mag = idx as f32 / levels * theta_max;
+        emit(i, if neg { -mag } else { mag });
     }
-    (theta_max, values)
+    theta_max
+}
+
+/// Inverse of [`encode`]; reconstructs the dequantized values directly
+/// (what the server aggregates, eq. (2)). Rejects buffers whose length
+/// is not exactly `ceil(encoded_bits / 8)`.
+pub fn decode(bytes: &[u8], z: usize, q: u32) -> Result<(f32, Vec<f32>), WireError> {
+    check_len(bytes, z, q)?;
+    let mut values = Vec::with_capacity(z);
+    let theta_max = stream_values(bytes, z, q, |_, v| values.push(v));
+    Ok((theta_max, values))
+}
+
+/// Raw field view of a payload: `(θ^max, signs, knot indices)` without
+/// dequantizing — exact for *any* bit pattern (diagnostics and the
+/// boundary-fuzz tests, where value roundtrips would be lossy).
+pub fn decode_indices(bytes: &[u8], z: usize, q: u32) -> Result<(f32, Vec<bool>, Vec<u32>), WireError> {
+    check_len(bytes, z, q)?;
+    let mut sign_bits = BitReader::new(bytes);
+    let theta_max = f32::from_le_bytes((sign_bits.pull(32) as u32).to_le_bytes());
+    let mut index_bits = BitReader::at_bit(bytes, 32 + z);
+    let mut signs = Vec::with_capacity(z);
+    let mut indices = Vec::with_capacity(z);
+    for _ in 0..z {
+        signs.push(sign_bits.pull(1) == 1);
+        indices.push(index_bits.pull(q) as u32);
+    }
+    Ok((theta_max, signs, indices))
+}
+
+/// Fused decode-and-fold for eq. (2): accumulates `w · value_i` into
+/// `acc[i]` straight from the bitstream — the dequantized `Vec<f32>` is
+/// never materialized, so the server's in-flight memory per upload is
+/// the `~(q+1)/8` bytes per dimension that actually crossed the uplink.
+/// `acc.len()` is the declared Z. Returns the payload's θ^max.
+///
+/// Bit-determinism: per element this computes the same f32 value as
+/// [`decode`] and then performs the same `acc += w · v` addition the
+/// materializing fold performed, in the same order — so a transport
+/// round is bit-identical to the old `Vec<f32>` round.
+pub fn fold_into(acc: &mut [f32], w: f32, bytes: &[u8], q: u32) -> Result<f32, WireError> {
+    check_len(bytes, acc.len(), q)?;
+    let theta_max = stream_values(bytes, acc.len(), q, |i, v| acc[i] += w * v);
+    Ok(theta_max)
 }
 
 #[cfg(test)]
@@ -122,24 +244,120 @@ mod tests {
         assert_eq!(encoded_bits(246_590, 8), 246_590 * 8 + 246_590 + 32);
         assert_eq!(encoded_bits(0, 5), 32);
         assert_eq!(encoded_bits(10, 1), 10 + 10 + 32);
+        assert_eq!(encoded_len(0, 5), 4);
+        assert_eq!(encoded_len(10, 1), (10 + 10 + 32 + 7) / 8);
     }
 
     #[test]
-    fn roundtrip_reconstructs_dequantized_model() {
+    fn roundtrip_reconstructs_dequantized_model_bitwise() {
+        // The decode op order matches the kernel mirror exactly, so the
+        // wire roundtrip is to_bits()-identical — including q ≥ 25,
+        // where `levels` itself rounds in f32 and the top knot index is
+        // clamped into its q-bit field, and q = 32 (u32 saturation).
         let mut rng = Rng::seed_from(3);
         let theta: Vec<f32> = (0..777).map(|_| rng.gaussian(0.0, 1.5) as f32).collect();
         let mut noise = vec![0.0f32; 777];
         rng.fill_uniform_f32(&mut noise);
-        for q in [1u32, 3, 7, 12] {
+        for q in [1u32, 3, 7, 12, 24, 27, 32] {
             let (deq, tmax) = stochastic_quantize(&theta, &noise, q as f32);
             let (idx, signs, tmax2) = knot_indices(&theta, &noise, q);
-            assert_eq!(tmax, tmax2);
+            assert_eq!(tmax.to_bits(), tmax2.to_bits());
             let bytes = encode(tmax, &signs, &idx, q);
-            assert_eq!(bytes.len(), (encoded_bits(777, q) + 7) / 8);
-            let (tmax3, decoded) = decode(&bytes, 777, q);
-            assert_eq!(tmax3, tmax);
-            for (d, e) in decoded.iter().zip(&deq) {
-                assert!((d - e).abs() <= 1e-6 * tmax.max(1.0), "{d} vs {e}");
+            assert_eq!(bytes.len(), encoded_len(777, q));
+            let (tmax3, decoded) = decode(&bytes, 777, q).unwrap();
+            assert_eq!(tmax3.to_bits(), tmax.to_bits());
+            for (i, (d, e)) in decoded.iter().zip(&deq).enumerate() {
+                assert_eq!(d.to_bits(), e.to_bits(), "q={q} element {i}: {d} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn fold_into_matches_decode_then_fold_bitwise() {
+        let mut rng = Rng::seed_from(17);
+        let theta: Vec<f32> = (0..513).map(|_| rng.gaussian(0.0, 0.7) as f32).collect();
+        let mut noise = vec![0.0f32; 513];
+        rng.fill_uniform_f32(&mut noise);
+        for q in [1u32, 4, 11] {
+            let (idx, signs, tmax) = knot_indices(&theta, &noise, q);
+            let bytes = encode(tmax, &signs, &idx, q);
+            let w = 0.37f32;
+            // Reference: materialize, then fold (the pre-transport path).
+            let (_, values) = decode(&bytes, 513, q).unwrap();
+            let mut want = vec![0.125f32; 513];
+            for (a, v) in want.iter_mut().zip(&values) {
+                *a += w * v;
+            }
+            let mut got = vec![0.125f32; 513];
+            let tm = fold_into(&mut got, w, &bytes, q).unwrap();
+            assert_eq!(tm.to_bits(), tmax.to_bits());
+            assert_eq!(
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "q={q}"
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_and_padded_buffers_rejected() {
+        let (idx, signs, tmax) = ((0..50).map(|i| i % 8).collect::<Vec<u32>>(), vec![false; 50], 1.5f32);
+        let bytes = encode(tmax, &signs, &idx, 3);
+        assert!(decode(&bytes, 50, 3).is_ok());
+        // Truncation at every prefix length must be rejected, not
+        // zero-filled (the old `.unwrap_or(0)` bug).
+        for cut in 0..bytes.len() {
+            let err = decode(&bytes[..cut], 50, 3).unwrap_err();
+            let WireError::Length { expected, got } = err;
+            assert_eq!(expected, encoded_len(50, 3));
+            assert_eq!(got, cut);
+        }
+        // Padding is just as malformed.
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(decode(&long, 50, 3).is_err());
+        assert!(decode_indices(&long, 50, 3).is_err());
+        let mut acc = vec![0.0f32; 50];
+        assert!(fold_into(&mut acc, 1.0, &bytes[..bytes.len() - 1], 3).is_err());
+        // A wrong (z, q) declaration that changes the eq. (5) length is
+        // caught by the same check.
+        assert!(decode(&bytes, 500, 3).is_err());
+        assert!(decode(&bytes, 50, 29).is_err());
+    }
+
+    #[test]
+    fn bit_boundary_fuzz_all_widths() {
+        // BitWriter/BitReader boundary fuzz: random z (incl. 0), every
+        // q ∈ {1, …, 32}, adversarial index patterns (all-ones in the
+        // q-bit field, zeros, random) — field roundtrips must be exact
+        // and every truncated buffer rejected.
+        let mut rng = Rng::seed_from(0xF0_22);
+        for case in 0..160usize {
+            let q = 1 + (case % 32) as u32;
+            let z = match case % 5 {
+                0 => 0,
+                1 => 1,
+                2 => 7 + case % 9,
+                _ => rng.below(400),
+            };
+            let mask: u64 = u64::MAX >> (64 - q);
+            let idx: Vec<u32> = (0..z)
+                .map(|i| match i % 3 {
+                    0 => mask as u32,
+                    1 => 0,
+                    _ => (rng.next_u64() & mask) as u32,
+                })
+                .collect();
+            let signs: Vec<bool> = (0..z).map(|_| rng.chance(0.5)).collect();
+            let tmax = rng.range(0.0, 10.0) as f32;
+            let bytes = encode(tmax, &signs, &idx, q);
+            assert_eq!(bytes.len(), encoded_len(z, q), "q={q} z={z}");
+            let (t2, s2, i2) = decode_indices(&bytes, z, q).unwrap();
+            assert_eq!(t2.to_bits(), tmax.to_bits(), "q={q} z={z}");
+            assert_eq!(s2, signs, "q={q} z={z}");
+            assert_eq!(i2, idx, "q={q} z={z}");
+            if !bytes.is_empty() {
+                assert!(decode_indices(&bytes[..bytes.len() - 1], z, q).is_err());
             }
         }
     }
@@ -151,10 +369,26 @@ mod tests {
         let q = 2;
         let (idx, signs, tmax) = knot_indices(&theta, &noise, q);
         let bytes = encode(tmax, &signs, &idx, q);
-        let (_, decoded) = decode(&bytes, 3, q);
+        let (_, decoded) = decode(&bytes, 3, q).unwrap();
         assert!(decoded[0] < 0.0);
         assert!(decoded[1] > 0.0);
         assert!(decoded[2] <= 0.0);
+    }
+
+    #[test]
+    fn zero_vector_roundtrips_to_positive_zero() {
+        // θ^max = 0 payloads must reproduce the kernel's all-(+0.0)
+        // output exactly (sign bits stay clear for ±0 inputs).
+        let theta = vec![0.0f32, -0.0, 0.0];
+        let noise = vec![0.5f32; 3];
+        let (deq, tmax) = stochastic_quantize(&theta, &noise, 4.0);
+        let (idx, signs, tmax2) = knot_indices(&theta, &noise, 4);
+        assert_eq!(tmax.to_bits(), tmax2.to_bits());
+        let bytes = encode(tmax2, &signs, &idx, 4);
+        let (_, decoded) = decode(&bytes, 3, 4).unwrap();
+        for (d, e) in decoded.iter().zip(&deq) {
+            assert_eq!(d.to_bits(), e.to_bits());
+        }
     }
 
     #[test]

@@ -53,7 +53,9 @@ where
 /// [`parallel_map`] over owned items: each element is handed to exactly
 /// one worker by value. The round engine needs this because a client
 /// task owns its private RNG stream, which must be advanced in place
-/// and returned with the result.
+/// and returned with the result. Thin wrapper over
+/// [`parallel_map_owned_with`] with unit worker states — one body of
+/// work-stealing code to maintain.
 pub fn parallel_map_owned<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -61,25 +63,53 @@ where
     F: Fn(usize, T) -> R + Sync,
 {
     let n = items.len();
+    let mut states = vec![(); threads.max(1).min(n.max(1))];
+    parallel_map_owned_with(items, &mut states, |i, x, _| f(i, x))
+}
+
+/// [`parallel_map_owned`] with one mutable worker-state per thread:
+/// `states.len()` bounds the worker count and each worker owns exactly
+/// one `&mut S` for its whole run. The round engine threads its
+/// per-worker scratch buffers (quantization noise + wire-encode
+/// staging) through here so they are reused across all the clients a
+/// worker processes instead of reallocated per client.
+///
+/// Results keep input order; panics if `items` is non-empty but
+/// `states` is empty.
+pub fn parallel_map_owned_with<T, R, S, F>(items: Vec<T>, states: &mut [S], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    S: Send,
+    F: Fn(usize, T, &mut S) -> R + Sync,
+{
+    let n = items.len();
     if n == 0 {
         return Vec::new();
     }
-    let threads = threads.max(1).min(n);
+    assert!(!states.is_empty(), "parallel_map_owned_with needs at least one worker state");
+    let threads = states.len().min(n);
     if threads == 1 {
-        return items.into_iter().enumerate().map(|(i, x)| f(i, x)).collect();
+        let st = &mut states[0];
+        let mut out = Vec::with_capacity(n);
+        for (i, x) in items.into_iter().enumerate() {
+            out.push(f(i, x, &mut *st));
+        }
+        return out;
     }
     let inputs: Vec<Mutex<Option<T>>> = items.into_iter().map(|x| Mutex::new(Some(x))).collect();
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
+        let (next, inputs, slots, f) = (&next, &inputs, &slots, &f);
+        for st in states.iter_mut().take(threads) {
+            scope.spawn(move || loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
                 let x = inputs[i].lock().unwrap().take().expect("item taken once");
-                *slots[i].lock().unwrap() = Some(f(i, x));
+                *slots[i].lock().unwrap() = Some(f(i, x, &mut *st));
             });
         }
     });
@@ -141,6 +171,37 @@ mod tests {
             *x + 1
         });
         assert_eq!(out, (1..=200).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn owned_with_reuses_one_state_per_worker() {
+        // Every item is touched exactly once; each worker accumulates
+        // into its own state, and the per-worker tallies sum to n —
+        // i.e. states really are reused across a worker's items, not
+        // recreated per item.
+        let items: Vec<usize> = (0..500).collect();
+        let mut states = vec![0usize; 4];
+        let out = parallel_map_owned_with(items, &mut states, |i, x, tally| {
+            assert_eq!(i, x);
+            *tally += 1;
+            x * 3
+        });
+        assert_eq!(out, (0..500).map(|x| x * 3).collect::<Vec<_>>());
+        assert_eq!(states.iter().sum::<usize>(), 500);
+    }
+
+    #[test]
+    fn owned_with_single_state_and_empty() {
+        let mut none: Vec<u8> = vec![];
+        assert!(parallel_map_owned_with(Vec::<u8>::new(), &mut none, |_, x, _: &mut u8| x)
+            .is_empty());
+        let mut one = vec![0u32];
+        let out = parallel_map_owned_with(vec![5u32, 6], &mut one, |_, x, s| {
+            *s += x;
+            x
+        });
+        assert_eq!(out, vec![5, 6]);
+        assert_eq!(one[0], 11);
     }
 
     #[test]

@@ -5,12 +5,16 @@
 //! All tests no-op (with a note) when `make artifacts` hasn't run.
 
 use qccf::baselines::{make_scheduler_with_threads, ALL_ALGORITHMS};
+use qccf::config::SystemParams;
 use qccf::data::{self, DataGenConfig};
 use qccf::experiments::common::params_for;
 use qccf::experiments::Task;
+use qccf::fl::exec::{self, ClientTask, Upload, WorkerScratch};
 use qccf::fl::Server;
+use qccf::quant;
 use qccf::runtime::{artifacts_dir, Runtime};
 use qccf::sched::{ClientDecision, RoundDecision, RoundInputs, Scheduler};
+use qccf::util::rng::Rng;
 
 fn runtime() -> Option<Runtime> {
     if !artifacts_dir().join("manifest.json").exists() {
@@ -211,6 +215,204 @@ fn timed_out_uploads_renormalized_out_of_aggregation() {
     // Straggler energy is spent even though its upload is dropped.
     assert!(rec_a.energy > rec_b.energy);
     assert_eq!(theta_a, theta_b, "aggregate not renormalized over survivors");
+}
+
+#[test]
+fn wire_transport_bit_identical_to_kernel_dequantize_fold() {
+    // The byte-transport acceptance pin: a round executed through the
+    // wire codec (knot indices packed into eq. (5) bytes, fused
+    // decode-fold on the server) must produce a bit-identical θ^{n+1}
+    // to the pre-transport reference — kernel dequantize (PJRT Pallas
+    // artifact) followed by the weighted Vec<f32> fold — for both the
+    // serial path and an 8-worker pool. Covers quantized levels across
+    // the range, a raw upload, and a C4 dropout.
+    let Some(rt) = runtime() else { return };
+    let params = SystemParams::tiny_test();
+    assert_eq!(params.z, rt.info.z, "tiny profile drifted");
+    let n = 6usize;
+    let mut dcfg = DataGenConfig::new(n, rt.info.image, rt.info.classes);
+    dcfg.size_mean = 200.0;
+    dcfg.size_std = 30.0;
+    dcfg.test_size = 64;
+    let fed = data::generate(&dcfg, 21);
+    let theta = rt.init().unwrap();
+
+    let mut master = Rng::seed_from(77);
+    let streams: Vec<Rng> = (0..n).map(|i| master.fork(1000 + i as u64)).collect();
+    let qs: [Option<u32>; 6] = [Some(1), Some(4), Some(8), Some(12), None, Some(4)];
+    let rates: [f64; 6] = [50e6, 50e6, 50e6, 50e6, 50e6, 1.0]; // last one misses C4
+    let decision = |i: usize| ClientDecision {
+        channel: i,
+        q: qs[i],
+        f: params.f_max,
+        rate: rates[i],
+    };
+    let mk_tasks = || {
+        (0..n)
+            .map(|i| ClientTask {
+                id: i,
+                size: fed.clients[i].size as f64,
+                decision: decision(i),
+                deadline_exempt: false,
+                cpu_scale: 1.0,
+                data: &fed.clients[i],
+                rng: streams[i].clone(),
+            })
+            .collect::<Vec<_>>()
+    };
+
+    // Reference: the pre-transport path, replayed on the same RNG
+    // streams — PJRT train_step, PJRT quantize (dequantized Vec<f32>),
+    // serial weighted fold over the C4 survivors.
+    let sizes: Vec<f64> = (0..n).map(|i| fed.clients[i].size as f64).collect();
+    let survive: Vec<bool> = (0..n)
+        .map(|i| {
+            let d = decision(i);
+            exec::survives_deadline(
+                &params,
+                exec::realized_latency(&params, sizes[i], &d, 1.0),
+                false,
+            )
+        })
+        .collect();
+    assert_eq!(survive, [true, true, true, true, true, false], "setup drifted");
+    let d_surv: f64 = sizes.iter().zip(&survive).filter(|(_, s)| **s).map(|(d, _)| *d).sum();
+    let mut want = vec![0.0f32; rt.info.z];
+    for i in 0..n {
+        let mut rng = streams[i].clone();
+        let (xs, ys) =
+            fed.clients[i].sample_batches(&mut rng, rt.info.tau, rt.info.batch, rt.info.pix());
+        let out = rt.train_step(&theta, &xs, &ys, rt.info.lr as f32).unwrap();
+        let model = match qs[i] {
+            Some(q) => {
+                let mut noise = vec![0.0f32; rt.info.z];
+                rng.fill_uniform_f32(&mut noise);
+                rt.quantize(&out.theta, &noise, q as f32).unwrap().0
+            }
+            None => out.theta,
+        };
+        if survive[i] {
+            let w = (sizes[i] / d_surv) as f32;
+            for (a, m) in want.iter_mut().zip(&model) {
+                *a += w * m;
+            }
+        }
+    }
+    let want_bits: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+
+    let expected_bytes: usize = (0..n)
+        .map(|i| match qs[i] {
+            Some(q) => quant::encoded_len(rt.info.z, q),
+            None => 4 * rt.info.z,
+        })
+        .sum();
+    for threads in [1usize, 8] {
+        let mut scratch: Vec<WorkerScratch> = Vec::new();
+        let out = exec::execute_round(&params, &rt, &theta, mk_tasks(), threads, &mut scratch)
+            .unwrap();
+        assert_eq!(out.scheduled, n);
+        assert_eq!(out.aggregated, 5, "threads={threads}");
+        assert_eq!(out.wire_bytes, expected_bytes, "threads={threads}");
+        let got = out.aggregate.expect("survivors present");
+        assert_eq!(
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want_bits,
+            "byte transport diverged from kernel-dequantize fold at threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn surviving_upload_bytes_decode_to_kernel_output_exactly() {
+    // Acceptance pin #2: decoding a surviving upload's wire bytes must
+    // reproduce the quantized model the Pallas kernel would have
+    // produced, to_bits()-exactly — and truncated payloads must be
+    // rejected with an error, never zero-filled.
+    let Some(rt) = runtime() else { return };
+    let params = SystemParams::tiny_test();
+    let mut dcfg = DataGenConfig::new(2, rt.info.image, rt.info.classes);
+    dcfg.size_mean = 150.0;
+    dcfg.size_std = 20.0;
+    dcfg.test_size = 64;
+    let fed = data::generate(&dcfg, 9);
+    let theta = rt.init().unwrap();
+    let mut scratch = WorkerScratch::default();
+    for q in [1u32, 3, 8, 16] {
+        let stream = Rng::seed_from(500 + q as u64);
+        let task = ClientTask {
+            id: 0,
+            size: fed.clients[0].size as f64,
+            decision: ClientDecision { channel: 0, q: Some(q), f: params.f_max, rate: 50e6 },
+            deadline_exempt: false,
+            cpu_scale: 1.0,
+            data: &fed.clients[0],
+            rng: stream.clone(),
+        };
+        let mut oc = exec::run_client(&params, &rt, &theta, task, true, &mut scratch).unwrap();
+        let Some(Upload::Wire { bytes, q: packed_q }) = oc.upload.take() else {
+            panic!("quantized upload must take the wire path");
+        };
+        assert_eq!(packed_q, q);
+        assert_eq!(oc.payload_bytes, bytes.len());
+        assert_eq!(bytes.len(), quant::encoded_len(rt.info.z, q), "eq. (5) bytes");
+
+        // Replay the kernel path on the same stream.
+        let mut rng = stream.clone();
+        let (xs, ys) =
+            fed.clients[0].sample_batches(&mut rng, rt.info.tau, rt.info.batch, rt.info.pix());
+        let out = rt.train_step(&theta, &xs, &ys, rt.info.lr as f32).unwrap();
+        let mut noise = vec![0.0f32; rt.info.z];
+        rng.fill_uniform_f32(&mut noise);
+        let (qtheta, tmax) = rt.quantize(&out.theta, &noise, q as f32).unwrap();
+        assert_eq!(oc.theta_max, tmax as f64, "q={q}");
+
+        let (tmax_wire, decoded) = quant::decode(&bytes, rt.info.z, q).unwrap();
+        assert_eq!(tmax_wire.to_bits(), tmax.to_bits(), "q={q}");
+        assert_eq!(
+            decoded.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            qtheta.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "q={q}: wire decode != kernel dequantize"
+        );
+        assert!(quant::decode(&bytes[..bytes.len() - 1], rt.info.z, q).is_err(), "q={q}");
+    }
+}
+
+#[test]
+fn zero_surviving_data_mass_skips_aggregation() {
+    // Regression for the d_surv = 0 NaN: clients whose D_i metadata is
+    // zero can survive C4 (zero compute latency), but the renormalized
+    // eq. (2) weights would be 0/0 — the round must keep θ^n instead of
+    // folding NaN into it.
+    let Some(rt) = runtime() else { return };
+    let params = SystemParams::tiny_test();
+    let mut dcfg = DataGenConfig::new(2, rt.info.image, rt.info.classes);
+    dcfg.size_mean = 150.0;
+    dcfg.size_std = 20.0;
+    dcfg.test_size = 64;
+    let fed = data::generate(&dcfg, 31);
+    let theta = rt.init().unwrap();
+    let mut master = Rng::seed_from(3);
+    let tasks: Vec<ClientTask<'_>> = (0..2)
+        .map(|i| ClientTask {
+            id: i,
+            size: 0.0,
+            decision: ClientDecision { channel: i, q: Some(4), f: params.f_max, rate: 50e6 },
+            deadline_exempt: false,
+            cpu_scale: 1.0,
+            data: &fed.clients[i],
+            rng: master.fork(1000 + i as u64),
+        })
+        .collect();
+    let mut scratch = Vec::new();
+    let out = exec::execute_round(&params, &rt, &theta, tasks, 1, &mut scratch).unwrap();
+    assert_eq!(out.scheduled, 2);
+    assert_eq!(out.aggregated, 2, "zero-size uploads still make the deadline");
+    assert!(out.aggregate.is_none(), "zero data mass must not aggregate");
+    assert!(out.round_energy.is_finite() && out.round_energy > 0.0);
+    for oc in &out.outcomes {
+        assert!(oc.latency.is_finite());
+        assert!(oc.payload_bytes > 0);
+    }
 }
 
 #[test]

@@ -189,37 +189,111 @@ fn taylor_iterates_to_bisect_fixed_point() {
 
 #[test]
 fn wire_codec_roundtrip_random_vectors() {
+    // Bit-exact transport contract: encode ∘ knot_indices followed by
+    // decode must reproduce the kernel mirror's dequantized model with
+    // to_bits() equality (the decode op order matches the mirror), and
+    // the fused decode-fold must match decode-then-fold bitwise.
     prop::check(
         "wire-roundtrip",
         prop::iters(80),
         |rng| {
             let n = 1 + rng.below(3000);
-            let q = 1 + rng.below(16) as u32;
+            let q = 1 + rng.below(32) as u32;
             let scale = 10f64.powf(rng.range(-3.0, 3.0));
             let theta: Vec<f32> =
                 (0..n).map(|_| (rng.gaussian(0.0, scale)) as f32).collect();
             let mut noise = vec![0.0f32; n];
             rng.fill_uniform_f32(&mut noise);
-            (theta, noise, q)
+            let w = rng.range(-1.0, 1.0) as f32;
+            (theta, noise, q, w)
         },
-        |(theta, noise, q)| {
+        |(theta, noise, q, w)| {
             let (deq, tmax) = quant::stochastic_quantize(theta, noise, *q as f32);
             let (idx, signs, tmax2) = quant::knot_indices(theta, noise, *q);
-            if tmax != tmax2 {
+            if tmax.to_bits() != tmax2.to_bits() {
                 return Err("tmax mismatch".into());
             }
             let bytes = quant::encode(tmax, &signs, &idx, *q);
-            if bytes.len() != (quant::encoded_bits(theta.len(), *q) + 7) / 8 {
+            if bytes.len() != quant::encoded_len(theta.len(), *q) {
                 return Err("eq. (5) length violated".into());
             }
-            let (tmax3, decoded) = quant::decode(&bytes, theta.len(), *q);
-            if tmax3 != tmax {
+            let (tmax3, decoded) =
+                quant::decode(&bytes, theta.len(), *q).map_err(|e| e.to_string())?;
+            if tmax3.to_bits() != tmax.to_bits() {
                 return Err("range header corrupted".into());
             }
             for (i, (d, e)) in decoded.iter().zip(&deq).enumerate() {
-                if (d - e).abs() > 1e-5 * tmax.abs().max(1.0) {
-                    return Err(format!("element {i}: {d} vs {e}"));
+                if d.to_bits() != e.to_bits() {
+                    return Err(format!("element {i}: {d} vs {e} (bits differ)"));
                 }
+            }
+            // Fused fold == decode-then-fold, bit for bit.
+            let mut fused = vec![0.5f32; theta.len()];
+            quant::wire::fold_into(&mut fused, *w, &bytes, *q).map_err(|e| e.to_string())?;
+            for (i, (f, d)) in fused.iter().zip(&decoded).enumerate() {
+                if f.to_bits() != (0.5f32 + w * d).to_bits() {
+                    return Err(format!("fused fold diverged at {i}"));
+                }
+            }
+            // Truncation must be rejected, never zero-filled.
+            if quant::decode(&bytes[..bytes.len() - 1], theta.len(), *q).is_ok() {
+                return Err("truncated buffer accepted".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn wire_transport_payload_matches_eq5() {
+    // The transport-path length property: for any (Z, q) — including
+    // Z = 0 and q up to the 32-bit cap, with adversarial index
+    // patterns — the realized upload bytes equal ceil(eq. (5)/8)
+    // exactly, the bit fields roundtrip exactly, and every truncated
+    // buffer is rejected with a typed error.
+    prop::check(
+        "wire-eq5-bytes",
+        prop::iters(120),
+        |rng| {
+            let z = if rng.chance(0.1) { 0 } else { rng.below(2000) };
+            let q = 1 + rng.below(32) as u32;
+            let mask: u64 = u64::MAX >> (64 - q);
+            let idx: Vec<u32> = (0..z)
+                .map(|i| match i % 3 {
+                    0 => mask as u32,
+                    1 => 0,
+                    _ => (rng.next_u64() & mask) as u32,
+                })
+                .collect();
+            let signs: Vec<bool> = (0..z).map(|_| rng.chance(0.5)).collect();
+            (idx, signs, q, rng.range(0.0, 5.0) as f32)
+        },
+        |(idx, signs, q, tmax)| {
+            let z = idx.len();
+            let bytes = quant::encode(*tmax, signs, idx, *q);
+            let mut p = SystemParams::femnist_small();
+            p.z = z;
+            let analytic = (p.payload_bits(*q) as usize + 7) / 8;
+            if bytes.len() != analytic {
+                return Err(format!("{} bytes vs eq. (5) ceil {analytic}", bytes.len()));
+            }
+            let up = qccf::fl::exec::Upload::Wire { bytes: bytes.clone(), q: *q };
+            if up.wire_bytes() != analytic {
+                return Err("Upload::wire_bytes disagrees with eq. (5)".into());
+            }
+            let raw = qccf::fl::exec::Upload::Raw(vec![0.0f32; z]);
+            if raw.wire_bytes() != (p.raw_payload_bits() as usize + 7) / 8 {
+                return Err("raw upload bytes != 4Z".into());
+            }
+            let (t2, s2, i2) =
+                quant::decode_indices(&bytes, z, *q).map_err(|e| e.to_string())?;
+            if t2.to_bits() != tmax.to_bits() || &s2 != signs || &i2 != idx {
+                return Err("field roundtrip corrupted".into());
+            }
+            if !bytes.is_empty()
+                && quant::decode_indices(&bytes[..bytes.len() - 1], z, *q).is_ok()
+            {
+                return Err("truncated buffer accepted".into());
             }
             Ok(())
         },

@@ -31,6 +31,18 @@ cargo clippy --all-targets -- -D warnings
 echo "== cargo doc --no-deps (warnings denied) =="
 RUSTDOCFLAGS="${RUSTDOCFLAGS:-} -D warnings" cargo doc --no-deps --quiet
 
+# Wire-transport perf baseline: quick encode / decode-fold smoke at
+# Z = 20k, q ∈ {4, 8} (pure Rust, no artifacts). Writes BENCH_wire.json
+# so subsequent PRs have ns/elem numbers to regress against.
+echo "== bench-wire smoke (target/BENCH_wire.json) =="
+QCCF_BENCH_WARMUP_MS=20 QCCF_BENCH_MEASURE_MS=100 \
+    cargo run --release --quiet -- bench-wire \
+    --z 20000 --qs 4,8 --out target/BENCH_wire.json
+[ -s target/BENCH_wire.json ] || {
+    echo "verify.sh: bench-wire wrote no target/BENCH_wire.json" >&2
+    exit 1
+}
+
 # Scenario-path smoke: two built-in scenarios through the sweep runner
 # (2 rounds, tiny profile). Needs artifacts, like the integration tests.
 if [ -f artifacts/manifest.json ]; then
