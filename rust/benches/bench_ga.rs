@@ -48,6 +48,31 @@ fn main() {
         });
     }
     {
+        // Same workload through the cached evaluation subsystem
+        // (per-round EvalCtx + exact-key solve memo + reusable
+        // scratch) — bit-identical J0s, decision-stage hot-path cost.
+        let ctx = qccf::sched::EvalCtx::new(&inputs, Case5Mode::Taylor);
+        let mut scratch = ctx.make_scratch();
+        let mut r = Rng::seed_from(7);
+        set.bench("fitness_eval_ctx_memo", || {
+            let c = Chromosome::random(10, 10, &mut r);
+            ctx.evaluate_j0(&c, &mut scratch)
+        });
+    }
+    {
+        // Full Algorithm 1 on the cached path (EvalCtx + scratch + GA
+        // fitness cache) — what QccfScheduler::decide actually runs.
+        let ctx = qccf::sched::EvalCtx::new(&inputs, Case5Mode::Taylor);
+        let mut scratches = vec![ctx.make_scratch()];
+        let mut r = Rng::seed_from(11);
+        set.bench("algorithm1_full_run_cached", || {
+            ga::optimize_scratch(10, 10, &GaParams::default(), &mut r, &[], &mut scratches, |c, s| {
+                ctx.evaluate_j0(c, s)
+            })
+            .best_j0
+        });
+    }
+    {
         let mut r = Rng::seed_from(11);
         set.bench("algorithm1_full_run_default", || {
             ga::optimize(10, 10, &GaParams::default(), &mut r, |c| {

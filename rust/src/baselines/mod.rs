@@ -14,9 +14,7 @@
 
 use crate::energy;
 use crate::ga::{self, Chromosome, GaParams};
-use crate::sched::{
-    evaluate_allocation, greedy_allocation, ClientDecision, RoundDecision, RoundInputs, Scheduler,
-};
+use crate::sched::{greedy_allocation, ClientDecision, RoundDecision, RoundInputs, Scheduler};
 use crate::solver::{self, Case5Mode};
 use crate::util::rng::Rng;
 
@@ -65,9 +63,18 @@ pub struct ChannelAllocateScheduler {
 }
 
 impl ChannelAllocateScheduler {
-    /// Scheduler with the default GA budget.
+    /// Scheduler with the default GA budget. The GA fitness cache
+    /// honors the `QCCF_DECISION_CACHE=0` A/B kill switch like the
+    /// other GA-based schedulers (no `EvalCtx` here — the fitness is a
+    /// plain rate sum).
     pub fn new(seed: u64) -> Self {
-        ChannelAllocateScheduler { ga: GaParams::default(), rng: Rng::seed_from(seed) }
+        ChannelAllocateScheduler {
+            ga: GaParams {
+                fitness_cache: crate::sched::ctx::decision_cache_default(),
+                ..GaParams::default()
+            },
+            rng: Rng::seed_from(seed),
+        }
     }
 
     /// Fan GA fitness evaluations out over `threads` workers.
@@ -186,6 +193,10 @@ impl Scheduler for PrincipleScheduler {
 pub struct SameSizeScheduler {
     ga: GaParams,
     case5: Case5Mode,
+    /// Decision-stage caching, honoring the same
+    /// `QCCF_DECISION_CACHE=0` A/B kill switch as `QccfScheduler`
+    /// (results are bit-identical either way — see `sched::ctx`).
+    cache: bool,
     rng: Rng,
 }
 
@@ -195,6 +206,7 @@ impl SameSizeScheduler {
         SameSizeScheduler {
             ga: GaParams::default(),
             case5: Case5Mode::Taylor,
+            cache: crate::sched::ctx::decision_cache_default(),
             rng: Rng::seed_from(seed),
         }
     }
@@ -202,6 +214,12 @@ impl SameSizeScheduler {
     /// Fan GA fitness evaluations out over `threads` workers.
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.ga.threads = threads.max(1);
+        self
+    }
+
+    /// Enable or disable the decision-stage caches (default: on).
+    pub fn with_cache(mut self, enabled: bool) -> Self {
+        self.cache = enabled;
         self
     }
 }
@@ -228,11 +246,19 @@ impl Scheduler for SameSizeScheduler {
             q_prev: inp.q_prev,
             queues: inp.queues,
         };
-        let mode = self.case5;
-        let out = ga::optimize(p.num_channels, p.num_clients, &self.ga, &mut self.rng, |c| {
-            evaluate_allocation(&fake, c, mode).0
-        });
-        let (j0, fake_assignments) = evaluate_allocation(&fake, &out.best, mode);
+        // Same shared decide body as QCCF (sched::ctx::decide_with_ga:
+        // per-round EvalCtx + solve memo + per-worker scratch + GA
+        // fitness cache), over the equal-size inputs; bit-identical to
+        // the old evaluate_allocation-per-candidate loop, with no seed
+        // chromosomes so the RNG trajectory is unchanged too.
+        let (j0, fake_assignments, evals) = crate::sched::ctx::decide_with_ga(
+            &fake,
+            self.case5,
+            &self.ga,
+            &mut self.rng,
+            &[],
+            self.cache,
+        );
         // Realization under heterogeneity: the equal-size controller has
         // no per-client view, so the synchronized round must provision
         // compute for the *largest* dataset — "computation latency is
@@ -253,7 +279,7 @@ impl Scheduler for SameSizeScheduler {
             };
             assignments[i] = Some(ClientDecision { channel: d.channel, q: Some(q), f, rate: d.rate });
         }
-        RoundDecision { assignments, j0, evals: out.evals, deadline_exempt: false }
+        RoundDecision { assignments, j0, evals, deadline_exempt: false }
     }
 }
 

@@ -198,6 +198,175 @@ pub fn write_wire_bench_json(
     std::fs::write(path, format!("{}\n", doc.to_string_compact()))
 }
 
+/// One row of the decision-stage perf baseline (`BENCH_sched.json`).
+#[derive(Clone, Debug)]
+pub struct SchedBenchRow {
+    /// `sched/eval_{cached|uncached}_u<U>` identifier.
+    pub name: String,
+    /// U — clients in the synthetic round.
+    pub u: usize,
+    /// C — channels (U/2).
+    pub c: usize,
+    /// Whether this row ran the cached path (`sched::EvalCtx` + solve
+    /// memo + reusable scratch) or the uncached reference
+    /// (`sched::evaluate_allocation`).
+    pub cached: bool,
+    /// Iterations measured.
+    pub iters: u64,
+    /// Mean wall time per J0 evaluation (ns).
+    pub mean_ns: f64,
+    /// J0 evaluations per second (1e9 / mean_ns).
+    pub evals_per_sec: f64,
+}
+
+/// Run the decision-stage microbench: J0 evaluation throughput at each
+/// `U` in `us` with C = U/2, cached vs uncached. Pure Rust — no
+/// artifacts — so `verify.sh` runs it as a tier-1 smoke (see the
+/// `bench-sched` CLI subcommand, which writes `BENCH_sched.json`).
+///
+/// The workload cycles a fixed pool of `pool` chromosomes shaped like a
+/// *converging* GA population — perturbations of the greedy seed — so
+/// participant sets (hence solve-memo keys) recur across evaluations
+/// exactly as Algorithm 1's late generations do. The uncached row is
+/// the honest reference: `evaluate_allocation` per candidate, as the
+/// fitness loop ran before the EvalCtx subsystem.
+pub fn run_sched_bench(us: &[usize], pool: usize) -> Vec<SchedBenchRow> {
+    use crate::ga::Chromosome;
+    use crate::lyapunov::Queues;
+    use crate::sched::{self, RoundInputs};
+    use crate::solver::Case5Mode;
+    use crate::wireless::ChannelModel;
+
+    let mut set = BenchSet::new("sched");
+    let mut meta: Vec<(usize, usize, bool)> = Vec::new(); // (u, c, cached) per row
+    for &u in us {
+        let c = (u / 2).max(1);
+        let mut params = crate::config::SystemParams::femnist_small();
+        params.num_clients = u;
+        params.num_channels = c;
+        let mut rng = crate::util::rng::Rng::seed_from(0x5C4E_D000 + u as u64);
+        let model = ChannelModel::new(&params, &mut rng);
+        let channels = model.draw(&mut rng);
+        let sizes: Vec<f64> = (0..u).map(|_| rng.gaussian(1200.0, 300.0).max(64.0)).collect();
+        let total: f64 = sizes.iter().sum();
+        let w_full: Vec<f64> = sizes.iter().map(|d| d / total).collect();
+        let g2: Vec<f64> = (0..u).map(|_| rng.range(0.05, 16.0)).collect();
+        let sigma2: Vec<f64> = (0..u).map(|_| rng.range(0.05, 2.0)).collect();
+        let theta_max = vec![0.4; u];
+        let q_prev = vec![6.0; u];
+        let mut queues = Queues::new();
+        queues.lambda1 = 1e3;
+        queues.lambda2 = 10.0;
+        let inp = RoundInputs {
+            params: &params,
+            round: 5,
+            channels: &channels,
+            sizes: &sizes,
+            w_full: &w_full,
+            g2: &g2,
+            sigma2: &sigma2,
+            theta_max: &theta_max,
+            q_prev: &q_prev,
+            queues: &queues,
+        };
+        let greedy = sched::greedy_allocation(&inp);
+        let chroms: Vec<Chromosome> = (0..pool.max(1))
+            .map(|_| {
+                let mut chrom = greedy.clone();
+                for _ in 0..(c / 8).max(1) {
+                    let a = rng.below(c);
+                    let b = rng.below(c);
+                    chrom.alloc.swap(a, b);
+                    if rng.chance(0.5) {
+                        chrom.alloc[a] = Some(rng.below(u));
+                    }
+                }
+                chrom.repair(u);
+                chrom
+            })
+            .collect();
+
+        let mut k = 0usize;
+        set.bench(&format!("eval_uncached_u{u}"), || {
+            k = (k + 1) % chroms.len();
+            sched::evaluate_allocation(&inp, &chroms[k], Case5Mode::Taylor).0
+        });
+        meta.push((u, c, false));
+
+        let ctx = sched::EvalCtx::new(&inp, Case5Mode::Taylor);
+        let mut scratch = ctx.make_scratch();
+        let mut k = 0usize;
+        set.bench(&format!("eval_cached_u{u}"), || {
+            k = (k + 1) % chroms.len();
+            ctx.evaluate_j0(&chroms[k], &mut scratch)
+        });
+        meta.push((u, c, true));
+    }
+    set.results
+        .iter()
+        .zip(meta)
+        .map(|(r, (u, c, cached))| SchedBenchRow {
+            name: r.name.clone(),
+            u,
+            c,
+            cached,
+            iters: r.iters,
+            mean_ns: r.mean_ns,
+            evals_per_sec: if r.mean_ns > 0.0 { 1e9 / r.mean_ns } else { 0.0 },
+        })
+        .collect()
+}
+
+/// Write sched-bench rows as a single JSON document
+/// (`BENCH_sched.json`): the per-row numbers plus per-U
+/// cached-vs-uncached speedups — the decision-stage perf baseline
+/// subsequent PRs diff against (and the number behind the "cached ≥ 3×
+/// at U = 1000" acceptance line).
+pub fn write_sched_bench_json(
+    path: &std::path::Path,
+    pool: usize,
+    rows: &[SchedBenchRow],
+) -> std::io::Result<()> {
+    use crate::util::json::{self, Json};
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let benches = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("name", json::s(&r.name)),
+                    ("u", json::num(r.u as f64)),
+                    ("c", json::num(r.c as f64)),
+                    ("cached", Json::Bool(r.cached)),
+                    ("iters", json::num(r.iters as f64)),
+                    ("mean_ns", json::num(r.mean_ns)),
+                    ("evals_per_sec", json::num(r.evals_per_sec)),
+                ])
+            })
+            .collect(),
+    );
+    let mut speedups = Vec::new();
+    for r in rows.iter().filter(|r| r.cached) {
+        if let Some(base) = rows.iter().find(|b| !b.cached && b.u == r.u) {
+            if r.mean_ns > 0.0 {
+                speedups.push(json::obj(vec![
+                    ("u", json::num(r.u as f64)),
+                    ("speedup", json::num(base.mean_ns / r.mean_ns)),
+                ]));
+            }
+        }
+    }
+    let doc = json::obj(vec![
+        ("pool", json::num(pool as f64)),
+        ("benches", benches),
+        ("speedups", Json::Arr(speedups)),
+    ]);
+    std::fs::write(path, format!("{}\n", doc.to_string_compact()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -233,6 +402,29 @@ mod tests {
         let doc = crate::util::json::parse(text.trim()).unwrap();
         assert_eq!(doc.get("z").and_then(|x| x.as_usize()), Some(512));
         assert_eq!(doc.get("benches").and_then(|x| x.as_arr()).map(|a| a.len()), Some(4));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sched_bench_rows_and_json() {
+        std::env::set_var("QCCF_BENCH_WARMUP_MS", "1");
+        std::env::set_var("QCCF_BENCH_MEASURE_MS", "5");
+        let rows = run_sched_bench(&[8, 12], 4);
+        assert_eq!(rows.len(), 4, "uncached + cached per U");
+        assert!(rows.iter().all(|r| r.iters > 0 && r.mean_ns > 0.0 && r.evals_per_sec > 0.0));
+        assert!(rows.iter().any(|r| r.name.contains("eval_uncached_u8") && !r.cached));
+        assert!(rows.iter().any(|r| r.name.contains("eval_cached_u12") && r.cached));
+        assert!(rows.iter().all(|r| r.c == r.u / 2));
+        let dir = std::env::temp_dir().join("qccf_sched_bench_test");
+        let path = dir.join("BENCH_sched.json");
+        write_sched_bench_json(&path, 4, &rows).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::parse(text.trim()).unwrap();
+        assert_eq!(doc.get("pool").and_then(|x| x.as_usize()), Some(4));
+        assert_eq!(doc.get("benches").and_then(|x| x.as_arr()).map(|a| a.len()), Some(4));
+        let speedups = doc.get("speedups").and_then(|x| x.as_arr()).unwrap();
+        assert_eq!(speedups.len(), 2);
+        assert!(speedups.iter().all(|s| s.get("speedup").and_then(|x| x.as_f64()).unwrap() > 0.0));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -3,30 +3,42 @@
 //! Everything here is analytic (the paper's own methodology: energy is
 //! modeled, not measured), so the figures' energy axes are exact
 //! functions of the decisions (q, f, R, a) and the channel draws.
+//!
+//! Every function is *pure* and bitwise-deterministic in its f64
+//! inputs — the decision-stage memo (`sched::ctx`) caches
+//! [`client_energy`] alongside the per-client solve on exact f64-bit
+//! keys and relies on replayed calls producing identical bits. These
+//! are also the innermost calls of the GA fitness loop, hence the
+//! `#[inline]` hints.
 
 use crate::config::SystemParams;
 
 /// Uplink latency, eq. (14): `ℓ / v` with ℓ = Z(q+1)+32 from eq. (5).
+#[inline]
 pub fn t_com(params: &SystemParams, q: u32, rate_bps: f64) -> f64 {
     params.payload_bits(q) / rate_bps
 }
 
 /// Uplink latency for a raw (unquantized) 32-bit upload.
+#[inline]
 pub fn t_com_raw(params: &SystemParams, rate_bps: f64) -> f64 {
     params.raw_payload_bits() / rate_bps
 }
 
 /// Uplink energy, eq. (15): `p · T^com`.
+#[inline]
 pub fn e_com(params: &SystemParams, t_com_s: f64) -> f64 {
     params.tx_power_w * t_com_s
 }
 
 /// Computation latency, eq. (16): `τ^e γ D_i / f`.
+#[inline]
 pub fn t_cmp(params: &SystemParams, d_i: f64, f_hz: f64) -> f64 {
     params.tau_e as f64 * params.gamma * d_i / f_hz
 }
 
 /// Computation energy, eq. (17): `τ^e α γ D_i f²`.
+#[inline]
 pub fn e_cmp(params: &SystemParams, d_i: f64, f_hz: f64) -> f64 {
     params.tau_e as f64 * params.alpha * params.gamma * d_i * f_hz * f_hz
 }
@@ -51,6 +63,7 @@ pub fn freq_to_meet_deadline(
 /// The paper's 𝒮(q) = max(f^min, ...) — optimal frequency for a fixed
 /// integer q (Theorem 3 / Case 1 logic). `None` if infeasible even at
 /// f^max.
+#[inline]
 pub fn s_of_q(params: &SystemParams, d_i: f64, q: u32, rate_bps: f64) -> Option<f64> {
     let f = freq_to_meet_deadline(params, d_i, params.payload_bits(q), rate_bps)?;
     let f = f.max(params.f_min);
@@ -62,6 +75,7 @@ pub fn s_of_q(params: &SystemParams, d_i: f64, q: u32, rate_bps: f64) -> Option<
 }
 
 /// Total per-round energy of a participating client (objective summand).
+#[inline]
 pub fn client_energy(params: &SystemParams, d_i: f64, f_hz: f64, q: u32, rate_bps: f64) -> f64 {
     e_cmp(params, d_i, f_hz) + e_com(params, t_com(params, q, rate_bps))
 }

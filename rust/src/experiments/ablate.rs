@@ -26,7 +26,9 @@ pub struct GaBudgetRow {
     pub mean_gain_pct: f64,
     /// 95th-percentile relative J0 improvement (percent).
     pub p95_gain_pct: f64,
-    /// Mean fitness evaluations per decision.
+    /// Mean fitness-evaluator invocations per decision. With the GA
+    /// fitness cache (the default) this counts distinct chromosomes
+    /// actually scored — elites and duplicate offspring are free.
     pub mean_evals: f64,
 }
 

@@ -4,7 +4,12 @@
 //! with the wireless/energy bookkeeping and Lyapunov queue updates of
 //! §IV–§V.
 //!
-//! Stage 1 (decision) realizes whatever the scheduler intended. Stage 2
+//! Stage 1 (decision) realizes whatever the scheduler intended — for
+//! the GA-based schedulers it runs on the cached evaluation subsystem
+//! (`sched::EvalCtx`: per-round precompute + exact-f64-bit-keyed solve
+//! memo + per-worker scratch, plus the GA fitness cache), which is
+//! bit-identical to the uncached reference evaluator by contract, so
+//! the determinism guarantees below are unaffected. Stage 2
 //! fans the scheduled clients out over a worker pool ([`exec`]): each
 //! client trains through the PJRT runtime, quantizes and **wire-encodes
 //! its upload into the eq. (5) bit-packed payload** (raw f32 only for

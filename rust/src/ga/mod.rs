@@ -9,8 +9,14 @@
 //! supplied by the caller (the QCCF scheduler evaluates the inner
 //! closed-form solver per candidate).
 
+use std::collections::{HashMap, HashSet};
+
 use crate::util::rng::Rng;
 use crate::util::threadpool;
+
+/// Per-run fitness memo: chromosome allocation → J0 (pure, so cached
+/// scores are the evaluator's own bits — see [`GaParams::fitness_cache`]).
+type FitnessCache = HashMap<Vec<Option<usize>>, f64>;
 
 /// One channel-allocation chromosome.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -109,6 +115,13 @@ pub struct GaParams {
     /// evals are independent and results keep population order, so any
     /// thread count yields an identical GA trajectory.
     pub threads: usize,
+    /// Memoize fitness by chromosome across generations: elites and
+    /// duplicate offspring are scored exactly once per run. J0 is a
+    /// pure function of the chromosome, so the GA trajectory — and
+    /// [`GaOutcome::history`] / [`GaOutcome::best`] — is identical with
+    /// the cache on or off; only [`GaOutcome::evals`] (true evaluator
+    /// invocations) drops. On by default.
+    pub fitness_cache: bool,
 }
 
 impl Default for GaParams {
@@ -121,6 +134,7 @@ impl Default for GaParams {
             iota: 2.0,
             elites: 2,
             threads: 1,
+            fitness_cache: true,
         }
     }
 }
@@ -134,20 +148,54 @@ pub struct GaOutcome {
     pub best_j0: f64,
     /// Best J0 per generation (convergence diagnostics / ablations).
     pub history: Vec<f64>,
-    /// Total fitness evaluations performed.
+    /// Evaluator invocations performed. With
+    /// [`GaParams::fitness_cache`] on (the default) this counts cache
+    /// *misses* — distinct chromosomes actually scored; with it off,
+    /// every population member every generation.
     pub evals: usize,
 }
 
-/// Score a population. Fitness evaluations are independent, so they
-/// fan out over `threads` workers ([`GaParams::threads`]); results stay
-/// in population order, keeping the GA deterministic per seed for any
-/// thread count.
-fn eval_population<F>(pop: &[Chromosome], threads: usize, evals: &mut usize, eval: &F) -> Vec<f64>
+/// Score a population over the per-worker `states`
+/// ([`threadpool::parallel_map_with`]); results stay in population
+/// order, keeping the GA deterministic per seed for any worker count.
+///
+/// With the fitness cache enabled, chromosomes already scored this run
+/// (elites, duplicate offspring, re-visited allocations) are served
+/// from the cache and only the *new* ones are dispatched — collected in
+/// deterministic first-occurrence order before any worker runs, so the
+/// miss set (and `evals`) is identical for any worker count.
+fn eval_population<S, F>(
+    pop: &[Chromosome],
+    states: &mut [S],
+    cache: &mut Option<FitnessCache>,
+    evals: &mut usize,
+    eval: &F,
+) -> Vec<f64>
 where
-    F: Fn(&Chromosome) -> f64 + Sync,
+    S: Send,
+    F: Fn(&Chromosome, &mut S) -> f64 + Sync,
 {
-    *evals += pop.len();
-    threadpool::parallel_map(pop, threads, |_, c| eval(c))
+    let Some(cache) = cache.as_mut() else {
+        *evals += pop.len();
+        return threadpool::parallel_map_with(pop, states, |_, c, s| eval(c, s));
+    };
+    // Dispatch each distinct unseen chromosome exactly once.
+    let mut pending: Vec<usize> = Vec::new();
+    {
+        let mut batch: HashSet<&[Option<usize>]> = HashSet::new();
+        for (i, c) in pop.iter().enumerate() {
+            if !cache.contains_key(&c.alloc) && batch.insert(c.alloc.as_slice()) {
+                pending.push(i);
+            }
+        }
+    }
+    *evals += pending.len();
+    let fresh: Vec<f64> =
+        threadpool::parallel_map_with(&pending, states, |_, &i, s| eval(&pop[i], s));
+    for (&i, &j0) in pending.iter().zip(&fresh) {
+        cache.insert(pop[i].alloc.clone(), j0);
+    }
+    pop.iter().map(|c| cache[&c.alloc]).collect()
 }
 
 /// Run Algorithm 1. `eval` returns J0 (lower = better); infeasible
@@ -181,7 +229,44 @@ pub fn optimize_with_seeds<F>(
 where
     F: Fn(&Chromosome) -> f64 + Sync,
 {
+    let mut unit = vec![(); params.threads.max(1)];
+    optimize_scratch(num_channels, num_clients, params, rng, seeds, &mut unit, |c, _| eval(c))
+}
+
+/// [`optimize_with_seeds`] with caller-provided per-worker scratch
+/// states: `states.len()` is the fitness worker count (it takes the
+/// place of [`GaParams::threads`]) and each worker hands its `&mut S`
+/// to every evaluation it runs. The QCCF scheduler threads its
+/// `sched::EvalScratch` buffers through here so the decision hot loop
+/// performs zero per-evaluation heap allocation; any worker count
+/// yields an identical GA trajectory.
+pub fn optimize_scratch<S, F>(
+    num_channels: usize,
+    num_clients: usize,
+    params: &GaParams,
+    rng: &mut Rng,
+    seeds: &[Chromosome],
+    states: &mut [S],
+    eval: F,
+) -> GaOutcome
+where
+    S: Send,
+    F: Fn(&Chromosome, &mut S) -> f64 + Sync,
+{
+    // A zero-size population cannot search (and `best_of` has no
+    // candidate to return): yield the infeasible sentinel instead of
+    // panicking partway through.
+    if params.population == 0 {
+        return GaOutcome {
+            best: Chromosome { alloc: vec![None; num_channels] },
+            best_j0: f64::INFINITY,
+            history: vec![f64::INFINITY; params.generations],
+            evals: 0,
+        };
+    }
     let mut evals = 0usize;
+    let mut cache: Option<FitnessCache> =
+        if params.fitness_cache { Some(HashMap::new()) } else { None };
     let mut pop: Vec<Chromosome> = (0..params.population)
         .map(|_| Chromosome::random(num_channels, num_clients, rng))
         .collect();
@@ -201,7 +286,8 @@ where
         }
     }
 
-    let mut score: Vec<f64> = eval_population(&pop, params.threads, &mut evals, &eval);
+    let mut score: Vec<f64> =
+        eval_population(&pop, states, &mut cache, &mut evals, &eval);
     let mut history = Vec::with_capacity(params.generations);
     let (mut best, mut best_j0) = best_of(&pop, &score);
 
@@ -220,9 +306,11 @@ where
             .collect();
 
         let mut next: Vec<Chromosome> = Vec::with_capacity(params.population);
-        // Elitism.
+        // Elitism. total_cmp: a NaN score (degenerate fitness function)
+        // must not panic the round; for the finite J0s the decision
+        // pipeline produces the order is identical to partial_cmp.
         let mut order: Vec<usize> = (0..pop.len()).collect();
-        order.sort_by(|&a, &b| score[a].partial_cmp(&score[b]).unwrap());
+        order.sort_by(|&a, &b| score[a].total_cmp(&score[b]));
         for &i in order.iter().take(params.elites) {
             next.push(pop[i].clone());
         }
@@ -245,7 +333,7 @@ where
             }
         }
         pop = next;
-        score = eval_population(&pop, params.threads, &mut evals, &eval);
+        score = eval_population(&pop, states, &mut cache, &mut evals, &eval);
         let (gen_best, gen_j0) = best_of(&pop, &score);
         if gen_j0 < best_j0 {
             best = gen_best;
@@ -445,5 +533,111 @@ mod tests {
         assert_eq!(o1.best_j0, o8.best_j0);
         assert_eq!(o1.history, o8.history);
         assert_eq!(o1.evals, o8.evals);
+    }
+
+    #[test]
+    fn fitness_cache_skips_elites_without_changing_trajectory() {
+        // Elites are copied unchanged into every next generation; with
+        // the fitness cache they must never be re-scored — `evals`
+        // drops below the uncached population × (generations + 1)
+        // while `history` (and the winner) stays identical, because a
+        // cache hit returns the very same J0 the evaluator produced.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let eval = |c: &Chromosome| -> f64 {
+            c.alloc.iter().flatten().map(|&i| ((i * i + 3) % 11) as f64).sum()
+        };
+        let on = GaParams::default();
+        let off = GaParams { fitness_cache: false, ..GaParams::default() };
+        let calls_off = AtomicUsize::new(0);
+        let o_off = optimize(8, 8, &off, &mut Rng::seed_from(41), |c| {
+            calls_off.fetch_add(1, Ordering::Relaxed);
+            eval(c)
+        });
+        let calls_on = AtomicUsize::new(0);
+        let o_on = optimize(8, 8, &on, &mut Rng::seed_from(41), |c| {
+            calls_on.fetch_add(1, Ordering::Relaxed);
+            eval(c)
+        });
+        assert_eq!(o_on.history, o_off.history, "cache changed the GA trajectory");
+        assert_eq!(o_on.best, o_off.best);
+        assert_eq!(o_on.best_j0.to_bits(), o_off.best_j0.to_bits());
+        let budget = off.population * (off.generations + 1);
+        assert_eq!(o_off.evals, budget);
+        assert_eq!(calls_off.load(Ordering::Relaxed), budget);
+        // ≥ elites × generations guaranteed duplicates are skipped.
+        assert!(
+            o_on.evals + on.elites * on.generations <= budget,
+            "evals {} did not drop below {budget}",
+            o_on.evals
+        );
+        assert_eq!(calls_on.load(Ordering::Relaxed), o_on.evals, "evals must count misses");
+    }
+
+    #[test]
+    fn duplicate_chromosomes_scored_once_per_population() {
+        // Two identical chromosomes in the *same* population are one
+        // cache miss — the batch dedup, not just the cross-generation
+        // cache. A 1-channel space over 1 client has 2 possible
+        // chromosomes, so every generation is saturated with dupes.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let calls = AtomicUsize::new(0);
+        let out = optimize(1, 1, &GaParams::default(), &mut Rng::seed_from(3), |c| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            if c.alloc[0].is_some() {
+                1.0
+            } else {
+                2.0
+            }
+        });
+        assert!(calls.load(Ordering::Relaxed) <= 2, "{} evaluator calls", calls.load(Ordering::Relaxed));
+        assert_eq!(out.evals, calls.load(Ordering::Relaxed));
+        assert_eq!(out.best_j0, 1.0);
+    }
+
+    #[test]
+    fn scratch_states_thread_through_workers() {
+        // optimize_scratch hands each worker exactly one reusable
+        // state; the per-worker tallies must sum to the evaluator
+        // invocation count (= evals with the cache on).
+        let mut states = vec![0usize; 3];
+        let params = GaParams { threads: 3, ..GaParams::default() };
+        let out = optimize_scratch(
+            6,
+            6,
+            &params,
+            &mut Rng::seed_from(5),
+            &[],
+            &mut states,
+            |c, tally: &mut usize| {
+                *tally += 1;
+                c.alloc.iter().filter(|s| s.is_none()).count() as f64
+            },
+        );
+        assert!(out.evals > 0);
+        assert_eq!(states.iter().sum::<usize>(), out.evals);
+    }
+
+    #[test]
+    fn zero_population_returns_infeasible_sentinel() {
+        let params = GaParams { population: 0, generations: 3, ..GaParams::default() };
+        let out = optimize(4, 4, &params, &mut Rng::seed_from(1), |_| 0.0);
+        assert!(out.best_j0.is_infinite());
+        assert_eq!(out.evals, 0);
+        assert_eq!(out.history.len(), 3);
+        assert!(out.best.alloc.iter().all(|s| s.is_none()));
+    }
+
+    #[test]
+    fn nan_fitness_does_not_panic_elitism() {
+        // A degenerate evaluator returning NaN must not abort the
+        // round (the elitism sort uses total_cmp).
+        let out = optimize(4, 4, &GaParams::default(), &mut Rng::seed_from(17), |c| {
+            if c.alloc.iter().flatten().count() % 2 == 0 {
+                f64::NAN
+            } else {
+                1.0
+            }
+        });
+        assert!(out.evals > 0);
     }
 }

@@ -14,7 +14,9 @@
 //!   *decision* stage (Lyapunov virtual queues → genetic channel
 //!   allocation → closed-form KKT quantization/frequency control →
 //!   Theorem-3 integer rounding, with GA fitness fanned out over a
-//!   worker pool), a *parallel execution* stage (`fl::exec`: every
+//!   worker pool and served by a bit-identical caching layer —
+//!   per-round `sched::EvalCtx`, exact-key solve memo, per-worker
+//!   scratch, GA fitness cache), a *parallel execution* stage (`fl::exec`: every
 //!   scheduled client trains, quantizes, **wire-encodes its upload
 //!   into the eq. (5) bit-packed payload**, and accounts
 //!   latency/energy independently on its private RNG stream), a

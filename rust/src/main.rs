@@ -25,13 +25,19 @@
 //!                                fused decode-fold), written as BENCH_wire.json
 //!                                (default target/BENCH_wire.json; no artifacts) —
 //!                                the byte-transport perf baseline verify.sh seeds
+//!   bench-sched [--us 100,1000] [--pool 32] [--out F]   decision-stage microbench:
+//!                                J0 evaluations/sec at U clients, C = U/2, cached
+//!                                (sched::EvalCtx + solve memo + scratch) vs the
+//!                                uncached reference path, over a converging-GA-
+//!                                shaped chromosome pool; written as
+//!                                BENCH_sched.json (default target/; no artifacts)
 //!
 //! The fig2..fig5 harnesses are presets over the `paper-femnist` /
 //! `paper-cifar10` scenarios — the same path `sweep` runs (see
 //! docs/ARCHITECTURE.md).
 //!
 //! Requires `make artifacts` (HLO text under ./artifacts), except
-//! `ablate`, `bench-wire` and `sweep --list`.
+//! `ablate`, `bench-wire`, `bench-sched` and `sweep --list`.
 
 use std::path::PathBuf;
 
@@ -83,9 +89,10 @@ fn run(args: &Args) -> Result<()> {
         Some("decide") => cmd_decide(args),
         Some("ablate") => cmd_ablate(args),
         Some("bench-wire") => cmd_bench_wire(args),
+        Some("bench-sched") => cmd_bench_sched(args),
         Some(other) => anyhow::bail!("unknown subcommand `{other}` (see README)"),
         None => {
-            println!("usage: qccf <params|train|fig2|fig3|fig4|fig5|sweep|decide|ablate|bench-wire> [options]");
+            println!("usage: qccf <params|train|fig2|fig3|fig4|fig5|sweep|decide|ablate|bench-wire|bench-sched> [options]");
             println!("see README.md for the full option list; `qccf sweep --list` shows scenarios");
             Ok(())
         }
@@ -311,6 +318,32 @@ fn cmd_bench_wire(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.get_or("out", "target/BENCH_wire.json"));
     let rows = qccf::bench::run_wire_bench(z, &qs);
     qccf::bench::write_wire_bench_json(&out, z, &rows)?;
+    println!("wrote {} ({} benchmarks)", out.display(), rows.len());
+    Ok(())
+}
+
+/// Decision-stage microbench (no artifacts needed — pure Rust): J0
+/// evaluation throughput at each U with C = U/2, through the cached
+/// path (`sched::EvalCtx` + exact-key solve memo + reusable scratch)
+/// and the uncached `evaluate_allocation` reference, emitted as
+/// `BENCH_sched.json` — the decision-stage perf baseline verify.sh
+/// seeds and later PRs diff against.
+fn cmd_bench_sched(args: &Args) -> Result<()> {
+    let us: Vec<usize> =
+        args.get_f64_list("us", &[100.0, 1000.0]).into_iter().map(|u| u as usize).collect();
+    anyhow::ensure!(!us.is_empty(), "--us: need at least one client count");
+    anyhow::ensure!(us.iter().all(|&u| u >= 2), "--us: client counts must be >= 2");
+    let pool = args.get_usize("pool", 32);
+    anyhow::ensure!(pool >= 1, "--pool: need at least one chromosome");
+    let out = PathBuf::from(args.get_or("out", "target/BENCH_sched.json"));
+    let rows = qccf::bench::run_sched_bench(&us, pool);
+    qccf::bench::write_sched_bench_json(&out, pool, &rows)?;
+    for r in &rows {
+        println!(
+            "{:<28} U={:<5} C={:<5} {:>12.0} evals/sec",
+            r.name, r.u, r.c, r.evals_per_sec
+        );
+    }
     println!("wrote {} ({} benchmarks)", out.display(), rows.len());
     Ok(())
 }

@@ -1,0 +1,452 @@
+//! Decision-stage evaluation subsystem: per-round precomputation
+//! ([`EvalCtx`]), reusable per-worker buffers ([`EvalScratch`]) and an
+//! exact-key memo for the per-client closed-form solve — the
+//! performance layer under Algorithm 1's GA fitness loop.
+//!
+//! The GA scores `population × generations` channel allocations per
+//! round, and every score used to re-derive everything from scratch:
+//! per-(client, channel) rates and q = 1 feasibility gates, the
+//! participation-independent pieces of the eq. (27) convergence terms,
+//! eight fresh length-U vectors, and one eq. (41) KKT solve per
+//! assigned client. [`EvalCtx`] hoists the per-round invariants out of
+//! that loop, [`EvalScratch`] removes the per-evaluation allocations,
+//! and the solve memo removes repeated KKT solves as the population
+//! converges onto recurring participant sets.
+//!
+//! ## Bit-identity contract
+//!
+//! [`EvalCtx::evaluate`] returns **bit-identical** `(J0, assignments)`
+//! to the uncached reference [`super::evaluate_allocation`] for every
+//! chromosome. Three ingredients make that safe:
+//!
+//! * precomputed values are *exactly* the f64s the reference computes:
+//!   the same expressions in the same operation order, with the only
+//!   elisions being multiplications by `1.0` and additions of `±0.0`,
+//!   both exact in IEEE 754 (`x * 1.0 == x`; `x + 0.0 == x` whenever
+//!   `x` is not `-0.0`, and the skipped summands accumulate into sums
+//!   that start at `+0.0` and never become `-0.0`);
+//! * the solve-memo key is `(client, rate.to_bits(), w_round.to_bits())`
+//!   — exact f64 bit patterns, never an epsilon comparison — and every
+//!   other [`solver::solve_client`] input (D_i, θ^max, q_prev, λ2,
+//!   Case-5 mode) is constant within a round, so a hit replays the
+//!   *identical* decision and energy, not an approximation;
+//! * accumulation order is preserved: d_total, the C6/C7 scans and the
+//!   energy sum all add in ascending client order exactly as the
+//!   reference does.
+//!
+//! `tests/proptest_decision.rs` pins the equivalence across random
+//! chromosomes, federation sizes, infeasible clients and empty
+//! allocations; `tests/integration_fl.rs` pins whole-trace equality
+//! with the caches on vs off.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::convergence;
+use crate::energy;
+use crate::ga::{self, Chromosome, GaParams};
+use crate::solver::{self, Case5Mode, ClientCtx, Decision};
+use crate::util::rng::Rng;
+
+use super::{ClientDecision, RoundInputs};
+
+/// Whether the decision-stage caches are enabled by default for this
+/// process: the `QCCF_DECISION_CACHE=0` A/B kill switch, honored by
+/// every GA-based scheduler (QCCF, Same-Size, and Channel-Allocate's
+/// fitness cache).
+pub fn decision_cache_default() -> bool {
+    std::env::var("QCCF_DECISION_CACHE").map(|v| v != "0").unwrap_or(true)
+}
+
+/// The shared decide body of the GA-based schedulers: build the cached
+/// evaluation context (memo gated by `cache`), run Algorithm 1 with
+/// per-worker [`EvalScratch`] states and the GA fitness cache, then
+/// fully evaluate the winner. Returns `(j0, assignments, evals)` —
+/// bit-identical for any `cache` / worker-count combination.
+pub fn decide_with_ga(
+    inp: &RoundInputs<'_>,
+    mode: Case5Mode,
+    ga_params: &GaParams,
+    rng: &mut Rng,
+    seeds: &[Chromosome],
+    cache: bool,
+) -> (f64, Vec<Option<ClientDecision>>, usize) {
+    let ctx = EvalCtx::build(inp, mode, cache);
+    let mut scratches: Vec<EvalScratch> =
+        (0..ga_params.threads.max(1)).map(|_| ctx.make_scratch()).collect();
+    let params = GaParams { fitness_cache: cache && ga_params.fitness_cache, ..*ga_params };
+    let outcome = ga::optimize_scratch(
+        inp.params.num_channels,
+        inp.params.num_clients,
+        &params,
+        rng,
+        seeds,
+        &mut scratches,
+        |c, s| ctx.evaluate_j0(c, s),
+    );
+    let (j0, assignments) = ctx.evaluate(&outcome.best, &mut scratches[0]);
+    (j0, assignments, outcome.evals)
+}
+
+/// Memoized result of one `(client, rate, w_round)` inner solve: the
+/// Theorem-3 integer decision plus its eqs. (14)–(17) energy (`None` =
+/// the solver declined the client).
+type SolveMemo = Option<(Decision, f64)>;
+
+/// Per-client memo shards keyed on `(rate.to_bits(), w_round.to_bits())`.
+type MemoShards = Vec<Mutex<HashMap<(u64, u64), SolveMemo>>>;
+
+/// Per-round evaluation context for [`super::evaluate_allocation`]'s
+/// hot path: the U×C feasibility-gated (rate, q_max) table, the
+/// participation-independent pieces of the eq. (27) convergence terms,
+/// and (optionally) the exact-key per-client solve memo. Build once per
+/// round from the [`RoundInputs`], share immutably across the GA's
+/// fitness workers, drop with the round.
+pub struct EvalCtx<'a> {
+    inp: &'a RoundInputs<'a>,
+    mode: Case5Mode,
+    /// Row-major U×C copy of the round's per-(client, channel) rates,
+    /// so the hot loop reads contiguously.
+    rates: Vec<f64>,
+    /// Row-major U×C `q_max_feasible` at that rate; 0 = the q = 1
+    /// feasibility gate fails (pair unusable).
+    q_max: Vec<u32>,
+    /// A1(p) — constant per round (the reference recomputes it per
+    /// evaluation; it is a pure function of the params, so the hoisted
+    /// value is the same f64).
+    a1v: f64,
+    /// A2(p) — as above.
+    a2v: f64,
+    /// `4τ · Ĝ_i²` — client i's C6 summand when *excluded*
+    /// (the reference's `4τ(1 − a·w_i)Ĝ_i²` at a = 0, where the
+    /// `· 1.0` is exact).
+    excl: Vec<f64>,
+    /// `4τ(1 − w_i)Ĝ_i²` — client i's C6 summand when participating.
+    incl: Vec<f64>,
+    /// Per-client solve-memo shards (`None` = memo disabled). One lock
+    /// per client: workers contend only when racing on the same
+    /// client, and a lost race rewrites the identical value (the solve
+    /// is a pure function of the key).
+    memo: Option<MemoShards>,
+}
+
+/// Reusable per-evaluation buffers for [`EvalCtx`] — sized once by
+/// [`EvalCtx::make_scratch`] (one per GA fitness worker), reset with
+/// `fill` on every evaluation: the hot loop performs zero heap
+/// allocation.
+#[derive(Clone, Debug, Default)]
+pub struct EvalScratch {
+    /// Channel assigned to each client this evaluation (post-gate).
+    assigned: Vec<Option<usize>>,
+    /// Rate of that channel.
+    rate: Vec<f64>,
+    /// a_i^n — clients the inner solver accepted.
+    participating: Vec<bool>,
+    /// w_i^n over the feasibility-gated participant set.
+    w_round: Vec<f64>,
+}
+
+impl<'a> EvalCtx<'a> {
+    /// Precompute the round-invariant tables from `inp` (memo enabled;
+    /// see [`EvalCtx::with_memo`]).
+    pub fn new(inp: &'a RoundInputs<'a>, mode: Case5Mode) -> EvalCtx<'a> {
+        Self::build(inp, mode, true)
+    }
+
+    /// [`EvalCtx::new`] with the memo toggle applied at construction,
+    /// so a cache-disabled context never allocates the shards at all.
+    fn build(inp: &'a RoundInputs<'a>, mode: Case5Mode, memo_enabled: bool) -> EvalCtx<'a> {
+        let p = inp.params;
+        let (u, c) = (p.num_clients, p.num_channels);
+        let mut rates = vec![0.0f64; u * c];
+        let mut q_max = vec![0u32; u * c];
+        for i in 0..u {
+            for ch in 0..c {
+                let r = inp.channels.rate(i, ch);
+                rates[i * c + ch] = r;
+                q_max[i * c + ch] = solver::q_max_feasible(p, inp.sizes[i], r).unwrap_or(0);
+            }
+        }
+        let tau = p.tau as f64;
+        let a1v = convergence::a1(p);
+        let a2v = convergence::a2(p);
+        let excl: Vec<f64> = (0..u).map(|i| 4.0 * tau * inp.g2[i]).collect();
+        let incl: Vec<f64> = (0..u).map(|i| 4.0 * tau * (1.0 - inp.w_full[i]) * inp.g2[i]).collect();
+        let memo = if memo_enabled {
+            Some((0..u).map(|_| Mutex::new(HashMap::new())).collect())
+        } else {
+            None
+        };
+        EvalCtx { inp, mode, rates, q_max, a1v, a2v, excl, incl, memo }
+    }
+
+    /// Enable or disable the per-client solve memo (enabled by
+    /// default). Disabling is for A/B validation and the `bench-sched`
+    /// uncached reference — results are bit-identical either way.
+    /// `with_memo(true)` on an already-enabled ctx keeps the existing
+    /// shards (no re-allocation).
+    pub fn with_memo(mut self, enabled: bool) -> Self {
+        if !enabled {
+            self.memo = None;
+        } else if self.memo.is_none() {
+            let u = self.inp.params.num_clients;
+            self.memo = Some((0..u).map(|_| Mutex::new(HashMap::new())).collect());
+        }
+        self
+    }
+
+    /// A worker-sized scratch for this round's dimensions.
+    pub fn make_scratch(&self) -> EvalScratch {
+        let u = self.inp.params.num_clients;
+        EvalScratch {
+            assigned: vec![None; u],
+            rate: vec![0.0; u],
+            participating: vec![false; u],
+            w_round: vec![0.0; u],
+        }
+    }
+
+    /// J0 of `chrom` — bit-identical to
+    /// `super::evaluate_allocation(inp, chrom, mode).0` — with zero
+    /// heap allocation.
+    pub fn evaluate_j0(&self, chrom: &Chromosome, scratch: &mut EvalScratch) -> f64 {
+        self.eval_inner(chrom, scratch, None)
+    }
+
+    /// `(J0, assignments)` of `chrom` — bit-identical to
+    /// `super::evaluate_allocation(inp, chrom, mode)`.
+    pub fn evaluate(
+        &self,
+        chrom: &Chromosome,
+        scratch: &mut EvalScratch,
+    ) -> (f64, Vec<Option<ClientDecision>>) {
+        let mut assignments = vec![None; self.inp.params.num_clients];
+        let j0 = self.eval_inner(chrom, scratch, Some(&mut assignments));
+        (j0, assignments)
+    }
+
+    /// Per-client solve through the memo (or straight through when the
+    /// memo is disabled). The solve runs outside the shard lock so
+    /// workers only serialize on the (cheap) map accesses.
+    fn solve_memo(&self, i: usize, w: f64, rate: f64) -> SolveMemo {
+        let Some(shards) = &self.memo else {
+            return self.solve(i, w, rate);
+        };
+        let key = (rate.to_bits(), w.to_bits());
+        if let Some(&hit) = shards[i].lock().unwrap().get(&key) {
+            return hit;
+        }
+        let solved = self.solve(i, w, rate);
+        shards[i].lock().unwrap().insert(key, solved);
+        solved
+    }
+
+    /// The uncached inner solve: exactly the reference evaluator's
+    /// per-client body (same `ClientCtx`, same energy call).
+    fn solve(&self, i: usize, w: f64, rate: f64) -> SolveMemo {
+        let inp = self.inp;
+        let p = inp.params;
+        let ctx = ClientCtx {
+            d_i: inp.sizes[i],
+            w_round: w,
+            rate,
+            theta_max: inp.theta_max[i],
+            q_prev: inp.q_prev[i],
+        };
+        let dec = solver::solve_client(p, inp.queues.lambda2, &ctx, self.mode)?;
+        let e = energy::client_energy(p, inp.sizes[i], dec.f, dec.q, rate);
+        Some((dec, e))
+    }
+
+    /// The evaluation body. Mirrors [`super::evaluate_allocation`]
+    /// statement for statement — any change there must be replayed
+    /// here (the property test will catch a divergence).
+    fn eval_inner(
+        &self,
+        chrom: &Chromosome,
+        s: &mut EvalScratch,
+        mut out: Option<&mut Vec<Option<ClientDecision>>>,
+    ) -> f64 {
+        let inp = self.inp;
+        let p = inp.params;
+        let (u, c) = (p.num_clients, p.num_channels);
+        s.assigned.fill(None);
+        s.rate.fill(0.0);
+        s.participating.fill(false);
+        s.w_round.fill(0.0);
+
+        // Channel + rate per assigned client; feasibility gate at q = 1
+        // (precomputed: q_max ≥ 1 ⇔ the reference's gate passes).
+        for (ch, slot) in chrom.alloc.iter().enumerate() {
+            if let Some(i) = *slot {
+                if self.q_max[i * c + ch] >= 1 {
+                    s.assigned[i] = Some(ch);
+                    s.rate[i] = self.rates[i * c + ch];
+                }
+            }
+        }
+
+        // w_i^n over the feasibility-gated participants (ascending
+        // client order, as the reference's iterator sum).
+        let mut d_total = 0.0f64;
+        for i in 0..u {
+            if s.assigned[i].is_some() {
+                d_total += inp.sizes[i];
+            }
+        }
+        if d_total <= 0.0 {
+            return f64::INFINITY;
+        }
+
+        // Per-client closed form through the memo; the C7 quant term
+        // and ΣE accumulate inline — the same additions, in the same
+        // ascending order, the reference performs in its separate
+        // passes.
+        let mut any = false;
+        let mut quant = 0.0f64;
+        let mut total_energy = 0.0f64;
+        for i in 0..u {
+            let Some(ch) = s.assigned[i] else { continue };
+            let w = inp.sizes[i] / d_total;
+            let rate = s.rate[i];
+            let Some((dec, e)) = self.solve_memo(i, w, rate) else { continue };
+            any = true;
+            s.participating[i] = true;
+            s.w_round[i] = w;
+            quant += convergence::quant_term_client(p, w, inp.theta_max[i], dec.q);
+            total_energy += e;
+            if let Some(out) = out.as_deref_mut() {
+                out[i] = Some(ClientDecision { channel: ch, q: Some(dec.q), f: dec.f, rate });
+            }
+        }
+        if !any {
+            return f64::INFINITY;
+        }
+
+        // C6 data term: per-client summands precomputed, scan order
+        // preserved (the reference adds both summands per client in
+        // ascending order; a non-participant's second summand is an
+        // exact ±0.0 and is skipped).
+        let mut data = 0.0f64;
+        for i in 0..u {
+            if s.participating[i] {
+                data += self.incl[i];
+                let w = s.w_round[i];
+                data += self.a1v * w * inp.g2[i] + self.a2v * w * inp.sigma2[i];
+            } else {
+                data += self.excl[i];
+            }
+        }
+
+        inp.queues.lambda1 * data + (inp.queues.lambda2 - p.eps2) * quant + p.v * total_energy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::Fixture;
+    use super::super::{evaluate_allocation, greedy_allocation};
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn assert_same(
+        (j_ref, a_ref): &(f64, Vec<Option<ClientDecision>>),
+        (j_ctx, a_ctx): &(f64, Vec<Option<ClientDecision>>),
+        label: &str,
+    ) {
+        assert_eq!(j_ref.to_bits(), j_ctx.to_bits(), "{label}: J0 {j_ref} vs {j_ctx}");
+        assert_eq!(a_ref.len(), a_ctx.len(), "{label}");
+        for (i, (x, y)) in a_ref.iter().zip(a_ctx.iter()).enumerate() {
+            match (x, y) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.channel, y.channel, "{label}: client {i} channel");
+                    assert_eq!(x.q, y.q, "{label}: client {i} q");
+                    assert_eq!(x.f.to_bits(), y.f.to_bits(), "{label}: client {i} f");
+                    assert_eq!(x.rate.to_bits(), y.rate.to_bits(), "{label}: client {i} rate");
+                }
+                _ => panic!("{label}: client {i} participation diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn matches_reference_bitwise_on_fixture() {
+        for seed in [1u64, 2, 5, 9] {
+            let fx = Fixture::new(seed);
+            let inp = fx.inputs();
+            for mode in [Case5Mode::Taylor, Case5Mode::Bisect] {
+                let ctx = EvalCtx::new(&inp, mode);
+                let mut scratch = ctx.make_scratch();
+                let mut rng = Rng::seed_from(seed ^ 0xC0FFEE);
+                let mut chroms = vec![greedy_allocation(&inp)];
+                chroms.push(Chromosome { alloc: vec![None; 10] });
+                for _ in 0..8 {
+                    chroms.push(Chromosome::random(10, 10, &mut rng));
+                }
+                for (k, chrom) in chroms.iter().enumerate() {
+                    let reference = evaluate_allocation(&inp, chrom, mode);
+                    // Scratch is reused across all chromosomes — the
+                    // reset must be complete.
+                    let got = ctx.evaluate(chrom, &mut scratch);
+                    assert_same(&reference, &got, &format!("seed {seed} chrom {k}"));
+                    // Second pass hits the memo; must replay exactly.
+                    let hit = ctx.evaluate(chrom, &mut scratch);
+                    assert_same(&reference, &hit, &format!("seed {seed} chrom {k} (memo hit)"));
+                    assert_eq!(
+                        ctx.evaluate_j0(chrom, &mut scratch).to_bits(),
+                        reference.0.to_bits(),
+                        "seed {seed} chrom {k}: j0-only path"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn memo_disabled_matches_too() {
+        let fx = Fixture::new(4);
+        let inp = fx.inputs();
+        let ctx = EvalCtx::new(&inp, Case5Mode::Taylor).with_memo(false);
+        let mut scratch = ctx.make_scratch();
+        let chrom = greedy_allocation(&inp);
+        let reference = evaluate_allocation(&inp, &chrom, Case5Mode::Taylor);
+        let got = ctx.evaluate(&chrom, &mut scratch);
+        assert_same(&reference, &got, "memo off");
+    }
+
+    #[test]
+    fn empty_allocation_infinite() {
+        let fx = Fixture::new(3);
+        let inp = fx.inputs();
+        let ctx = EvalCtx::new(&inp, Case5Mode::Bisect);
+        let mut scratch = ctx.make_scratch();
+        let chrom = Chromosome { alloc: vec![None; 10] };
+        let (j0, assigns) = ctx.evaluate(&chrom, &mut scratch);
+        assert!(j0.is_infinite());
+        assert!(assigns.iter().all(|a| a.is_none()));
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        // The ctx is shared immutably by GA fitness workers; concurrent
+        // evaluation through the memo must equal the serial reference.
+        let fx = Fixture::new(6);
+        let inp = fx.inputs();
+        let ctx = EvalCtx::new(&inp, Case5Mode::Taylor);
+        let mut rng = Rng::seed_from(77);
+        let chroms: Vec<Chromosome> =
+            (0..32).map(|_| Chromosome::random(10, 10, &mut rng)).collect();
+        let want: Vec<u64> = chroms
+            .iter()
+            .map(|c| evaluate_allocation(&inp, c, Case5Mode::Taylor).0.to_bits())
+            .collect();
+        let mut scratches: Vec<EvalScratch> = (0..4).map(|_| ctx.make_scratch()).collect();
+        let got: Vec<u64> = crate::util::threadpool::parallel_map_with(
+            &chroms,
+            &mut scratches,
+            |_, c, s| ctx.evaluate_j0(c, s).to_bits(),
+        );
+        assert_eq!(want, got);
+    }
+}

@@ -6,8 +6,17 @@
 //! the decision (trains, quantizes, checks the latency budget, accounts
 //! energy), so over-optimistic baselines pay for their timeouts exactly
 //! as in the paper's §VI analysis.
+//!
+//! Two evaluation paths score a channel allocation under the QCCF inner
+//! solver: [`evaluate_allocation`] — the allocation-per-call reference
+//! — and the cached [`EvalCtx`] subsystem ([`ctx`]) the GA fitness
+//! loop runs on, which is **bit-identical** to the reference by
+//! contract (see `ctx`'s module docs and `tests/proptest_decision.rs`).
 
+pub mod ctx;
 pub mod qccf;
+
+pub use ctx::{EvalCtx, EvalScratch};
 
 use crate::config::SystemParams;
 use crate::convergence;
@@ -83,6 +92,22 @@ pub trait Scheduler {
 /// closed-form (q*, f*), then J0 = (λ1−ε1)·C6-term + (λ2−ε2)·C7-term +
 /// V·ΣE (eq. (27)). Infeasible chromosomes (no feasible participant)
 /// return `f64::INFINITY`.
+///
+/// This is the *uncached reference*: it reallocates and re-derives
+/// everything per call. The decision hot path ([`qccf`]'s GA fitness
+/// loop) runs the bit-identical cached form instead — see [`EvalCtx`].
+/// Any semantic change here must be replayed in `ctx::eval_inner`
+/// (`tests/proptest_decision.rs` pins the equivalence).
+///
+/// Semantics note, pinned by
+/// `tests::w_round_uses_feasibility_gated_data_mass`: `d_total` — the
+/// w_i^n denominator — is the data mass of every client that passes
+/// the q = 1 feasibility gate, *before* the per-client solve runs. A
+/// client the inner solver declined would still count in `d_total`
+/// and deflate the surviving participants' weights. (With the current
+/// closed form a gated client is never declined — `solve_brute`
+/// backstops the KKT cases — so the sets coincide in practice; see
+/// docs/ARCHITECTURE.md, "Decision stage".)
 pub fn evaluate_allocation(
     inp: &RoundInputs<'_>,
     chrom: &Chromosome,
@@ -161,11 +186,17 @@ pub fn evaluate_allocation(
 pub fn greedy_allocation(inp: &RoundInputs<'_>) -> Chromosome {
     let p = inp.params;
     let (u, c) = (p.num_clients, p.num_channels);
+    // Each client's best rate once — O(U·C) — instead of recomputing
+    // the C-wide max inside the sort comparator (O(U log U · C)).
+    let best_rate: Vec<f64> = (0..u)
+        .map(|i| (0..c).map(|ch| inp.channels.rate(i, ch)).fold(0.0, f64::max))
+        .collect();
     let mut order: Vec<usize> = (0..u).collect();
-    let best_rate = |i: usize| -> f64 {
-        (0..c).map(|ch| inp.channels.rate(i, ch)).fold(0.0, f64::max)
-    };
-    order.sort_by(|&a, &b| best_rate(b).partial_cmp(&best_rate(a)).unwrap());
+    // total_cmp instead of partial_cmp().unwrap(): the max-fold above
+    // absorbs NaN draws so best_rate is always comparable today, but
+    // the sort must stay panic-free if that invariant ever moves —
+    // and for finite rates the descending order is identical.
+    order.sort_by(|&a, &b| best_rate[b].total_cmp(&best_rate[a]));
     let mut taken = vec![false; c];
     let mut alloc = vec![None; c];
     for &i in &order {
@@ -173,7 +204,12 @@ pub fn greedy_allocation(inp: &RoundInputs<'_>) -> Chromosome {
         for ch in 0..c {
             if !taken[ch] {
                 let r = inp.channels.rate(i, ch);
-                if best.map(|(_, br)| r > br).unwrap_or(true) {
+                // `|| br.is_nan()`: a NaN-rate channel must never be
+                // *held* against a later usable one (`r > NaN` is
+                // false for every r, so a NaN first pick would stick,
+                // burn the channel, and then fail the q = 1 gate).
+                // For finite rates the predicate is unchanged.
+                if best.map(|(_, br)| r > br || br.is_nan()).unwrap_or(true) {
                     best = Some((ch, r));
                 }
             }
@@ -294,5 +330,89 @@ pub(crate) mod tests {
         let inp_weak = weak.inputs();
         let (j_bad, _) = evaluate_allocation(&inp_weak, &chrom, Case5Mode::Bisect);
         assert!(j_bad >= j_good, "j_bad={j_bad} j_good={j_good}");
+    }
+
+    #[test]
+    fn greedy_allocation_survives_degenerate_rates() {
+        // Equal, zero and NaN rates must neither panic the sort nor
+        // assign a client twice — and a NaN-rate channel must not be
+        // held against a later usable one.
+        let mut fx = Fixture::new(6);
+        let mut rates = vec![7e6f64; 100];
+        for ch in 0..10 {
+            rates[3 * 10 + ch] = 0.0; // client 3: dead everywhere
+            if ch < 9 {
+                rates[5 * 10 + ch] = f64::NAN; // client 5: corrupt draws...
+            }
+        }
+        // ...but a healthy channel 9 — the pick must land there, not
+        // stick on the first untaken NaN channel.
+        fx.channels = crate::wireless::ChannelState::from_rates(10, 10, rates);
+        let chrom = greedy_allocation(&fx.inputs());
+        assert!(chrom.is_valid(10));
+        assert_eq!(chrom.alloc[9], Some(5), "client 5 must take its only usable channel");
+    }
+
+    #[test]
+    fn w_round_uses_feasibility_gated_data_mass() {
+        // Pin of a documented semantics quirk (docs/ARCHITECTURE.md,
+        // "Decision stage"): d_total — the w_i^n denominator — is the
+        // data mass of the clients that pass the q = 1 feasibility
+        // gate, settled *before* the per-client solve runs. The test
+        // reconstructs J0 from those gated-set weights with the public
+        // solver/convergence pieces and requires bit equality; a client
+        // failing the gate (client 0 here, 1 bit/s) is excluded, while
+        // every gated client counts whether or not the inner solver
+        // would later decline it (today it never does — `solve_brute`
+        // backstops the KKT cases — which is exactly why this pin, not
+        // a behavior change, records the contract).
+        let mut fx = Fixture::new(8);
+        let mut rates = vec![25e6f64; 100];
+        for ch in 0..10 {
+            rates[ch] = 1.0; // client 0 fails the q = 1 gate everywhere
+        }
+        fx.channels = crate::wireless::ChannelState::from_rates(10, 10, rates);
+        let inp = fx.inputs();
+        let p = &fx.params;
+        // Identity allocation: client i on channel i.
+        let chrom = Chromosome { alloc: (0..10).map(Some).collect() };
+        let (j0, assigns) = evaluate_allocation(&inp, &chrom, Case5Mode::Bisect);
+        assert!(assigns[0].is_none(), "1 bit/s client must fail the gate");
+        assert!(j0.is_finite());
+
+        // Reconstruction under the documented semantics.
+        let gated: Vec<usize> =
+            (0..10).filter(|&i| solver::q_max_feasible(p, fx.sizes[i], 25e6).is_some()).collect();
+        assert_eq!(gated, (1..10).collect::<Vec<_>>());
+        let d_total: f64 = gated.iter().map(|&i| fx.sizes[i]).sum();
+        let mut participating = vec![false; 10];
+        let mut w_round = vec![0.0f64; 10];
+        let mut theta_eff = vec![0.0f64; 10];
+        let mut qs: Vec<Option<u32>> = vec![None; 10];
+        let mut total_energy = 0.0;
+        for &i in &gated {
+            let w = fx.sizes[i] / d_total;
+            let cctx = ClientCtx {
+                d_i: fx.sizes[i],
+                w_round: w,
+                rate: 25e6,
+                theta_max: fx.theta_max[i],
+                q_prev: fx.q_prev[i],
+            };
+            let dec = solver::solve_client(p, fx.queues.lambda2, &cctx, Case5Mode::Bisect)
+                .expect("gated client declined — the quirk became observable; update the docs");
+            participating[i] = true;
+            w_round[i] = w;
+            theta_eff[i] = fx.theta_max[i];
+            qs[i] = Some(dec.q);
+            total_energy += energy::client_energy(p, fx.sizes[i], dec.f, dec.q, 25e6);
+            assert_eq!(assigns[i].unwrap().q, Some(dec.q));
+        }
+        let data = convergence::data_term(p, &participating, &fx.w_full, &w_round, &fx.g2, &fx.sigma2);
+        let quant = convergence::quant_term(p, &w_round, &theta_eff, &qs);
+        let want = fx.queues.lambda1 * data
+            + (fx.queues.lambda2 - p.eps2) * quant
+            + p.v * total_energy;
+        assert_eq!(want.to_bits(), j0.to_bits(), "w_round denominator drifted from the gated set");
     }
 }

@@ -2,8 +2,8 @@
 //! allocations (P3.1, §V-D) with the closed-form KKT solver as the inner
 //! evaluation (P3.2″, §V-C).
 
-use super::{evaluate_allocation, RoundDecision, RoundInputs, Scheduler};
-use crate::ga::{self, GaParams};
+use super::{ctx, RoundDecision, RoundInputs, Scheduler};
+use crate::ga::GaParams;
 use crate::solver::Case5Mode;
 use crate::util::rng::Rng;
 
@@ -14,13 +14,31 @@ pub struct QccfScheduler {
     pub ga: GaParams,
     /// Case-5 solver mode (paper Taylor step vs exact bisection).
     pub case5: Case5Mode,
+    /// Decision-stage caching: the per-round [`super::EvalCtx`] solve
+    /// memo plus the GA fitness cache. On by default;
+    /// `QCCF_DECISION_CACHE=0` in the environment or
+    /// [`QccfScheduler::with_cache`] disables both for A/B validation —
+    /// decisions and traces are bit-identical either way (see
+    /// `sched::ctx` and `tests/integration_fl.rs`).
+    pub cache: bool,
     rng: Rng,
 }
 
 impl QccfScheduler {
     /// Scheduler with default GA budget and the paper's Taylor mode.
     pub fn new(seed: u64) -> QccfScheduler {
-        QccfScheduler { ga: GaParams::default(), case5: Case5Mode::Taylor, rng: Rng::seed_from(seed) }
+        QccfScheduler {
+            ga: GaParams::default(),
+            case5: Case5Mode::Taylor,
+            cache: ctx::decision_cache_default(),
+            rng: Rng::seed_from(seed),
+        }
+    }
+
+    /// Enable or disable the decision-stage caches (default: on).
+    pub fn with_cache(mut self, enabled: bool) -> Self {
+        self.cache = enabled;
+        self
     }
 
     /// Replace the GA hyperparameters.
@@ -50,38 +68,24 @@ impl Scheduler for QccfScheduler {
     }
 
     fn decide(&mut self, inp: &RoundInputs<'_>) -> RoundDecision {
-        let p = inp.params;
-        let mode = self.case5;
         // Seed the population with the greedy rate-maximizing allocation
-        // so Algorithm 1 never falls below the trivial policy.
+        // so Algorithm 1 never falls below the trivial policy. The
+        // shared decide body (sched::ctx::decide_with_ga) runs the
+        // decision hot path: per-round EvalCtx (U×C rate/q_max table +
+        // convergence precompute + exact-key solve memo), per-worker
+        // reusable scratch, and the GA's own fitness cache (elites and
+        // duplicate offspring are never re-scored) — all bit-identical
+        // to the uncached reference.
         let greedy = super::greedy_allocation(inp);
-        // Fitness memoization: GA populations converge, so late
-        // generations re-evaluate the same chromosomes; the inner
-        // closed-form solve × U clients is the decision hot path
-        // (EXPERIMENTS.md §Perf) and duplicates are pure waste. The
-        // mutex makes the cache shareable across the parallel fitness
-        // workers; two workers may race to fill the same key, but J0 is
-        // a pure function of the chromosome, so last-write-wins is
-        // value-identical.
-        let cache: std::sync::Mutex<std::collections::HashMap<Vec<Option<usize>>, f64>> =
-            std::sync::Mutex::new(std::collections::HashMap::new());
-        let outcome = ga::optimize_with_seeds(
-            p.num_channels,
-            p.num_clients,
+        let (j0, assignments, evals) = ctx::decide_with_ga(
+            inp,
+            self.case5,
             &self.ga,
             &mut self.rng,
             std::slice::from_ref(&greedy),
-            |c| {
-                if let Some(&hit) = cache.lock().unwrap().get(&c.alloc) {
-                    return hit;
-                }
-                let j0 = evaluate_allocation(inp, c, mode).0;
-                cache.lock().unwrap().insert(c.alloc.clone(), j0);
-                j0
-            },
+            self.cache,
         );
-        let (j0, assignments) = evaluate_allocation(inp, &outcome.best, mode);
-        RoundDecision { assignments, j0, evals: outcome.evals, deadline_exempt: false }
+        RoundDecision { assignments, j0, evals, deadline_exempt: false }
     }
 }
 
@@ -143,5 +147,32 @@ mod tests {
             d.assignments.iter().map(|a| a.map(|x| x.channel)).collect()
         };
         assert_eq!(chans(&serial), chans(&parallel));
+    }
+
+    #[test]
+    fn cache_off_decision_bit_identical() {
+        // The decision-stage caches (solve memo + GA fitness cache)
+        // must not move a single bit of the decision — they may only
+        // reduce `evals` (evaluator invocations).
+        let fx = Fixture::new(15);
+        let inp = fx.inputs();
+        let on = QccfScheduler::new(9).with_cache(true).decide(&inp);
+        let off = QccfScheduler::new(9).with_cache(false).decide(&inp);
+        assert_eq!(on.j0.to_bits(), off.j0.to_bits());
+        assert_eq!(on.assignments.len(), off.assignments.len());
+        for (a, b) in on.assignments.iter().zip(&off.assignments) {
+            match (a, b) {
+                (None, None) => {}
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.channel, b.channel);
+                    assert_eq!(a.q, b.q);
+                    assert_eq!(a.f.to_bits(), b.f.to_bits());
+                    assert_eq!(a.rate.to_bits(), b.rate.to_bits());
+                }
+                _ => panic!("participation diverged"),
+            }
+        }
+        assert!(on.evals <= off.evals, "cache increased evals: {} > {}", on.evals, off.evals);
+        assert!(on.evals > 0);
     }
 }

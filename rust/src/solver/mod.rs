@@ -36,7 +36,13 @@ pub struct ClientCtx {
 pub type CaseId = usize;
 
 /// Solver output: integer decision + diagnostics.
-#[derive(Clone, Copy, Debug)]
+///
+/// [`solve_client`] is a *pure* function of `(params, λ2, ClientCtx,
+/// mode)` — same inputs, bit-identical `Decision` — which is what lets
+/// the decision stage memoize it on exact f64-bit keys
+/// (`sched::ctx`): a memo hit replays the identical decision, never an
+/// approximation.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Decision {
     /// Integer quantization level q_i^n* (C8).
     pub q: u32,

@@ -11,11 +11,11 @@ use std::sync::Mutex;
 /// Apply `f` to every element, using up to `threads` workers.
 /// Results keep the input order.
 ///
-/// Deliberately *not* routed through [`parallel_map_owned`]: this is
-/// the GA-fitness hot path (population-sized calls every generation of
-/// every round's decision), and the borrowed form reads the slice
-/// lock-free where the owned form pays a `Mutex<Option<T>>` hand-off
-/// per element.
+/// Deliberately *not* routed through [`parallel_map_owned`]: the
+/// borrowed form reads the slice lock-free where the owned form pays a
+/// `Mutex<Option<T>>` hand-off per element. (The GA fitness loop moved
+/// to [`parallel_map_with`] for its per-worker scratch; the sweep
+/// runner still fans out through here.)
 pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -41,6 +41,52 @@ where
                 }
                 let r = f(i, &items[i]);
                 *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled slot"))
+        .collect()
+}
+
+/// [`parallel_map`] with one mutable worker-state per thread — the
+/// borrowed-items sibling of [`parallel_map_owned_with`]. `states.len()`
+/// bounds the worker count and each worker owns exactly one `&mut S`
+/// for its whole run. The GA fitness loop threads its per-worker
+/// `EvalScratch` buffers through here so the decision hot path performs
+/// zero per-evaluation heap allocation (see `sched::ctx`).
+///
+/// Results keep input order; panics if `items` is non-empty but
+/// `states` is empty.
+pub fn parallel_map_with<T, R, S, F>(items: &[T], states: &mut [S], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    S: Send,
+    F: Fn(usize, &T, &mut S) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    assert!(!states.is_empty(), "parallel_map_with needs at least one worker state");
+    let threads = states.len().min(n);
+    if threads == 1 {
+        let st = &mut states[0];
+        return items.iter().enumerate().map(|(i, x)| f(i, x, &mut *st)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        let (next, slots, f) = (&next, &slots, &f);
+        for st in states.iter_mut().take(threads) {
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                *slots[i].lock().unwrap() = Some(f(i, &items[i], &mut *st));
             });
         }
     });
@@ -160,6 +206,33 @@ mod tests {
         let out = parallel_map(&items, 8, |_, &x| x);
         assert_eq!(out.len(), 1000);
         assert!(out.iter().enumerate().all(|(i, &x)| i == x));
+    }
+
+    #[test]
+    fn borrowed_with_reuses_one_state_per_worker() {
+        let items: Vec<usize> = (0..400).collect();
+        let mut states = vec![0usize; 3];
+        let out = parallel_map_with(&items, &mut states, |i, &x, tally| {
+            assert_eq!(i, x);
+            *tally += 1;
+            x + 7
+        });
+        assert_eq!(out, (7..407).collect::<Vec<_>>());
+        assert_eq!(states.iter().sum::<usize>(), 400);
+    }
+
+    #[test]
+    fn borrowed_with_single_state_and_empty() {
+        let mut none: Vec<u8> = vec![];
+        assert!(parallel_map_with(&Vec::<u8>::new(), &mut none, |_, &x, _: &mut u8| x)
+            .is_empty());
+        let mut one = vec![0u32];
+        let out = parallel_map_with(&[5u32, 6], &mut one, |_, &x, s| {
+            *s += x;
+            x
+        });
+        assert_eq!(out, vec![5, 6]);
+        assert_eq!(one[0], 11);
     }
 
     #[test]

@@ -150,6 +150,55 @@ fn parallel_round_bit_identical_to_serial() {
     }
 }
 
+#[test]
+fn decision_cache_trace_bit_identical_on_off() {
+    // The decision-stage caches (per-round `sched::EvalCtx` solve memo
+    // + GA fitness cache, PR-4) must not move a single trace bit — at
+    // 1 worker and at 8. Cache hits replay exact f64-bit-keyed
+    // results, so a QCCF run with caching disabled is the reference
+    // the cached run must reproduce exactly.
+    let Some(rt) = runtime() else { return };
+    for threads in [1usize, 8] {
+        let run = |cache: bool| {
+            let params = params_for(&rt, Task::Femnist, 300.0);
+            let mut dcfg = DataGenConfig::new(params.num_clients, rt.info.image, rt.info.classes);
+            dcfg.size_mean = 300.0;
+            dcfg.size_std = 60.0;
+            dcfg.test_size = 128;
+            let fed = data::generate(&dcfg, 13);
+            let sched = Box::new(
+                qccf::sched::qccf::QccfScheduler::new(13)
+                    .with_threads(threads)
+                    .with_cache(cache),
+            );
+            let mut s = Server::new(params, &rt, fed, sched, 13).expect("server");
+            s.eval_every = 2;
+            s.threads = threads;
+            let trace = s.run(4).unwrap();
+            let theta: Vec<u32> = s.theta.iter().map(|x| x.to_bits()).collect();
+            (trace, theta)
+        };
+        let (t_on, th_on) = run(true);
+        let (t_off, th_off) = run(false);
+        assert_eq!(th_on, th_off, "theta diverged (threads={threads})");
+        assert_eq!(t_on.records.len(), t_off.records.len());
+        for (a, b) in t_on.records.iter().zip(&t_off.records) {
+            assert_eq!(a.scheduled, b.scheduled, "threads={threads}");
+            assert_eq!(a.aggregated, b.aggregated, "threads={threads}");
+            assert_eq!(a.wire_bytes, b.wire_bytes, "threads={threads}");
+            assert_eq!(a.energy.to_bits(), b.energy.to_bits(), "threads={threads}");
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "threads={threads}");
+            assert_eq!(a.test_loss, b.test_loss, "threads={threads}");
+            assert_eq!(a.test_acc, b.test_acc, "threads={threads}");
+            assert_eq!(a.mean_q, b.mean_q, "threads={threads}");
+            assert_eq!(a.q_per_client, b.q_per_client, "threads={threads}");
+            assert_eq!(a.lambda1.to_bits(), b.lambda1.to_bits(), "threads={threads}");
+            assert_eq!(a.lambda2.to_bits(), b.lambda2.to_bits(), "threads={threads}");
+            assert_eq!(a.max_latency.to_bits(), b.max_latency.to_bits(), "threads={threads}");
+        }
+    }
+}
+
 /// Test-only scheduler that replays a fixed decision every round.
 struct FixedScheduler {
     assignments: Vec<Option<ClientDecision>>,

@@ -1,0 +1,196 @@
+//! Decision-stage equivalence properties (pure Rust — no artifacts):
+//! the cached evaluation subsystem (`sched::EvalCtx` + exact-key solve
+//! memo + reusable `EvalScratch`) must return **bit-identical**
+//! `(J0, assignments)` to the uncached reference
+//! `sched::evaluate_allocation` for any chromosome — including
+//! infeasible clients, empty allocations and repeated (memo-hit)
+//! evaluations — at several federation sizes.
+
+use qccf::config::SystemParams;
+use qccf::ga::Chromosome;
+use qccf::lyapunov::Queues;
+use qccf::sched::{evaluate_allocation, ClientDecision, EvalCtx, RoundInputs};
+use qccf::solver::Case5Mode;
+use qccf::util::prop;
+use qccf::util::rng::Rng;
+use qccf::wireless::ChannelState;
+
+struct Case {
+    params: SystemParams,
+    rates: Vec<f64>,
+    sizes: Vec<f64>,
+    w_full: Vec<f64>,
+    g2: Vec<f64>,
+    sigma2: Vec<f64>,
+    theta_max: Vec<f64>,
+    q_prev: Vec<f64>,
+    queues: Queues,
+    mode: Case5Mode,
+    chroms: Vec<Chromosome>,
+}
+
+impl std::fmt::Debug for Case {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Case {{ U: {}, C: {}, mode: {:?}, λ1: {:.3}, λ2: {:.3}, chroms: {:?} }}",
+            self.params.num_clients,
+            self.params.num_channels,
+            self.mode,
+            self.queues.lambda1,
+            self.queues.lambda2,
+            self.chroms
+        )
+    }
+}
+
+/// Draw one randomized round: U ∈ {1, 7, 40}, C ≤ U, a rate matrix
+/// mixing plausible channels with hopeless (1 bit/s → q = 1 gate
+/// fails) and borderline ones, plus a chromosome batch containing the
+/// empty allocation and random (repaired) candidates.
+fn case(rng: &mut Rng) -> Case {
+    let u = [1usize, 7, 40][rng.below(3)];
+    let c = 1 + rng.below(u);
+    let mut params = SystemParams::femnist_small();
+    params.num_clients = u;
+    params.num_channels = c;
+    params.v = 10f64.powf(rng.range(0.0, 3.0));
+    let rates: Vec<f64> = (0..u * c)
+        .map(|_| {
+            if rng.chance(0.15) {
+                1.0 // infeasible: communication alone exceeds T^max
+            } else if rng.chance(0.1) {
+                rng.range(0.8e6, 2e6) // borderline
+            } else {
+                rng.range(8e6, 40e6)
+            }
+        })
+        .collect();
+    let sizes: Vec<f64> = (0..u).map(|_| rng.gaussian(1200.0, 300.0).max(64.0)).collect();
+    let total: f64 = sizes.iter().sum();
+    let w_full = sizes.iter().map(|d| d / total).collect();
+    let mut queues = Queues::new();
+    queues.lambda1 = 10f64.powf(rng.range(-1.0, 5.0));
+    queues.lambda2 = 10f64.powf(rng.range(-2.0, 4.0));
+    let mode = if rng.chance(0.5) { Case5Mode::Taylor } else { Case5Mode::Bisect };
+    let mut chroms = vec![Chromosome { alloc: vec![None; c] }];
+    for _ in 0..4 {
+        chroms.push(Chromosome::random(c, u, rng));
+    }
+    Case {
+        params,
+        rates,
+        sizes,
+        w_full,
+        g2: (0..u).map(|_| rng.range(0.01, 25.0)).collect(),
+        sigma2: (0..u).map(|_| rng.range(0.01, 4.0)).collect(),
+        theta_max: (0..u).map(|_| rng.range(0.05, 2.0)).collect(),
+        q_prev: (0..u).map(|_| rng.range(1.0, 14.0)).collect(),
+        queues,
+        mode,
+        chroms,
+    }
+}
+
+fn bits_of(assigns: &[Option<ClientDecision>]) -> Vec<Option<(usize, Option<u32>, u64, u64)>> {
+    assigns
+        .iter()
+        .map(|a| a.map(|d| (d.channel, d.q, d.f.to_bits(), d.rate.to_bits())))
+        .collect()
+}
+
+#[test]
+fn eval_ctx_bit_identical_to_reference() {
+    prop::check("evalctx-vs-reference", prop::iters(60), case, |cs| {
+        let state = ChannelState::from_rates(
+            cs.params.num_clients,
+            cs.params.num_channels,
+            cs.rates.clone(),
+        );
+        let inp = RoundInputs {
+            params: &cs.params,
+            round: 3,
+            channels: &state,
+            sizes: &cs.sizes,
+            w_full: &cs.w_full,
+            g2: &cs.g2,
+            sigma2: &cs.sigma2,
+            theta_max: &cs.theta_max,
+            q_prev: &cs.q_prev,
+            queues: &cs.queues,
+        };
+        let ctx = EvalCtx::new(&inp, cs.mode);
+        let ctx_nomemo = EvalCtx::new(&inp, cs.mode).with_memo(false);
+        // One scratch reused across every chromosome: a stale reset
+        // would leak the previous allocation into the next result.
+        let mut scratch = ctx.make_scratch();
+        let mut scratch2 = ctx_nomemo.make_scratch();
+        for (k, chrom) in cs.chroms.iter().enumerate() {
+            let (j_ref, a_ref) = evaluate_allocation(&inp, chrom, cs.mode);
+            let (j_ctx, a_ctx) = ctx.evaluate(chrom, &mut scratch);
+            if j_ref.to_bits() != j_ctx.to_bits() {
+                return Err(format!("chrom {k}: J0 {j_ref} vs {j_ctx} (memo)"));
+            }
+            if bits_of(&a_ref) != bits_of(&a_ctx) {
+                return Err(format!("chrom {k}: assignments diverged (memo)"));
+            }
+            // Memo hit: the second pass must replay identical bits.
+            let (j_hit, a_hit) = ctx.evaluate(chrom, &mut scratch);
+            if j_hit.to_bits() != j_ref.to_bits() || bits_of(&a_hit) != bits_of(&a_ref) {
+                return Err(format!("chrom {k}: memo hit diverged"));
+            }
+            // j0-only fast path.
+            if ctx.evaluate_j0(chrom, &mut scratch).to_bits() != j_ref.to_bits() {
+                return Err(format!("chrom {k}: evaluate_j0 diverged"));
+            }
+            // Memo disabled.
+            let (j_nm, a_nm) = ctx_nomemo.evaluate(chrom, &mut scratch2);
+            if j_nm.to_bits() != j_ref.to_bits() || bits_of(&a_nm) != bits_of(&a_ref) {
+                return Err(format!("chrom {k}: memo-off diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn eval_ctx_handles_fully_infeasible_rounds() {
+    // Every (client, channel) pair hopeless: both paths must agree on
+    // INFINITY with an all-None assignment vector, for every U.
+    for u in [1usize, 7, 40] {
+        let c = (u / 2).max(1);
+        let mut params = SystemParams::femnist_small();
+        params.num_clients = u;
+        params.num_channels = c;
+        let state = ChannelState::from_rates(u, c, vec![1.0; u * c]);
+        let sizes = vec![1200.0; u];
+        let w_full = vec![1.0 / u as f64; u];
+        let g2 = vec![2.0; u];
+        let sigma2 = vec![0.5; u];
+        let theta_max = vec![0.4; u];
+        let q_prev = vec![6.0; u];
+        let mut queues = Queues::new();
+        queues.lambda1 = 50.0;
+        queues.lambda2 = 5.0;
+        let inp = RoundInputs {
+            params: &params,
+            round: 1,
+            channels: &state,
+            sizes: &sizes,
+            w_full: &w_full,
+            g2: &g2,
+            sigma2: &sigma2,
+            theta_max: &theta_max,
+            q_prev: &q_prev,
+            queues: &queues,
+        };
+        let chrom = Chromosome { alloc: (0..c).map(Some).collect() };
+        let (j_ref, a_ref) = evaluate_allocation(&inp, &chrom, Case5Mode::Taylor);
+        let ctx = EvalCtx::new(&inp, Case5Mode::Taylor);
+        let mut scratch = ctx.make_scratch();
+        let (j_ctx, a_ctx) = ctx.evaluate(&chrom, &mut scratch);
+        assert!(j_ref.is_infinite() && j_ctx.is_infinite(), "U={u}");
+        assert_eq!(bits_of(&a_ref), bits_of(&a_ctx), "U={u}");
+        assert!(a_ctx.iter().all(|a| a.is_none()), "U={u}");
+    }
+}

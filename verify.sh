@@ -43,6 +43,21 @@ QCCF_BENCH_WARMUP_MS=20 QCCF_BENCH_MEASURE_MS=100 \
     exit 1
 }
 
+# Decision-stage perf baseline: quick J0-evaluation smoke at U ∈
+# {100, 1000}, C = U/2, cached (EvalCtx + solve memo + scratch) vs the
+# uncached reference (pure Rust, no artifacts). Writes BENCH_sched.json
+# and copies it to the repo root so the perf trajectory is tracked
+# in-repo across PRs.
+echo "== bench-sched smoke (target/BENCH_sched.json) =="
+QCCF_BENCH_WARMUP_MS=20 QCCF_BENCH_MEASURE_MS=100 \
+    cargo run --release --quiet -- bench-sched \
+    --us 100,1000 --pool 16 --out target/BENCH_sched.json
+[ -s target/BENCH_sched.json ] || {
+    echo "verify.sh: bench-sched wrote no target/BENCH_sched.json" >&2
+    exit 1
+}
+cp target/BENCH_sched.json BENCH_sched.json
+
 # Scenario-path smoke: two built-in scenarios through the sweep runner
 # (2 rounds, tiny profile). Needs artifacts, like the integration tests.
 if [ -f artifacts/manifest.json ]; then
