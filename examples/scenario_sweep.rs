@@ -51,6 +51,8 @@ fn main() -> Result<()> {
         rounds: Some(2),
         out_dir: out_dir.clone(),
         threads: qccf::util::threadpool::default_threads(),
+        resume: false,
+        checkpoint_every: 0,
     };
     let rows = sweep::run(&rt, &cfg)?;
     sweep::print(&rows);

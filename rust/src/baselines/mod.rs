@@ -118,6 +118,16 @@ impl Scheduler for ChannelAllocateScheduler {
         }
         RoundDecision { assignments, j0: out.best_j0, evals: out.evals, deadline_exempt: false }
     }
+
+    // Like QCCF: the GA stream is this scheduler's only mutable state,
+    // so checkpoint/resume captures exactly this position.
+    fn rng_state(&self) -> Option<crate::util::rng::RngState> {
+        Some(self.rng.state())
+    }
+
+    fn restore_rng_state(&mut self, state: &crate::util::rng::RngState) {
+        self.rng.restore(state);
+    }
 }
 
 // ------------------------------------------------------------------------
@@ -280,6 +290,16 @@ impl Scheduler for SameSizeScheduler {
             assignments[i] = Some(ClientDecision { channel: d.channel, q: Some(q), f, rate: d.rate });
         }
         RoundDecision { assignments, j0, evals, deadline_exempt: false }
+    }
+
+    // Like QCCF: the GA stream is this scheduler's only mutable state,
+    // so checkpoint/resume captures exactly this position.
+    fn rng_state(&self) -> Option<crate::util::rng::RngState> {
+        Some(self.rng.state())
+    }
+
+    fn restore_rng_state(&mut self, state: &crate::util::rng::RngState) {
+        self.rng.restore(state);
     }
 }
 

@@ -367,6 +367,165 @@ pub fn write_sched_bench_json(
     std::fs::write(path, format!("{}\n", doc.to_string_compact()))
 }
 
+/// One row of the snapshot-codec perf baseline (`BENCH_ckpt.json`).
+#[derive(Clone, Debug)]
+pub struct CkptBenchRow {
+    /// `ckpt/<op>_z<Z>_u<U>` identifier.
+    pub name: String,
+    /// U — clients in the synthetic snapshot.
+    pub u: usize,
+    /// Encoded snapshot size in bytes.
+    pub bytes: usize,
+    /// Iterations measured.
+    pub iters: u64,
+    /// Mean per-iteration wall time (ns).
+    pub mean_ns: f64,
+    /// Snapshot megabytes processed per second — the size-independent
+    /// number later PRs regress against.
+    pub mb_per_sec: f64,
+}
+
+/// A synthetic mid-horizon snapshot shaped like a real run: Z model
+/// dims, U clients (each with estimator state and an RNG stream), a
+/// 40-round trace with per-client level vectors, and the rendered
+/// `paper-femnist` scenario as identity text.
+fn synthetic_snapshot(z: usize, u: usize) -> crate::ckpt::Snapshot {
+    use crate::ckpt::{ClientCkpt, RunState, Snapshot};
+    use crate::metrics::{RoundRecord, Trace};
+    use crate::util::rng::Rng;
+
+    let mut rng = Rng::seed_from(0xC4B7_5EED ^ (z as u64) ^ ((u as u64) << 20));
+    let mut trace = Trace::new("qccf");
+    let rounds = 40usize;
+    let mut cum = 0.0;
+    for n in 1..=rounds {
+        let energy = rng.range(0.01, 0.2);
+        cum += energy;
+        trace.push(RoundRecord {
+            round: n,
+            scheduled: u / 2,
+            aggregated: u / 2,
+            wire_bytes: (u / 2) * (z / 2),
+            energy,
+            cum_energy: cum,
+            train_loss: rng.range(0.1, 2.0),
+            test_loss: (n % 2 == 0).then(|| rng.range(0.1, 2.0)),
+            test_acc: (n % 2 == 0).then(|| rng.uniform()),
+            mean_q: rng.range(1.0, 12.0),
+            q_per_client: (0..u)
+                .map(|i| (i % 3 != 2).then_some(1 + (i % 12) as u32))
+                .collect(),
+            lambda1: rng.range(0.0, 100.0),
+            lambda2: rng.range(0.0, 2.0),
+            max_latency: rng.range(0.001, 0.02),
+            decide_seconds: 0.1,
+            compute_seconds: 0.5,
+        });
+    }
+    let mk_rng = |k: u64| Rng::seed_from(k).state();
+    Snapshot {
+        scenario_text: crate::scenario::render(&crate::scenario::registry::paper_femnist()),
+        algorithm: "qccf".into(),
+        seed: 1,
+        state: RunState {
+            round: rounds as u64,
+            eps1: 30.0,
+            eps2: 0.001,
+            theta: (0..z).map(|_| rng.gaussian(0.0, 0.5) as f32).collect(),
+            lambda1: 17.0,
+            lambda2: 0.25,
+            queue_history: (0..=rounds)
+                .map(|_| (rng.range(0.0, 100.0), rng.range(0.0, 2.0)))
+                .collect(),
+            clients: (0..u)
+                .map(|i| ClientCkpt {
+                    g: rng.range(0.1, 4.0),
+                    sigma: rng.range(0.05, 1.0),
+                    ema: 0.5,
+                    observed: true,
+                    theta_max: rng.range(0.1, 0.8),
+                    q_prev: rng.range(1.0, 12.0),
+                    rng: mk_rng(1000 + i as u64),
+                })
+                .collect(),
+            server_rng: mk_rng(7),
+            sched_rng: Some(mk_rng(9)),
+            runtime_nanos: [1, 2, 3, 4],
+        },
+        trace,
+    }
+}
+
+/// Run the snapshot-codec microbench: `Snapshot::encode` and
+/// `Snapshot::decode` over a synthetic mid-horizon snapshot at Z model
+/// dims × each U in `us`. Pure Rust — no artifacts — so `verify.sh`
+/// runs it as a tier-1 smoke (see the `bench-ckpt` CLI subcommand,
+/// which writes `BENCH_ckpt.json`): the checkpoint-path perf baseline
+/// later PRs regress against.
+pub fn run_ckpt_bench(z: usize, us: &[usize]) -> Vec<CkptBenchRow> {
+    let mut set = BenchSet::new("ckpt");
+    let mut meta: Vec<(usize, usize)> = Vec::new(); // (u, bytes) per row
+    for &u in us {
+        let snap = synthetic_snapshot(z, u);
+        let bytes = snap.encode();
+        set.bench(&format!("encode_z{z}_u{u}"), || snap.encode());
+        meta.push((u, bytes.len()));
+        set.bench(&format!("decode_z{z}_u{u}"), || {
+            crate::ckpt::Snapshot::decode(&bytes).expect("freshly encoded snapshot")
+        });
+        meta.push((u, bytes.len()));
+    }
+    set.results
+        .iter()
+        .zip(meta)
+        .map(|(r, (u, bytes))| CkptBenchRow {
+            name: r.name.clone(),
+            u,
+            bytes,
+            iters: r.iters,
+            mean_ns: r.mean_ns,
+            mb_per_sec: if r.mean_ns > 0.0 {
+                bytes as f64 * 1e3 / r.mean_ns
+            } else {
+                0.0
+            },
+        })
+        .collect()
+}
+
+/// Write ckpt-bench rows as a single JSON document (`BENCH_ckpt.json`):
+/// `{"z": Z, "benches": [{name, u, bytes, iters, mean_ns, mb_per_sec},
+/// ...]}` — the snapshot-codec perf baseline subsequent PRs diff
+/// against.
+pub fn write_ckpt_bench_json(
+    path: &std::path::Path,
+    z: usize,
+    rows: &[CkptBenchRow],
+) -> std::io::Result<()> {
+    use crate::util::json::{self, Json};
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let benches = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("name", json::s(&r.name)),
+                    ("u", json::num(r.u as f64)),
+                    ("bytes", json::num(r.bytes as f64)),
+                    ("iters", json::num(r.iters as f64)),
+                    ("mean_ns", json::num(r.mean_ns)),
+                    ("mb_per_sec", json::num(r.mb_per_sec)),
+                ])
+            })
+            .collect(),
+    );
+    let doc = json::obj(vec![("z", json::num(z as f64)), ("benches", benches)]);
+    std::fs::write(path, format!("{}\n", doc.to_string_compact()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -425,6 +584,29 @@ mod tests {
         let speedups = doc.get("speedups").and_then(|x| x.as_arr()).unwrap();
         assert_eq!(speedups.len(), 2);
         assert!(speedups.iter().all(|s| s.get("speedup").and_then(|x| x.as_f64()).unwrap() > 0.0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ckpt_bench_rows_and_json() {
+        std::env::set_var("QCCF_BENCH_WARMUP_MS", "1");
+        std::env::set_var("QCCF_BENCH_MEASURE_MS", "5");
+        let rows = run_ckpt_bench(256, &[10, 25]);
+        assert_eq!(rows.len(), 4, "encode + decode per U");
+        assert!(rows.iter().all(|r| r.iters > 0 && r.bytes > 0 && r.mb_per_sec > 0.0));
+        assert!(rows.iter().any(|r| r.name.contains("encode_z256_u10")));
+        assert!(rows.iter().any(|r| r.name.contains("decode_z256_u25")));
+        // More clients = bigger snapshot.
+        let b10 = rows.iter().find(|r| r.u == 10).unwrap().bytes;
+        let b25 = rows.iter().find(|r| r.u == 25).unwrap().bytes;
+        assert!(b25 > b10, "b25={b25} b10={b10}");
+        let dir = std::env::temp_dir().join("qccf_ckpt_bench_test");
+        let path = dir.join("BENCH_ckpt.json");
+        write_ckpt_bench_json(&path, 256, &rows).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::parse(text.trim()).unwrap();
+        assert_eq!(doc.get("z").and_then(|x| x.as_usize()), Some(256));
+        assert_eq!(doc.get("benches").and_then(|x| x.as_arr()).map(|a| a.len()), Some(4));
         std::fs::remove_dir_all(&dir).ok();
     }
 

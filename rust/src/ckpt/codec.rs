@@ -1,0 +1,297 @@
+//! Byte-level primitives for the snapshot codec: a little-endian
+//! [`Writer`]/[`Reader`] pair plus the CRC32 the envelope seals the
+//! payload with.
+//!
+//! Floats are moved as their IEEE-754 bit patterns (`to_bits` /
+//! `from_bits`), so NaN payloads — e.g. the NaN `train_loss` of an
+//! empty round — survive a round-trip **bit for bit**; equality of the
+//! re-encoded bytes is the round-trip test, not `==` on floats.
+//!
+//! The [`Reader`] only ever runs over a payload the envelope has
+//! already length- and CRC-validated, so a short or inconsistent read
+//! here means the payload *structure* lies about itself (a corrupted
+//! length field that still passed CRC can only come from an encoder
+//! bug) — every failure maps to [`CkptError::Malformed`] naming the
+//! field, never a silent zero-fill.
+
+use super::CkptError;
+
+/// CRC32 (IEEE 802.3, reflected 0xEDB88320) lookup table, built at
+/// compile time so the hot path is one table lookup per byte.
+const fn make_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = make_crc_table();
+
+/// CRC32 (IEEE) of `bytes` — the envelope's corruption seal.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Append-only little-endian byte writer for the snapshot payload.
+#[derive(Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    /// Empty writer.
+    pub fn new() -> Writer {
+        Writer::default()
+    }
+
+    /// The accumulated payload bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// One raw byte.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// u32, little-endian.
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// u64, little-endian.
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// f32 as its IEEE-754 bit pattern (NaN-preserving).
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    /// f64 as its IEEE-754 bit pattern (NaN-preserving).
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// bool as a 0/1 byte (any other value is rejected on decode).
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    /// Length-prefixed UTF-8 string (u64 byte count + bytes).
+    pub fn string(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// `Option<f64>` as a 0/1 tag byte plus the payload when present.
+    pub fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.f64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+
+    /// `Option<u32>` as a 0/1 tag byte plus the payload when present.
+    pub fn opt_u32(&mut self, v: Option<u32>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.u32(x);
+            }
+            None => self.u8(0),
+        }
+    }
+}
+
+/// Cursor over a CRC-validated payload; every read names the field it
+/// was pulling so a [`CkptError::Malformed`] pinpoints the break.
+#[derive(Debug)]
+pub struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Cursor at the start of `bytes`.
+    pub fn new(bytes: &'a [u8]) -> Reader<'a> {
+        Reader { bytes, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], CkptError> {
+        if self.remaining() < n {
+            return Err(CkptError::Malformed { what });
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// One raw byte.
+    pub fn u8(&mut self, what: &'static str) -> Result<u8, CkptError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    /// u32, little-endian.
+    pub fn u32(&mut self, what: &'static str) -> Result<u32, CkptError> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// u64, little-endian.
+    pub fn u64(&mut self, what: &'static str) -> Result<u64, CkptError> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// f32 from its bit pattern.
+    pub fn f32(&mut self, what: &'static str) -> Result<f32, CkptError> {
+        Ok(f32::from_bits(self.u32(what)?))
+    }
+
+    /// f64 from its bit pattern.
+    pub fn f64(&mut self, what: &'static str) -> Result<f64, CkptError> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    /// bool from a strict 0/1 byte.
+    pub fn bool(&mut self, what: &'static str) -> Result<bool, CkptError> {
+        match self.u8(what)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(CkptError::Malformed { what }),
+        }
+    }
+
+    /// A sequence length: u64, validated against the bytes actually
+    /// remaining (each element needs at least `min_elem_bytes`), so a
+    /// lying length field fails here instead of in a huge allocation.
+    pub fn seq_len(
+        &mut self,
+        min_elem_bytes: usize,
+        what: &'static str,
+    ) -> Result<usize, CkptError> {
+        let n = self.u64(what)?;
+        let max = (self.remaining() / min_elem_bytes.max(1)) as u64;
+        if n > max {
+            return Err(CkptError::Malformed { what });
+        }
+        Ok(n as usize)
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn string(&mut self, what: &'static str) -> Result<String, CkptError> {
+        let n = self.seq_len(1, what)?;
+        let bytes = self.take(n, what)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| CkptError::Malformed { what })
+    }
+
+    /// `Option<f64>` (strict 0/1 tag).
+    pub fn opt_f64(&mut self, what: &'static str) -> Result<Option<f64>, CkptError> {
+        Ok(if self.bool(what)? { Some(self.f64(what)?) } else { None })
+    }
+
+    /// `Option<u32>` (strict 0/1 tag).
+    pub fn opt_u32(&mut self, what: &'static str) -> Result<Option<u32>, CkptError> {
+        Ok(if self.bool(what)? { Some(self.u32(what)?) } else { None })
+    }
+
+    /// Assert the payload was consumed exactly.
+    pub fn finish(&self, what: &'static str) -> Result<(), CkptError> {
+        if self.remaining() != 0 {
+            return Err(CkptError::Malformed { what });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // The classic IEEE test vector plus the empty string.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 3);
+        w.f32(f32::NAN);
+        w.f64(-0.0);
+        w.bool(true);
+        w.string("héllo");
+        w.opt_f64(Some(f64::INFINITY));
+        w.opt_f64(None);
+        w.opt_u32(Some(9));
+        w.opt_u32(None);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u8("a").unwrap(), 7);
+        assert_eq!(r.u32("b").unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64("c").unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32("d").unwrap().to_bits(), f32::NAN.to_bits());
+        assert_eq!(r.f64("e").unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.bool("f").unwrap());
+        assert_eq!(r.string("g").unwrap(), "héllo");
+        assert_eq!(r.opt_f64("h").unwrap(), Some(f64::INFINITY));
+        assert_eq!(r.opt_f64("i").unwrap(), None);
+        assert_eq!(r.opt_u32("j").unwrap(), Some(9));
+        assert_eq!(r.opt_u32("k").unwrap(), None);
+        r.finish("end").unwrap();
+    }
+
+    #[test]
+    fn reader_rejects_bad_shapes() {
+        // Short read names the field.
+        let mut r = Reader::new(&[1, 2]);
+        assert_eq!(r.u32("field").unwrap_err(), CkptError::Malformed { what: "field" });
+        // Non-0/1 bool byte.
+        let mut r = Reader::new(&[2]);
+        assert!(matches!(r.bool("flag"), Err(CkptError::Malformed { what: "flag" })));
+        // A length field claiming more elements than bytes remain.
+        let mut w = Writer::new();
+        w.u64(1_000_000);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(r.seq_len(4, "vec").is_err());
+        // Invalid UTF-8 in a string payload.
+        let mut w = Writer::new();
+        w.u64(2);
+        w.u8(0xFF);
+        w.u8(0xFE);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(r.string("s").is_err());
+        // Unconsumed payload bytes.
+        let r = Reader::new(&[0]);
+        assert!(r.finish("end").is_err());
+    }
+}

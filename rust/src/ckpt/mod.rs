@@ -1,0 +1,636 @@
+//! Deterministic **checkpoint/resume** subsystem: a versioned,
+//! length-prefixed binary snapshot codec for complete run state, so
+//! long-horizon runs (`stress-1000`) and multi-hundred-run sweeps
+//! survive crashes and preemption with **bit-identical** restart.
+//!
+//! The paper's long-term constraints make mid-horizon state first-class
+//! data: the Lyapunov virtual queues λ1/λ2 accumulate across the whole
+//! horizon T (eqs. (23)–(24)), the per-client `q_prev` anchors the
+//! Case-5 Taylor expansion, and every stochastic component draws from an
+//! explicitly positioned RNG stream. A [`Snapshot`] captures all of it —
+//! round index, θ, queues (with history), per-client estimator/anchor
+//! state and RNG streams, the server and scheduler streams, the PJRT
+//! profiling clock — plus the **resolved scenario text**
+//! ([`crate::scenario::render`]) and (algorithm, seed), so a resume
+//! against the wrong workload is a typed mismatch error, not a silently
+//! diverging run.
+//!
+//! # Wire format (version 1)
+//!
+//! ```text
+//! magic    4 B   "QCKP"
+//! version  4 B   u32 LE (currently 1)
+//! length   8 B   u64 LE — payload byte count
+//! payload  N B   the Snapshot fields (see docs/CHECKPOINTS.md)
+//! crc32    4 B   u32 LE — CRC32 (IEEE) of the payload
+//! ```
+//!
+//! Every read-side failure is a typed [`CkptError`] — truncation,
+//! wrong magic/version, CRC mismatch, trailing bytes, or a structurally
+//! inconsistent payload — mirroring the `WireError` hardening of the
+//! byte-transport PR: a damaged snapshot is rejected, never zero-filled
+//! into a half-restored server.
+//!
+//! # Determinism contract
+//!
+//! A run checkpointed after round k and resumed produces a trace
+//! **bit-identical** to the uninterrupted run, for any `--threads`
+//! value on either side of the split (the engine's PR-1 contract makes
+//! thread count a non-input; `tests/integration_ckpt.rs` pins both).
+//! Snapshots are written atomically (tmp + fsync + rename, see
+//! [`crate::util::fsio`]) so a crash mid-write leaves the previous
+//! snapshot intact.
+
+pub mod codec;
+
+use std::path::Path;
+
+use anyhow::Context as _;
+
+use crate::metrics::{RoundRecord, Trace};
+use crate::util::rng::RngState;
+use codec::{crc32, Reader, Writer};
+
+/// Snapshot file magic ("QCKP").
+pub const MAGIC: [u8; 4] = *b"QCKP";
+
+/// Current (and only supported) snapshot format version. Bump on any
+/// payload-layout change; old versions are rejected with
+/// [`CkptError::Version`], never reinterpreted (versioning policy:
+/// docs/CHECKPOINTS.md).
+pub const VERSION: u32 = 1;
+
+/// File-name extension snapshots are written under.
+pub const EXTENSION: &str = "qckpt";
+
+/// Everything wrong a snapshot buffer can be. Every variant is a
+/// *rejection* — the decoder never patches over damage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CkptError {
+    /// Buffer shorter than the envelope + declared payload + CRC.
+    Truncated {
+        /// Bytes the envelope requires.
+        expected: usize,
+        /// Bytes actually presented.
+        got: usize,
+    },
+    /// First four bytes are not [`MAGIC`] — not a snapshot file.
+    Magic {
+        /// The bytes found where the magic should be.
+        got: [u8; 4],
+    },
+    /// Unsupported format version (future or corrupt).
+    Version {
+        /// Version declared by the buffer.
+        got: u32,
+        /// The version this build supports.
+        supported: u32,
+    },
+    /// Payload failed its CRC32 seal — corrupted in storage or flight.
+    Crc {
+        /// CRC recorded in the envelope.
+        expected: u32,
+        /// CRC computed over the presented payload.
+        got: u32,
+    },
+    /// Bytes beyond the envelope's declared end.
+    Trailing {
+        /// How many extra bytes follow the envelope.
+        extra: usize,
+    },
+    /// Payload passed the CRC but its structure is inconsistent (a
+    /// field lies about a length/tag) — names the field that broke.
+    Malformed {
+        /// The field being decoded when the structure broke.
+        what: &'static str,
+    },
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::Truncated { expected, got } => write!(
+                f,
+                "snapshot truncated: {got} bytes, envelope requires {expected}"
+            ),
+            CkptError::Magic { got } => {
+                write!(f, "not a snapshot: magic {got:02x?} != {MAGIC:02x?} (\"QCKP\")")
+            }
+            CkptError::Version { got, supported } => write!(
+                f,
+                "unsupported snapshot version {got} (this build reads version {supported}; \
+                 see docs/CHECKPOINTS.md for the versioning policy)"
+            ),
+            CkptError::Crc { expected, got } => write!(
+                f,
+                "snapshot payload corrupt: CRC32 {got:#010x} != recorded {expected:#010x}"
+            ),
+            CkptError::Trailing { extra } => {
+                write!(f, "snapshot has {extra} trailing byte(s) past the envelope")
+            }
+            CkptError::Malformed { what } => {
+                write!(f, "snapshot payload malformed while decoding `{what}`")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CkptError {}
+
+/// One client's resumable coordinator-side state: the Ĝ/σ̂ estimator,
+/// the θ^max estimate, the Case-5 `q_prev` anchor, and the private RNG
+/// stream position.
+#[derive(Clone, Debug)]
+pub struct ClientCkpt {
+    /// `GradStats::g` — estimated G_i.
+    pub g: f64,
+    /// `GradStats::sigma` — estimated σ_i.
+    pub sigma: f64,
+    /// `GradStats::ema` — estimator smoothing factor.
+    pub ema: f64,
+    /// `GradStats::observed` — whether any observation arrived.
+    pub observed: bool,
+    /// Decision-time θ^max estimate.
+    pub theta_max: f64,
+    /// Last *quantized* participation level (Case-5 anchor).
+    pub q_prev: f64,
+    /// Private noise-stream position (data sampling + quantization).
+    pub rng: RngState,
+}
+
+/// The complete resumable state of a [`crate::fl::Server`] mid-horizon.
+/// Captured by `Server::checkpoint_state`, reinstalled by
+/// `Server::restore_state` over a freshly constructed server (same
+/// scenario, algorithm, seed — the static parts replay from those).
+#[derive(Clone, Debug)]
+pub struct RunState {
+    /// Communication rounds completed.
+    pub round: u64,
+    /// ε1 as currently (possibly auto-)calibrated.
+    pub eps1: f64,
+    /// ε2 as currently (possibly auto-)calibrated.
+    pub eps2: f64,
+    /// Global model θ^n.
+    pub theta: Vec<f32>,
+    /// Virtual queue λ1 (C6).
+    pub lambda1: f64,
+    /// Virtual queue λ2 (C7).
+    pub lambda2: f64,
+    /// `(λ1, λ2)` after every update, starting at `(0, 0)` — the
+    /// mean-rate-stability diagnostic depends on its length.
+    pub queue_history: Vec<(f64, f64)>,
+    /// Per-client estimator/anchor/RNG state, ascending client id.
+    pub clients: Vec<ClientCkpt>,
+    /// The server's master RNG stream (channel draws).
+    pub server_rng: RngState,
+    /// The scheduler's private RNG stream (GA-based schedulers;
+    /// `None` for stateless policies).
+    pub sched_rng: Option<RngState>,
+    /// The PJRT runtime's cumulative per-entry-point nanosecond clock
+    /// `(init, train_step, eval, quantize)` as observed at capture.
+    /// Reinstalled only by callers that own the runtime exclusively
+    /// (`CheckpointPolicy::restore_runtime_clock`) so a resumed
+    /// `exec_profile` continues instead of restarting at zero; a
+    /// parallel sweep's shared runtime is never clobbered.
+    pub runtime_nanos: [u64; 4],
+}
+
+/// A complete run snapshot: identity (resolved scenario text +
+/// algorithm + seed, for mismatch detection on resume), the mid-horizon
+/// [`RunState`], and the trace of every completed round (so the resumed
+/// run emits the *whole* trace, bit-identical to uninterrupted).
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// Canonical render of the resolved scenario
+    /// ([`crate::scenario::render`]); resume fails on any mismatch.
+    pub scenario_text: String,
+    /// Algorithm the run executes.
+    pub algorithm: String,
+    /// Master seed of the run.
+    pub seed: u64,
+    /// Mid-horizon server state.
+    pub state: RunState,
+    /// Records of the rounds completed so far.
+    pub trace: Trace,
+}
+
+/// The canonical file stem of one (scenario, algorithm, seed) run:
+/// `<scenario>__<algorithm>__seed<seed>`. The single definition behind
+/// both the sweep's JSONL trace names and [`snapshot_file_name`], so
+/// the naming contract is structural, not convention.
+pub fn unit_stem(scenario: &str, algorithm: &str, seed: u64) -> String {
+    format!("{scenario}__{algorithm}__seed{seed}")
+}
+
+/// Canonical snapshot file name for a (scenario, algorithm, seed) run —
+/// [`unit_stem`] plus the [`EXTENSION`].
+pub fn snapshot_file_name(scenario: &str, algorithm: &str, seed: u64) -> String {
+    format!("{}.{EXTENSION}", unit_stem(scenario, algorithm, seed))
+}
+
+fn write_rng(w: &mut Writer, st: &RngState) {
+    for s in st.s {
+        w.u64(s);
+    }
+    w.opt_f64(st.spare);
+}
+
+fn read_rng(r: &mut Reader<'_>, what: &'static str) -> Result<RngState, CkptError> {
+    let mut s = [0u64; 4];
+    for v in &mut s {
+        *v = r.u64(what)?;
+    }
+    Ok(RngState { s, spare: r.opt_f64(what)? })
+}
+
+fn write_record(w: &mut Writer, rec: &RoundRecord) {
+    w.u64(rec.round as u64);
+    w.u64(rec.scheduled as u64);
+    w.u64(rec.aggregated as u64);
+    w.u64(rec.wire_bytes as u64);
+    w.f64(rec.energy);
+    w.f64(rec.cum_energy);
+    w.f64(rec.train_loss);
+    w.opt_f64(rec.test_loss);
+    w.opt_f64(rec.test_acc);
+    w.f64(rec.mean_q);
+    w.u64(rec.q_per_client.len() as u64);
+    for q in &rec.q_per_client {
+        w.opt_u32(*q);
+    }
+    w.f64(rec.lambda1);
+    w.f64(rec.lambda2);
+    w.f64(rec.max_latency);
+    w.f64(rec.decide_seconds);
+    w.f64(rec.compute_seconds);
+}
+
+fn read_record(r: &mut Reader<'_>) -> Result<RoundRecord, CkptError> {
+    let round = r.u64("record.round")? as usize;
+    let scheduled = r.u64("record.scheduled")? as usize;
+    let aggregated = r.u64("record.aggregated")? as usize;
+    let wire_bytes = r.u64("record.wire_bytes")? as usize;
+    let energy = r.f64("record.energy")?;
+    let cum_energy = r.f64("record.cum_energy")?;
+    let train_loss = r.f64("record.train_loss")?;
+    let test_loss = r.opt_f64("record.test_loss")?;
+    let test_acc = r.opt_f64("record.test_acc")?;
+    let mean_q = r.f64("record.mean_q")?;
+    let nq = r.seq_len(1, "record.q_per_client")?;
+    let mut q_per_client = Vec::with_capacity(nq);
+    for _ in 0..nq {
+        q_per_client.push(r.opt_u32("record.q_per_client")?);
+    }
+    Ok(RoundRecord {
+        round,
+        scheduled,
+        aggregated,
+        wire_bytes,
+        energy,
+        cum_energy,
+        train_loss,
+        test_loss,
+        test_acc,
+        mean_q,
+        q_per_client,
+        lambda1: r.f64("record.lambda1")?,
+        lambda2: r.f64("record.lambda2")?,
+        max_latency: r.f64("record.max_latency")?,
+        decide_seconds: r.f64("record.decide_seconds")?,
+        compute_seconds: r.f64("record.compute_seconds")?,
+    })
+}
+
+impl Snapshot {
+    /// Serialize to the versioned envelope (magic + version + length +
+    /// payload + CRC32).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.string(&self.scenario_text);
+        w.string(&self.algorithm);
+        w.u64(self.seed);
+
+        let st = &self.state;
+        w.u64(st.round);
+        w.f64(st.eps1);
+        w.f64(st.eps2);
+        w.u64(st.theta.len() as u64);
+        for &x in &st.theta {
+            w.f32(x);
+        }
+        w.f64(st.lambda1);
+        w.f64(st.lambda2);
+        w.u64(st.queue_history.len() as u64);
+        for &(a, b) in &st.queue_history {
+            w.f64(a);
+            w.f64(b);
+        }
+        w.u64(st.clients.len() as u64);
+        for c in &st.clients {
+            w.f64(c.g);
+            w.f64(c.sigma);
+            w.f64(c.ema);
+            w.bool(c.observed);
+            w.f64(c.theta_max);
+            w.f64(c.q_prev);
+            write_rng(&mut w, &c.rng);
+        }
+        write_rng(&mut w, &st.server_rng);
+        match &st.sched_rng {
+            Some(rng) => {
+                w.bool(true);
+                write_rng(&mut w, rng);
+            }
+            None => w.bool(false),
+        }
+        for n in st.runtime_nanos {
+            w.u64(n);
+        }
+
+        w.string(&self.trace.algorithm);
+        w.u64(self.trace.records.len() as u64);
+        for rec in &self.trace.records {
+            write_record(&mut w, rec);
+        }
+
+        let payload = w.into_bytes();
+        let mut out = Vec::with_capacity(payload.len() + 20);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        let crc = crc32(&payload);
+        out.extend_from_slice(&payload);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Decode a snapshot buffer, validating the complete envelope
+    /// (magic, version, length, CRC) **before** touching the payload.
+    pub fn decode(bytes: &[u8]) -> Result<Snapshot, CkptError> {
+        const HEADER: usize = 16; // magic + version + length
+        if bytes.len() < HEADER {
+            return Err(CkptError::Truncated { expected: HEADER + 4, got: bytes.len() });
+        }
+        if bytes[..4] != MAGIC {
+            return Err(CkptError::Magic { got: [bytes[0], bytes[1], bytes[2], bytes[3]] });
+        }
+        let version = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+        if version != VERSION {
+            return Err(CkptError::Version { got: version, supported: VERSION });
+        }
+        let len = u64::from_le_bytes([
+            bytes[8], bytes[9], bytes[10], bytes[11], bytes[12], bytes[13], bytes[14], bytes[15],
+        ]);
+        let total = (HEADER as u64).saturating_add(len).saturating_add(4);
+        if (bytes.len() as u64) < total {
+            return Err(CkptError::Truncated {
+                expected: total.min(usize::MAX as u64) as usize,
+                got: bytes.len(),
+            });
+        }
+        if (bytes.len() as u64) > total {
+            return Err(CkptError::Trailing { extra: (bytes.len() as u64 - total) as usize });
+        }
+        let payload = &bytes[HEADER..HEADER + len as usize];
+        let tail = &bytes[HEADER + len as usize..];
+        let recorded = u32::from_le_bytes([tail[0], tail[1], tail[2], tail[3]]);
+        let computed = crc32(payload);
+        if recorded != computed {
+            return Err(CkptError::Crc { expected: recorded, got: computed });
+        }
+
+        let mut r = Reader::new(payload);
+        let scenario_text = r.string("scenario_text")?;
+        let algorithm = r.string("algorithm")?;
+        let seed = r.u64("seed")?;
+
+        let round = r.u64("state.round")?;
+        let eps1 = r.f64("state.eps1")?;
+        let eps2 = r.f64("state.eps2")?;
+        let nz = r.seq_len(4, "state.theta")?;
+        let mut theta = Vec::with_capacity(nz);
+        for _ in 0..nz {
+            theta.push(r.f32("state.theta")?);
+        }
+        let lambda1 = r.f64("state.lambda1")?;
+        let lambda2 = r.f64("state.lambda2")?;
+        let nh = r.seq_len(16, "state.queue_history")?;
+        let mut queue_history = Vec::with_capacity(nh);
+        for _ in 0..nh {
+            let a = r.f64("state.queue_history")?;
+            let b = r.f64("state.queue_history")?;
+            queue_history.push((a, b));
+        }
+        let nc = r.seq_len(8 * 7 + 1 + 1, "state.clients")?;
+        let mut clients = Vec::with_capacity(nc);
+        for _ in 0..nc {
+            clients.push(ClientCkpt {
+                g: r.f64("client.g")?,
+                sigma: r.f64("client.sigma")?,
+                ema: r.f64("client.ema")?,
+                observed: r.bool("client.observed")?,
+                theta_max: r.f64("client.theta_max")?,
+                q_prev: r.f64("client.q_prev")?,
+                rng: read_rng(&mut r, "client.rng")?,
+            });
+        }
+        let server_rng = read_rng(&mut r, "state.server_rng")?;
+        let sched_rng = if r.bool("state.sched_rng")? {
+            Some(read_rng(&mut r, "state.sched_rng")?)
+        } else {
+            None
+        };
+        let mut runtime_nanos = [0u64; 4];
+        for n in &mut runtime_nanos {
+            *n = r.u64("state.runtime_nanos")?;
+        }
+
+        let trace_algorithm = r.string("trace.algorithm")?;
+        let nr = r.seq_len(8, "trace.records")?;
+        let mut records = Vec::with_capacity(nr);
+        for _ in 0..nr {
+            records.push(read_record(&mut r)?);
+        }
+        r.finish("payload end")?;
+
+        Ok(Snapshot {
+            scenario_text,
+            algorithm,
+            seed,
+            state: RunState {
+                round,
+                eps1,
+                eps2,
+                theta,
+                lambda1,
+                lambda2,
+                queue_history,
+                clients,
+                server_rng,
+                sched_rng,
+                runtime_nanos,
+            },
+            trace: Trace { algorithm: trace_algorithm, records },
+        })
+    }
+
+    /// Write the snapshot **atomically** (tmp + fsync + rename): a
+    /// crash mid-write leaves the previous snapshot — or no file —
+    /// never a torn one.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let bytes = self.encode();
+        crate::util::fsio::write_atomic(path, &bytes)
+            .with_context(|| format!("write snapshot {}", path.display()))
+    }
+
+    /// Read and decode a snapshot file.
+    pub fn load(path: &Path) -> anyhow::Result<Snapshot> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("read snapshot {}", path.display()))?;
+        Snapshot::decode(&bytes)
+            .with_context(|| format!("decode snapshot {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A small but fully populated snapshot exercising every field
+    /// shape (NaN loss, None/Some options, empty and non-empty vecs).
+    pub(crate) fn sample_snapshot() -> Snapshot {
+        let rng = |k: u64| RngState {
+            s: [k, k ^ 0xABCD, k.wrapping_mul(31), !k],
+            spare: if k % 2 == 0 { Some(0.25 * k as f64) } else { None },
+        };
+        let mut rec = RoundRecord {
+            round: 3,
+            scheduled: 5,
+            aggregated: 4,
+            wire_bytes: 12_345,
+            energy: 0.75,
+            cum_energy: 2.5,
+            train_loss: f64::NAN,
+            test_loss: Some(1.25),
+            test_acc: None,
+            mean_q: 6.5,
+            q_per_client: vec![Some(4), None, Some(0), Some(31)],
+            lambda1: 17.0,
+            lambda2: 0.125,
+            max_latency: 0.019,
+            decide_seconds: 0.5,
+            compute_seconds: 1.5,
+        };
+        let mut trace = Trace::new("qccf");
+        trace.push(rec.clone());
+        rec.round = 4;
+        rec.test_loss = None;
+        trace.push(rec);
+        Snapshot {
+            scenario_text: "[scenario]\nname = \"demo\"\n".into(),
+            algorithm: "qccf".into(),
+            seed: 42,
+            state: RunState {
+                round: 4,
+                eps1: 30.5,
+                eps2: 0.001,
+                theta: vec![0.5, -1.25, f32::NAN, 0.0],
+                lambda1: 17.0,
+                lambda2: 0.125,
+                queue_history: vec![(0.0, 0.0), (3.0, 0.5), (17.0, 0.125)],
+                clients: (0..3)
+                    .map(|i| ClientCkpt {
+                        g: 1.0 + i as f64,
+                        sigma: 0.5,
+                        ema: 0.5,
+                        observed: i > 0,
+                        theta_max: 0.4,
+                        q_prev: 4.0 + i as f64,
+                        rng: rng(1000 + i as u64),
+                    })
+                    .collect(),
+                server_rng: rng(7),
+                sched_rng: Some(rng(9)),
+                runtime_nanos: [1, 2, 3, 4],
+            },
+            trace,
+        }
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let snap = sample_snapshot();
+        let bytes = snap.encode();
+        let back = Snapshot::decode(&bytes).unwrap();
+        // Re-encoding the decoded snapshot must reproduce the exact
+        // bytes — which covers every field bit-for-bit, NaNs included.
+        assert_eq!(back.encode(), bytes);
+        assert_eq!(back.scenario_text, snap.scenario_text);
+        assert_eq!(back.algorithm, "qccf");
+        assert_eq!(back.seed, 42);
+        assert_eq!(back.state.round, 4);
+        assert_eq!(back.state.theta[2].to_bits(), f32::NAN.to_bits());
+        assert!(back.trace.records[0].train_loss.is_nan());
+        assert_eq!(back.trace.records.len(), 2);
+        assert_eq!(back.state.sched_rng, snap.state.sched_rng);
+    }
+
+    #[test]
+    fn envelope_errors_are_typed() {
+        let snap = sample_snapshot();
+        let bytes = snap.encode();
+
+        // Truncation anywhere yields Truncated.
+        for cut in [0, 3, 15, 16, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                matches!(Snapshot::decode(&bytes[..cut]), Err(CkptError::Truncated { .. })),
+                "cut={cut}"
+            );
+        }
+        // Wrong magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(matches!(Snapshot::decode(&bad), Err(CkptError::Magic { .. })));
+        // Future version.
+        let mut bad = bytes.clone();
+        bad[4..8].copy_from_slice(&(VERSION + 1).to_le_bytes());
+        assert_eq!(
+            Snapshot::decode(&bad).unwrap_err(),
+            CkptError::Version { got: VERSION + 1, supported: VERSION }
+        );
+        // Payload bit-flip is caught by the CRC.
+        let mut bad = bytes.clone();
+        bad[40] ^= 0x10;
+        assert!(matches!(Snapshot::decode(&bad), Err(CkptError::Crc { .. })));
+        // Trailing garbage.
+        let mut bad = bytes.clone();
+        bad.push(0);
+        assert_eq!(Snapshot::decode(&bad).unwrap_err(), CkptError::Trailing { extra: 1 });
+    }
+
+    #[test]
+    fn save_load_round_trips_and_is_atomic() {
+        let dir = std::env::temp_dir().join("qccf_ckpt_save_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(snapshot_file_name("demo", "qccf", 42));
+        let snap = sample_snapshot();
+        snap.save(&path).unwrap();
+        // No .tmp residue after a successful atomic write.
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert!(names.iter().all(|n| !n.ends_with(".tmp")), "{names:?}");
+        let back = Snapshot::load(&path).unwrap();
+        assert_eq!(back.encode(), snap.encode());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_file_name_matches_sweep_stem() {
+        assert_eq!(
+            snapshot_file_name("paper-femnist", "qccf", 3),
+            "paper-femnist__qccf__seed3.qckpt"
+        );
+    }
+}

@@ -4,9 +4,12 @@
 //! subcommand, sweep — goes through [`run_scenario`], the one function
 //! that turns a [`Scenario`] + (algorithm, seed) into a [`Trace`].
 
+use std::path::PathBuf;
+
 use anyhow::Result;
 
 use crate::baselines::make_scheduler_with_threads;
+use crate::ckpt::{self, Snapshot};
 use crate::config::SystemParams;
 use crate::data;
 use crate::fl::Server;
@@ -99,6 +102,103 @@ pub fn params_for(rt: &Runtime, task: Task, mu: f64) -> SystemParams {
     sc.params_for_runtime(rt)
 }
 
+/// Periodic-snapshot / resume policy for one run (the checkpoint
+/// subsystem's run-path knobs; see `docs/CHECKPOINTS.md`). The default
+/// — no snapshots, no resume — is exactly the historical
+/// [`run_scenario`] behavior.
+#[derive(Clone, Debug, Default)]
+pub struct CheckpointPolicy {
+    /// Write a snapshot after every N completed rounds (0 = never).
+    /// The snapshot is atomically replaced in place, so `dir` always
+    /// holds at most one — the latest — per run.
+    pub every: usize,
+    /// Directory snapshots are written into (required when `every > 0`;
+    /// file name: [`ckpt::snapshot_file_name`]).
+    pub dir: Option<PathBuf>,
+    /// Resume from this snapshot before running any round. The
+    /// snapshot's identity — resolved scenario (up to the horizon),
+    /// algorithm, seed — must match the run ([`snapshot_mismatch`]);
+    /// any mismatch is an error, not a silently diverging trace.
+    pub resume: Option<PathBuf>,
+    /// Also reinstall the snapshot's PJRT profiling clock on resume so
+    /// `exec_profile` continues the original accounting. Only safe when
+    /// the caller owns the [`Runtime`] exclusively (the `train`
+    /// subcommand); the sweep leaves it off — its runtime is shared by
+    /// every concurrent unit, and a restore would clobber their
+    /// in-flight accounting. Purely cosmetic either way: the clock
+    /// never feeds a decision, so trace bits are unaffected.
+    pub restore_runtime_clock: bool,
+}
+
+/// Why a stored canonical scenario render does **not** match
+/// `scenario` (`None` = it matches). Identity is the canonical render
+/// of the resolved scenario with the horizon normalized away:
+/// `train.rounds` is a run-*length* knob — resuming an interrupted run
+/// under the full horizon, or extending a finished run to a longer
+/// one, is exactly what snapshots are for — while every
+/// physics/heterogeneity/eval knob must match bit for bit or the
+/// resumed trace would silently diverge from the uninterrupted run.
+/// Used by both snapshot resume ([`snapshot_mismatch`]) and the
+/// sweep's per-scenario identity sidecars.
+pub fn scenario_identity_mismatch(stored_text: &str, scenario: &Scenario) -> Option<String> {
+    let mut stored = match crate::scenario::parse_scenario(stored_text) {
+        Ok(sc) => sc,
+        Err(e) => return Some(format!("stored scenario text unparseable: {e}")),
+    };
+    stored.train.rounds = scenario.train.rounds;
+    if crate::scenario::render(&stored) != crate::scenario::render(scenario) {
+        return Some(format!(
+            "stored definition of scenario `{}` differs from the current `{}` beyond the \
+             horizon (render both and diff them)",
+            stored.name, scenario.name
+        ));
+    }
+    None
+}
+
+/// The one resume-eligibility check, shared by [`run_scenario_ckpt`]
+/// (which refuses with a hard error) and the sweep's snapshot probe
+/// (which downgrades to a fresh restart): why `snap` cannot resume
+/// `(scenario, algorithm, seed)` — algorithm/seed identity, scenario
+/// identity up to the horizon, horizon bound, and trace/round
+/// consistency. `None` = usable. Keeping this in one place means a
+/// future refusal condition cannot be added to one caller and missed
+/// by the other.
+pub fn snapshot_mismatch(
+    snap: &Snapshot,
+    scenario: &Scenario,
+    algorithm: &str,
+    seed: u64,
+) -> Option<String> {
+    if snap.algorithm != algorithm {
+        return Some(format!(
+            "snapshot is for algorithm `{}`, not `{algorithm}`",
+            snap.algorithm
+        ));
+    }
+    if snap.seed != seed {
+        return Some(format!("snapshot is for seed {}, not {seed}", snap.seed));
+    }
+    if let Some(why) = scenario_identity_mismatch(&snap.scenario_text, scenario) {
+        return Some(why);
+    }
+    let rounds = scenario.train.rounds;
+    if snap.state.round as usize > rounds {
+        return Some(format!(
+            "snapshot is at round {} but the scenario horizon is {rounds}",
+            snap.state.round
+        ));
+    }
+    if snap.trace.records.len() != snap.state.round as usize {
+        return Some(format!(
+            "snapshot trace has {} records for {} completed rounds",
+            snap.trace.records.len(),
+            snap.state.round
+        ));
+    }
+    None
+}
+
 /// Run `algorithm` under `scenario` with `seed` on a loaded runtime —
 /// the single execution path behind figures, `train`, and `sweep`.
 /// `threads` is an engine knob, not part of the scenario: any value
@@ -110,8 +210,32 @@ pub fn run_scenario(
     seed: u64,
     threads: usize,
 ) -> Result<Trace> {
+    run_scenario_ckpt(rt, scenario, algorithm, seed, threads, &CheckpointPolicy::default())
+}
+
+/// [`run_scenario`] with a [`CheckpointPolicy`]: optionally resumes
+/// from a snapshot, then runs the remaining rounds, writing a snapshot
+/// after every `policy.every` rounds (atomic tmp + fsync + rename).
+///
+/// Determinism contract (pinned by `tests/integration_ckpt.rs`): the
+/// returned trace — resumed or not, at any `threads` value on either
+/// side of the split — is **bit-identical** in every deterministic
+/// field to the uninterrupted run's.
+pub fn run_scenario_ckpt(
+    rt: &Runtime,
+    scenario: &Scenario,
+    algorithm: &str,
+    seed: u64,
+    threads: usize,
+    policy: &CheckpointPolicy,
+) -> Result<Trace> {
     let errs = scenario.validate();
     anyhow::ensure!(errs.is_empty(), "scenario `{}` invalid: {}", scenario.name, errs.join("; "));
+    anyhow::ensure!(
+        policy.every == 0 || policy.dir.is_some(),
+        "checkpoint cadence set ({} rounds) but no checkpoint directory given",
+        policy.every
+    );
     let params = scenario.params_for_runtime(rt);
     let dcfg = scenario.datagen(rt);
     let fed = data::generate(&dcfg, seed);
@@ -124,7 +248,63 @@ pub fn run_scenario(
     let mut server = Server::new(params, rt, fed, sched, seed)?;
     server.eval_every = scenario.train.eval_every;
     server.threads = threads;
-    server.run(scenario.train.rounds)
+
+    // The resolved scenario is part of the snapshot's identity: resume
+    // compares canonical renders, so *any* drifted knob — not just the
+    // name — is a hard mismatch.
+    let scenario_text = crate::scenario::render(scenario);
+    let rounds = scenario.train.rounds;
+    let mut trace = match &policy.resume {
+        Some(path) => {
+            let snap = Snapshot::load(path)?;
+            if let Some(why) = snapshot_mismatch(&snap, scenario, algorithm, seed) {
+                anyhow::bail!(
+                    "refusing to resume from {} into a diverging run: {why}",
+                    path.display()
+                );
+            }
+            server.restore_state(&snap.state)?;
+            if policy.restore_runtime_clock {
+                rt.restore_exec_nanos(snap.state.runtime_nanos);
+            }
+            crate::info!(
+                "ckpt",
+                "resumed {}/{algorithm}/seed{seed} at round {}/{rounds}",
+                scenario.name,
+                snap.state.round
+            );
+            snap.trace
+        }
+        None => Trace::new(server.scheduler_name()),
+    };
+
+    let mut cum = trace.records.last().map(|r| r.cum_energy).unwrap_or(0.0);
+    while server.round() < rounds {
+        let mut rec = server.run_round()?;
+        cum += rec.energy;
+        rec.cum_energy = cum;
+        trace.push(rec);
+        if policy.every > 0 && server.round() % policy.every == 0 {
+            let dir = policy.dir.as_ref().expect("checked above");
+            let snap = Snapshot {
+                scenario_text: scenario_text.clone(),
+                algorithm: algorithm.to_string(),
+                seed,
+                state: server.checkpoint_state(),
+                trace: trace.clone(),
+            };
+            let path = dir.join(ckpt::snapshot_file_name(&scenario.name, algorithm, seed));
+            snap.save(&path)?;
+            crate::debug_log!(
+                "ckpt",
+                "snapshot at round {}/{} -> {}",
+                server.round(),
+                rounds,
+                path.display()
+            );
+        }
+    }
+    Ok(trace)
 }
 
 /// Run one (algorithm, task, β, V, seed) experiment on a loaded runtime

@@ -20,4 +20,4 @@ pub mod fig4;
 pub mod fig5;
 pub mod sweep;
 
-pub use common::{run_one, run_scenario, RunSpec, Task};
+pub use common::{run_one, run_scenario, run_scenario_ckpt, CheckpointPolicy, RunSpec, Task};

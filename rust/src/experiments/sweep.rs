@@ -11,11 +11,30 @@
 //! the bytes under `--out` are identical for any sweep `--threads`
 //! value. Unit order — and with it `summary.csv` row order — is the
 //! deterministic (scenario, algorithm, seed) nesting of [`expand`].
+//!
+//! # Resume
+//!
+//! Sweeps are **preemption-safe** ([`SweepConfig::resume`]): every
+//! output file is replaced atomically (tmp + fsync + rename — a torn
+//! `summary.csv` or JSONL trace cannot exist), and `summary.csv` is
+//! rewritten after *every* completed unit, so a resumed sweep can
+//! trust what it finds and a kill forfeits at most the in-flight
+//! units. Triples already recorded in `summary.csv` (with their trace
+//! file present and the round count matching) are skipped outright —
+//! guarded by per-scenario **identity sidecars** (`<name>.scenario`,
+//! the canonical render): a scenario whose definition drifted since
+//! the recorded run has its triples re-run, not silently carried.
+//! Interrupted runs restart from their latest snapshot under
+//! `<out>/ckpt/` when [`SweepConfig::checkpoint_every`] wrote one
+//! (bit-identical restart, the `ckpt` contract), and from round 0
+//! otherwise. The final `summary.csv` is identical either way.
 
-use std::path::PathBuf;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
+use crate::ckpt;
 use crate::metrics::Trace;
 use crate::runtime::Runtime;
 use crate::scenario::Scenario;
@@ -24,7 +43,7 @@ use crate::util::json;
 use crate::util::table;
 use crate::util::threadpool;
 
-use super::common::run_scenario;
+use super::common::{run_scenario_ckpt, CheckpointPolicy};
 
 /// What to sweep: the cross product of `scenarios × seeds ×` (each
 /// scenario's algorithm list, unless overridden).
@@ -43,6 +62,14 @@ pub struct SweepConfig {
     pub out_dir: PathBuf,
     /// Sweep-level worker threads (how many *runs* execute at once).
     pub threads: usize,
+    /// Skip (scenario, algorithm, seed) triples already completed in
+    /// `summary.csv`, and restart interrupted runs from their latest
+    /// snapshot under `<out>/ckpt/` (see the module docs).
+    pub resume: bool,
+    /// Per-run snapshot cadence in rounds (0 = no snapshots): what
+    /// makes an interrupted long run resumable mid-horizon instead of
+    /// from round 0.
+    pub checkpoint_every: usize,
 }
 
 /// One completed run's summary row.
@@ -160,31 +187,198 @@ pub fn config_errors(cfg: &SweepConfig) -> Vec<String> {
     errs
 }
 
+/// The canonical JSONL/snapshot file stem of one (scenario, algorithm,
+/// seed) unit — the shared [`ckpt::unit_stem`] definition.
+pub fn unit_stem(scenario: &str, algorithm: &str, seed: u64) -> String {
+    ckpt::unit_stem(scenario, algorithm, seed)
+}
+
+/// A unit's latest snapshot under `ckpt_dir`, if one exists *and* is
+/// loadable *and* matches the unit's resolved scenario/horizon. A
+/// missing, corrupt or mismatched snapshot downgrades to a fresh
+/// restart (with a warning) — resuming a sweep must never be blocked by
+/// one damaged file.
+fn usable_snapshot(ckpt_dir: &Path, sc: &Scenario, alg: &str, seed: u64) -> Option<PathBuf> {
+    let path = ckpt_dir.join(ckpt::snapshot_file_name(&sc.name, alg, seed));
+    if !path.exists() {
+        return None;
+    }
+    match ckpt::Snapshot::load(&path) {
+        // The same eligibility rules the hard-refusing run path applies
+        // (`common::snapshot_mismatch`) — shared so a future refusal
+        // condition cannot be added there and missed here, where it
+        // would abort the whole sweep instead of restarting one unit.
+        Ok(snap) => match super::common::snapshot_mismatch(&snap, sc, alg, seed) {
+            None => Some(path),
+            Some(why) => {
+                crate::warn_log!(
+                    "sweep",
+                    "snapshot {}: {why} — restarting fresh",
+                    path.display()
+                );
+                None
+            }
+        },
+        Err(e) => {
+            crate::warn_log!(
+                "sweep",
+                "unreadable snapshot {}: {e:#} — restarting fresh",
+                path.display()
+            );
+            None
+        }
+    }
+}
+
 /// Run the sweep. Fails fast on an invalid config — scenarios,
 /// duplicate names, and overrides are all checked via
 /// [`config_errors`] before any run starts; a failing *run* aborts the
 /// sweep with its unit named. Returns one row per unit in [`expand`]
-/// order.
+/// order. With [`SweepConfig::resume`], completed triples are carried
+/// over from the existing `summary.csv` instead of re-running.
 pub fn run(rt: &Runtime, cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
     let all_errs = config_errors(cfg);
     anyhow::ensure!(all_errs.is_empty(), "invalid sweep:\n  {}", all_errs.join("\n  "));
 
     std::fs::create_dir_all(&cfg.out_dir)?;
+    let ckpt_dir = cfg.out_dir.join("ckpt");
     let units = expand(cfg);
+
+    let mut prior: Vec<SweepRow> =
+        if cfg.resume { read_summary(&cfg.out_dir)? } else { Vec::new() };
+    if !cfg.resume {
+        // A fresh (non-resume) sweep re-produces every row, so any
+        // prior summary is stale the moment we start. Dropping it
+        // *before* the identity sidecars are rewritten below keeps the
+        // invariant that summary.csv rows are always backed by the
+        // recorded scenario identity — a kill between the sidecar
+        // rewrite and the first completed unit must not leave old rows
+        // under fresh sidecars for a later `--resume` to trust.
+        std::fs::remove_file(cfg.out_dir.join("summary.csv")).ok();
+    }
+
+    // Scenario-identity sidecars: summary.csv rows carry only the
+    // scenario *name*, so `--resume` verifies content identity against
+    // the canonical render written next to the traces (`<name>.scenario`,
+    // horizon-normalized like the snapshot check). A drifted definition
+    // makes its triples stale instead of silently carrying results
+    // produced under different physics. Order matters for crash
+    // safety: detect against the *old* sidecars first, make the pruned
+    // summary durable, and only then record the new identities — a
+    // kill anywhere in between must never leave old rows on disk under
+    // fresh sidecars for a later `--resume` to trust. A missing
+    // sidecar (a pre-sidecar output dir) is trusted as-is.
+    let mut resolved: Vec<Scenario> = Vec::new();
+    let mut stale: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+    for base in &cfg.scenarios {
+        let mut sc = base.clone();
+        if let Some(r) = cfg.rounds {
+            sc.train.rounds = r;
+        }
+        let sidecar = cfg.out_dir.join(format!("{}.scenario", sc.name));
+        if cfg.resume && sidecar.exists() {
+            match std::fs::read_to_string(&sidecar) {
+                Ok(text) => {
+                    if let Some(why) = super::common::scenario_identity_mismatch(&text, &sc) {
+                        crate::warn_log!(
+                            "sweep",
+                            "{}: {why} — its prior results are stale and will re-run",
+                            sc.name
+                        );
+                        stale.insert(sc.name.clone());
+                    }
+                }
+                Err(e) => {
+                    crate::warn_log!(
+                        "sweep",
+                        "{}: unreadable scenario sidecar {}: {e} — treating prior results \
+                         as stale",
+                        sc.name,
+                        sidecar.display()
+                    );
+                    stale.insert(sc.name.clone());
+                }
+            }
+        }
+        resolved.push(sc);
+    }
+    if !stale.is_empty() {
+        prior.retain(|r| !stale.contains(&r.scenario));
+        write_summary(&prior, &cfg.out_dir)?;
+    }
+    for sc in &resolved {
+        let sidecar = cfg.out_dir.join(format!("{}.scenario", sc.name));
+        crate::util::fsio::write_atomic(&sidecar, crate::scenario::render(sc).as_bytes())?;
+    }
+
+    // Resume bookkeeping: a triple counts as complete when the prior
+    // summary row exists (and survived the staleness prune), its trace
+    // file is still on disk, and its round count matches this sweep's
+    // (a changed --rounds override makes the old run stale, not
+    // reusable). Rows for triples *outside* this sweep's cross product
+    // (a narrower resume: fewer scenarios/seeds/algorithms) are
+    // carried through every summary rewrite untouched — resuming a
+    // subset must not delete the rest of the record.
+    let unit_keys: std::collections::BTreeSet<(String, String, u64)> = units
+        .iter()
+        .map(|(sc, alg, seed)| (sc.name.clone(), alg.clone(), *seed))
+        .collect();
+    let mut done: BTreeMap<(String, String, u64), SweepRow> = BTreeMap::new();
+    let mut carried: Vec<SweepRow> = Vec::new();
+    for row in prior {
+        let key = (row.scenario.clone(), row.algorithm.clone(), row.seed);
+        if unit_keys.contains(&key) {
+            done.insert(key, row);
+        } else {
+            carried.push(row);
+        }
+    }
+    let mut slots: Vec<Option<SweepRow>> = Vec::with_capacity(units.len());
+    let mut pending: Vec<(usize, &(Scenario, String, u64))> = Vec::new();
+    for (i, unit) in units.iter().enumerate() {
+        let (sc, alg, seed) = unit;
+        let key = (sc.name.clone(), alg.clone(), *seed);
+        match done.get(&key) {
+            Some(row) if row.rounds == sc.train.rounds && row.trace_path.exists() => {
+                slots.push(Some(row.clone()));
+            }
+            _ => {
+                slots.push(None);
+                pending.push((i, unit));
+            }
+        }
+    }
     crate::info!(
         "sweep",
-        "{} runs ({} scenarios x algorithms x {} seeds), {} worker thread(s), out {}",
+        "{} runs ({} scenarios x algorithms x {} seeds), {} already complete, {} to run, \
+         {} worker thread(s), out {}",
         units.len(),
         cfg.scenarios.len(),
         cfg.seeds.len(),
+        units.len() - pending.len(),
+        pending.len(),
         cfg.threads.max(1),
         cfg.out_dir.display()
     );
-    let results: Vec<Result<SweepRow>> =
-        threadpool::parallel_map(&units, cfg.threads.max(1), |_, (sc, alg, seed)| {
-            let trace = run_scenario(rt, sc, alg, *seed, 1)
+    let slots = std::sync::Mutex::new(slots);
+    let results: Vec<Result<()>> =
+        threadpool::parallel_map(&pending, cfg.threads.max(1), |_, &(i, (sc, alg, seed))| {
+            let policy = CheckpointPolicy {
+                every: cfg.checkpoint_every,
+                dir: (cfg.checkpoint_every > 0).then(|| ckpt_dir.clone()),
+                resume: if cfg.resume {
+                    usable_snapshot(&ckpt_dir, sc, alg, *seed)
+                } else {
+                    None
+                },
+                // The runtime is shared by every concurrent unit —
+                // restoring one snapshot's clock would clobber the
+                // others' in-flight accounting.
+                restore_runtime_clock: false,
+            };
+            let trace = run_scenario_ckpt(rt, sc, alg, *seed, 1, &policy)
                 .map_err(|e| anyhow::anyhow!("{}/{alg}/seed{seed}: {e:#}", sc.name))?;
-            let path = cfg.out_dir.join(format!("{}__{alg}__seed{seed}.jsonl", sc.name));
+            let path = cfg.out_dir.join(format!("{}.jsonl", unit_stem(&sc.name, alg, *seed)));
             trace
                 .write_jsonl(
                     &path,
@@ -195,10 +389,36 @@ pub fn run(rt: &Runtime, cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
                     ],
                 )
                 .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
-            Ok(summarize(&trace, sc, alg, *seed, path))
+            {
+                // Make the unit's summary row durable *immediately* —
+                // not at sweep end — so a kill mid-sweep forfeits at
+                // most the in-flight units on resume. The lock also
+                // serializes the atomic rewrite's shared tmp file.
+                let mut slots = slots.lock().unwrap();
+                slots[i] = Some(summarize(&trace, sc, alg, *seed, path));
+                let mut so_far: Vec<SweepRow> = slots.iter().flatten().cloned().collect();
+                so_far.extend(carried.iter().cloned());
+                write_summary(&so_far, &cfg.out_dir)?;
+            }
+            // Only after the summary row is durable is the snapshot
+            // stale — dropping it earlier would leave a killed-right-
+            // here unit with neither artifact.
+            std::fs::remove_file(ckpt_dir.join(ckpt::snapshot_file_name(&sc.name, alg, *seed)))
+                .ok();
+            Ok(())
         });
-    let rows: Vec<SweepRow> = results.into_iter().collect::<Result<_>>()?;
-    write_summary(&rows, &cfg.out_dir)?;
+    for r in results {
+        r?;
+    }
+    let rows: Vec<SweepRow> = slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|s| s.expect("every unit completed or carried over"))
+        .collect();
+    let mut all_rows = rows.clone();
+    all_rows.extend(carried);
+    write_summary(&all_rows, &cfg.out_dir)?;
     Ok(rows)
 }
 
@@ -217,43 +437,104 @@ fn summarize(trace: &Trace, sc: &Scenario, alg: &str, seed: u64, path: PathBuf) 
     }
 }
 
-/// Write `summary.csv` (one row per run, unit order) into `out_dir`.
+/// `summary.csv` column set, shared by [`write_summary`] and
+/// [`read_summary`] so the resume path can never drift from the writer.
+const SUMMARY_COLUMNS: [&str; 10] = [
+    "scenario",
+    "algorithm",
+    "seed",
+    "rounds",
+    "final_acc",
+    "best_acc",
+    "cum_energy_j",
+    "wire_bytes",
+    "dropouts",
+    "trace_file",
+];
+
+/// Write `summary.csv` (one row per run, unit order) into `out_dir` —
+/// **atomically** (tmp + fsync + rename), so an interrupted sweep
+/// leaves either the previous complete summary or the new one, never a
+/// torn file for `--resume` to misread.
 pub fn write_summary(rows: &[SweepRow], out_dir: &std::path::Path) -> Result<()> {
     let path = out_dir.join("summary.csv");
-    let mut w = CsvWriter::create(
-        &path,
-        &[
-            "scenario",
-            "algorithm",
-            "seed",
-            "rounds",
-            "final_acc",
-            "best_acc",
-            "cum_energy_j",
-            "wire_bytes",
-            "dropouts",
-            "trace_file",
-        ],
-    )?;
-    for r in rows {
-        w.row(&[
-            r.scenario.clone(),
-            r.algorithm.clone(),
-            r.seed.to_string(),
-            r.rounds.to_string(),
-            format!("{:.6}", r.final_acc),
-            format!("{:.6}", r.best_acc),
-            format!("{:.9}", r.cum_energy),
-            r.wire_bytes.to_string(),
-            r.dropouts.to_string(),
-            r.trace_path
-                .file_name()
-                .map(|f| f.to_string_lossy().into_owned())
-                .unwrap_or_default(),
-        ])?;
-    }
-    w.flush()?;
+    crate::util::fsio::replace_atomic(&path, |tmp| {
+        let mut w = CsvWriter::create(tmp, &SUMMARY_COLUMNS)?;
+        for r in rows {
+            w.row(&[
+                r.scenario.clone(),
+                r.algorithm.clone(),
+                r.seed.to_string(),
+                r.rounds.to_string(),
+                format!("{:.6}", r.final_acc),
+                format!("{:.6}", r.best_acc),
+                format!("{:.9}", r.cum_energy),
+                r.wire_bytes.to_string(),
+                r.dropouts.to_string(),
+                r.trace_path
+                    .file_name()
+                    .map(|f| f.to_string_lossy().into_owned())
+                    .unwrap_or_default(),
+            ])?;
+        }
+        w.flush()
+    })?;
     Ok(())
+}
+
+/// Parse an existing `summary.csv` back into rows (empty when the file
+/// does not exist) — the `--resume` path's source of truth for which
+/// triples already completed. Trace paths are re-anchored under
+/// `out_dir`. No cell [`write_summary`] emits ever needs CSV escaping
+/// (scenario names are restricted to `[A-Za-z0-9._-]`, algorithm names
+/// are fixed, numbers are numbers), so a plain comma split is exact; a
+/// foreign or incompatible file is a descriptive error, not a silent
+/// empty resume.
+pub fn read_summary(out_dir: &std::path::Path) -> Result<Vec<SweepRow>> {
+    let path = out_dir.join("summary.csv");
+    if !path.exists() {
+        return Ok(Vec::new());
+    }
+    let text = std::fs::read_to_string(&path)?;
+    let mut lines = text.lines();
+    let header = lines.next().unwrap_or("");
+    anyhow::ensure!(
+        header == SUMMARY_COLUMNS.join(","),
+        "{}: unrecognized header `{header}` — not a sweep summary (or one from an \
+         incompatible version)",
+        path.display()
+    );
+    let mut rows = Vec::new();
+    for (idx, line) in lines.enumerate() {
+        let lineno = idx + 2;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').collect();
+        anyhow::ensure!(
+            cells.len() == SUMMARY_COLUMNS.len(),
+            "{}: line {lineno}: {} cells, expected {}",
+            path.display(),
+            cells.len(),
+            SUMMARY_COLUMNS.len()
+        );
+        let bad = |what: &str, v: &str| {
+            anyhow::anyhow!("{}: line {lineno}: bad {what} `{v}`", path.display())
+        };
+        rows.push(SweepRow {
+            scenario: cells[0].to_string(),
+            algorithm: cells[1].to_string(),
+            seed: cells[2].parse().map_err(|_| bad("seed", cells[2]))?,
+            rounds: cells[3].parse().map_err(|_| bad("rounds", cells[3]))?,
+            final_acc: cells[4].parse().map_err(|_| bad("final_acc", cells[4]))?,
+            best_acc: cells[5].parse().map_err(|_| bad("best_acc", cells[5]))?,
+            cum_energy: cells[6].parse().map_err(|_| bad("cum_energy_j", cells[6]))?,
+            wire_bytes: cells[7].parse().map_err(|_| bad("wire_bytes", cells[7]))?,
+            dropouts: cells[8].parse().map_err(|_| bad("dropouts", cells[8]))?,
+            trace_path: out_dir.join(cells[9]),
+        });
+    }
+    Ok(rows)
 }
 
 /// Print the run summaries as a table.
@@ -307,6 +588,8 @@ mod tests {
             rounds: None,
             out_dir: PathBuf::from("/tmp/unused"),
             threads: 1,
+            resume: false,
+            checkpoint_every: 0,
         }
     }
 
@@ -400,5 +683,78 @@ mod tests {
         assert!(text.lines().next().unwrap().starts_with("scenario,algorithm,seed"));
         assert!(text.contains("s__qccf__seed1.jsonl"));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn summary_round_trips_through_read_summary() {
+        // The --resume source of truth: write_summary → read_summary
+        // must reproduce every row (NaN accuracies included — a run
+        // with eval off writes "NaN", which must parse back as NaN and
+        // still count as completed).
+        let rows = vec![
+            SweepRow {
+                scenario: "paper-femnist".into(),
+                algorithm: "qccf".into(),
+                seed: 1,
+                rounds: 12,
+                final_acc: 0.5,
+                best_acc: 0.625,
+                cum_energy: 1.25,
+                wire_bytes: 4242,
+                dropouts: 3,
+                trace_path: PathBuf::from("ignored/paper-femnist__qccf__seed1.jsonl"),
+            },
+            SweepRow {
+                scenario: "zipf-skew".into(),
+                algorithm: "same-size".into(),
+                seed: 9,
+                rounds: 2,
+                final_acc: f64::NAN,
+                best_acc: f64::NAN,
+                cum_energy: 0.5,
+                wire_bytes: 0,
+                dropouts: 0,
+                trace_path: PathBuf::from("ignored/zipf-skew__same-size__seed9.jsonl"),
+            },
+        ];
+        let dir = std::env::temp_dir().join("qccf_sweep_read_summary_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_summary(&rows, &dir).unwrap();
+        let back = read_summary(&dir).unwrap();
+        assert_eq!(back.len(), 2);
+        for (a, b) in rows.iter().zip(&back) {
+            assert_eq!(a.scenario, b.scenario);
+            assert_eq!(a.algorithm, b.algorithm);
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.rounds, b.rounds);
+            assert_eq!(a.wire_bytes, b.wire_bytes);
+            assert_eq!(a.dropouts, b.dropouts);
+            assert!(
+                (a.final_acc == b.final_acc) || (a.final_acc.is_nan() && b.final_acc.is_nan())
+            );
+            // Trace paths are re-anchored under the summary's directory.
+            assert_eq!(
+                b.trace_path,
+                dir.join(a.trace_path.file_name().unwrap())
+            );
+        }
+        // Missing file = empty resume set, not an error.
+        let empty = std::env::temp_dir().join("qccf_sweep_read_summary_missing");
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(read_summary(&empty).unwrap().is_empty());
+        // A foreign CSV is a descriptive error, not a silent skip-all.
+        std::fs::write(empty.join("summary.csv"), "a,b,c\n1,2,3\n").unwrap();
+        assert!(read_summary(&empty).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&empty).ok();
+    }
+
+    #[test]
+    fn unit_stem_matches_trace_and_snapshot_naming() {
+        assert_eq!(unit_stem("deep-fade", "qccf", 7), "deep-fade__qccf__seed7");
+        assert_eq!(
+            crate::ckpt::snapshot_file_name("deep-fade", "qccf", 7),
+            format!("{}.qckpt", unit_stem("deep-fade", "qccf", 7))
+        );
     }
 }

@@ -23,6 +23,12 @@
 //! `fl::exec` for the contract), and the realized bytes on the wire are
 //! recorded per round (`RoundRecord::wire_bytes`) with an invariant
 //! check against the analytic eq. (5) accounting.
+//!
+//! The determinism contract extends across process boundaries:
+//! [`Server::checkpoint_state`] / [`Server::restore_state`] capture and
+//! reinstall the complete resumable state for the `ckpt` subsystem, so
+//! a run checkpointed mid-horizon resumes bit-identically
+//! (`docs/CHECKPOINTS.md`).
 
 pub mod exec;
 
@@ -437,6 +443,98 @@ impl<'rt> Server<'rt> {
     /// Communication rounds completed so far.
     pub fn round(&self) -> usize {
         self.round
+    }
+
+    /// Capture the server's complete resumable state for the `ckpt`
+    /// subsystem: round index, θ, virtual queues (with history), the
+    /// possibly auto-recalibrated ε1/ε2, every client's estimator /
+    /// θ^max / `q_prev` anchor / private RNG stream, the server's
+    /// master stream, the scheduler's stream (if it owns one), and the
+    /// runtime's profiling clock (captured as observed; restored only
+    /// by exclusive-runtime callers — see [`Server::restore_state`]).
+    /// Everything *not* captured here —
+    /// federation data, channel pathloss placement, the compiled
+    /// artifacts — is a deterministic function of (scenario, seed) and
+    /// replays identically through [`Server::new`] on resume.
+    pub fn checkpoint_state(&self) -> crate::ckpt::RunState {
+        crate::ckpt::RunState {
+            round: self.round as u64,
+            eps1: self.params.eps1,
+            eps2: self.params.eps2,
+            theta: self.theta.clone(),
+            lambda1: self.queues.lambda1,
+            lambda2: self.queues.lambda2,
+            queue_history: self.queues.history().to_vec(),
+            clients: self
+                .clients
+                .iter()
+                .map(|c| crate::ckpt::ClientCkpt {
+                    g: c.stats.g,
+                    sigma: c.stats.sigma,
+                    ema: c.stats.ema,
+                    observed: c.stats.observed,
+                    theta_max: c.theta_max,
+                    q_prev: c.q_prev,
+                    rng: c.rng.state(),
+                })
+                .collect(),
+            server_rng: self.rng.state(),
+            sched_rng: self.scheduler.rng_state(),
+            runtime_nanos: self.runtime.exec_nanos_snapshot(),
+        }
+    }
+
+    /// Reinstall state captured by [`Server::checkpoint_state`] over a
+    /// freshly constructed server (same scenario, algorithm and seed —
+    /// the caller verifies that identity; see `ckpt::Snapshot`).
+    /// Subsequent rounds are bit-identical to the uninterrupted run.
+    pub fn restore_state(&mut self, st: &crate::ckpt::RunState) -> Result<()> {
+        anyhow::ensure!(
+            st.clients.len() == self.clients.len(),
+            "snapshot has {} clients, server has {} — scenario mismatch",
+            st.clients.len(),
+            self.clients.len()
+        );
+        anyhow::ensure!(
+            st.theta.len() == self.theta.len(),
+            "snapshot θ has {} dims, runtime profile has {} — artifact profile mismatch",
+            st.theta.len(),
+            self.theta.len()
+        );
+        anyhow::ensure!(
+            st.sched_rng.is_some() == self.scheduler.rng_state().is_some(),
+            "snapshot {} a scheduler RNG stream but `{}` {} one — algorithm mismatch",
+            if st.sched_rng.is_some() { "carries" } else { "lacks" },
+            self.scheduler.name(),
+            if self.scheduler.rng_state().is_some() { "owns" } else { "has no" },
+        );
+        self.round = st.round as usize;
+        self.params.eps1 = st.eps1;
+        self.params.eps2 = st.eps2;
+        self.theta = st.theta.clone();
+        self.queues =
+            Queues::restore(st.lambda1, st.lambda2, st.queue_history.clone());
+        for (c, ck) in self.clients.iter_mut().zip(&st.clients) {
+            c.stats.g = ck.g;
+            c.stats.sigma = ck.sigma;
+            c.stats.ema = ck.ema;
+            c.stats.observed = ck.observed;
+            c.theta_max = ck.theta_max;
+            c.q_prev = ck.q_prev;
+            c.rng.restore(&ck.rng);
+        }
+        self.rng.restore(&st.server_rng);
+        if let Some(sr) = &st.sched_rng {
+            self.scheduler.restore_rng_state(sr);
+        }
+        // Deliberately NOT restored here: the runtime profiling clock.
+        // The `Runtime` is process-shared (a parallel sweep runs many
+        // servers over one runtime), so writing the snapshot's counters
+        // back would clobber accounting other in-flight runs are
+        // accumulating concurrently. The caller that *owns* the runtime
+        // exclusively opts in via
+        // `CheckpointPolicy::restore_runtime_clock`.
+        Ok(())
     }
 
     /// Per-client dataset sizes (diagnostics / Fig. 5b).

@@ -202,6 +202,15 @@ where
 /// allocations should return `f64::INFINITY` (fitness 0 per the paper).
 /// `eval` must be `Fn + Sync` so the fitness loop — the decision-stage
 /// hot path — can fan out over [`GaParams::threads`] workers.
+///
+/// **Checkpoint contract:** every random choice the GA makes —
+/// population init, selection, crossover, mutation — draws from the
+/// caller's `rng` and nothing else, and the fitness cache lives only
+/// for the duration of one call. Capturing that stream's
+/// [`crate::util::rng::RngState`] therefore checkpoints the GA
+/// completely: a restored stream replays the exact same search
+/// trajectory (the `ckpt` subsystem relies on this for bit-identical
+/// resume of the GA-based schedulers).
 pub fn optimize<F>(
     num_channels: usize,
     num_clients: usize,

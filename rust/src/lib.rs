@@ -39,6 +39,12 @@
 //! runner ([`experiments::sweep`]) fans scenario × seed × algorithm
 //! grids out over the worker pool with per-run determinism.
 //!
+//! Runs and sweeps are **preemption-safe**: the [`ckpt`] subsystem
+//! snapshots complete run state (round, θ, Lyapunov queues, per-client
+//! anchors and RNG streams) into a versioned CRC-sealed binary format
+//! with atomic writes, and a checkpointed-then-resumed run is
+//! bit-identical to the uninterrupted one (`docs/CHECKPOINTS.md`).
+//!
 //! Start with [`config::SystemParams`] (paper Table I), then
 //! [`fl::Server`] for the training loop, or the `examples/`. The full
 //! layer-by-layer tour — AOT pipeline, artifacts, PJRT runtime,
@@ -50,6 +56,7 @@ pub mod bench;
 pub mod util;
 
 pub mod baselines;
+pub mod ckpt;
 pub mod config;
 pub mod convergence;
 pub mod data;

@@ -21,6 +21,16 @@ impl Queues {
         Queues { lambda1: 0.0, lambda2: 0.0, history: vec![(0.0, 0.0)] }
     }
 
+    /// Rebuild queues from checkpointed state: the current backlogs
+    /// plus the full post-update history (whose *length* feeds the
+    /// mean-rate-stability diagnostic, so a resumed run must not
+    /// restart it at 1). An empty history — which [`Queues::new`]
+    /// never produces — falls back to the fresh-queue `[(0, 0)]`.
+    pub fn restore(lambda1: f64, lambda2: f64, history: Vec<(f64, f64)>) -> Queues {
+        let history = if history.is_empty() { vec![(0.0, 0.0)] } else { history };
+        Queues { lambda1, lambda2, history }
+    }
+
     /// Eqs. (23)–(24): `λ ← max(λ + arrival − ε, 0)` with the realized
     /// per-round C6/C7 terms as arrivals.
     pub fn update(&mut self, p: &SystemParams, data_term: f64, quant_term: f64) {

@@ -7,6 +7,12 @@
 //!                                GA fitness fan-out (default: all cores
 //!                                minus one; 1 = serial legacy path; any
 //!                                value is bit-identical)
+//!           [--checkpoint-every N] [--checkpoint-dir D] [--resume F]
+//!                                periodic atomic snapshots every N rounds
+//!                                (default dir results/ckpt), and resume
+//!                                from snapshot F — the resumed trace is
+//!                                bit-identical to the uninterrupted run
+//!                                (docs/CHECKPOINTS.md)
 //!   fig2    [--profile P] [--v-values 1,10,100,1000] [--rounds N] [--quick]
 //!   fig3    [--profile P] [--betas 150,300] [--rounds N] [--quick]
 //!   fig4    [--profile P] [--betas 150,300] [--rounds N] [--quick]
@@ -19,6 +25,11 @@
 //!                                plus summary.csv under --out (bit-identical
 //!                                for any --threads). `--list` prints the
 //!                                built-ins; format reference: docs/SCENARIOS.md
+//!           [--resume] [--checkpoint-every N]
+//!                                preemption-safe restart: skip triples already
+//!                                completed in summary.csv and restart partial
+//!                                runs from their latest snapshot under
+//!                                --out/ckpt (written every N rounds)
 //!   decide  [--profile P] [--seed S]    one-round decision demo (all algorithms)
 //!   ablate  [--draws N] [--seed S] [--quick]   design-choice ablations (no artifacts)
 //!   bench-wire [--z Z] [--qs 4,8] [--out F]    wire-codec microbench (encode +
@@ -31,13 +42,18 @@
 //!                                uncached reference path, over a converging-GA-
 //!                                shaped chromosome pool; written as
 //!                                BENCH_sched.json (default target/; no artifacts)
+//!   bench-ckpt [--z Z] [--us 100,1000] [--out F]   snapshot-codec microbench:
+//!                                encode/decode MB/s and snapshot bytes at
+//!                                Z model dims × U clients; written as
+//!                                BENCH_ckpt.json (default target/; no artifacts)
 //!
 //! The fig2..fig5 harnesses are presets over the `paper-femnist` /
 //! `paper-cifar10` scenarios — the same path `sweep` runs (see
 //! docs/ARCHITECTURE.md).
 //!
 //! Requires `make artifacts` (HLO text under ./artifacts), except
-//! `ablate`, `bench-wire`, `bench-sched` and `sweep --list`.
+//! `ablate`, `bench-wire`, `bench-sched`, `bench-ckpt` and
+//! `sweep --list`.
 
 use std::path::PathBuf;
 
@@ -45,7 +61,7 @@ use anyhow::Result;
 
 use qccf::baselines::{make_scheduler, ALL_ALGORITHMS};
 use qccf::config::SystemParams;
-use qccf::experiments::{common, fig2, fig3, fig4, fig5, run_one, sweep, RunSpec, Task};
+use qccf::experiments::{common, fig2, fig3, fig4, fig5, sweep, RunSpec, Task};
 use qccf::info;
 use qccf::lyapunov::Queues;
 use qccf::runtime::Runtime;
@@ -90,9 +106,10 @@ fn run(args: &Args) -> Result<()> {
         Some("ablate") => cmd_ablate(args),
         Some("bench-wire") => cmd_bench_wire(args),
         Some("bench-sched") => cmd_bench_sched(args),
+        Some("bench-ckpt") => cmd_bench_ckpt(args),
         Some(other) => anyhow::bail!("unknown subcommand `{other}` (see README)"),
         None => {
-            println!("usage: qccf <params|train|fig2|fig3|fig4|fig5|sweep|decide|ablate|bench-wire|bench-sched> [options]");
+            println!("usage: qccf <params|train|fig2|fig3|fig4|fig5|sweep|decide|ablate|bench-wire|bench-sched|bench-ckpt> [options]");
             println!("see README.md for the full option list; `qccf sweep --list` shows scenarios");
             Ok(())
         }
@@ -152,7 +169,46 @@ fn cmd_train(args: &Args) -> Result<()> {
         spec.v = v.parse().ok();
     }
     info!("main", "round engine threads: {}", spec.threads);
-    let trace = run_one(&rt, &spec)?;
+    // Checkpoint policy: periodic atomic snapshots and/or resume from
+    // one (docs/CHECKPOINTS.md). The resumed trace is bit-identical to
+    // the uninterrupted run's. Strict parse, like sweep's: a typo'd
+    // cadence must not silently run the long job with checkpointing
+    // off — losing exactly the run the flag was meant to protect.
+    let every = match args.get("checkpoint-every") {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("--checkpoint-every: bad value `{v}`"))?,
+        None => 0,
+    };
+    // Bare `--resume` (no path) parses as a flag and would silently
+    // start from round 0 — the opposite of what was asked.
+    anyhow::ensure!(
+        !args.flag("resume") || args.get("resume").is_some(),
+        "train --resume needs a snapshot path (e.g. --resume results/ckpt/<run>.qckpt)"
+    );
+    let ckpt_dir = args
+        .get("checkpoint-dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| common::results_dir().join("ckpt"));
+    let policy = common::CheckpointPolicy {
+        every,
+        dir: (every > 0).then_some(ckpt_dir),
+        resume: args.get("resume").map(PathBuf::from),
+        // `train` owns its runtime exclusively, so the resumed profile
+        // may continue the original accounting.
+        restore_runtime_clock: true,
+    };
+    if policy.every > 0 {
+        info!(
+            "main",
+            "checkpointing every {} round(s) under {}",
+            policy.every,
+            policy.dir.as_ref().unwrap().display()
+        );
+    }
+    let sc = spec.to_scenario();
+    let trace =
+        common::run_scenario_ckpt(&rt, &sc, &spec.algorithm, spec.seed, spec.threads, &policy)?;
     let row = fig3::summarize(&trace, spec.beta);
     fig3::print(std::slice::from_ref(&row), &format!("train — {}", spec.algorithm));
     let path = common::results_dir().join(format!("train_{}.csv", spec.algorithm));
@@ -220,6 +276,10 @@ fn print_sweep_usage() {
     println!("                        bit-identical for any value");
     println!("  --quick               2-round smoke (tier-1 uses this; see verify.sh)");
     println!("  --profile P           artifact profile (default: small)");
+    println!("  --resume              skip triples already in summary.csv; restart partial");
+    println!("                        runs from their latest snapshot under --out/ckpt");
+    println!("  --checkpoint-every N  per-run snapshot cadence in rounds (default 0 = off;");
+    println!("                        what makes long runs resumable mid-horizon)");
     println!("scenario format + every built-in's rationale: docs/SCENARIOS.md");
 }
 
@@ -287,6 +347,23 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             .max(1),
         None => threadpool::default_threads(),
     };
+    let checkpoint_every = match args.get("checkpoint-every") {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("--checkpoint-every: bad value `{v}`"))?,
+        None => 0,
+    };
+    // `--resume <value>` parses as an option, so `flag("resume")` would
+    // be false and the fresh-sweep branch would *delete* the summary
+    // the user asked to resume from — reject the wrong arity instead
+    // (sweep's --resume is a bare flag; train's takes the path).
+    if let Some(v) = args.get("resume") {
+        anyhow::ensure!(
+            v == "true",
+            "sweep --resume takes no value (it resumes everything under --out); \
+             got `--resume {v}`"
+        );
+    }
     let cfg = sweep::SweepConfig {
         scenarios,
         seeds,
@@ -294,6 +371,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         rounds,
         out_dir: PathBuf::from(args.get_or("out", "results/sweep")),
         threads,
+        resume: args.flag("resume"),
+        checkpoint_every,
     };
     let rt = load_runtime(args)?;
     let rows = sweep::run(&rt, &cfg)?;
@@ -342,6 +421,30 @@ fn cmd_bench_sched(args: &Args) -> Result<()> {
         println!(
             "{:<28} U={:<5} C={:<5} {:>12.0} evals/sec",
             r.name, r.u, r.c, r.evals_per_sec
+        );
+    }
+    println!("wrote {} ({} benchmarks)", out.display(), rows.len());
+    Ok(())
+}
+
+/// Snapshot-codec microbench (no artifacts needed — pure Rust):
+/// `ckpt::Snapshot` encode/decode throughput over a synthetic
+/// mid-horizon snapshot at Z model dims × U clients, emitted as
+/// `BENCH_ckpt.json` — the checkpoint-path perf baseline verify.sh
+/// seeds and later PRs diff against.
+fn cmd_bench_ckpt(args: &Args) -> Result<()> {
+    let z = args.get_usize("z", 20_000);
+    let us: Vec<usize> =
+        args.get_f64_list("us", &[100.0, 1000.0]).into_iter().map(|u| u as usize).collect();
+    anyhow::ensure!(!us.is_empty(), "--us: need at least one client count");
+    anyhow::ensure!(us.iter().all(|&u| u >= 1), "--us: client counts must be >= 1");
+    let out = PathBuf::from(args.get_or("out", "target/BENCH_ckpt.json"));
+    let rows = qccf::bench::run_ckpt_bench(z, &us);
+    qccf::bench::write_ckpt_bench_json(&out, z, &rows)?;
+    for r in &rows {
+        println!(
+            "{:<28} U={:<5} {:>10} B {:>10.1} MB/s",
+            r.name, r.u, r.bytes, r.mb_per_sec
         );
     }
     println!("wrote {} ({} benchmarks)", out.display(), rows.len());

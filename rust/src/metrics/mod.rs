@@ -169,6 +169,10 @@ impl Trace {
     /// is what makes sweep outputs bit-identical across `--threads`
     /// values. Non-finite values (e.g. an empty round's NaN loss)
     /// serialize as `null` to keep every line valid JSON.
+    ///
+    /// The file is replaced **atomically** (tmp + fsync + rename, see
+    /// [`crate::util::fsio`]): an interrupted sweep never leaves a torn
+    /// trace for `sweep --resume` to mistake for a completed run.
     pub fn write_jsonl(&self, path: &Path, meta: &[(&str, Json)]) -> std::io::Result<()> {
         fn num_or_null(x: f64) -> Json {
             if x.is_finite() {
@@ -180,40 +184,39 @@ impl Trace {
         fn opt(x: Option<f64>) -> Json {
             x.map(num_or_null).unwrap_or(Json::Null)
         }
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
-        for r in &self.records {
-            let mut m: BTreeMap<String, Json> = BTreeMap::new();
-            for (k, v) in meta {
-                m.insert((*k).to_string(), v.clone());
+        crate::util::fsio::replace_atomic(path, |tmp| {
+            let mut out = std::io::BufWriter::new(std::fs::File::create(tmp)?);
+            for r in &self.records {
+                let mut m: BTreeMap<String, Json> = BTreeMap::new();
+                for (k, v) in meta {
+                    m.insert((*k).to_string(), v.clone());
+                }
+                m.insert("round".into(), Json::Num(r.round as f64));
+                m.insert("scheduled".into(), Json::Num(r.scheduled as f64));
+                m.insert("aggregated".into(), Json::Num(r.aggregated as f64));
+                m.insert("energy_j".into(), num_or_null(r.energy));
+                m.insert("cum_energy_j".into(), num_or_null(r.cum_energy));
+                m.insert("train_loss".into(), num_or_null(r.train_loss));
+                m.insert("test_loss".into(), opt(r.test_loss));
+                m.insert("test_acc".into(), opt(r.test_acc));
+                m.insert("mean_q".into(), num_or_null(r.mean_q));
+                m.insert("wire_bytes".into(), Json::Num(r.wire_bytes as f64));
+                m.insert(
+                    "q_per_client".into(),
+                    Json::Arr(
+                        r.q_per_client
+                            .iter()
+                            .map(|q| q.map(|q| Json::Num(q as f64)).unwrap_or(Json::Null))
+                            .collect(),
+                    ),
+                );
+                m.insert("lambda1".into(), num_or_null(r.lambda1));
+                m.insert("lambda2".into(), num_or_null(r.lambda2));
+                m.insert("max_latency_s".into(), num_or_null(r.max_latency));
+                writeln!(out, "{}", Json::Obj(m).to_string_compact())?;
             }
-            m.insert("round".into(), Json::Num(r.round as f64));
-            m.insert("scheduled".into(), Json::Num(r.scheduled as f64));
-            m.insert("aggregated".into(), Json::Num(r.aggregated as f64));
-            m.insert("energy_j".into(), num_or_null(r.energy));
-            m.insert("cum_energy_j".into(), num_or_null(r.cum_energy));
-            m.insert("train_loss".into(), num_or_null(r.train_loss));
-            m.insert("test_loss".into(), opt(r.test_loss));
-            m.insert("test_acc".into(), opt(r.test_acc));
-            m.insert("mean_q".into(), num_or_null(r.mean_q));
-            m.insert("wire_bytes".into(), Json::Num(r.wire_bytes as f64));
-            m.insert(
-                "q_per_client".into(),
-                Json::Arr(
-                    r.q_per_client
-                        .iter()
-                        .map(|q| q.map(|q| Json::Num(q as f64)).unwrap_or(Json::Null))
-                        .collect(),
-                ),
-            );
-            m.insert("lambda1".into(), num_or_null(r.lambda1));
-            m.insert("lambda2".into(), num_or_null(r.lambda2));
-            m.insert("max_latency_s".into(), num_or_null(r.max_latency));
-            writeln!(out, "{}", Json::Obj(m).to_string_compact())?;
-        }
-        out.flush()
+            out.flush()
+        })
     }
 }
 

@@ -250,4 +250,25 @@ impl Runtime {
         let sec = |i: usize| self.exec_nanos[i].load(Ordering::Relaxed) as f64 * 1e-9;
         [sec(0), sec(1), sec(2), sec(3)]
     }
+
+    /// The raw nanosecond clock behind [`Runtime::exec_profile`] —
+    /// captured into checkpoints so a resumed run's profile continues
+    /// the original accounting instead of restarting at zero.
+    pub fn exec_nanos_snapshot(&self) -> [u64; 4] {
+        [
+            self.exec_nanos[0].load(Ordering::Relaxed),
+            self.exec_nanos[1].load(Ordering::Relaxed),
+            self.exec_nanos[2].load(Ordering::Relaxed),
+            self.exec_nanos[3].load(Ordering::Relaxed),
+        ]
+    }
+
+    /// Reinstall a captured nanosecond clock (checkpoint resume).
+    /// Profiling only — the clock never feeds any decision, so this
+    /// cannot move a trace bit.
+    pub fn restore_exec_nanos(&self, nanos: [u64; 4]) {
+        for (ctr, v) in self.exec_nanos.iter().zip(nanos) {
+            ctr.store(v, Ordering::Relaxed);
+        }
+    }
 }

@@ -85,6 +85,18 @@ pub trait Scheduler {
     fn name(&self) -> &'static str;
     /// Decide round n's participation, channels, levels and frequencies.
     fn decide(&mut self, inp: &RoundInputs<'_>) -> RoundDecision;
+    /// Position of the scheduler's private RNG stream, if it owns one
+    /// (the GA-based schedulers do; stateless policies return `None`).
+    /// Every other input to [`Scheduler::decide`] arrives through
+    /// [`RoundInputs`], so this stream position is the scheduler's
+    /// *entire* resumable state — the checkpoint subsystem captures it
+    /// and reinstalls it via [`Scheduler::restore_rng_state`].
+    fn rng_state(&self) -> Option<crate::util::rng::RngState> {
+        None
+    }
+    /// Reposition the scheduler's RNG stream from a captured state
+    /// (no-op for stateless policies).
+    fn restore_rng_state(&mut self, _state: &crate::util::rng::RngState) {}
 }
 
 /// Evaluate a channel allocation under the QCCF inner solver:

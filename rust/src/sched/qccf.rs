@@ -87,6 +87,18 @@ impl Scheduler for QccfScheduler {
         );
         RoundDecision { assignments, j0, evals, deadline_exempt: false }
     }
+
+    // The GA stream is the scheduler's only mutable state (GaParams /
+    // case5 / cache are run configuration; the per-round EvalCtx and
+    // fitness caches live and die inside one decide call), so the
+    // checkpoint subsystem can resume QCCF from this position alone.
+    fn rng_state(&self) -> Option<crate::util::rng::RngState> {
+        Some(self.rng.state())
+    }
+
+    fn restore_rng_state(&mut self, state: &crate::util::rng::RngState) {
+        self.rng.restore(state);
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,101 @@
+//! Atomic file replacement (tmp + fsync + rename): the durability
+//! substrate under checkpoint snapshots, sweep `summary.csv`, and the
+//! per-run JSONL traces, so an interrupted process never leaves a torn
+//! file for `--resume` to misread.
+//!
+//! POSIX `rename(2)` within one directory is atomic, so readers observe
+//! either the previous complete file or the new complete file — never a
+//! prefix. The data is fsynced before the rename (and the directory
+//! after, best effort) so the rename cannot outlive its contents across
+//! a power cut.
+
+use std::fs::{self, File};
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The temporary sibling a pending write stages into: `<name>.tmp` in
+/// the same directory (same filesystem, so the rename is atomic).
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Replace `path` atomically: `write` produces the new contents at a
+/// temporary sibling path, which is fsynced and renamed over `path`.
+/// On any error the temporary file is removed and `path` is left
+/// exactly as it was. Parent directories are created as needed.
+pub fn replace_atomic<F>(path: &Path, write: F) -> io::Result<()>
+where
+    F: FnOnce(&Path) -> io::Result<()>,
+{
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = tmp_sibling(path);
+    let result = write(&tmp)
+        .and_then(|()| File::open(&tmp))
+        .and_then(|f| f.sync_all())
+        .and_then(|()| fs::rename(&tmp, path));
+    if result.is_err() {
+        fs::remove_file(&tmp).ok();
+    } else if let Some(dir) = path.parent() {
+        // Directory fsync is best effort: it makes the rename itself
+        // durable, but a failure here does not un-replace the file.
+        if !dir.as_os_str().is_empty() {
+            if let Ok(d) = File::open(dir) {
+                d.sync_all().ok();
+            }
+        }
+    }
+    result
+}
+
+/// [`replace_atomic`] for a ready byte buffer.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    replace_atomic(path, |tmp| fs::write(tmp, bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_atomic_round_trips_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join("qccf_fsio_test_rt");
+        let path = dir.join("nested").join("out.bin");
+        write_atomic(&path, b"hello").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"hello");
+        write_atomic(&path, b"world").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"world");
+        let names: Vec<String> = std::fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["out.bin".to_string()]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_write_preserves_previous_contents() {
+        let dir = std::env::temp_dir().join("qccf_fsio_test_fail");
+        let path = dir.join("out.txt");
+        write_atomic(&path, b"original").unwrap();
+        let err = replace_atomic(&path, |tmp| {
+            std::fs::write(tmp, b"partial")?;
+            Err(io::Error::other("simulated crash mid-write"))
+        });
+        assert!(err.is_err());
+        // The target still holds the previous complete contents and the
+        // staging file is gone.
+        assert_eq!(std::fs::read(&path).unwrap(), b"original");
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["out.txt".to_string()]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod argparse;
 pub mod csv;
+pub mod fsio;
 pub mod json;
 pub mod logging;
 pub mod prop;

@@ -1,0 +1,286 @@
+//! Checkpoint/resume integration: the `ckpt` subsystem's acceptance
+//! pins. A run checkpointed mid-horizon and resumed must produce a
+//! trace **bit-identical** to the uninterrupted run — for any engine
+//! thread count on either side of the split — and `sweep --resume`
+//! must complete a partially finished sweep without re-running
+//! completed triples, restarting interrupted runs from their latest
+//! snapshot.
+//!
+//! All tests no-op (with a note) when `make artifacts` hasn't run.
+
+use std::path::PathBuf;
+
+use qccf::ckpt;
+use qccf::experiments::common::{run_scenario, run_scenario_ckpt, CheckpointPolicy};
+use qccf::experiments::sweep;
+use qccf::metrics::Trace;
+use qccf::runtime::{artifacts_dir, Runtime};
+use qccf::scenario::registry;
+
+fn runtime() -> Option<Runtime> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(&artifacts_dir(), "tiny").expect("load tiny runtime"))
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Every deterministic trace field, compared bit for bit. The two
+/// wall-clock fields (`decide_seconds`/`compute_seconds`) are measured,
+/// not derived, so they are the only exclusions — same contract as the
+/// JSONL trace schema.
+fn assert_traces_bit_identical(want: &Trace, got: &Trace, tag: &str) {
+    assert_eq!(want.algorithm, got.algorithm, "{tag}: algorithm");
+    assert_eq!(want.records.len(), got.records.len(), "{tag}: length");
+    for (a, b) in want.records.iter().zip(&got.records) {
+        let r = a.round;
+        assert_eq!(a.round, b.round, "{tag}: round");
+        assert_eq!(a.scheduled, b.scheduled, "{tag} r{r}: scheduled");
+        assert_eq!(a.aggregated, b.aggregated, "{tag} r{r}: aggregated");
+        assert_eq!(a.wire_bytes, b.wire_bytes, "{tag} r{r}: wire_bytes");
+        assert_eq!(a.energy.to_bits(), b.energy.to_bits(), "{tag} r{r}: energy");
+        assert_eq!(a.cum_energy.to_bits(), b.cum_energy.to_bits(), "{tag} r{r}: cum_energy");
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{tag} r{r}: train_loss");
+        assert_eq!(
+            a.test_loss.map(f64::to_bits),
+            b.test_loss.map(f64::to_bits),
+            "{tag} r{r}: test_loss"
+        );
+        assert_eq!(
+            a.test_acc.map(f64::to_bits),
+            b.test_acc.map(f64::to_bits),
+            "{tag} r{r}: test_acc"
+        );
+        assert_eq!(a.mean_q.to_bits(), b.mean_q.to_bits(), "{tag} r{r}: mean_q");
+        assert_eq!(a.q_per_client, b.q_per_client, "{tag} r{r}: q_per_client");
+        assert_eq!(a.lambda1.to_bits(), b.lambda1.to_bits(), "{tag} r{r}: lambda1");
+        assert_eq!(a.lambda2.to_bits(), b.lambda2.to_bits(), "{tag} r{r}: lambda2");
+        assert_eq!(a.max_latency.to_bits(), b.max_latency.to_bits(), "{tag} r{r}: max_latency");
+    }
+}
+
+/// The paper-femnist scenario shrunk to test scale (the data volume,
+/// not the physics), 12-round horizon.
+fn scenario_12() -> qccf::scenario::Scenario {
+    let mut sc = registry::paper_femnist();
+    sc.data.size_mean = 300.0;
+    sc.data.size_std = 60.0;
+    sc.data.test_size = 128;
+    sc.train.rounds = 12;
+    sc
+}
+
+#[test]
+fn checkpoint_at_6_resume_bit_identical_to_straight_12() {
+    // The tentpole acceptance pin: paper-femnist 12 rounds straight vs
+    // checkpoint-at-6 + resume, whole-trace bit equality — energies, q
+    // levels, queues, wire bytes — with the interrupted half run at 8
+    // engine threads and the resumed half at both 1 and 8.
+    let Some(rt) = runtime() else { return };
+    let sc = scenario_12();
+    let seed = 5u64;
+
+    let reference = run_scenario(&rt, &sc, "qccf", seed, 1).unwrap();
+    assert_eq!(reference.records.len(), 12);
+
+    // "Interrupted" run: a 6-round horizon with a snapshot at round 6
+    // is exactly the state a kill after round 6 leaves behind (the
+    // snapshot is written when the round completes, atomically).
+    let ckpt_dir = fresh_dir("qccf_integration_ckpt_run");
+    let mut sc6 = sc.clone();
+    sc6.train.rounds = 6;
+    let part = run_scenario_ckpt(
+        &rt,
+        &sc6,
+        "qccf",
+        seed,
+        8,
+        &CheckpointPolicy { every: 6, dir: Some(ckpt_dir.clone()), resume: None, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(part.records.len(), 6);
+    let snap_path = ckpt_dir.join(ckpt::snapshot_file_name(&sc.name, "qccf", seed));
+    assert!(snap_path.exists(), "snapshot not written at round 6");
+
+    // The first 6 rounds already agree (threads are a non-input).
+    let prefix = Trace { algorithm: reference.algorithm.clone(), records: reference.records[..6].to_vec() };
+    assert_traces_bit_identical(&prefix, &part, "prefix");
+
+    for threads in [1usize, 8] {
+        let resumed = run_scenario_ckpt(
+            &rt,
+            &sc,
+            "qccf",
+            seed,
+            threads,
+            &CheckpointPolicy { every: 0, dir: None, resume: Some(snap_path.clone()), ..Default::default() },
+        )
+        .unwrap();
+        assert_traces_bit_identical(&reference, &resumed, &format!("resumed threads={threads}"));
+    }
+
+    // Identity mismatches are refused, not silently diverged from.
+    let wrong_seed = run_scenario_ckpt(
+        &rt,
+        &sc,
+        "qccf",
+        seed + 1,
+        1,
+        &CheckpointPolicy { every: 0, dir: None, resume: Some(snap_path.clone()), ..Default::default() },
+    );
+    assert!(
+        format!("{:#}", wrong_seed.unwrap_err()).contains("seed"),
+        "wrong-seed resume must name the seed mismatch"
+    );
+    let mut sc_drift = sc.clone();
+    sc_drift.data.size_mean = 301.0;
+    let drift = run_scenario_ckpt(
+        &rt,
+        &sc_drift,
+        "qccf",
+        seed,
+        1,
+        &CheckpointPolicy { every: 0, dir: None, resume: Some(snap_path.clone()), ..Default::default() },
+    );
+    assert!(
+        format!("{:#}", drift.unwrap_err()).contains("differs"),
+        "drifted scenario resume must be refused"
+    );
+
+    // A corrupted snapshot is a typed rejection (CRC), not a zero-fill.
+    let mut bytes = std::fs::read(&snap_path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    let bad_path = ckpt_dir.join("corrupt.qckpt");
+    std::fs::write(&bad_path, &bytes).unwrap();
+    let corrupt = run_scenario_ckpt(
+        &rt,
+        &sc,
+        "qccf",
+        seed,
+        1,
+        &CheckpointPolicy { every: 0, dir: None, resume: Some(bad_path), ..Default::default() },
+    );
+    assert!(
+        format!("{:#}", corrupt.unwrap_err()).contains("corrupt"),
+        "corrupted snapshot must fail with the CRC rejection"
+    );
+
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+}
+
+#[test]
+fn sweep_resume_completes_partial_sweep_without_rerunning() {
+    // The sweep acceptance pin: after a simulated kill — one triple's
+    // outputs erased from summary.csv, a mid-horizon snapshot left in
+    // --out/ckpt — `--resume` must (a) not touch the completed triple,
+    // (b) restart the partial one from its snapshot, and (c) produce a
+    // JSONL trace byte-identical to the uninterrupted sweep's.
+    let Some(rt) = runtime() else { return };
+    let out_dir = fresh_dir("qccf_integration_ckpt_sweep");
+    let cfg = |resume: bool| sweep::SweepConfig {
+        scenarios: vec![registry::paper_femnist()],
+        seeds: vec![1, 2],
+        algorithms: Some(vec!["qccf".into()]),
+        rounds: Some(2),
+        out_dir: out_dir.clone(),
+        threads: 1,
+        resume,
+        checkpoint_every: 1,
+    };
+
+    // Uninterrupted sweep: 2 units × 2 rounds.
+    let rows = sweep::run(&rt, &cfg(false)).unwrap();
+    assert_eq!(rows.len(), 2);
+    let jsonl1 = out_dir.join(format!("{}.jsonl", sweep::unit_stem("paper-femnist", "qccf", 1)));
+    let jsonl2 = out_dir.join(format!("{}.jsonl", sweep::unit_stem("paper-femnist", "qccf", 2)));
+    let full_seed1 = std::fs::read(&jsonl1).unwrap();
+    let full_seed2 = std::fs::read(&jsonl2).unwrap();
+    // Every sweep records each scenario's canonical render next to the
+    // traces — the identity the resume path verifies.
+    let sidecar = out_dir.join("paper-femnist.scenario");
+    assert!(sidecar.exists(), "scenario identity sidecar not written");
+    // Completed units leave no snapshots behind.
+    let snap2 = out_dir.join("ckpt").join(ckpt::snapshot_file_name("paper-femnist", "qccf", 2));
+    assert!(!snap2.exists(), "completed unit left a stale snapshot");
+
+    // Simulate the kill: seed 2 never finished — its trace and summary
+    // row are gone, only a round-1 snapshot survives (what the unit's
+    // checkpoint_every=1 policy would have written mid-run).
+    std::fs::remove_file(&jsonl2).unwrap();
+    sweep::write_summary(&rows[..1], &out_dir).unwrap();
+    let mut sc1 = registry::paper_femnist();
+    sc1.train.rounds = 1;
+    run_scenario_ckpt(
+        &rt,
+        &sc1,
+        "qccf",
+        2,
+        1,
+        &CheckpointPolicy { every: 1, dir: Some(out_dir.join("ckpt")), resume: None, ..Default::default() },
+    )
+    .unwrap();
+    assert!(snap2.exists(), "simulated kill must leave the round-1 snapshot");
+    // Sentinel: if --resume re-ran the completed seed-1 unit, its
+    // deterministic rewrite would erase this marker line.
+    let mut seed1_bytes = std::fs::read(&jsonl1).unwrap();
+    seed1_bytes.extend_from_slice(b"{\"sentinel\":true}\n");
+    std::fs::write(&jsonl1, &seed1_bytes).unwrap();
+
+    let rows2 = sweep::run(&rt, &cfg(true)).unwrap();
+    assert_eq!(rows2.len(), 2);
+    // (a) completed triple untouched (sentinel survived).
+    let seed1_after = std::fs::read(&jsonl1).unwrap();
+    assert!(
+        seed1_after.ends_with(b"{\"sentinel\":true}\n"),
+        "resume re-ran the completed seed-1 unit"
+    );
+    // (b)+(c) the resumed partial run finished rounds 2..2 from the
+    // snapshot and its trace is byte-identical to the uninterrupted
+    // sweep's (bit-identical resume ⇒ identical JSONL bytes).
+    let resumed_seed2 = std::fs::read(&jsonl2).unwrap();
+    assert_eq!(resumed_seed2, full_seed2, "resumed seed-2 trace diverged");
+    // Summary rows match the uninterrupted sweep's (same unit order).
+    for (a, b) in rows.iter().zip(&rows2) {
+        assert_eq!(a.scenario, b.scenario);
+        assert_eq!(a.algorithm, b.algorithm);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.cum_energy.to_bits(), b.cum_energy.to_bits(), "seed {}", a.seed);
+        assert_eq!(a.wire_bytes, b.wire_bytes);
+        assert_eq!(a.dropouts, b.dropouts);
+    }
+    // The stale snapshot was cleaned up after the unit completed.
+    assert!(!snap2.exists(), "resumed unit left its snapshot behind");
+
+    // Scenario drift: if the recorded identity sidecar differs from the
+    // current definition beyond the horizon, the scenario's triples are
+    // stale — --resume must re-run them (the sentinel disappears under
+    // the fresh deterministic rewrite) instead of silently carrying
+    // results produced under different physics.
+    let mut seed1_resumed = std::fs::read(&jsonl1).unwrap();
+    assert!(seed1_resumed.ends_with(b"{\"sentinel\":true}\n"), "setup drifted");
+    let mut drifted = registry::paper_femnist();
+    drifted.train.rounds = 2;
+    drifted.wireless.gain_db += 1.0;
+    std::fs::write(&sidecar, qccf::scenario::render(&drifted)).unwrap();
+    let rows3 = sweep::run(&rt, &cfg(true)).unwrap();
+    assert_eq!(rows3.len(), 2);
+    seed1_resumed = std::fs::read(&jsonl1).unwrap();
+    assert_eq!(
+        seed1_resumed, full_seed1,
+        "drifted scenario's triples must re-run to the fresh deterministic trace"
+    );
+    // The sidecar now records the (restored) current definition again.
+    let recorded = std::fs::read_to_string(&sidecar).unwrap();
+    assert!(!recorded.contains(&format!("gain_db = {}", drifted.wireless.gain_db)));
+
+    std::fs::remove_dir_all(&out_dir).ok();
+}

@@ -137,6 +137,8 @@ fn sweep_cfg(out_dir: PathBuf, threads: usize) -> sweep::SweepConfig {
         rounds: Some(2),
         out_dir,
         threads,
+        resume: false,
+        checkpoint_every: 0,
     }
 }
 
@@ -162,10 +164,16 @@ fn sweep_deterministic_across_threads_and_schema_valid() {
         .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
         .collect();
     names.sort();
-    assert_eq!(names.len(), 5, "4 traces + summary.csv: {names:?}");
+    assert_eq!(
+        names.len(),
+        7,
+        "4 traces + summary.csv + 2 scenario identity sidecars: {names:?}"
+    );
     assert!(names.contains(&"summary.csv".to_string()));
     assert!(names.contains(&"paper-femnist__qccf__seed1.jsonl".to_string()));
     assert!(names.contains(&"zipf-skew__qccf__seed2.jsonl".to_string()));
+    assert!(names.contains(&"paper-femnist.scenario".to_string()));
+    assert!(names.contains(&"zipf-skew.scenario".to_string()));
     for name in &names {
         let a = std::fs::read(dir_serial.join(name)).unwrap();
         let b = std::fs::read(dir_parallel.join(name)).unwrap();

@@ -1,0 +1,254 @@
+//! Property tests for the checkpoint snapshot codec (`qccf::ckpt`):
+//! random snapshots — adversarial float bit patterns included — must
+//! round-trip **bit for bit** through encode/decode, and damaged
+//! buffers (truncated, bit-flipped, wrong version, wrong magic,
+//! trailing bytes) must be rejected with the *right* typed
+//! [`CkptError`] variant. No silent zero-fill, ever.
+//!
+//! Pure Rust, no artifacts needed. Runs on the in-tree property
+//! harness (`qccf::util::prop`): failures print the case seed for
+//! exact replay via `QCCF_PROP_SEED`.
+
+use qccf::ckpt::{CkptError, ClientCkpt, RunState, Snapshot, VERSION};
+use qccf::metrics::{RoundRecord, Trace};
+use qccf::util::prop;
+use qccf::util::rng::{Rng, RngState};
+
+/// An adversarial f64: specials, arbitrary bit patterns (NaNs with
+/// payloads included), and ordinary magnitudes.
+fn weird_f64(rng: &mut Rng) -> f64 {
+    match rng.below(8) {
+        0 => f64::NAN,
+        1 => f64::INFINITY,
+        2 => f64::NEG_INFINITY,
+        3 => -0.0,
+        4 => f64::from_bits(rng.next_u64()),
+        _ => rng.gaussian(0.0, 100.0),
+    }
+}
+
+fn weird_f32(rng: &mut Rng) -> f32 {
+    match rng.below(6) {
+        0 => f32::NAN,
+        1 => f32::NEG_INFINITY,
+        2 => f32::from_bits(rng.next_u64() as u32),
+        _ => rng.gaussian(0.0, 10.0) as f32,
+    }
+}
+
+fn rand_rng_state(rng: &mut Rng) -> RngState {
+    RngState {
+        s: [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()],
+        spare: rng.chance(0.5).then(|| weird_f64(rng)),
+    }
+}
+
+fn rand_string(rng: &mut Rng) -> String {
+    let choices = [
+        "",
+        "[scenario]\nname = \"x\"\n",
+        "unicode: λ₁/λ₂ → θ^max ✓",
+        "line\nbreaks\nand\ttabs",
+        "plain-ascii-stem_1.2",
+    ];
+    choices[rng.below(choices.len())].to_string()
+}
+
+fn rand_record(rng: &mut Rng, u: usize) -> RoundRecord {
+    RoundRecord {
+        round: rng.below(10_000),
+        scheduled: rng.below(u + 1),
+        aggregated: rng.below(u + 1),
+        wire_bytes: rng.below(1 << 30),
+        energy: weird_f64(rng),
+        cum_energy: weird_f64(rng),
+        train_loss: weird_f64(rng),
+        test_loss: rng.chance(0.5).then(|| weird_f64(rng)),
+        test_acc: rng.chance(0.5).then(|| weird_f64(rng)),
+        mean_q: weird_f64(rng),
+        q_per_client: (0..u)
+            .map(|_| rng.chance(0.7).then(|| rng.next_u64() as u32))
+            .collect(),
+        lambda1: weird_f64(rng),
+        lambda2: weird_f64(rng),
+        max_latency: weird_f64(rng),
+        decide_seconds: weird_f64(rng),
+        compute_seconds: weird_f64(rng),
+    }
+}
+
+/// A structurally valid snapshot of random shape: 0..~200 model dims,
+/// 0..20 clients, 0..8 trace records, optional scheduler stream.
+fn rand_snapshot(rng: &mut Rng) -> Snapshot {
+    let z = rng.below(200);
+    let u = rng.below(20);
+    let nrec = rng.below(8);
+    let mut trace = Trace::new(["qccf", "same-size", "no-quant"][rng.below(3)]);
+    for _ in 0..nrec {
+        trace.push(rand_record(rng, u));
+    }
+    Snapshot {
+        scenario_text: rand_string(rng),
+        algorithm: trace.algorithm.clone(),
+        seed: rng.next_u64(),
+        state: RunState {
+            round: rng.below(10_000) as u64,
+            eps1: weird_f64(rng),
+            eps2: weird_f64(rng),
+            theta: (0..z).map(|_| weird_f32(rng)).collect(),
+            lambda1: weird_f64(rng),
+            lambda2: weird_f64(rng),
+            queue_history: (0..rng.below(12))
+                .map(|_| (weird_f64(rng), weird_f64(rng)))
+                .collect(),
+            clients: (0..u)
+                .map(|_| ClientCkpt {
+                    g: weird_f64(rng),
+                    sigma: weird_f64(rng),
+                    ema: weird_f64(rng),
+                    observed: rng.chance(0.5),
+                    theta_max: weird_f64(rng),
+                    q_prev: weird_f64(rng),
+                    rng: rand_rng_state(rng),
+                })
+                .collect(),
+            server_rng: rand_rng_state(rng),
+            sched_rng: rng.chance(0.7).then(|| rand_rng_state(rng)),
+            runtime_nanos: [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()],
+        },
+        trace,
+    }
+}
+
+#[test]
+fn encode_decode_round_trips_bit_for_bit() {
+    prop::check("ckpt-round-trip", prop::iters(150), rand_snapshot, |snap| {
+        let bytes = snap.encode();
+        let back = Snapshot::decode(&bytes)
+            .map_err(|e| format!("decode of freshly encoded snapshot failed: {e}"))?;
+        // Re-encoding the decoded value must reproduce the exact bytes:
+        // that covers every field — floats by bit pattern (NaN payloads
+        // and -0.0 included), options, strings, and vec lengths.
+        let again = back.encode();
+        if again != bytes {
+            return Err(format!(
+                "re-encode diverged: {} vs {} bytes (first diff at {:?})",
+                again.len(),
+                bytes.len(),
+                bytes.iter().zip(&again).position(|(a, b)| a != b)
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_buffers_rejected_as_truncated() {
+    prop::check(
+        "ckpt-truncation",
+        prop::iters(100),
+        |rng| {
+            let snap = rand_snapshot(rng);
+            let bytes = snap.encode();
+            // Random cut plus the pathological prefixes.
+            let cut = match rng.below(4) {
+                0 => 0,
+                1 => rng.below(16),
+                2 => 16,
+                _ => rng.below(bytes.len()),
+            };
+            (bytes, cut)
+        },
+        |(bytes, cut)| match Snapshot::decode(&bytes[..*cut]) {
+            Err(CkptError::Truncated { expected, got }) => {
+                if got != *cut {
+                    return Err(format!("reported got={got}, actual {cut}"));
+                }
+                if expected <= got {
+                    return Err(format!("expected={expected} not past got={got}"));
+                }
+                Ok(())
+            }
+            Err(other) => Err(format!("wrong variant for cut={cut}: {other}")),
+            Ok(_) => Err(format!("truncation at {cut} decoded successfully")),
+        },
+    );
+}
+
+#[test]
+fn payload_bit_flips_rejected_by_crc() {
+    prop::check(
+        "ckpt-bit-flip",
+        prop::iters(150),
+        |rng| {
+            let snap = rand_snapshot(rng);
+            let bytes = snap.encode();
+            // Anywhere from the first payload byte through the CRC
+            // itself: either the payload no longer matches its seal or
+            // the seal no longer matches its payload.
+            let pos = 16 + rng.below(bytes.len() - 16);
+            let bit = rng.below(8) as u8;
+            (bytes, pos, bit)
+        },
+        |(bytes, pos, bit)| {
+            let mut bad = bytes.clone();
+            bad[*pos] ^= 1u8 << *bit;
+            match Snapshot::decode(&bad) {
+                Err(CkptError::Crc { expected, got }) => {
+                    if expected == got {
+                        return Err("Crc error with matching checksums".into());
+                    }
+                    Ok(())
+                }
+                Err(other) => Err(format!("wrong variant for flip at {pos}: {other}")),
+                Ok(_) => Err(format!("bit flip at {pos}:{bit} decoded successfully")),
+            }
+        },
+    );
+}
+
+#[test]
+fn wrong_version_magic_and_trailing_bytes_rejected() {
+    prop::check(
+        "ckpt-envelope",
+        prop::iters(100),
+        |rng| (rand_snapshot(rng).encode(), rng.next_u64()),
+        |(bytes, aux)| {
+            let mut mix = Rng::seed_from(*aux);
+
+            // Version: any value but VERSION is refused by name, before
+            // the CRC is even consulted.
+            let mut v = mix.next_u64() as u32;
+            if v == VERSION {
+                v = VERSION + 1;
+            }
+            let mut bad = bytes.clone();
+            bad[4..8].copy_from_slice(&v.to_le_bytes());
+            match Snapshot::decode(&bad) {
+                Err(CkptError::Version { got, supported }) => {
+                    if got != v || supported != VERSION {
+                        return Err(format!("version fields wrong: got={got} sup={supported}"));
+                    }
+                }
+                other => return Err(format!("version patch -> {other:?}")),
+            }
+
+            // Magic: corrupt one of the four magic bytes.
+            let mut bad = bytes.clone();
+            let k = mix.below(4);
+            bad[k] ^= 0x5A;
+            if !matches!(Snapshot::decode(&bad), Err(CkptError::Magic { .. })) {
+                return Err("magic corruption not rejected as Magic".into());
+            }
+
+            // Trailing garbage past the envelope.
+            let extra = 1 + mix.below(9);
+            let mut bad = bytes.clone();
+            bad.resize(bytes.len() + extra, 0xAB);
+            match Snapshot::decode(&bad) {
+                Err(CkptError::Trailing { extra: e }) if e == extra => Ok(()),
+                other => Err(format!("{extra} trailing bytes -> {other:?}")),
+            }
+        },
+    );
+}

@@ -58,6 +58,19 @@ QCCF_BENCH_WARMUP_MS=20 QCCF_BENCH_MEASURE_MS=100 \
 }
 cp target/BENCH_sched.json BENCH_sched.json
 
+# Snapshot-codec perf baseline: quick encode/decode smoke over a
+# synthetic mid-horizon snapshot at Z = 20k, U ∈ {100, 1000} (pure
+# Rust, no artifacts). Writes BENCH_ckpt.json so subsequent PRs have
+# MB/s + snapshot-bytes numbers to regress against.
+echo "== bench-ckpt smoke (target/BENCH_ckpt.json) =="
+QCCF_BENCH_WARMUP_MS=20 QCCF_BENCH_MEASURE_MS=100 \
+    cargo run --release --quiet -- bench-ckpt \
+    --z 20000 --us 100,1000 --out target/BENCH_ckpt.json
+[ -s target/BENCH_ckpt.json ] || {
+    echo "verify.sh: bench-ckpt wrote no target/BENCH_ckpt.json" >&2
+    exit 1
+}
+
 # Scenario-path smoke: two built-in scenarios through the sweep runner
 # (2 rounds, tiny profile). Needs artifacts, like the integration tests.
 if [ -f artifacts/manifest.json ]; then
@@ -72,6 +85,16 @@ if [ -f artifacts/manifest.json ]; then
              "$SWEEP_OUT"/summary.csv; do
         [ -s "$f" ] || { echo "verify.sh: sweep smoke missing $f" >&2; exit 1; }
     done
+    # Resume path: re-running over the same --out must skip every
+    # completed triple (0 to run) and still rewrite a complete summary.
+    echo "== sweep --resume smoke (same --out, all triples skipped) =="
+    cargo run --release --quiet -- sweep \
+        --scenarios paper-femnist,zipf-skew --algorithms qccf \
+        --seeds 1 --quick --profile tiny --threads 2 --out "$SWEEP_OUT" --resume
+    [ -s "$SWEEP_OUT"/summary.csv ] || {
+        echo "verify.sh: sweep --resume lost summary.csv" >&2
+        exit 1
+    }
 else
     echo "== sweep smoke skipped (no artifacts/manifest.json — run make artifacts) =="
 fi
