@@ -316,9 +316,29 @@ pub fn make_scheduler_with_threads(
     seed: u64,
     threads: usize,
 ) -> Option<Box<dyn Scheduler>> {
+    make_scheduler_with_classes(name, seed, threads, None)
+}
+
+/// [`make_scheduler_with_threads`] plus the scenario's class-based
+/// scheduling request (`[train] classes = true` →
+/// `Some(ClassingConfig)`). Only QCCF has a classed decide body today;
+/// every other algorithm ignores the request. The
+/// `QCCF_DECISION_CLASSES=0` kill switch is honored inside
+/// [`crate::sched::qccf::QccfScheduler::with_classes`], so a `Some`
+/// here still yields the exact path under the kill switch.
+pub fn make_scheduler_with_classes(
+    name: &str,
+    seed: u64,
+    threads: usize,
+    classes: Option<crate::sched::ClassingConfig>,
+) -> Option<Box<dyn Scheduler>> {
     match name {
         "qccf" => {
-            Some(Box::new(crate::sched::qccf::QccfScheduler::new(seed).with_threads(threads)))
+            let mut s = crate::sched::qccf::QccfScheduler::new(seed).with_threads(threads);
+            if let Some(cfg) = classes {
+                s = s.with_classes(cfg);
+            }
+            Some(Box::new(s))
         }
         "no-quant" => Some(Box::new(NoQuantScheduler)),
         "channel-allocate" => {

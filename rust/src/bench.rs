@@ -317,15 +317,188 @@ pub fn run_sched_bench(us: &[usize], pool: usize) -> Vec<SchedBenchRow> {
         .collect()
 }
 
+/// One row of the classed-vs-exact decision baseline (the `classed`
+/// array of `BENCH_sched.json`): class-level J0 throughput against the
+/// production cached evaluator, plus the approximation gap of one full
+/// classed decide against one full exact decide on the same round.
+#[derive(Clone, Debug)]
+pub struct ClassedSchedRow {
+    /// U — clients in the synthetic round.
+    pub u: usize,
+    /// C — channels (U/2 capped at 64, the stress-scenario shape).
+    pub c: usize,
+    /// K — equivalence classes the default binning produced.
+    pub classes: usize,
+    /// P — channel pools (min(K, C)).
+    pub pools: usize,
+    /// Exact-path throughput: cached `EvalCtx` J0 evaluations per
+    /// second (the denominator of the ≥ 10× acceptance line).
+    pub exact_evals_per_sec: f64,
+    /// Classed-path throughput: `ClassEvalCtx` J0 evaluations per
+    /// second.
+    pub classed_evals_per_sec: f64,
+    /// `classed_evals_per_sec / exact_evals_per_sec`.
+    pub speedup: f64,
+    /// J0 of a full exact GA decide on this round.
+    pub j0_exact: f64,
+    /// J0 of a full classed GA decide (same scheduler seed) — exact
+    /// for the allocation it chose (see `sched::classes`).
+    pub j0_classed: f64,
+    /// Relative approximation gap `(j0_classed − j0_exact) /
+    /// |j0_exact|`; negative = the classed decide found a *better*
+    /// allocation. `0.0` when the exact decide was infeasible.
+    pub gap: f64,
+}
+
+/// Run the classed-vs-exact decision microbench at each `U` in `us`
+/// with the stress-scenario shape (C = min(U/2, 64), 10% stragglers at
+/// 0.6 slowdown, 1500 m cell): J0 throughput of the class-level
+/// evaluator vs the production cached exact evaluator, plus one full
+/// decide per path for the approximation gap. Pure Rust — no artifacts
+/// — so `verify.sh` runs it as a tier-1 smoke alongside
+/// [`run_sched_bench`]; the U = 100 000 entry doubles as the
+/// "completes a stress-100k decision round" acceptance check.
+pub fn run_classed_sched_bench(us: &[usize]) -> Vec<ClassedSchedRow> {
+    use crate::ga::Chromosome;
+    use crate::lyapunov::Queues;
+    use crate::sched::{self, ClassingConfig, RoundInputs, Scheduler};
+    use crate::solver::Case5Mode;
+    use crate::wireless::ChannelModel;
+
+    let mut set = BenchSet::new("sched-classed");
+    let mut rows = Vec::new();
+    for &u in us {
+        let c = (u / 2).min(64).max(1);
+        let mut params = crate::config::SystemParams::femnist_small();
+        params.num_clients = u;
+        params.num_channels = c;
+        params.cell_radius_m = 1500.0;
+        params.straggler_frac = 0.1;
+        params.straggler_slowdown = 0.6;
+        let mut rng = crate::util::rng::Rng::seed_from(0xC1A5_5000 + u as u64);
+        let model = ChannelModel::new(&params, &mut rng);
+        let channels = model.draw(&mut rng);
+        let sizes: Vec<f64> = (0..u).map(|_| rng.gaussian(1200.0, 300.0).max(64.0)).collect();
+        let total: f64 = sizes.iter().sum();
+        let w_full: Vec<f64> = sizes.iter().map(|d| d / total).collect();
+        let g2: Vec<f64> = (0..u).map(|_| rng.range(0.05, 16.0)).collect();
+        let sigma2: Vec<f64> = (0..u).map(|_| rng.range(0.05, 2.0)).collect();
+        let theta_max = vec![0.4; u];
+        let q_prev = vec![6.0; u];
+        let mut queues = Queues::new();
+        queues.lambda1 = 1e3;
+        queues.lambda2 = 10.0;
+        let inp = RoundInputs {
+            params: &params,
+            round: 5,
+            channels: &channels,
+            sizes: &sizes,
+            w_full: &w_full,
+            g2: &g2,
+            sigma2: &sigma2,
+            theta_max: &theta_max,
+            q_prev: &q_prev,
+            queues: &queues,
+        };
+
+        // Exact path: the production cached evaluator over a converging
+        // chromosome pool (perturbed greedy, as in run_sched_bench).
+        let greedy = sched::greedy_allocation(&inp);
+        let chroms: Vec<Chromosome> = (0..16)
+            .map(|_| {
+                let mut chrom = greedy.clone();
+                for _ in 0..(c / 8).max(1) {
+                    let a = rng.below(c);
+                    let b = rng.below(c);
+                    chrom.alloc.swap(a, b);
+                    if rng.chance(0.5) {
+                        chrom.alloc[a] = Some(rng.below(u));
+                    }
+                }
+                chrom.repair(u);
+                chrom
+            })
+            .collect();
+        let ctx = sched::EvalCtx::new(&inp, Case5Mode::Taylor);
+        let mut scratch = ctx.make_scratch();
+        let mut k = 0usize;
+        set.bench(&format!("exact_eval_u{u}"), || {
+            k = (k + 1) % chroms.len();
+            ctx.evaluate_j0(&chroms[k], &mut scratch)
+        });
+        let exact_ns = set.results.last().map(|r| r.mean_ns).unwrap_or(0.0);
+
+        // Classed path: class-level J0 over a perturbed greedy-seed pool.
+        let cfg = ClassingConfig::default();
+        let plan = sched::ClassPlan::build(&inp, cfg);
+        let cctx = sched::ClassEvalCtx::new(&inp, &plan, Case5Mode::Taylor, true);
+        let (kn, np) = (plan.num_classes(), plan.num_pools());
+        let seed_chrom = cctx.greedy_seed();
+        let cchroms: Vec<Chromosome> = (0..16)
+            .map(|_| {
+                let mut chrom = seed_chrom.clone();
+                for _ in 0..(np / 8).max(1) {
+                    let a = rng.below(np);
+                    let b = rng.below(np);
+                    chrom.alloc.swap(a, b);
+                    if rng.chance(0.5) {
+                        chrom.alloc[a] = Some(rng.below(kn));
+                    }
+                }
+                chrom.repair(kn);
+                chrom
+            })
+            .collect();
+        let mut cscratch = cctx.make_scratch();
+        let mut k = 0usize;
+        set.bench(&format!("classed_eval_u{u}"), || {
+            k = (k + 1) % cchroms.len();
+            cctx.evaluate_j0(&cchroms[k], &mut cscratch)
+        });
+        let classed_ns = set.results.last().map(|r| r.mean_ns).unwrap_or(0.0);
+
+        // Approximation gap: one full decide per path from the same
+        // scheduler seed (the classed decide's reported J0 is exact for
+        // its chosen allocation, so the gap is a real objective delta).
+        let seed = 0xD0 + u as u64;
+        let j0_exact = crate::sched::qccf::QccfScheduler::new(seed).decide(&inp).j0;
+        let j0_classed = crate::sched::qccf::QccfScheduler::new(seed)
+            .with_classes_override(Some(cfg))
+            .decide(&inp)
+            .j0;
+        let gap = if j0_exact.is_finite() && j0_exact != 0.0 {
+            (j0_classed - j0_exact) / j0_exact.abs()
+        } else {
+            0.0
+        };
+        rows.push(ClassedSchedRow {
+            u,
+            c,
+            classes: kn,
+            pools: np,
+            exact_evals_per_sec: if exact_ns > 0.0 { 1e9 / exact_ns } else { 0.0 },
+            classed_evals_per_sec: if classed_ns > 0.0 { 1e9 / classed_ns } else { 0.0 },
+            speedup: if classed_ns > 0.0 { exact_ns / classed_ns } else { 0.0 },
+            j0_exact,
+            j0_classed,
+            gap,
+        });
+    }
+    rows
+}
+
 /// Write sched-bench rows as a single JSON document
 /// (`BENCH_sched.json`): the per-row numbers plus per-U
 /// cached-vs-uncached speedups — the decision-stage perf baseline
 /// subsequent PRs diff against (and the number behind the "cached ≥ 3×
-/// at U = 1000" acceptance line).
+/// at U = 1000" acceptance line) — and, when `classed` is non-empty, a
+/// `classed` array with the class-level speedups and approximation
+/// gaps of [`run_classed_sched_bench`].
 pub fn write_sched_bench_json(
     path: &std::path::Path,
     pool: usize,
     rows: &[SchedBenchRow],
+    classed: &[ClassedSchedRow],
 ) -> std::io::Result<()> {
     use crate::util::json::{self, Json};
     if let Some(dir) = path.parent() {
@@ -359,12 +532,120 @@ pub fn write_sched_bench_json(
             }
         }
     }
+    let classed_rows = Json::Arr(
+        classed
+            .iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("u", json::num(r.u as f64)),
+                    ("c", json::num(r.c as f64)),
+                    ("classes", json::num(r.classes as f64)),
+                    ("pools", json::num(r.pools as f64)),
+                    ("exact_evals_per_sec", json::num(r.exact_evals_per_sec)),
+                    ("classed_evals_per_sec", json::num(r.classed_evals_per_sec)),
+                    ("speedup", json::num(r.speedup)),
+                    ("j0_exact", json::num(r.j0_exact)),
+                    ("j0_classed", json::num(r.j0_classed)),
+                    ("gap", json::num(r.gap)),
+                ])
+            })
+            .collect(),
+    );
     let doc = json::obj(vec![
         ("pool", json::num(pool as f64)),
         ("benches", benches),
         ("speedups", Json::Arr(speedups)),
+        ("classed", classed_rows),
     ]);
     std::fs::write(path, format!("{}\n", doc.to_string_compact()))
+}
+
+/// Canonical regression metric of one `benches` row: key, value, and
+/// whether higher is better. The first present key wins: `ns_per_elem`
+/// (wire, lower better) → `evals_per_sec` (sched, higher) →
+/// `mb_per_sec` (ckpt, higher) → `mean_ns` (fallback, lower).
+fn bench_row_metric(row: &crate::util::json::Json) -> Option<(&'static str, f64, bool)> {
+    for (key, higher) in [
+        ("ns_per_elem", false),
+        ("evals_per_sec", true),
+        ("mb_per_sec", true),
+        ("mean_ns", false),
+    ] {
+        if let Some(v) = row.get(key).and_then(|x| x.as_f64()) {
+            return Some((key, v, higher));
+        }
+    }
+    None
+}
+
+/// Compare a fresh BENCH_*.json document against the committed
+/// baseline and return one warning line per metric that regressed more
+/// than `threshold` (fractional — 0.2 = 20%). Rows are matched by
+/// `name` in the `benches` array (metric per [`bench_row_metric`]) and
+/// by `u` in the `classed` array (on `classed_evals_per_sec`). A row
+/// present in the baseline but missing from the fresh run warns too;
+/// new rows with no baseline are silently fine. Advisory by design:
+/// micro-bench noise on shared CI hardware must not fail the build
+/// (the `bench-diff` CLI prints the warnings and exits 0).
+pub fn bench_diff_report(
+    baseline: &crate::util::json::Json,
+    fresh: &crate::util::json::Json,
+    threshold: f64,
+) -> Vec<String> {
+    fn arr<'j>(doc: &'j crate::util::json::Json, key: &str) -> &'j [crate::util::json::Json] {
+        doc.get(key).and_then(|x| x.as_arr()).unwrap_or(&[])
+    }
+    let mut warnings = Vec::new();
+    let fresh_benches = arr(fresh, "benches");
+    for brow in arr(baseline, "benches") {
+        let Some(name) = brow.get("name").and_then(|x| x.as_str()) else { continue };
+        let Some(frow) = fresh_benches
+            .iter()
+            .find(|r| r.get("name").and_then(|x| x.as_str()) == Some(name))
+        else {
+            warnings.push(format!("{name}: in baseline but missing from fresh run"));
+            continue;
+        };
+        let Some((metric, base, higher)) = bench_row_metric(brow) else { continue };
+        let Some(val) = frow.get(metric).and_then(|x| x.as_f64()) else { continue };
+        if base <= 0.0 || val <= 0.0 {
+            continue;
+        }
+        let regression = if higher { (base - val) / base } else { (val - base) / base };
+        if regression > threshold {
+            warnings.push(format!(
+                "{name}: {metric} regressed {:.0}% ({base:.1} -> {val:.1})",
+                regression * 100.0
+            ));
+        }
+    }
+    let fresh_classed = arr(fresh, "classed");
+    for brow in arr(baseline, "classed") {
+        let Some(u) = brow.get("u").and_then(|x| x.as_usize()) else { continue };
+        let Some(base) = brow.get("classed_evals_per_sec").and_then(|x| x.as_f64()) else {
+            continue;
+        };
+        let Some(val) = fresh_classed
+            .iter()
+            .find(|r| r.get("u").and_then(|x| x.as_usize()) == Some(u))
+            .and_then(|r| r.get("classed_evals_per_sec"))
+            .and_then(|x| x.as_f64())
+        else {
+            warnings.push(format!("classed u={u}: in baseline but missing from fresh run"));
+            continue;
+        };
+        if base <= 0.0 || val <= 0.0 {
+            continue;
+        }
+        let regression = (base - val) / base;
+        if regression > threshold {
+            warnings.push(format!(
+                "classed u={u}: classed_evals_per_sec regressed {:.0}% ({base:.1} -> {val:.1})",
+                regression * 100.0
+            ));
+        }
+    }
+    warnings
 }
 
 /// One row of the snapshot-codec perf baseline (`BENCH_ckpt.json`).
@@ -576,7 +857,7 @@ mod tests {
         assert!(rows.iter().all(|r| r.c == r.u / 2));
         let dir = std::env::temp_dir().join("qccf_sched_bench_test");
         let path = dir.join("BENCH_sched.json");
-        write_sched_bench_json(&path, 4, &rows).unwrap();
+        write_sched_bench_json(&path, 4, &rows, &[]).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let doc = crate::util::json::parse(text.trim()).unwrap();
         assert_eq!(doc.get("pool").and_then(|x| x.as_usize()), Some(4));
@@ -584,7 +865,72 @@ mod tests {
         let speedups = doc.get("speedups").and_then(|x| x.as_arr()).unwrap();
         assert_eq!(speedups.len(), 2);
         assert!(speedups.iter().all(|s| s.get("speedup").and_then(|x| x.as_f64()).unwrap() > 0.0));
+        assert_eq!(doc.get("classed").and_then(|x| x.as_arr()).map(|a| a.len()), Some(0));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn classed_sched_bench_rows_and_json() {
+        std::env::set_var("QCCF_BENCH_WARMUP_MS", "1");
+        std::env::set_var("QCCF_BENCH_MEASURE_MS", "5");
+        let rows = run_classed_sched_bench(&[8, 12]);
+        assert_eq!(rows.len(), 2, "one classed row per U");
+        for r in &rows {
+            assert_eq!(r.c, (r.u / 2).min(64).max(1));
+            assert!(r.classes >= 1 && r.classes <= r.u, "{r:?}");
+            assert!(r.pools >= 1 && r.pools <= r.c, "{r:?}");
+            assert!(r.exact_evals_per_sec > 0.0 && r.classed_evals_per_sec > 0.0, "{r:?}");
+            assert!(r.speedup > 0.0, "{r:?}");
+            // The classed decide re-scores its winner exactly and is
+            // backstopped by greedy, so both J0s must be finite here.
+            assert!(r.j0_exact.is_finite() && r.j0_classed.is_finite(), "{r:?}");
+            assert!(r.gap.is_finite(), "{r:?}");
+        }
+        let dir = std::env::temp_dir().join("qccf_classed_bench_test");
+        let path = dir.join("BENCH_sched.json");
+        write_sched_bench_json(&path, 4, &[], &rows).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::parse(text.trim()).unwrap();
+        let classed = doc.get("classed").and_then(|x| x.as_arr()).unwrap();
+        assert_eq!(classed.len(), 2);
+        for row in classed {
+            assert!(row.get("gap").and_then(|x| x.as_f64()).unwrap().is_finite());
+            assert!(row.get("speedup").and_then(|x| x.as_f64()).unwrap() > 0.0);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_diff_flags_regressions_only() {
+        let base = crate::util::json::parse(
+            r#"{"benches": [{"name": "a", "evals_per_sec": 100.0},
+                            {"name": "b", "ns_per_elem": 10.0},
+                            {"name": "gone", "mb_per_sec": 5.0}],
+                "classed": [{"u": 8, "classed_evals_per_sec": 1000.0}]}"#,
+        )
+        .unwrap();
+        let fresh = crate::util::json::parse(
+            r#"{"benches": [{"name": "a", "evals_per_sec": 50.0},
+                            {"name": "b", "ns_per_elem": 11.0},
+                            {"name": "new", "mb_per_sec": 1.0}],
+                "classed": [{"u": 8, "classed_evals_per_sec": 400.0}]}"#,
+        )
+        .unwrap();
+        let warnings = bench_diff_report(&base, &fresh, 0.2);
+        // `a` halved (50% down), classed u=8 lost 60%, `gone` vanished;
+        // `b` regressed only 10% (under threshold) and `new` has no
+        // baseline — both silent.
+        assert_eq!(warnings.len(), 3, "{warnings:?}");
+        assert!(warnings.iter().any(|w| w.starts_with("a:") && w.contains("evals_per_sec")));
+        assert!(warnings.iter().any(|w| w.starts_with("gone:") && w.contains("missing")));
+        assert!(warnings.iter().any(|w| w.starts_with("classed u=8:")));
+        assert!(!warnings.iter().any(|w| w.starts_with("b:")));
+        // Self-diff is clean; improvements never warn (the reverse
+        // diff's only complaint is the structurally missing `new` row).
+        assert!(bench_diff_report(&base, &base, 0.2).is_empty());
+        let reverse = bench_diff_report(&fresh, &base, 0.2);
+        assert_eq!(reverse.len(), 1, "{reverse:?}");
+        assert!(reverse[0].starts_with("new:") && reverse[0].contains("missing"));
     }
 
     #[test]

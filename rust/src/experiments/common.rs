@@ -8,7 +8,7 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::baselines::make_scheduler_with_threads;
+use crate::baselines::make_scheduler_with_classes;
 use crate::ckpt::{self, Snapshot};
 use crate::config::SystemParams;
 use crate::data;
@@ -239,10 +239,18 @@ pub fn run_scenario_ckpt(
     let params = scenario.params_for_runtime(rt);
     let dcfg = scenario.datagen(rt);
     let fed = data::generate(&dcfg, seed);
-    let sched = make_scheduler_with_threads(
+    // Scenario-gated class-based scheduling: only QCCF consumes the
+    // request (and only outside the QCCF_DECISION_CLASSES=0 kill
+    // switch — see sched::classes).
+    let classes = scenario.train.classes.then(|| crate::sched::ClassingConfig {
+        size_bins: scenario.train.class_size_bins,
+        rate_bins: scenario.train.class_rate_bins,
+    });
+    let sched = make_scheduler_with_classes(
         algorithm,
         seed.wrapping_mul(31).wrapping_add(7),
         threads,
+        classes,
     )
     .ok_or_else(|| anyhow::anyhow!("unknown algorithm `{algorithm}`"))?;
     let mut server = Server::new(params, rt, fed, sched, seed)?;

@@ -42,6 +42,18 @@
 //!                                uncached reference path, over a converging-GA-
 //!                                shaped chromosome pool; written as
 //!                                BENCH_sched.json (default target/; no artifacts)
+//!           [--class-us 1000,10000,100000]   classed-vs-exact rows: class-level
+//!                                J0 throughput (sched::classes) against the
+//!                                cached exact evaluator at the stress shape
+//!                                (C = min(U/2, 64), 10% stragglers), plus the
+//!                                approximation gap of one full decide per path
+//!   bench-diff [--baseline DIR] [--fresh DIR] [--threshold 0.2]   compare fresh
+//!                                BENCH_*.json under --fresh (default target/)
+//!                                against committed baselines under --baseline
+//!                                (default .); prints one advisory warning per
+//!                                metric regressed past the threshold and always
+//!                                exits 0 — verify.sh runs it before refreshing
+//!                                the committed baselines
 //!   bench-ckpt [--z Z] [--us 100,1000] [--out F]   snapshot-codec microbench:
 //!                                encode/decode MB/s and snapshot bytes at
 //!                                Z model dims × U clients; written as
@@ -52,8 +64,8 @@
 //! docs/ARCHITECTURE.md).
 //!
 //! Requires `make artifacts` (HLO text under ./artifacts), except
-//! `ablate`, `bench-wire`, `bench-sched`, `bench-ckpt` and
-//! `sweep --list`.
+//! `ablate`, `bench-wire`, `bench-sched`, `bench-ckpt`, `bench-diff`
+//! and `sweep --list`.
 
 use std::path::PathBuf;
 
@@ -107,9 +119,10 @@ fn run(args: &Args) -> Result<()> {
         Some("bench-wire") => cmd_bench_wire(args),
         Some("bench-sched") => cmd_bench_sched(args),
         Some("bench-ckpt") => cmd_bench_ckpt(args),
+        Some("bench-diff") => cmd_bench_diff(args),
         Some(other) => anyhow::bail!("unknown subcommand `{other}` (see README)"),
         None => {
-            println!("usage: qccf <params|train|fig2|fig3|fig4|fig5|sweep|decide|ablate|bench-wire|bench-sched|bench-ckpt> [options]");
+            println!("usage: qccf <params|train|fig2|fig3|fig4|fig5|sweep|decide|ablate|bench-wire|bench-sched|bench-ckpt|bench-diff> [options]");
             println!("see README.md for the full option list; `qccf sweep --list` shows scenarios");
             Ok(())
         }
@@ -414,16 +427,89 @@ fn cmd_bench_sched(args: &Args) -> Result<()> {
     anyhow::ensure!(us.iter().all(|&u| u >= 2), "--us: client counts must be >= 2");
     let pool = args.get_usize("pool", 32);
     anyhow::ensure!(pool >= 1, "--pool: need at least one chromosome");
+    let class_us: Vec<usize> = args
+        .get_f64_list("class-us", &[1000.0, 10_000.0, 100_000.0])
+        .into_iter()
+        .map(|u| u as usize)
+        .collect();
+    anyhow::ensure!(
+        class_us.iter().all(|&u| u >= 2),
+        "--class-us: client counts must be >= 2"
+    );
     let out = PathBuf::from(args.get_or("out", "target/BENCH_sched.json"));
     let rows = qccf::bench::run_sched_bench(&us, pool);
-    qccf::bench::write_sched_bench_json(&out, pool, &rows)?;
+    let classed = qccf::bench::run_classed_sched_bench(&class_us);
+    qccf::bench::write_sched_bench_json(&out, pool, &rows, &classed)?;
     for r in &rows {
         println!(
             "{:<28} U={:<5} C={:<5} {:>12.0} evals/sec",
             r.name, r.u, r.c, r.evals_per_sec
         );
     }
-    println!("wrote {} ({} benchmarks)", out.display(), rows.len());
+    for r in &classed {
+        println!(
+            "classed U={:<6} K={:<4} P={:<3} exact {:>11.0}/s classed {:>11.0}/s \
+             speedup {:>7.1}x gap {:>+.3}%",
+            r.u,
+            r.classes,
+            r.pools,
+            r.exact_evals_per_sec,
+            r.classed_evals_per_sec,
+            r.speedup,
+            r.gap * 100.0
+        );
+    }
+    println!(
+        "wrote {} ({} benchmarks, {} classed rows)",
+        out.display(),
+        rows.len(),
+        classed.len()
+    );
+    Ok(())
+}
+
+/// Advisory perf-regression gate: diff each fresh BENCH_*.json under
+/// `--fresh` against the committed baseline of the same name under
+/// `--baseline`, printing one warning line per metric that regressed
+/// more than `--threshold` (fraction, default 0.2 = 20%). Always exits
+/// 0 — micro-bench noise on shared hardware must not fail the tier-1
+/// gate; verify.sh runs this right before refreshing the committed
+/// baselines so a real regression is loud in the log.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    let fresh_dir = PathBuf::from(args.get_or("fresh", "target"));
+    let base_dir = PathBuf::from(args.get_or("baseline", "."));
+    let threshold = args.get_f64("threshold", 0.2);
+    anyhow::ensure!(threshold > 0.0, "--threshold: must be > 0");
+    let mut total = 0usize;
+    for name in ["BENCH_wire.json", "BENCH_sched.json", "BENCH_ckpt.json"] {
+        let bp = base_dir.join(name);
+        let fp = fresh_dir.join(name);
+        if !bp.is_file() {
+            println!("bench-diff: no committed baseline {} (skipped)", bp.display());
+            continue;
+        }
+        if !fp.is_file() {
+            println!("bench-diff: no fresh run {} (skipped)", fp.display());
+            continue;
+        }
+        let base = qccf::util::json::parse(std::fs::read_to_string(&bp)?.trim())
+            .map_err(|e| anyhow::anyhow!("{}: {e}", bp.display()))?;
+        let fresh = qccf::util::json::parse(std::fs::read_to_string(&fp)?.trim())
+            .map_err(|e| anyhow::anyhow!("{}: {e}", fp.display()))?;
+        let warnings = qccf::bench::bench_diff_report(&base, &fresh, threshold);
+        for w in &warnings {
+            println!("bench-diff WARNING [{name}] {w}");
+        }
+        total += warnings.len();
+    }
+    if total == 0 {
+        println!("bench-diff: no metric regressed beyond {:.0}%", threshold * 100.0);
+    } else {
+        println!(
+            "bench-diff: {total} advisory warning(s) — micro-bench noise is possible; \
+             investigate before committing refreshed baselines"
+        );
+    }
     Ok(())
 }
 

@@ -177,6 +177,19 @@ fn apply(
         ("train", "v") => sc.train.v = Some(f(value)?),
         ("train", "tau") => sc.train.tau = Some(n(value)?),
         ("train", "eval_every") => sc.train.eval_every = n(value)?,
+        ("train", "classes") => {
+            sc.train.classes = match value {
+                "true" | "on" | "1" => true,
+                "false" | "off" | "0" => false,
+                other => {
+                    return Err(format!(
+                        "`[train] classes`: bad boolean `{other}` (true|false|on|off|1|0)"
+                    ))
+                }
+            }
+        }
+        ("train", "class_size_bins") => sc.train.class_size_bins = n(value)?,
+        ("train", "class_rate_bins") => sc.train.class_rate_bins = n(value)?,
         _ => {
             return Err(format!(
                 "unknown key `[{section}] {key}` (see docs/SCENARIOS.md for the reference)"
@@ -304,6 +317,9 @@ pub fn render(sc: &Scenario) -> String {
         let _ = writeln!(o, "tau = {tau}");
     }
     let _ = writeln!(o, "eval_every = {}", tr.eval_every);
+    let _ = writeln!(o, "classes = {}", tr.classes);
+    let _ = writeln!(o, "class_size_bins = {}", tr.class_size_bins);
+    let _ = writeln!(o, "class_rate_bins = {}", tr.class_rate_bins);
     o
 }
 
@@ -405,6 +421,18 @@ mod tests {
     }
 
     #[test]
+    fn classes_knobs_parse_and_reject_bad_bool() {
+        let text = "[scenario]\nname = cls\n[train]\nclasses = on\nclass_size_bins = 8\n";
+        let sc = parse_scenario(text).unwrap();
+        assert!(sc.train.classes);
+        assert_eq!(sc.train.class_size_bins, 8);
+        assert_eq!(sc.train.class_rate_bins, 4, "untouched knob keeps its default");
+        let bad = "[scenario]\nname = cls\n[train]\nclasses = maybe\n";
+        let err = parse_scenario(bad).unwrap_err();
+        assert!(err.contains("bad boolean"), "{err}");
+    }
+
+    #[test]
     fn value_quoting_roundtrips() {
         for v in ["plain", "two words", "esc \" and \\ and\nnewline", "# hash", "a=b"] {
             let enc = render_value(v);
@@ -424,6 +452,9 @@ mod tests {
         sc.train.v = Some(12.5);
         sc.train.tau = Some(6);
         sc.train.algorithms = vec!["qccf".into(), "principle".into()];
+        sc.train.classes = true;
+        sc.train.class_size_bins = 6;
+        sc.train.class_rate_bins = 3;
         let text = render(&sc);
         let back = parse_scenario(&text).unwrap();
         assert_eq!(back, sc);

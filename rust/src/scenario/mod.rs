@@ -140,6 +140,19 @@ pub struct TrainSpec {
     pub tau: Option<usize>,
     /// Evaluate every k rounds (0 = never — decision-only runs).
     pub eval_every: usize,
+    /// Hierarchical class-based scheduling for the GA decision stage
+    /// (`sched::classes`): QCCF buckets clients into equivalence
+    /// classes and searches class × channel-pool chromosomes. Off by
+    /// default — the exact per-client GA runs — and additionally
+    /// subject to the process-wide `QCCF_DECISION_CLASSES=0` kill
+    /// switch.
+    pub classes: bool,
+    /// Rank bins over dataset sizes for the class partition (≥ 1;
+    /// only read when `classes = true`).
+    pub class_size_bins: usize,
+    /// Rank bins over mean uplink rates for the class partition (≥ 1;
+    /// only read when `classes = true`).
+    pub class_rate_bins: usize,
 }
 
 /// A complete declarative workload description. See the module docs for
@@ -217,6 +230,9 @@ impl Scenario {
                 v: None,
                 tau: None,
                 eval_every: 2,
+                classes: false,
+                class_size_bins: 4,
+                class_rate_bins: 4,
             },
         }
     }
@@ -385,6 +401,12 @@ impl Scenario {
                      seed) run owns one trace file)"
                 ));
             }
+        }
+        if self.train.class_size_bins == 0 {
+            errs.push("class_size_bins must be >= 1".to_string());
+        }
+        if self.train.class_rate_bins == 0 {
+            errs.push("class_rate_bins must be >= 1".to_string());
         }
         // Derived-parameter checks (C bounds again with the base U, the
         // heterogeneity-class knobs, τ/τ^e divisibility, theorem

@@ -1,4 +1,4 @@
-//! Built-in scenario registry: the two paper profiles plus six
+//! Built-in scenario registry: the two paper profiles plus seven
 //! stress/heterogeneity workloads drawn from the related work. Each
 //! builder documents *why* the scenario exists; `docs/SCENARIOS.md`
 //! carries the same rationale next to a rendered copy of each file.
@@ -15,7 +15,7 @@ pub struct ScenarioRegistry {
 }
 
 impl ScenarioRegistry {
-    /// The eight built-in scenarios, in documentation order.
+    /// The nine built-in scenarios, in documentation order.
     pub fn builtin() -> ScenarioRegistry {
         ScenarioRegistry {
             scenarios: vec![
@@ -27,6 +27,7 @@ impl ScenarioRegistry {
                 cpu_straggler(),
                 cell_free_lite(),
                 stress_1000(),
+                stress_100k(),
             ],
         }
     }
@@ -187,6 +188,30 @@ pub fn stress_1000() -> Scenario {
     sc
 }
 
+/// 100 000 clients / 64 channels with class-based scheduling on: the
+/// hierarchical decision stage's target regime (`sched::classes`).
+/// The exact per-client GA would pay O(pop x U x C) per round here;
+/// the class GA pays O(pop x K x P) and broadcasts one representative
+/// solve per (class, pool). A 10% straggler class keeps the CPU axis
+/// of the class partition non-trivial.
+pub fn stress_100k() -> Scenario {
+    let mut sc = Scenario::defaults("stress-100k", Task::Femnist);
+    sc.description = "100000 clients, 64 channels, 1500 m cell, 2 rounds, no eval, \
+                      class-based scheduling on (4 size bins x 4 rate bins x CPU \
+                      class): the hierarchical decision stage's target scale; 10% \
+                      stragglers keep the CPU axis populated."
+        .into();
+    sc.topology.clients = 100_000;
+    sc.topology.channels = 64;
+    sc.topology.cell_radius_m = 1500.0;
+    sc.compute.straggler_frac = 0.1;
+    sc.compute.straggler_slowdown = 0.6;
+    sc.train.rounds = 2;
+    sc.train.eval_every = 0;
+    sc.train.classes = true;
+    sc
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,13 +230,14 @@ mod tests {
             "cpu-straggler",
             "cell-free-lite",
             "stress-1000",
+            "stress-100k",
         ] {
             assert!(names.contains(&want), "missing builtin `{want}`");
             let sc = reg.get(want).unwrap();
             assert!(sc.validate().is_empty(), "{want}: {:?}", sc.validate());
             assert!(!sc.description.is_empty(), "{want} undocumented");
         }
-        assert_eq!(reg.all().len(), 8);
+        assert_eq!(reg.all().len(), 9);
     }
 
     #[test]
@@ -248,16 +274,25 @@ mod tests {
         let mut sc = paper_femnist();
         sc.train.rounds = 7;
         reg.add(sc);
-        assert_eq!(reg.all().len(), 8);
+        assert_eq!(reg.all().len(), 9);
         assert_eq!(reg.get("paper-femnist").unwrap().train.rounds, 7);
     }
 
     #[test]
     fn contention_scenarios_have_c_below_u() {
         let reg = ScenarioRegistry::builtin();
-        for name in ["megacell-100", "zipf-skew", "cell-free-lite", "stress-1000"] {
+        for name in ["megacell-100", "zipf-skew", "cell-free-lite", "stress-1000", "stress-100k"] {
             let t = &reg.get(name).unwrap().topology;
             assert!(t.channels < t.clients, "{name} should exercise C < U");
         }
+    }
+
+    #[test]
+    fn stress_100k_opts_into_classes() {
+        let sc = stress_100k();
+        assert!(sc.train.classes);
+        assert_eq!((sc.train.class_size_bins, sc.train.class_rate_bins), (4, 4));
+        assert_eq!((sc.topology.clients, sc.topology.channels), (100_000, 64));
+        assert_eq!(sc.train.eval_every, 0, "decision-only scale smoke");
     }
 }

@@ -1,0 +1,644 @@
+//! Hierarchical class-based decision stage: bucket the federation into
+//! equivalence classes, run the GA over *classes × channel pools*, and
+//! broadcast one memoized KKT solve per (class, pool) pair.
+//!
+//! The closed-form solver's output depends on a client only through
+//! `(D_i, w_i, rate, θ^max, q_prev)` — clients that share those
+//! coordinates get (near-)identical decisions, yet the exact fitness
+//! loop still pays O(pop × U × C) per round. This module collapses the
+//! federation onto the heterogeneity axes the scenario subsystem
+//! already generates:
+//!
+//! * **dataset-size bin** — rank-binned `D_i` ([`ClassingConfig::size_bins`]);
+//! * **channel-quality bin** — rank-binned mean uplink rate
+//!   ([`ClassingConfig::rate_bins`]);
+//! * **CPU class** — straggler vs nominal
+//!   ([`crate::config::SystemParams::cpu_scale`]).
+//!
+//! A [`ClassPlan`] groups clients into K classes on those axes and
+//! splits the C channels into P = min(K, C) contiguous *pools*; the GA
+//! then searches chromosomes of length P whose genes are class indices
+//! — O(pop × K × P) per round instead of O(pop × U × C). Within a
+//! class the per-client solve is replaced by one representative solve
+//! ([`ClassEvalCtx`]) whose `(q*, f*)` broadcasts to every scheduled
+//! member.
+//!
+//! ## Approximation contract
+//!
+//! Unlike [`super::EvalCtx`] (bit-identical cache), the classed path is
+//! an **approximation**: its class-level J0 scores class means, not the
+//! per-client truth. Three guard rails keep it honest:
+//!
+//! * the winning class chromosome is *expanded* to a per-client
+//!   allocation and re-scored once through the exact reference
+//!   [`super::evaluate_allocation`] — the J0 and assignments a classed
+//!   decide reports are therefore **exact** for the allocation it
+//!   chose, and the realized trace never contains an approximate
+//!   number;
+//! * the greedy rate-maximizing allocation is evaluated as a backstop
+//!   and wins whenever it scores better, so a classed decide is never
+//!   worse than the trivial policy;
+//! * `bench-sched` measures the classed-vs-exact J0 gap and the
+//!   speedup at U ∈ {1 000, 10 000, 100 000} into BENCH_sched.json
+//!   (acceptance: gap ≤ 1 % on the stress-1000 shape).
+//!
+//! When every member of a class is *exactly* identical (same size,
+//! rates, stats), the broadcast solve is bit-identical to each
+//! member's own [`solver::solve_client`] — the class means are then
+//! exact — and the decide output equals the reference oracle on the
+//! expanded chromosome by construction; `tests/proptest_classes.rs`
+//! pins both properties across U ∈ {10, 100, 1 000}.
+//!
+//! Classing is enabled per scenario (`[train] classes = true`) and can
+//! be killed process-wide with `QCCF_DECISION_CLASSES=0`, mirroring
+//! the `QCCF_DECISION_CACHE` toggle ([`decision_classes_default`]).
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
+
+use crate::convergence;
+use crate::energy;
+use crate::ga::{self, Chromosome, GaParams};
+use crate::solver::{self, Case5Mode, ClientCtx, Decision};
+use crate::util::rng::Rng;
+
+use super::{evaluate_allocation, greedy_allocation, ClientDecision, RoundInputs};
+
+/// Whether class-based scheduling is enabled by default for this
+/// process: the `QCCF_DECISION_CLASSES=0` kill switch, mirroring
+/// [`super::ctx::decision_cache_default`]. A scenario still has to opt
+/// in (`[train] classes = true`) — this gate can only turn classing
+/// *off*, never force it on.
+pub fn decision_classes_default() -> bool {
+    std::env::var("QCCF_DECISION_CLASSES").map(|v| v != "0").unwrap_or(true)
+}
+
+/// Binning knobs for [`ClassPlan::build`] — how many rank bins each
+/// continuous heterogeneity axis is cut into. More bins = more classes
+/// = a finer (slower, more faithful) approximation; the CPU axis is
+/// always binary (straggler vs nominal).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClassingConfig {
+    /// Rank bins over the dataset sizes `D_i` (≥ 1).
+    pub size_bins: usize,
+    /// Rank bins over the per-client mean uplink rate (≥ 1).
+    pub rate_bins: usize,
+}
+
+impl Default for ClassingConfig {
+    fn default() -> Self {
+        ClassingConfig { size_bins: 4, rate_bins: 4 }
+    }
+}
+
+/// Rank-bin `0..u` by `key`: sort ids ascending by `(key, id)` and give
+/// position `pos` the bin `pos · bins / u` — equal-mass bins that need
+/// no distributional assumptions on `key`.
+fn rank_bins<F: Fn(usize) -> f64>(u: usize, bins: usize, key: F) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..u).collect();
+    order.sort_by(|&a, &b| key(a).total_cmp(&key(b)).then(a.cmp(&b)));
+    let mut bin = vec![0usize; u];
+    for (pos, &i) in order.iter().enumerate() {
+        bin[i] = pos * bins / u;
+    }
+    bin
+}
+
+/// The round's class structure: a partition of the clients into
+/// equivalence classes and a partition of the channels into contiguous
+/// pools. Built once per round from the [`RoundInputs`]
+/// ([`ClassPlan::build`]); deterministic — grouping runs through a
+/// `BTreeMap` and every sort breaks ties on the client id.
+pub struct ClassPlan {
+    /// `classes[k]` = member client ids, sorted by (size desc, id asc)
+    /// — the *scheduling order*: when a pool holds fewer channels than
+    /// the class has members, the largest-data members go first, and
+    /// `classes[k][0]` is the feasibility representative.
+    classes: Vec<Vec<usize>>,
+    /// `pools[p]` = `(first_channel, len)`; contiguous, covering all C
+    /// channels.
+    pools: Vec<(usize, usize)>,
+}
+
+impl ClassPlan {
+    /// Bucket the round's clients on (size bin × mean-rate bin × CPU
+    /// class) and split the channels into P = min(K, C) pools (the
+    /// first `C mod P` pools get the spare channels).
+    pub fn build(inp: &RoundInputs<'_>, cfg: ClassingConfig) -> ClassPlan {
+        let p = inp.params;
+        let (u, c) = (p.num_clients, p.num_channels);
+        let mean_rate: Vec<f64> = (0..u)
+            .map(|i| (0..c).map(|ch| inp.channels.rate(i, ch)).sum::<f64>() / c as f64)
+            .collect();
+        let size_bin = rank_bins(u, cfg.size_bins.max(1), |i| inp.sizes[i]);
+        let rate_bin = rank_bins(u, cfg.rate_bins.max(1), |i| mean_rate[i]);
+        let mut groups: BTreeMap<(usize, usize, bool), Vec<usize>> = BTreeMap::new();
+        for i in 0..u {
+            let slow = p.cpu_scale(i) < 1.0;
+            groups.entry((size_bin[i], rate_bin[i], slow)).or_default().push(i);
+        }
+        let mut classes: Vec<Vec<usize>> = groups.into_values().collect();
+        for members in classes.iter_mut() {
+            members.sort_by(|&a, &b| inp.sizes[b].total_cmp(&inp.sizes[a]).then(a.cmp(&b)));
+        }
+        let np = classes.len().min(c).max(1);
+        let (base, extra) = (c / np, c % np);
+        let mut pools = Vec::with_capacity(np);
+        let mut start = 0;
+        for k in 0..np {
+            let len = base + usize::from(k < extra);
+            pools.push((start, len));
+            start += len;
+        }
+        ClassPlan { classes, pools }
+    }
+
+    /// K — number of equivalence classes.
+    pub fn num_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// P — number of channel pools (≤ C and ≤ K).
+    pub fn num_pools(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// Member client ids of class `k`, in scheduling order (size desc,
+    /// id asc).
+    pub fn class_members(&self, k: usize) -> &[usize] {
+        &self.classes[k]
+    }
+
+    /// `(first_channel, len)` of pool `p`.
+    pub fn pool(&self, p: usize) -> (usize, usize) {
+        self.pools[p]
+    }
+}
+
+/// Memoized result of one class-representative solve: the Theorem-3
+/// decision plus its per-member energy (`None` = solver declined).
+type ClassSolve = Option<(Decision, f64)>;
+
+/// Per-class memo shards keyed on
+/// `(rate.to_bits(), w.to_bits(), d_rep.to_bits())`. Unlike
+/// [`super::EvalCtx`]'s `(rate, w)` key, `d_rep` — the scheduled-prefix
+/// mean size — must be part of the key: it varies with how many
+/// members a pool can seat, so two chromosomes can hit the same class
+/// with the same `(rate, w)` but a different representative size.
+type ClassMemo = Vec<Mutex<HashMap<(u64, u64, u64), ClassSolve>>>;
+
+/// Class-level evaluation context: the K×P mean-rate / feasibility
+/// tables, per-class prefix sums over the scheduling order, and the
+/// exact-key representative-solve memo. Build once per round next to a
+/// [`ClassPlan`], share immutably across GA fitness workers.
+pub struct ClassEvalCtx<'a> {
+    inp: &'a RoundInputs<'a>,
+    plan: &'a ClassPlan,
+    mode: Case5Mode,
+    /// Row-major K×P mean uplink rate over (member, pool-channel) pairs.
+    rate: Vec<f64>,
+    /// Row-major K×P `q_max_feasible` of the class representative
+    /// (`classes[k][0]`, the largest member) at that mean rate; 0 = the
+    /// pair is skipped at class level (the exact re-evaluation still
+    /// gates every member individually).
+    q_max: Vec<u32>,
+    /// A1(p), constant per round.
+    a1v: f64,
+    /// A2(p), constant per round.
+    a2v: f64,
+    /// `Σ_i 4τ·Ĝ_i²` over **all** U clients — the C6 data term when
+    /// nobody participates; participants then add their gain delta.
+    excl_total: f64,
+    /// Per class: prefix sums over the scheduling order, index `n` =
+    /// first n members, `[0] = 0.0`. Sizes…
+    pref_size: Vec<Vec<f64>>,
+    /// …Ĝ² estimates…
+    pref_g2: Vec<Vec<f64>>,
+    /// …σ̂² estimates…
+    pref_sigma2: Vec<Vec<f64>>,
+    /// …and the C6 gain delta `4τ(1−w_i^full)Ĝ_i² − 4τ·Ĝ_i²` a member
+    /// contributes by participating (before the w-dependent part).
+    pref_gain: Vec<Vec<f64>>,
+    /// Class-mean θ^max (broadcast-solve input).
+    theta_rep: Vec<f64>,
+    /// Class-mean q_prev (broadcast-solve input).
+    q_prev_rep: Vec<f64>,
+    /// Representative-solve memo shards, one lock per class (`None` =
+    /// caching disabled via the scheduler's cache toggle).
+    memo: Option<ClassMemo>,
+}
+
+/// Reusable per-evaluation buffer for [`ClassEvalCtx::evaluate_j0`]
+/// (one per GA fitness worker): the selected (class, pool, seated
+/// members, rate) tuples of the chromosome under evaluation.
+#[derive(Clone, Debug, Default)]
+pub struct ClassScratch {
+    sel: Vec<(usize, usize, usize, f64)>,
+}
+
+impl<'a> ClassEvalCtx<'a> {
+    /// Precompute the class-level tables from `inp` and `plan`;
+    /// `cache` gates the representative-solve memo.
+    pub fn new(
+        inp: &'a RoundInputs<'a>,
+        plan: &'a ClassPlan,
+        mode: Case5Mode,
+        cache: bool,
+    ) -> ClassEvalCtx<'a> {
+        let p = inp.params;
+        let (kn, np) = (plan.num_classes(), plan.num_pools());
+        let mut rate = vec![0.0f64; kn * np];
+        let mut q_max = vec![0u32; kn * np];
+        for (k, members) in plan.classes.iter().enumerate() {
+            for (pi, &(start, len)) in plan.pools.iter().enumerate() {
+                let mut sum = 0.0f64;
+                for &i in members {
+                    for ch in start..start + len {
+                        sum += inp.channels.rate(i, ch);
+                    }
+                }
+                let r = sum / (members.len() * len) as f64;
+                rate[k * np + pi] = r;
+                q_max[k * np + pi] =
+                    solver::q_max_feasible(p, inp.sizes[members[0]], r).unwrap_or(0);
+            }
+        }
+        let tau = p.tau as f64;
+        let excl_total: f64 = inp.g2.iter().map(|&g| 4.0 * tau * g).sum();
+        let mut pref_size = Vec::with_capacity(kn);
+        let mut pref_g2 = Vec::with_capacity(kn);
+        let mut pref_sigma2 = Vec::with_capacity(kn);
+        let mut pref_gain = Vec::with_capacity(kn);
+        let mut theta_rep = Vec::with_capacity(kn);
+        let mut q_prev_rep = Vec::with_capacity(kn);
+        for members in &plan.classes {
+            let m = members.len();
+            let (mut ps, mut pg) = (vec![0.0f64; m + 1], vec![0.0f64; m + 1]);
+            let (mut psg, mut pgn) = (vec![0.0f64; m + 1], vec![0.0f64; m + 1]);
+            let (mut th, mut qp) = (0.0f64, 0.0f64);
+            for (j, &i) in members.iter().enumerate() {
+                ps[j + 1] = ps[j] + inp.sizes[i];
+                pg[j + 1] = pg[j] + inp.g2[i];
+                psg[j + 1] = psg[j] + inp.sigma2[i];
+                pgn[j + 1] = pgn[j]
+                    + (4.0 * tau * (1.0 - inp.w_full[i]) * inp.g2[i] - 4.0 * tau * inp.g2[i]);
+                th += inp.theta_max[i];
+                qp += inp.q_prev[i];
+            }
+            pref_size.push(ps);
+            pref_g2.push(pg);
+            pref_sigma2.push(psg);
+            pref_gain.push(pgn);
+            theta_rep.push(th / m as f64);
+            q_prev_rep.push(qp / m as f64);
+        }
+        let memo = if cache {
+            Some((0..kn).map(|_| Mutex::new(HashMap::new())).collect())
+        } else {
+            None
+        };
+        ClassEvalCtx {
+            inp,
+            plan,
+            mode,
+            rate,
+            q_max,
+            a1v: convergence::a1(p),
+            a2v: convergence::a2(p),
+            excl_total,
+            pref_size,
+            pref_g2,
+            pref_sigma2,
+            pref_gain,
+            theta_rep,
+            q_prev_rep,
+            memo,
+        }
+    }
+
+    /// A worker-sized scratch for this plan's dimensions.
+    pub fn make_scratch(&self) -> ClassScratch {
+        ClassScratch { sel: Vec::with_capacity(self.plan.num_pools()) }
+    }
+
+    /// Class-level J0 of a class chromosome (`alloc[pool]` = class
+    /// index). O(K + P) after the per-round precompute — this is the
+    /// GA fitness function. **Approximate**: scores every scheduled
+    /// member of a class at the class-mean coordinates; see the module
+    /// docs for the exactness guard rails.
+    pub fn evaluate_j0(&self, chrom: &Chromosome, s: &mut ClassScratch) -> f64 {
+        let p = self.inp.params;
+        let np = self.plan.num_pools();
+        s.sel.clear();
+        let mut d_total = 0.0f64;
+        for (pool, slot) in chrom.alloc.iter().enumerate() {
+            let Some(k) = *slot else { continue };
+            if self.q_max[k * np + pool] == 0 {
+                continue;
+            }
+            let (_, plen) = self.plan.pools[pool];
+            let n = self.plan.classes[k].len().min(plen);
+            d_total += self.pref_size[k][n];
+            s.sel.push((k, pool, n, self.rate[k * np + pool]));
+        }
+        if d_total <= 0.0 {
+            return f64::INFINITY;
+        }
+        let mut any = false;
+        let mut data = self.excl_total;
+        let mut quant = 0.0f64;
+        let mut total_energy = 0.0f64;
+        for &(k, _pool, n, rate) in &s.sel {
+            let nf = n as f64;
+            let d_rep = self.pref_size[k][n] / nf;
+            let w = d_rep / d_total;
+            let Some((dec, e)) = self.solve_memo(k, d_rep, w, rate) else { continue };
+            any = true;
+            quant += nf * convergence::quant_term_client(p, w, self.theta_rep[k], dec.q);
+            total_energy += nf * e;
+            data += self.pref_gain[k][n]
+                + self.a1v * w * self.pref_g2[k][n]
+                + self.a2v * w * self.pref_sigma2[k][n];
+        }
+        if !any {
+            return f64::INFINITY;
+        }
+        self.inp.queues.lambda1 * data
+            + (self.inp.queues.lambda2 - p.eps2) * quant
+            + p.v * total_energy
+    }
+
+    /// Expand a class chromosome to a per-client [`Chromosome`] over
+    /// the real C channels: each selected class seats its scheduling
+    /// order onto its pool's channels. Classes that failed the
+    /// class-level feasibility probe are expanded too — the exact
+    /// evaluator applies the true per-member gate. Valid whenever the
+    /// class chromosome is repaired (classes unique ⇒ member sets
+    /// disjoint).
+    pub fn expand(&self, chrom: &Chromosome) -> Chromosome {
+        let mut alloc = vec![None; self.inp.params.num_channels];
+        for (pool, slot) in chrom.alloc.iter().enumerate() {
+            let Some(k) = *slot else { continue };
+            let (start, plen) = self.plan.pools[pool];
+            for (j, &i) in self.plan.classes[k].iter().take(plen).enumerate() {
+                alloc[start + j] = Some(i);
+            }
+        }
+        Chromosome { alloc }
+    }
+
+    /// Greedy class seed: classes in descending best-pool-rate order
+    /// each pick their best remaining pool — the class-level analogue
+    /// of [`super::greedy_allocation`], used to seed the GA population.
+    pub fn greedy_seed(&self) -> Chromosome {
+        let (kn, np) = (self.plan.num_classes(), self.plan.num_pools());
+        let best: Vec<f64> = (0..kn)
+            .map(|k| (0..np).map(|pi| self.rate[k * np + pi]).fold(0.0, f64::max))
+            .collect();
+        let mut order: Vec<usize> = (0..kn).collect();
+        order.sort_by(|&a, &b| best[b].total_cmp(&best[a]));
+        let mut alloc: Vec<Option<usize>> = vec![None; np];
+        let mut taken = 0usize;
+        for &k in &order {
+            let mut pick: Option<(usize, f64)> = None;
+            for (pi, slot) in alloc.iter().enumerate() {
+                if slot.is_none() {
+                    let r = self.rate[k * np + pi];
+                    if pick.map(|(_, br)| r > br || br.is_nan()).unwrap_or(true) {
+                        pick = Some((pi, r));
+                    }
+                }
+            }
+            if let Some((pi, _)) = pick {
+                alloc[pi] = Some(k);
+                taken += 1;
+                if taken == np {
+                    break;
+                }
+            }
+        }
+        Chromosome { alloc }
+    }
+
+    /// Mean uplink rate of class `k` over pool `p`'s channels
+    /// (test/bench introspection).
+    pub fn class_rate(&self, k: usize, p: usize) -> f64 {
+        self.rate[k * self.plan.num_pools() + p]
+    }
+
+    /// Whether class `k`'s representative passes the q = 1 gate at
+    /// pool `p`'s mean rate (test/bench introspection).
+    pub fn class_feasible(&self, k: usize, p: usize) -> bool {
+        self.q_max[k * self.plan.num_pools() + p] >= 1
+    }
+
+    /// Total data size of the first `n` scheduling-order members of
+    /// class `k` (test/bench introspection; `d_rep = sum / n`).
+    pub fn sched_size_sum(&self, k: usize, n: usize) -> f64 {
+        self.pref_size[k][n]
+    }
+
+    /// The representative solve the classed path broadcasts for class
+    /// `k` at `(d_rep, w, rate)` — exposed so the property tests can
+    /// pin it bitwise against each member's own per-client solve.
+    pub fn broadcast_solve(&self, k: usize, d_rep: f64, w: f64, rate: f64) -> ClassSolve {
+        self.solve_memo(k, d_rep, w, rate)
+    }
+
+    /// Representative solve through the memo (or straight through when
+    /// caching is off). The solve runs outside the shard lock; a lost
+    /// race rewrites the identical value (pure function of the key).
+    fn solve_memo(&self, k: usize, d_rep: f64, w: f64, rate: f64) -> ClassSolve {
+        let Some(shards) = &self.memo else {
+            return self.solve(k, d_rep, w, rate);
+        };
+        let key = (rate.to_bits(), w.to_bits(), d_rep.to_bits());
+        if let Some(&hit) = shards[k].lock().unwrap().get(&key) {
+            return hit;
+        }
+        let solved = self.solve(k, d_rep, w, rate);
+        shards[k].lock().unwrap().insert(key, solved);
+        solved
+    }
+
+    /// The uncached representative solve: one [`solver::solve_client`]
+    /// + [`energy::client_energy`] at the class coordinates — exactly
+    /// the per-client body with `(D, w, θ, q_prev)` replaced by the
+    /// class representatives.
+    fn solve(&self, k: usize, d_rep: f64, w: f64, rate: f64) -> ClassSolve {
+        let p = self.inp.params;
+        let ctx = ClientCtx {
+            d_i: d_rep,
+            w_round: w,
+            rate,
+            theta_max: self.theta_rep[k],
+            q_prev: self.q_prev_rep[k],
+        };
+        let dec = solver::solve_client(p, self.inp.queues.lambda2, &ctx, self.mode)?;
+        let e = energy::client_energy(p, d_rep, dec.f, dec.q, rate);
+        Some((dec, e))
+    }
+}
+
+/// The classed decide body (class-level analogue of
+/// [`super::ctx::decide_with_ga`]): build the [`ClassPlan`] +
+/// [`ClassEvalCtx`], run the GA over class chromosomes seeded with
+/// [`ClassEvalCtx::greedy_seed`], expand the winner and re-score it
+/// **exactly** through [`super::evaluate_allocation`], then keep the
+/// better of that and the exact greedy allocation. Returns
+/// `(j0, assignments, evals)` — the reported values are exact for the
+/// chosen allocation, and the result is bit-identical for any worker
+/// count and any `cache` setting.
+pub fn decide_with_classes(
+    inp: &RoundInputs<'_>,
+    mode: Case5Mode,
+    ga_params: &GaParams,
+    rng: &mut Rng,
+    cfg: ClassingConfig,
+    cache: bool,
+) -> (f64, Vec<Option<ClientDecision>>, usize) {
+    let plan = ClassPlan::build(inp, cfg);
+    let ctx = ClassEvalCtx::new(inp, &plan, mode, cache);
+    let seed = ctx.greedy_seed();
+    let mut scratches: Vec<ClassScratch> =
+        (0..ga_params.threads.max(1)).map(|_| ctx.make_scratch()).collect();
+    let params = GaParams { fitness_cache: cache && ga_params.fitness_cache, ..*ga_params };
+    let outcome = ga::optimize_scratch(
+        plan.num_pools(),
+        plan.num_classes(),
+        &params,
+        rng,
+        std::slice::from_ref(&seed),
+        &mut scratches,
+        |c, s| ctx.evaluate_j0(c, s),
+    );
+    let expanded = ctx.expand(&outcome.best);
+    let (j_exp, a_exp) = evaluate_allocation(inp, &expanded, mode);
+    let (j_gr, a_gr) = evaluate_allocation(inp, &greedy_allocation(inp), mode);
+    if j_gr < j_exp {
+        (j_gr, a_gr, outcome.evals)
+    } else {
+        (j_exp, a_exp, outcome.evals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::Fixture;
+    use super::*;
+
+    #[test]
+    fn plan_partitions_clients_and_channels() {
+        let fx = Fixture::new(21);
+        let inp = fx.inputs();
+        let plan = ClassPlan::build(&inp, ClassingConfig::default());
+        // Every client in exactly one class.
+        let mut seen = vec![0usize; 10];
+        for k in 0..plan.num_classes() {
+            assert!(!plan.class_members(k).is_empty(), "empty class {k}");
+            for &i in plan.class_members(k) {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&n| n == 1), "client multiplicity {seen:?}");
+        // Pools are contiguous and cover all channels.
+        assert!(plan.num_pools() >= 1 && plan.num_pools() <= 10);
+        let mut next = 0usize;
+        for p in 0..plan.num_pools() {
+            let (start, len) = plan.pool(p);
+            assert_eq!(start, next, "pool {p} not contiguous");
+            assert!(len >= 1, "empty pool {p}");
+            next = start + len;
+        }
+        assert_eq!(next, 10, "pools must cover all channels");
+        // Scheduling order is size-descending within each class.
+        for k in 0..plan.num_classes() {
+            let m = plan.class_members(k);
+            for w in m.windows(2) {
+                assert!(fx.sizes[w[0]] >= fx.sizes[w[1]], "class {k} order");
+            }
+        }
+    }
+
+    #[test]
+    fn expansion_of_repaired_chromosomes_is_valid() {
+        let fx = Fixture::new(22);
+        let inp = fx.inputs();
+        let plan = ClassPlan::build(&inp, ClassingConfig { size_bins: 2, rate_bins: 2 });
+        let ctx = ClassEvalCtx::new(&inp, &plan, Case5Mode::Taylor, true);
+        let (kn, np) = (plan.num_classes(), plan.num_pools());
+        let mut rng = Rng::seed_from(99);
+        for _ in 0..32 {
+            let mut chrom = Chromosome::random(np, kn, &mut rng);
+            chrom.repair(kn);
+            let expanded = ctx.expand(&chrom);
+            assert_eq!(expanded.alloc.len(), 10);
+            assert!(expanded.is_valid(10), "expansion invalid: {:?}", chrom.alloc);
+        }
+        let seed = ctx.greedy_seed();
+        assert!(seed.is_valid(kn));
+        assert!(ctx.expand(&seed).is_valid(10));
+    }
+
+    #[test]
+    fn classed_decide_exact_and_not_worse_than_greedy() {
+        let fx = Fixture::new(23);
+        let inp = fx.inputs();
+        let (j_gr, _) = evaluate_allocation(&inp, &greedy_allocation(&inp), Case5Mode::Taylor);
+        let mut rng = Rng::seed_from(7);
+        let (j0, assigns, evals) = decide_with_classes(
+            &inp,
+            Case5Mode::Taylor,
+            &GaParams::default(),
+            &mut rng,
+            ClassingConfig::default(),
+            true,
+        );
+        assert!(j0.is_finite());
+        assert!(j0 <= j_gr, "classed {j0} worse than greedy backstop {j_gr}");
+        assert!(evals > 0);
+        // Channel uniqueness (C3) on the expanded decision.
+        let mut used = std::collections::BTreeSet::new();
+        for d in assigns.iter().flatten() {
+            assert!(used.insert(d.channel), "channel reuse");
+        }
+    }
+
+    #[test]
+    fn classed_decide_cache_off_bit_identical() {
+        let fx = Fixture::new(24);
+        let inp = fx.inputs();
+        let run = |cache: bool| {
+            let mut rng = Rng::seed_from(11);
+            decide_with_classes(
+                &inp,
+                Case5Mode::Bisect,
+                &GaParams::default(),
+                &mut rng,
+                ClassingConfig::default(),
+                cache,
+            )
+        };
+        let (j_on, a_on, _) = run(true);
+        let (j_off, a_off, _) = run(false);
+        assert_eq!(j_on.to_bits(), j_off.to_bits());
+        let bits = |a: &[Option<ClientDecision>]| -> Vec<_> {
+            a.iter().map(|d| d.map(|d| (d.channel, d.q, d.f.to_bits(), d.rate.to_bits()))).collect::<Vec<_>>()
+        };
+        assert_eq!(bits(&a_on), bits(&a_off));
+    }
+
+    #[test]
+    fn class_j0_finite_on_greedy_seed() {
+        let fx = Fixture::new(25);
+        let inp = fx.inputs();
+        let plan = ClassPlan::build(&inp, ClassingConfig::default());
+        let ctx = ClassEvalCtx::new(&inp, &plan, Case5Mode::Taylor, true);
+        let mut scratch = ctx.make_scratch();
+        let j = ctx.evaluate_j0(&ctx.greedy_seed(), &mut scratch);
+        assert!(j.is_finite(), "class-level J0 infinite on the greedy seed");
+        // Empty class chromosome is infeasible at class level too.
+        let empty = Chromosome { alloc: vec![None; plan.num_pools()] };
+        assert!(ctx.evaluate_j0(&empty, &mut scratch).is_infinite());
+    }
+}

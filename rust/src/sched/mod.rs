@@ -12,10 +12,16 @@
 //! — and the cached [`EvalCtx`] subsystem ([`ctx`]) the GA fitness
 //! loop runs on, which is **bit-identical** to the reference by
 //! contract (see `ctx`'s module docs and `tests/proptest_decision.rs`).
+//! A third, scenario-gated path ([`classes`]) trades exactness for
+//! scale: the GA searches over client *equivalence classes* and channel
+//! pools, and the winning expansion is re-scored through the exact
+//! reference before anything reaches the trace.
 
+pub mod classes;
 pub mod ctx;
 pub mod qccf;
 
+pub use classes::{decision_classes_default, ClassEvalCtx, ClassPlan, ClassingConfig};
 pub use ctx::{EvalCtx, EvalScratch};
 
 use crate::config::SystemParams;
@@ -210,8 +216,17 @@ pub fn greedy_allocation(inp: &RoundInputs<'_>) -> Chromosome {
     // and for finite rates the descending order is identical.
     order.sort_by(|&a, &b| best_rate[b].total_cmp(&best_rate[a]));
     let mut taken = vec![false; c];
+    let mut taken_count = 0usize;
     let mut alloc = vec![None; c];
     for &i in &order {
+        // Once every channel is held, the remaining U − C clients can
+        // only scan fully-taken channels and assign nothing — at the
+        // stress-100k scale (U = 10⁵, C = 64) that tail used to cost
+        // O(U·C) for zero work. The early exit skips exactly those
+        // no-op iterations, so the allocation is unchanged.
+        if taken_count == c {
+            break;
+        }
         let mut best: Option<(usize, f64)> = None;
         for ch in 0..c {
             if !taken[ch] {
@@ -228,6 +243,7 @@ pub fn greedy_allocation(inp: &RoundInputs<'_>) -> Chromosome {
         }
         if let Some((ch, _)) = best {
             taken[ch] = true;
+            taken_count += 1;
             alloc[ch] = Some(i);
         }
     }

@@ -2,10 +2,12 @@
 //! allocations (P3.1, §V-D) with the closed-form KKT solver as the inner
 //! evaluation (P3.2″, §V-C).
 
-use super::{ctx, RoundDecision, RoundInputs, Scheduler};
+use super::{classes, ctx, RoundDecision, RoundInputs, Scheduler};
 use crate::ga::GaParams;
 use crate::solver::Case5Mode;
 use crate::util::rng::Rng;
+
+use classes::ClassingConfig;
 
 /// The QCCF scheduler (paper Algorithm 1 wrapped around the
 /// closed-form per-client solver).
@@ -21,6 +23,14 @@ pub struct QccfScheduler {
     /// decisions and traces are bit-identical either way (see
     /// `sched::ctx` and `tests/integration_fl.rs`).
     pub cache: bool,
+    /// Hierarchical class-based scheduling (`None` = exact per-client
+    /// GA, the default). `Some(cfg)` switches the decide body to
+    /// [`classes::decide_with_classes`]: the GA searches class × pool
+    /// chromosomes and the winner is re-scored exactly — an
+    /// *approximation* of the optimum, not of the reported values (see
+    /// `sched::classes`). Scenario-gated (`[train] classes = true`)
+    /// with the `QCCF_DECISION_CLASSES=0` kill switch.
+    pub classes: Option<ClassingConfig>,
     rng: Rng,
 }
 
@@ -31,8 +41,24 @@ impl QccfScheduler {
             ga: GaParams::default(),
             case5: Case5Mode::Taylor,
             cache: ctx::decision_cache_default(),
+            classes: None,
             rng: Rng::seed_from(seed),
         }
+    }
+
+    /// Enable class-based scheduling with `cfg`, honoring the
+    /// process-wide `QCCF_DECISION_CLASSES=0` kill switch (under the
+    /// kill switch this is a no-op and the exact path keeps running).
+    pub fn with_classes(mut self, cfg: ClassingConfig) -> Self {
+        self.classes = classes::decision_classes_default().then_some(cfg);
+        self
+    }
+
+    /// Set the classing mode directly, bypassing the environment gate
+    /// (A/B validation and tests; `None` restores the exact path).
+    pub fn with_classes_override(mut self, classes: Option<ClassingConfig>) -> Self {
+        self.classes = classes;
+        self
     }
 
     /// Enable or disable the decision-stage caches (default: on).
@@ -68,6 +94,20 @@ impl Scheduler for QccfScheduler {
     }
 
     fn decide(&mut self, inp: &RoundInputs<'_>) -> RoundDecision {
+        // Class-based path: the GA runs over class × pool chromosomes
+        // and the winner (or the greedy backstop, if better) is scored
+        // through the exact reference evaluator — see sched::classes.
+        if let Some(cfg) = self.classes {
+            let (j0, assignments, evals) = classes::decide_with_classes(
+                inp,
+                self.case5,
+                &self.ga,
+                &mut self.rng,
+                cfg,
+                self.cache,
+            );
+            return RoundDecision { assignments, j0, evals, deadline_exempt: false };
+        }
         // Seed the population with the greedy rate-maximizing allocation
         // so Algorithm 1 never falls below the trivial policy. The
         // shared decide body (sched::ctx::decide_with_ga) runs the
@@ -89,8 +129,9 @@ impl Scheduler for QccfScheduler {
     }
 
     // The GA stream is the scheduler's only mutable state (GaParams /
-    // case5 / cache are run configuration; the per-round EvalCtx and
-    // fitness caches live and die inside one decide call), so the
+    // case5 / cache / classes are run configuration; the per-round
+    // EvalCtx / ClassEvalCtx and fitness caches live and die inside
+    // one decide call), so the
     // checkpoint subsystem can resume QCCF from this position alone.
     fn rng_state(&self) -> Option<crate::util::rng::RngState> {
         Some(self.rng.state())
@@ -186,5 +227,76 @@ mod tests {
         }
         assert!(on.evals <= off.evals, "cache increased evals: {} > {}", on.evals, off.evals);
         assert!(on.evals > 0);
+    }
+
+    fn assert_decision_bits_eq(a: &crate::sched::RoundDecision, b: &crate::sched::RoundDecision) {
+        assert_eq!(a.j0.to_bits(), b.j0.to_bits());
+        assert_eq!(a.assignments.len(), b.assignments.len());
+        for (x, y) in a.assignments.iter().zip(&b.assignments) {
+            match (x, y) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.channel, y.channel);
+                    assert_eq!(x.q, y.q);
+                    assert_eq!(x.f.to_bits(), y.f.to_bits());
+                    assert_eq!(x.rate.to_bits(), y.rate.to_bits());
+                }
+                _ => panic!("participation diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn classed_parallel_fitness_same_decision() {
+        // Determinism pin for the classed path: 1 vs 8 fitness workers
+        // must yield a bit-identical decision (the acceptance trace
+        // contract for `--threads`).
+        let fx = Fixture::new(16);
+        let inp = fx.inputs();
+        let cfg = crate::sched::ClassingConfig::default();
+        let serial =
+            QccfScheduler::new(5).with_classes_override(Some(cfg)).decide(&inp);
+        let parallel = QccfScheduler::new(5)
+            .with_classes_override(Some(cfg))
+            .with_threads(8)
+            .decide(&inp);
+        assert_eq!(serial.evals, parallel.evals);
+        assert_decision_bits_eq(&serial, &parallel);
+    }
+
+    #[test]
+    fn classes_override_none_is_exact_path() {
+        // `with_classes_override(None)` must behave exactly like a
+        // scheduler that never heard of classes — the same contract the
+        // QCCF_DECISION_CLASSES=0 kill switch provides process-wide.
+        let fx = Fixture::new(17);
+        let inp = fx.inputs();
+        let plain = QccfScheduler::new(3).decide(&inp);
+        let off = QccfScheduler::new(3).with_classes_override(None).decide(&inp);
+        assert_eq!(plain.evals, off.evals);
+        assert_decision_bits_eq(&plain, &off);
+    }
+
+    #[test]
+    fn classed_decision_exact_valid_and_not_worse_than_greedy() {
+        // The classed decide reports the *exact* J0 of its expanded
+        // allocation and is backstopped by greedy — so it can never be
+        // worse than the trivial policy, and its decisions respect the
+        // same bounds as the exact path.
+        let fx = Fixture::new(18);
+        let inp = fx.inputs();
+        let greedy = greedy_allocation(&inp);
+        let (j_greedy, _) = evaluate_allocation(&inp, &greedy, Case5Mode::Taylor);
+        let dec = QccfScheduler::new(8)
+            .with_classes_override(Some(crate::sched::ClassingConfig::default()))
+            .decide(&inp);
+        assert!(dec.j0.is_finite());
+        assert!(dec.j0 <= j_greedy, "classed {} worse than greedy {}", dec.j0, j_greedy);
+        let mut used = std::collections::BTreeSet::new();
+        for d in dec.assignments.iter().flatten() {
+            assert!(used.insert(d.channel), "channel reuse (C3 violation)");
+            assert!(d.q.unwrap() >= 1);
+            assert!(d.f >= fx.params.f_min && d.f <= fx.params.f_max);
+        }
     }
 }

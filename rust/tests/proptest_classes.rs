@@ -1,0 +1,248 @@
+//! Class-hierarchy equivalence properties (pure Rust — no artifacts):
+//! when every member of an equivalence class is *exactly* identical
+//! (same dataset size, same rate on every channel, same gradient
+//! stats, same θ^max / q_prev), the classed decision path collapses to
+//! the per-client truth:
+//!
+//! * the class partition recovers exactly the templates;
+//! * the broadcast representative solve is **bit-identical** to each
+//!   member's own `solver::solve_client` (class means of identical
+//!   dyadic inputs are exact in IEEE-754);
+//! * the classed decide's reported `(J0, assignments)` are exact for
+//!   the allocation it chose — re-scoring the returned allocation
+//!   through the reference `evaluate_allocation` reproduces them
+//!   bitwise — and never worse than the greedy backstop;
+//! * scheduled members of one class share identical `(q, f)` bits;
+//! * the representative-solve memo is a pure cache (cache on/off
+//!   decides are bit-identical).
+//!
+//! Sizes are exact integers, rates are powers of two, and the shared
+//! stats are dyadic (θ = 0.25, q_prev = 4.0, Ĝ² = 2.0, σ̂² = 0.5), so
+//! every class mean is exactly representable and the bitwise claims
+//! are meaningful, across U ∈ {10, 100, 1000}.
+
+use qccf::config::SystemParams;
+use qccf::energy::client_energy;
+use qccf::ga::{Chromosome, GaParams};
+use qccf::lyapunov::Queues;
+use qccf::sched::classes::decide_with_classes;
+use qccf::sched::{
+    evaluate_allocation, greedy_allocation, ClassEvalCtx, ClassPlan, ClassingConfig,
+    ClientDecision, RoundInputs,
+};
+use qccf::solver::{solve_client, Case5Mode, ClientCtx};
+use qccf::util::prop;
+use qccf::util::rng::Rng;
+use qccf::wireless::ChannelState;
+
+struct Case {
+    params: SystemParams,
+    /// Number of templates (= classes the plan must recover); divides U.
+    t: usize,
+    rates: Vec<f64>,
+    sizes: Vec<f64>,
+    w_full: Vec<f64>,
+    mode: Case5Mode,
+    seed: u64,
+}
+
+impl std::fmt::Debug for Case {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Case {{ U: {}, C: {}, templates: {}, mode: {:?}, seed: {} }}",
+            self.params.num_clients, self.params.num_channels, self.t, self.mode, self.seed
+        )
+    }
+}
+
+/// Draw one round of T identical-member templates: client `i` belongs
+/// to template `i % T`, template `t` has size `512·(t+1)` samples
+/// (exact integer, distinct per template) and rate `2^(23 + t mod 4)`
+/// bit/s on **every** channel. T divides every U in {10, 100, 1000},
+/// so the T equal-mass size-rank bins land exactly on the templates.
+fn case(rng: &mut Rng) -> Case {
+    let u = [10usize, 100, 1000][rng.below(3)];
+    let t = [2usize, 5][rng.below(2)];
+    let c = u.min(16);
+    let mut params = SystemParams::femnist_small();
+    params.num_clients = u;
+    params.num_channels = c;
+    let sizes: Vec<f64> = (0..u).map(|i| 512.0 * (i % t + 1) as f64).collect();
+    let total: f64 = sizes.iter().sum();
+    let w_full: Vec<f64> = sizes.iter().map(|d| d / total).collect();
+    let mut rates = Vec::with_capacity(u * c);
+    for i in 0..u {
+        let r = (1u64 << (23 + (i % t) % 4)) as f64;
+        for _ in 0..c {
+            rates.push(r);
+        }
+    }
+    let mode = if rng.chance(0.5) { Case5Mode::Taylor } else { Case5Mode::Bisect };
+    Case { params, t, rates, sizes, w_full, mode, seed: rng.next_u64() }
+}
+
+fn bits_of(assigns: &[Option<ClientDecision>]) -> Vec<Option<(usize, Option<u32>, u64, u64)>> {
+    assigns
+        .iter()
+        .map(|a| a.map(|d| (d.channel, d.q, d.f.to_bits(), d.rate.to_bits())))
+        .collect()
+}
+
+#[test]
+fn identical_members_make_the_classed_path_exact() {
+    prop::check("classed-identical-members", prop::iters(24), case, |cs| {
+        let (u, c) = (cs.params.num_clients, cs.params.num_channels);
+        let state = ChannelState::from_rates(u, c, cs.rates.clone());
+        let g2 = vec![2.0; u];
+        let sigma2 = vec![0.5; u];
+        let theta_max = vec![0.25; u];
+        let q_prev = vec![4.0; u];
+        let mut queues = Queues::new();
+        queues.lambda1 = 1024.0;
+        queues.lambda2 = 8.0;
+        let inp = RoundInputs {
+            params: &cs.params,
+            round: 3,
+            channels: &state,
+            sizes: &cs.sizes,
+            w_full: &cs.w_full,
+            g2: &g2,
+            sigma2: &sigma2,
+            theta_max: &theta_max,
+            q_prev: &q_prev,
+            queues: &queues,
+        };
+        let cfg = ClassingConfig { size_bins: cs.t, rate_bins: 1 };
+        let plan = ClassPlan::build(&inp, cfg);
+
+        // The partition recovers exactly the templates.
+        if plan.num_classes() != cs.t {
+            return Err(format!("K = {} classes, expected {}", plan.num_classes(), cs.t));
+        }
+        let mut covered = 0usize;
+        for k in 0..plan.num_classes() {
+            let members = plan.class_members(k);
+            covered += members.len();
+            let tmpl = members[0] % cs.t;
+            if members.iter().any(|&i| i % cs.t != tmpl) {
+                return Err(format!("class {k} mixes templates"));
+            }
+        }
+        if covered != u {
+            return Err(format!("classes cover {covered} of {u} clients"));
+        }
+
+        // Broadcast representative solve == each member's own solve,
+        // bitwise, at every feasible (class, pool) pair.
+        let ctx = ClassEvalCtx::new(&inp, &plan, cs.mode, true);
+        let total: f64 = cs.sizes.iter().sum();
+        for k in 0..plan.num_classes() {
+            let members = plan.class_members(k);
+            for pool in 0..plan.num_pools() {
+                if !ctx.class_feasible(k, pool) {
+                    continue;
+                }
+                let (_, plen) = plan.pool(pool);
+                let n = members.len().min(plen);
+                let d_rep = ctx.sched_size_sum(k, n) / n as f64;
+                if d_rep.to_bits() != cs.sizes[members[0]].to_bits() {
+                    return Err(format!("class {k}: d_rep {d_rep} not exact"));
+                }
+                let rate = ctx.class_rate(k, pool);
+                if rate.to_bits() != inp.channels.rate(members[0], 0).to_bits() {
+                    return Err(format!("class {k}: pool rate {rate} not exact"));
+                }
+                let w = d_rep / total;
+                let broadcast = ctx.broadcast_solve(k, d_rep, w, rate);
+                for &i in &members[..n] {
+                    let cctx = ClientCtx {
+                        d_i: cs.sizes[i],
+                        w_round: w,
+                        rate,
+                        theta_max: 0.25,
+                        q_prev: 4.0,
+                    };
+                    let own = solve_client(&cs.params, queues.lambda2, &cctx, cs.mode).map(
+                        |dec| (dec, client_energy(&cs.params, cs.sizes[i], dec.f, dec.q, rate)),
+                    );
+                    match (broadcast, own) {
+                        (None, None) => {}
+                        (Some((bd, be)), Some((od, oe))) => {
+                            if bd.q != od.q
+                                || bd.f.to_bits() != od.f.to_bits()
+                                || be.to_bits() != oe.to_bits()
+                            {
+                                return Err(format!(
+                                    "class {k} member {i}: broadcast (q={}, f={}, e={be}) \
+                                     vs own (q={}, f={}, e={oe})",
+                                    bd.q, bd.f, od.q, od.f
+                                ));
+                            }
+                        }
+                        (b, o) => {
+                            return Err(format!(
+                                "class {k} member {i}: broadcast feasibility {} vs own {}",
+                                b.is_some(),
+                                o.is_some()
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+
+        // The classed decide: exact for its chosen allocation, never
+        // worse than greedy, class-uniform (q, f), cache-invariant.
+        let mut rng = Rng::seed_from(cs.seed);
+        let (j0, assigns, evals) =
+            decide_with_classes(&inp, cs.mode, &GaParams::default(), &mut rng, cfg, true);
+        if evals == 0 {
+            return Err("classed decide reported zero evaluations".into());
+        }
+        let (j_gr, _) = evaluate_allocation(&inp, &greedy_allocation(&inp), cs.mode);
+        if !j0.is_finite() {
+            return Err(format!("classed J0 infinite on a feasible round (greedy {j_gr})"));
+        }
+        if j0 > j_gr {
+            return Err(format!("classed J0 {j0} worse than greedy backstop {j_gr}"));
+        }
+        let mut alloc = vec![None; c];
+        for (i, d) in assigns.iter().enumerate() {
+            if let Some(d) = d {
+                if alloc[d.channel].is_some() {
+                    return Err(format!("channel {} assigned twice", d.channel));
+                }
+                alloc[d.channel] = Some(i);
+            }
+        }
+        let (j_re, a_re) = evaluate_allocation(&inp, &Chromosome { alloc }, cs.mode);
+        if j_re.to_bits() != j0.to_bits() {
+            return Err(format!("reported J0 {j0} not exact (reference re-score {j_re})"));
+        }
+        if bits_of(&a_re) != bits_of(&assigns) {
+            return Err("reported assignments diverge from reference re-score".into());
+        }
+        for k in 0..plan.num_classes() {
+            let mut qf: Option<(Option<u32>, u64)> = None;
+            for &i in plan.class_members(k) {
+                let Some(d) = assigns[i] else { continue };
+                let here = (d.q, d.f.to_bits());
+                match qf {
+                    None => qf = Some(here),
+                    Some(first) if first != here => {
+                        return Err(format!("class {k}: scheduled members differ in (q, f)"));
+                    }
+                    Some(_) => {}
+                }
+            }
+        }
+        let mut rng = Rng::seed_from(cs.seed);
+        let (j_off, a_off, _) =
+            decide_with_classes(&inp, cs.mode, &GaParams::default(), &mut rng, cfg, false);
+        if j_off.to_bits() != j0.to_bits() || bits_of(&a_off) != bits_of(&assigns) {
+            return Err("cache-off classed decide diverged".into());
+        }
+        Ok(())
+    });
+}

@@ -26,8 +26,8 @@ echo "== cargo build --release =="
 cargo build --release
 echo "== cargo test -q =="
 cargo test -q
-echo "== cargo clippy --all-targets -- -D warnings =="
-cargo clippy --all-targets -- -D warnings
+echo "== cargo clippy --all-targets --release -- -D warnings =="
+cargo clippy --all-targets --release -- -D warnings
 echo "== cargo doc --no-deps (warnings denied) =="
 RUSTDOCFLAGS="${RUSTDOCFLAGS:-} -D warnings" cargo doc --no-deps --quiet
 
@@ -45,18 +45,18 @@ QCCF_BENCH_WARMUP_MS=20 QCCF_BENCH_MEASURE_MS=100 \
 
 # Decision-stage perf baseline: quick J0-evaluation smoke at U ∈
 # {100, 1000}, C = U/2, cached (EvalCtx + solve memo + scratch) vs the
-# uncached reference (pure Rust, no artifacts). Writes BENCH_sched.json
-# and copies it to the repo root so the perf trajectory is tracked
-# in-repo across PRs.
+# uncached reference, plus the classed-vs-exact rows at U ∈ {1000,
+# 10000, 100000} — class-level throughput, approximation gap, and the
+# stress-100k decision round all in one pass (pure Rust, no artifacts).
 echo "== bench-sched smoke (target/BENCH_sched.json) =="
 QCCF_BENCH_WARMUP_MS=20 QCCF_BENCH_MEASURE_MS=100 \
     cargo run --release --quiet -- bench-sched \
-    --us 100,1000 --pool 16 --out target/BENCH_sched.json
+    --us 100,1000 --pool 16 --class-us 1000,10000,100000 \
+    --out target/BENCH_sched.json
 [ -s target/BENCH_sched.json ] || {
     echo "verify.sh: bench-sched wrote no target/BENCH_sched.json" >&2
     exit 1
 }
-cp target/BENCH_sched.json BENCH_sched.json
 
 # Snapshot-codec perf baseline: quick encode/decode smoke over a
 # synthetic mid-horizon snapshot at Z = 20k, U ∈ {100, 1000} (pure
@@ -70,6 +70,18 @@ QCCF_BENCH_WARMUP_MS=20 QCCF_BENCH_MEASURE_MS=100 \
     echo "verify.sh: bench-ckpt wrote no target/BENCH_ckpt.json" >&2
     exit 1
 }
+
+# Advisory perf diff, then refresh the committed baselines: compare the
+# fresh target/BENCH_*.json against the copies committed at the repo
+# root and warn (never fail — micro-bench noise) when a metric
+# regressed more than 20%. Only after the diff are all three baselines
+# copied to the root, so the log shows regressions against what was
+# actually committed.
+echo "== bench-diff (fresh target/ vs committed baselines) =="
+cargo run --release --quiet -- bench-diff --fresh target --baseline .
+for b in BENCH_wire.json BENCH_sched.json BENCH_ckpt.json; do
+    cp "target/$b" "$b"
+done
 
 # Scenario-path smoke: two built-in scenarios through the sweep runner
 # (2 rounds, tiny profile). Needs artifacts, like the integration tests.
