@@ -37,6 +37,7 @@ fn main() {
         theta_max: &theta_max,
         q_prev: &q_prev,
         queues: &queues,
+        avail: None,
     };
 
     let mut set = BenchSet::new("ga");

@@ -36,6 +36,7 @@ fn main() {
         theta_max: &theta_max,
         q_prev: &q_prev,
         queues: &queues,
+        avail: None,
     };
 
     let mut set = BenchSet::new("round_decision");

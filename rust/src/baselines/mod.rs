@@ -255,6 +255,10 @@ impl Scheduler for SameSizeScheduler {
             theta_max: inp.theta_max,
             q_prev: inp.q_prev,
             queues: inp.queues,
+            // The availability mask passes through untouched: an
+            // offline client stays unschedulable even under the
+            // equal-size fiction.
+            avail: inp.avail,
         };
         // Same shared decide body as QCCF (sched::ctx::decide_with_ga:
         // per-round EvalCtx + solve memo + per-worker scratch + GA

@@ -268,6 +268,7 @@ pub fn run_sched_bench(us: &[usize], pool: usize) -> Vec<SchedBenchRow> {
             theta_max: &theta_max,
             q_prev: &q_prev,
             queues: &queues,
+            avail: None,
         };
         let greedy = sched::greedy_allocation(&inp);
         let chroms: Vec<Chromosome> = (0..pool.max(1))
@@ -299,6 +300,32 @@ pub fn run_sched_bench(us: &[usize], pool: usize) -> Vec<SchedBenchRow> {
         set.bench(&format!("eval_cached_u{u}"), || {
             k = (k + 1) % chroms.len();
             ctx.evaluate_j0(&chroms[k], &mut scratch)
+        });
+        meta.push((u, c, true));
+
+        // Masked-availability row (churn's decide-time shape): the same
+        // pool evaluated with 20% of clients offline, so bench-diff can
+        // see a regression in the masked candidate-set path.
+        let mask: Vec<bool> = (0..u).map(|i| i % 5 != 0).collect();
+        let masked = RoundInputs {
+            params: &params,
+            round: 5,
+            channels: &channels,
+            sizes: &sizes,
+            w_full: &w_full,
+            g2: &g2,
+            sigma2: &sigma2,
+            theta_max: &theta_max,
+            q_prev: &q_prev,
+            queues: &queues,
+            avail: Some(&mask),
+        };
+        let mctx = sched::EvalCtx::new(&masked, Case5Mode::Taylor);
+        let mut mscratch = mctx.make_scratch();
+        let mut k = 0usize;
+        set.bench(&format!("eval_masked_u{u}"), || {
+            k = (k + 1) % chroms.len();
+            mctx.evaluate_j0(&chroms[k], &mut mscratch)
         });
         meta.push((u, c, true));
     }
@@ -399,6 +426,7 @@ pub fn run_classed_sched_bench(us: &[usize]) -> Vec<ClassedSchedRow> {
             theta_max: &theta_max,
             q_prev: &q_prev,
             queues: &queues,
+            avail: None,
         };
 
         // Exact path: the production cached evaluator over a converging
@@ -522,7 +550,9 @@ pub fn write_sched_bench_json(
             .collect(),
     );
     let mut speedups = Vec::new();
-    for r in rows.iter().filter(|r| r.cached) {
+    // Only the plain cached row pairs against the uncached reference —
+    // the masked-availability row measures a different workload.
+    for r in rows.iter().filter(|r| r.cached && !r.name.contains("masked")) {
         if let Some(base) = rows.iter().find(|b| !b.cached && b.u == r.u) {
             if r.mean_ns > 0.0 {
                 speedups.push(json::obj(vec![
@@ -850,10 +880,11 @@ mod tests {
         std::env::set_var("QCCF_BENCH_WARMUP_MS", "1");
         std::env::set_var("QCCF_BENCH_MEASURE_MS", "5");
         let rows = run_sched_bench(&[8, 12], 4);
-        assert_eq!(rows.len(), 4, "uncached + cached per U");
+        assert_eq!(rows.len(), 6, "uncached + cached + masked per U");
         assert!(rows.iter().all(|r| r.iters > 0 && r.mean_ns > 0.0 && r.evals_per_sec > 0.0));
         assert!(rows.iter().any(|r| r.name.contains("eval_uncached_u8") && !r.cached));
         assert!(rows.iter().any(|r| r.name.contains("eval_cached_u12") && r.cached));
+        assert!(rows.iter().any(|r| r.name.contains("eval_masked_u8") && r.cached));
         assert!(rows.iter().all(|r| r.c == r.u / 2));
         let dir = std::env::temp_dir().join("qccf_sched_bench_test");
         let path = dir.join("BENCH_sched.json");
@@ -861,7 +892,7 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         let doc = crate::util::json::parse(text.trim()).unwrap();
         assert_eq!(doc.get("pool").and_then(|x| x.as_usize()), Some(4));
-        assert_eq!(doc.get("benches").and_then(|x| x.as_arr()).map(|a| a.len()), Some(4));
+        assert_eq!(doc.get("benches").and_then(|x| x.as_arr()).map(|a| a.len()), Some(6));
         let speedups = doc.get("speedups").and_then(|x| x.as_arr()).unwrap();
         assert_eq!(speedups.len(), 2);
         assert!(speedups.iter().all(|s| s.get("speedup").and_then(|x| x.as_f64()).unwrap() > 0.0));

@@ -15,11 +15,11 @@
 //! against the wrong workload is a typed mismatch error, not a silently
 //! diverging run.
 //!
-//! # Wire format (version 1)
+//! # Wire format (version 2)
 //!
 //! ```text
 //! magic    4 B   "QCKP"
-//! version  4 B   u32 LE (currently 1)
+//! version  4 B   u32 LE (currently 2)
 //! length   8 B   u64 LE — payload byte count
 //! payload  N B   the Snapshot fields (see docs/CHECKPOINTS.md)
 //! crc32    4 B   u32 LE — CRC32 (IEEE) of the payload
@@ -57,8 +57,10 @@ pub const MAGIC: [u8; 4] = *b"QCKP";
 /// Current (and only supported) snapshot format version. Bump on any
 /// payload-layout change; old versions are rejected with
 /// [`CkptError::Version`], never reinterpreted (versioning policy:
-/// docs/CHECKPOINTS.md).
-pub const VERSION: u32 = 1;
+/// docs/CHECKPOINTS.md). Version 2 added the per-round `departed`
+/// count and the optional availability-process state
+/// ([`RunState::avail`]).
+pub const VERSION: u32 = 2;
 
 /// File-name extension snapshots are written under.
 pub const EXTENSION: &str = "qckpt";
@@ -158,6 +160,22 @@ pub struct ClientCkpt {
     pub rng: RngState,
 }
 
+/// One client's resumable availability state: the on/off flag, the
+/// staleness counter (rounds since the client's update last entered an
+/// aggregate), and the private churn-stream position. Captured by
+/// [`crate::fl::avail::AvailProcess::checkpoint`], reinstalled by
+/// `AvailProcess::restore` — a resumed churn run replays the exact
+/// join/leave future of the uninterrupted one.
+#[derive(Clone, Debug)]
+pub struct AvailCkpt {
+    /// Whether the client is currently available.
+    pub on: bool,
+    /// Rounds since this client's update was last aggregated.
+    pub missed: u64,
+    /// Private churn-stream position.
+    pub rng: RngState,
+}
+
 /// The complete resumable state of a [`crate::fl::Server`] mid-horizon.
 /// Captured by `Server::checkpoint_state`, reinstalled by
 /// `Server::restore_state` over a freshly constructed server (same
@@ -186,6 +204,9 @@ pub struct RunState {
     /// The scheduler's private RNG stream (GA-based schedulers;
     /// `None` for stateless policies).
     pub sched_rng: Option<RngState>,
+    /// Per-client availability-process state, ascending client id
+    /// (`None` for runs without churn).
+    pub avail: Option<Vec<AvailCkpt>>,
     /// The PJRT runtime's cumulative per-entry-point nanosecond clock
     /// `(init, train_step, eval, quantize)` as observed at capture.
     /// Reinstalled only by callers that own the runtime exclusively
@@ -247,6 +268,7 @@ fn write_record(w: &mut Writer, rec: &RoundRecord) {
     w.u64(rec.round as u64);
     w.u64(rec.scheduled as u64);
     w.u64(rec.aggregated as u64);
+    w.u64(rec.departed as u64);
     w.u64(rec.wire_bytes as u64);
     w.f64(rec.energy);
     w.f64(rec.cum_energy);
@@ -269,6 +291,7 @@ fn read_record(r: &mut Reader<'_>) -> Result<RoundRecord, CkptError> {
     let round = r.u64("record.round")? as usize;
     let scheduled = r.u64("record.scheduled")? as usize;
     let aggregated = r.u64("record.aggregated")? as usize;
+    let departed = r.u64("record.departed")? as usize;
     let wire_bytes = r.u64("record.wire_bytes")? as usize;
     let energy = r.f64("record.energy")?;
     let cum_energy = r.f64("record.cum_energy")?;
@@ -285,6 +308,7 @@ fn read_record(r: &mut Reader<'_>) -> Result<RoundRecord, CkptError> {
         round,
         scheduled,
         aggregated,
+        departed,
         wire_bytes,
         energy,
         cum_energy,
@@ -340,6 +364,18 @@ impl Snapshot {
             Some(rng) => {
                 w.bool(true);
                 write_rng(&mut w, rng);
+            }
+            None => w.bool(false),
+        }
+        match &st.avail {
+            Some(avail) => {
+                w.bool(true);
+                w.u64(avail.len() as u64);
+                for a in avail {
+                    w.bool(a.on);
+                    w.u64(a.missed);
+                    write_rng(&mut w, &a.rng);
+                }
             }
             None => w.bool(false),
         }
@@ -440,6 +476,20 @@ impl Snapshot {
         } else {
             None
         };
+        let avail = if r.bool("state.avail")? {
+            let na = r.seq_len(1 + 8 + 8, "state.avail")?;
+            let mut avail = Vec::with_capacity(na);
+            for _ in 0..na {
+                avail.push(AvailCkpt {
+                    on: r.bool("avail.on")?,
+                    missed: r.u64("avail.missed")?,
+                    rng: read_rng(&mut r, "avail.rng")?,
+                });
+            }
+            Some(avail)
+        } else {
+            None
+        };
         let mut runtime_nanos = [0u64; 4];
         for n in &mut runtime_nanos {
             *n = r.u64("state.runtime_nanos")?;
@@ -468,6 +518,7 @@ impl Snapshot {
                 clients,
                 server_rng,
                 sched_rng,
+                avail,
                 runtime_nanos,
             },
             trace: Trace { algorithm: trace_algorithm, records },
@@ -507,6 +558,7 @@ mod tests {
             round: 3,
             scheduled: 5,
             aggregated: 4,
+            departed: 1,
             wire_bytes: 12_345,
             energy: 0.75,
             cum_energy: 2.5,
@@ -551,6 +603,15 @@ mod tests {
                     .collect(),
                 server_rng: rng(7),
                 sched_rng: Some(rng(9)),
+                avail: Some(
+                    (0..3)
+                        .map(|i| AvailCkpt {
+                            on: i != 1,
+                            missed: i as u64 * 3,
+                            rng: rng(2000 + i as u64),
+                        })
+                        .collect(),
+                ),
                 runtime_nanos: [1, 2, 3, 4],
             },
             trace,
@@ -573,6 +634,10 @@ mod tests {
         assert!(back.trace.records[0].train_loss.is_nan());
         assert_eq!(back.trace.records.len(), 2);
         assert_eq!(back.state.sched_rng, snap.state.sched_rng);
+        let avail = back.state.avail.as_ref().unwrap();
+        assert_eq!(avail.len(), 3);
+        assert!(!avail[1].on && avail[2].missed == 6);
+        assert_eq!(back.trace.records[0].departed, 1);
     }
 
     #[test]

@@ -87,6 +87,7 @@ pub fn ga_budget(draws: usize, seed: u64) -> Vec<GaBudgetRow> {
                 theta_max: &theta_max,
                 q_prev: &q_prev,
                 queues: &queues,
+                avail: None,
             };
             let greedy = greedy_allocation(&inp);
             let (jg, _) = evaluate_allocation(&inp, &greedy, Case5Mode::Taylor);

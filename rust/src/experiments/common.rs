@@ -256,6 +256,22 @@ pub fn run_scenario_ckpt(
     let mut server = Server::new(params, rt, fed, sched, seed)?;
     server.eval_every = scenario.train.eval_every;
     server.threads = threads;
+    // Scenario-gated churn: install the availability process *before*
+    // any resume — restore_state requires the snapshot's availability
+    // presence to match the server's (same-scenario resume guarantees
+    // it), and the process is seeded from the run seed (salted
+    // internally), independent of the scheduler stream.
+    if scenario.train.churn {
+        server.set_churn(
+            crate::fl::avail::AvailCfg {
+                p_join: scenario.train.p_join,
+                p_leave: scenario.train.p_leave,
+                over_select: scenario.train.over_select,
+                staleness: scenario.train.staleness,
+            },
+            seed,
+        );
+    }
 
     // The resolved scenario is part of the snapshot's identity: resume
     // compares canonical renders, so *any* drifted knob — not just the

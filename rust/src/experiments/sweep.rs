@@ -95,6 +95,13 @@ pub struct SweepRow {
     pub wire_bytes: u64,
     /// Total dropouts (scheduled − aggregated).
     pub dropouts: usize,
+    /// Total clients scheduled across the run (participation
+    /// denominator for churn scenarios).
+    pub scheduled: usize,
+    /// Total uploads aggregated across the run.
+    pub aggregated: usize,
+    /// Total mid-round departures (churn; 0 otherwise).
+    pub departed: usize,
     /// Where the JSONL trace was written.
     pub trace_path: PathBuf,
 }
@@ -433,13 +440,16 @@ fn summarize(trace: &Trace, sc: &Scenario, alg: &str, seed: u64, path: PathBuf) 
         cum_energy: trace.total_energy(),
         wire_bytes: trace.total_wire_bytes(),
         dropouts: trace.total_dropouts(),
+        scheduled: trace.total_scheduled(),
+        aggregated: trace.total_aggregated(),
+        departed: trace.total_departed(),
         trace_path: path,
     }
 }
 
 /// `summary.csv` column set, shared by [`write_summary`] and
 /// [`read_summary`] so the resume path can never drift from the writer.
-const SUMMARY_COLUMNS: [&str; 10] = [
+const SUMMARY_COLUMNS: [&str; 13] = [
     "scenario",
     "algorithm",
     "seed",
@@ -449,6 +459,9 @@ const SUMMARY_COLUMNS: [&str; 10] = [
     "cum_energy_j",
     "wire_bytes",
     "dropouts",
+    "scheduled",
+    "aggregated",
+    "departed",
     "trace_file",
 ];
 
@@ -471,6 +484,9 @@ pub fn write_summary(rows: &[SweepRow], out_dir: &std::path::Path) -> Result<()>
                 format!("{:.9}", r.cum_energy),
                 r.wire_bytes.to_string(),
                 r.dropouts.to_string(),
+                r.scheduled.to_string(),
+                r.aggregated.to_string(),
+                r.departed.to_string(),
                 r.trace_path
                     .file_name()
                     .map(|f| f.to_string_lossy().into_owned())
@@ -531,7 +547,10 @@ pub fn read_summary(out_dir: &std::path::Path) -> Result<Vec<SweepRow>> {
             cum_energy: cells[6].parse().map_err(|_| bad("cum_energy_j", cells[6]))?,
             wire_bytes: cells[7].parse().map_err(|_| bad("wire_bytes", cells[7]))?,
             dropouts: cells[8].parse().map_err(|_| bad("dropouts", cells[8]))?,
-            trace_path: out_dir.join(cells[9]),
+            scheduled: cells[9].parse().map_err(|_| bad("scheduled", cells[9]))?,
+            aggregated: cells[10].parse().map_err(|_| bad("aggregated", cells[10]))?,
+            departed: cells[11].parse().map_err(|_| bad("departed", cells[11]))?,
+            trace_path: out_dir.join(cells[12]),
         });
     }
     Ok(rows)
@@ -552,6 +571,7 @@ pub fn print(rows: &[SweepRow]) {
                 table::fnum(r.cum_energy),
                 table::fnum(r.wire_bytes as f64),
                 r.dropouts.to_string(),
+                r.departed.to_string(),
             ]
         })
         .collect();
@@ -568,7 +588,8 @@ pub fn print(rows: &[SweepRow]) {
                 "best acc",
                 "energy (J)",
                 "wire (B)",
-                "dropouts"
+                "dropouts",
+                "departed"
             ],
             &body
         )
@@ -673,6 +694,9 @@ mod tests {
             cum_energy: 1.25,
             wire_bytes: 4242,
             dropouts: 0,
+            scheduled: 20,
+            aggregated: 20,
+            departed: 0,
             trace_path: PathBuf::from("x/s__qccf__seed1.jsonl"),
         }];
         let dir = std::env::temp_dir().join("qccf_sweep_summary_test");
@@ -702,6 +726,9 @@ mod tests {
                 cum_energy: 1.25,
                 wire_bytes: 4242,
                 dropouts: 3,
+                scheduled: 120,
+                aggregated: 117,
+                departed: 2,
                 trace_path: PathBuf::from("ignored/paper-femnist__qccf__seed1.jsonl"),
             },
             SweepRow {
@@ -714,6 +741,9 @@ mod tests {
                 cum_energy: 0.5,
                 wire_bytes: 0,
                 dropouts: 0,
+                scheduled: 8,
+                aggregated: 8,
+                departed: 0,
                 trace_path: PathBuf::from("ignored/zipf-skew__same-size__seed9.jsonl"),
             },
         ];
@@ -729,6 +759,9 @@ mod tests {
             assert_eq!(a.rounds, b.rounds);
             assert_eq!(a.wire_bytes, b.wire_bytes);
             assert_eq!(a.dropouts, b.dropouts);
+            assert_eq!(a.scheduled, b.scheduled);
+            assert_eq!(a.aggregated, b.aggregated);
+            assert_eq!(a.departed, b.departed);
             assert!(
                 (a.final_acc == b.final_acc) || (a.final_acc.is_nan() && b.final_acc.is_nan())
             );

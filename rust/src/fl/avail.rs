@@ -1,0 +1,339 @@
+//! Client **availability layer**: a seeded Markov on/off process per
+//! client, driving the churn-tolerant round engine (scenario knobs
+//! `churn`, `p_join`, `p_leave`, `over_select`, `staleness` — see
+//! `docs/SCENARIOS.md`).
+//!
+//! # Determinism contract
+//!
+//! Availability draws come from **per-client RNG streams** forked off a
+//! private root seeded from the run seed (salted so it can never alias
+//! the server stream `Rng::seed_from(seed)` or the scheduler stream
+//! `seed·31 + 7`). The streams are forked once, serially, in ascending
+//! client-id order at construction, and one Markov draw per client per
+//! round advances only that client's stream — so the availability
+//! history is a pure function of `(seed, U, cfg, #ticks)`:
+//!
+//! * **thread-count invariant** — no draw happens inside the worker
+//!   fan-out, so `--threads` cannot reorder or split any stream;
+//! * **iteration-order invariant** — [`AvailProcess::tick_one`] touches
+//!   exactly one stream, so ticking clients in any order produces the
+//!   same state (`proptest_churn.rs` pins both properties);
+//! * **checkpointable** — the complete per-client state (on/off flag,
+//!   missed-round counter, stream position) round-trips through
+//!   [`AvailProcess::checkpoint`] / [`AvailProcess::restore`] as
+//!   `ckpt::AvailCkpt` records, so a resumed run replays the exact
+//!   availability future an uninterrupted run would have seen.
+//!
+//! # Round protocol
+//!
+//! The server consults the process twice per round:
+//!
+//! 1. **decide time** — [`AvailProcess::mask`] is the candidate set the
+//!    scheduler may draw from (`RoundInputs::avail`);
+//! 2. **post-decide** — one [`AvailProcess::tick`] advances the Markov
+//!    chain; a scheduled client whose flag flips off is a **mid-round
+//!    departure**, treated exactly like a C4 deadline miss (energy and
+//!    airtime spent, upload discarded — `exec::ExecOpts::departed`).
+//!
+//! [`aggregation_target`] implements over-selection: the scheduler
+//! fills up to `(1+β)·N` seats and the engine aggregates only the first
+//! `N = ceil(scheduled / (1+β))` survivors in ascending client order.
+//! [`AvailProcess::stale_scale`] implements the opt-in
+//! staleness-weighted aggregation path: a client aggregated `m` rounds
+//! ago contributes effective data mass `D_i / (1 + m)` to the eq. (2)
+//! fold weights (`m = 0` keeps the multiplier at exactly `1.0`, so the
+//! default path's weights are bit-identical).
+
+use anyhow::{ensure, Result};
+
+use crate::ckpt::AvailCkpt;
+use crate::util::rng::Rng;
+
+/// Salt mixed into the run seed for the availability root stream:
+/// `"AVAIL_V1"` in ASCII. Keeps the root distinct from every other
+/// stream the same run seed feeds.
+const AVAIL_SEED_SALT: u64 = 0x4156_4149_4C5F_5631;
+
+/// Churn knobs, resolved from the scenario's `[train]` section.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AvailCfg {
+    /// Per-round probability an **offline** client rejoins.
+    pub p_join: f64,
+    /// Per-round probability an **online** client departs.
+    pub p_leave: f64,
+    /// Over-selection factor β ≥ 0: the engine aggregates only the
+    /// first `ceil(scheduled / (1+β))` survivors (0 = aggregate all).
+    pub over_select: f64,
+    /// Opt into staleness-weighted aggregation
+    /// ([`AvailProcess::stale_scale`]).
+    pub staleness: bool,
+}
+
+impl Default for AvailCfg {
+    fn default() -> AvailCfg {
+        AvailCfg { p_join: 0.25, p_leave: 0.1, over_select: 0.0, staleness: false }
+    }
+}
+
+/// The over-selection aggregation target `N = ceil(scheduled / (1+β))`.
+/// Always in `1 ..= scheduled` for `scheduled ≥ 1` (β ≤ 0 or an empty
+/// round degrade to the identity), so over-selection can shrink a
+/// round's aggregate but never empty it by itself.
+pub fn aggregation_target(scheduled: usize, over_select: f64) -> usize {
+    if scheduled == 0 || !(over_select > 0.0) {
+        return scheduled;
+    }
+    ((scheduled as f64) / (1.0 + over_select)).ceil() as usize
+}
+
+/// Per-client seeded Markov availability process. See the module docs
+/// for the determinism and checkpoint contracts.
+#[derive(Clone, Debug)]
+pub struct AvailProcess {
+    cfg: AvailCfg,
+    /// Current on/off flag per client. Every client starts **on** (the
+    /// chain's first transition happens after round 1's decide stage).
+    on: Vec<bool>,
+    /// Rounds since the client's upload last made it into an aggregate
+    /// (0 = aggregated last round, or never left the initial state).
+    missed: Vec<u64>,
+    /// Per-client Markov streams, forked in id order at construction.
+    rngs: Vec<Rng>,
+}
+
+impl AvailProcess {
+    /// Build the process for `u` clients from the run seed. Forks the
+    /// per-client streams serially in ascending id order — the only
+    /// place any ordering enters, and it is fixed.
+    pub fn new(u: usize, cfg: AvailCfg, seed: u64) -> AvailProcess {
+        let mut root = Rng::seed_from(seed ^ AVAIL_SEED_SALT);
+        AvailProcess {
+            cfg,
+            on: vec![true; u],
+            missed: vec![0; u],
+            rngs: (0..u).map(|i| root.fork(i as u64)).collect(),
+        }
+    }
+
+    /// The configured knobs.
+    pub fn cfg(&self) -> &AvailCfg {
+        &self.cfg
+    }
+
+    /// Number of clients.
+    pub fn len(&self) -> usize {
+        self.on.len()
+    }
+
+    /// True when the process tracks no clients.
+    pub fn is_empty(&self) -> bool {
+        self.on.is_empty()
+    }
+
+    /// The current availability mask (decide-time candidate set).
+    pub fn mask(&self) -> &[bool] {
+        &self.on
+    }
+
+    /// True when nobody is available (the engine short-circuits the
+    /// round before invoking the scheduler).
+    pub fn all_off(&self) -> bool {
+        self.on.iter().all(|&o| !o)
+    }
+
+    /// Advance client `i`'s Markov chain by one transition — exactly
+    /// one draw from client `i`'s private stream, touching no other
+    /// state, which is what makes [`AvailProcess::tick`] invariant to
+    /// iteration order.
+    pub fn tick_one(&mut self, i: usize) {
+        let flip = if self.on[i] {
+            self.rngs[i].chance(self.cfg.p_leave)
+        } else {
+            self.rngs[i].chance(self.cfg.p_join)
+        };
+        if flip {
+            self.on[i] = !self.on[i];
+        }
+    }
+
+    /// Advance every client by one transition (ascending id order —
+    /// equivalent to any other order, see [`AvailProcess::tick_one`]).
+    pub fn tick(&mut self) {
+        for i in 0..self.on.len() {
+            self.tick_one(i);
+        }
+    }
+
+    /// Trace-driven override: force the availability mask to `row`
+    /// (e.g. replaying a measured device-availability trace instead of
+    /// the Markov chain). Does not advance any stream; callers driving
+    /// traces own the alignment of rows to rounds across a resume.
+    pub fn override_row(&mut self, row: &[bool]) {
+        assert_eq!(row.len(), self.on.len(), "trace row length != client count");
+        self.on.copy_from_slice(row);
+    }
+
+    /// End-of-round bookkeeping for the staleness counters: every
+    /// client's `missed` advances by one round, then the clients whose
+    /// uploads made this round's aggregate reset to 0.
+    pub fn note_round(&mut self, aggregated_ids: &[usize]) {
+        for m in &mut self.missed {
+            *m += 1;
+        }
+        for &i in aggregated_ids {
+            self.missed[i] = 0;
+        }
+    }
+
+    /// Rounds since client `i` last contributed to an aggregate.
+    pub fn missed(&self, i: usize) -> u64 {
+        self.missed[i]
+    }
+
+    /// The staleness multiplier `1 / (1 + missed)` scaling client `i`'s
+    /// effective data mass in the fold weights. Exactly `1.0` for a
+    /// fresh client (IEEE-exact: `D · 1.0 == D`), decaying harmonically
+    /// with the gap — always finite, positive, and ≤ 1.
+    pub fn stale_scale(&self, i: usize) -> f64 {
+        1.0 / (1.0 + self.missed[i] as f64)
+    }
+
+    /// Capture the complete per-client state for a snapshot.
+    pub fn checkpoint(&self) -> Vec<AvailCkpt> {
+        (0..self.on.len())
+            .map(|i| AvailCkpt {
+                on: self.on[i],
+                missed: self.missed[i],
+                rng: self.rngs[i].state(),
+            })
+            .collect()
+    }
+
+    /// Restore from a snapshot's per-client records (inverse of
+    /// [`AvailProcess::checkpoint`]). The config is not part of the
+    /// record — the caller re-derives it from the scenario, exactly as
+    /// the server RNG seeds are re-derived on resume.
+    pub fn restore(&mut self, state: &[AvailCkpt]) -> Result<()> {
+        ensure!(
+            state.len() == self.on.len(),
+            "availability snapshot holds {} clients, process has {}",
+            state.len(),
+            self.on.len()
+        );
+        for (i, st) in state.iter().enumerate() {
+            self.on[i] = st.on;
+            self.missed[i] = st.missed;
+            self.rngs[i].restore(&st.rng);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(p_join: f64, p_leave: f64) -> AvailCfg {
+        AvailCfg { p_join, p_leave, ..AvailCfg::default() }
+    }
+
+    #[test]
+    fn same_seed_same_history_any_tick_order() {
+        let u = 37;
+        let mut a = AvailProcess::new(u, cfg(0.3, 0.2), 42);
+        let mut b = AvailProcess::new(u, cfg(0.3, 0.2), 42);
+        for round in 0..50 {
+            a.tick();
+            // Reverse iteration order must not change anything — each
+            // tick touches exactly one private stream.
+            for i in (0..u).rev() {
+                b.tick_one(i);
+            }
+            assert_eq!(a.mask(), b.mask(), "round {round}");
+        }
+        let mut c = AvailProcess::new(u, cfg(0.3, 0.2), 43);
+        c.tick();
+        a = AvailProcess::new(u, cfg(0.3, 0.2), 42);
+        a.tick();
+        assert_ne!(a.mask(), c.mask(), "different seeds should diverge (u = {u})");
+    }
+
+    #[test]
+    fn p_leave_zero_pins_always_available() {
+        let mut a = AvailProcess::new(25, cfg(0.5, 0.0), 7);
+        for _ in 0..100 {
+            a.tick();
+            assert!(a.mask().iter().all(|&o| o));
+        }
+        assert!(!a.all_off());
+    }
+
+    #[test]
+    fn p_leave_one_departs_everyone() {
+        let mut a = AvailProcess::new(25, cfg(0.0, 1.0), 7);
+        a.tick();
+        assert!(a.all_off());
+        a.tick(); // p_join = 0: nobody comes back
+        assert!(a.all_off());
+    }
+
+    #[test]
+    fn checkpoint_restore_replays_identical_future() {
+        let u = 19;
+        let mut a = AvailProcess::new(u, cfg(0.3, 0.25), 99);
+        for _ in 0..7 {
+            a.tick();
+        }
+        a.note_round(&[2, 5]);
+        let snap = a.checkpoint();
+        let mut b = AvailProcess::new(u, cfg(0.3, 0.25), 99);
+        b.restore(&snap).unwrap();
+        for round in 0..20 {
+            a.tick();
+            b.tick();
+            assert_eq!(a.mask(), b.mask(), "round {round}");
+            for i in 0..u {
+                assert_eq!(a.missed(i), b.missed(i), "round {round} client {i}");
+            }
+        }
+        // Length mismatch is a typed refusal, not a silent truncation.
+        let mut c = AvailProcess::new(u + 1, cfg(0.3, 0.25), 99);
+        assert!(c.restore(&snap).is_err());
+    }
+
+    #[test]
+    fn note_round_tracks_rounds_since_aggregation() {
+        let mut a = AvailProcess::new(3, AvailCfg::default(), 1);
+        assert_eq!(a.stale_scale(0), 1.0);
+        a.note_round(&[0]);
+        assert_eq!((a.missed(0), a.missed(1)), (0, 1));
+        a.note_round(&[1]);
+        assert_eq!((a.missed(0), a.missed(1), a.missed(2)), (1, 0, 2));
+        assert_eq!(a.stale_scale(0), 0.5);
+        assert_eq!(a.stale_scale(2), 1.0 / 3.0);
+        assert!(a.stale_scale(2) > 0.0 && a.stale_scale(2) <= 1.0);
+    }
+
+    #[test]
+    fn aggregation_target_bounds() {
+        assert_eq!(aggregation_target(0, 0.5), 0);
+        assert_eq!(aggregation_target(10, 0.0), 10);
+        assert_eq!(aggregation_target(10, -1.0), 10);
+        assert_eq!(aggregation_target(10, 0.25), 8);
+        assert_eq!(aggregation_target(10, 0.5), 7);
+        assert_eq!(aggregation_target(1, 9.0), 1);
+        for s in 1..40usize {
+            for beta in [0.0, 0.1, 0.5, 1.0, 3.0] {
+                let n = aggregation_target(s, beta);
+                assert!(n >= 1 && n <= s, "s={s} beta={beta} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn override_row_forces_mask() {
+        let mut a = AvailProcess::new(4, AvailCfg::default(), 5);
+        a.override_row(&[false, true, false, true]);
+        assert_eq!(a.mask(), &[false, true, false, true]);
+    }
+}

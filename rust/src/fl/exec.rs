@@ -402,6 +402,49 @@ impl Drop for CommitOnDrop<'_> {
     }
 }
 
+/// Churn-era execution options (`fl::avail`): mid-round departures,
+/// the over-selection aggregation cap, and staleness weighting. The
+/// default value is the exact legacy behavior — [`execute_round`] is a
+/// thin wrapper over [`execute_round_with`] at `ExecOpts::default()`,
+/// so the churn-off path shares every instruction with the old engine.
+#[derive(Default)]
+pub struct ExecOpts {
+    /// Per-task mid-round departure flags (task order). A departed
+    /// client is treated exactly like a C4 miss: it trains, its energy
+    /// and airtime are spent, its state writebacks happen — but its
+    /// upload never reaches the fold. `None` = nobody departs.
+    pub departed: Option<Vec<bool>>,
+    /// Over-selection aggregation target N
+    /// ([`crate::fl::avail::aggregation_target`]): only the first N
+    /// survivors in ascending task order are aggregated; later
+    /// survivors are demoted to the C4-miss path. `None` = aggregate
+    /// every survivor.
+    pub n_target: Option<usize>,
+    /// Per-task staleness multipliers (task order) scaling each
+    /// client's **effective data mass** in the eq. (2) fold weights:
+    /// `w_i ∝ D_i · scale_i` over survivors. `None` = all `1.0`
+    /// (bit-identical to the unscaled path).
+    pub stale_scale: Option<Vec<f64>>,
+}
+
+/// Apply the over-selection cap in place: keep the first `n_target`
+/// `true` flags in ascending task order, demote every later survivor
+/// to `false`. Returns the surviving count after the cap. With
+/// `n_target >= count(true)` this is the identity.
+pub fn apply_aggregation_cap(survive: &mut [bool], n_target: usize) -> usize {
+    let mut kept = 0usize;
+    for s in survive.iter_mut() {
+        if *s {
+            if kept < n_target {
+                kept += 1;
+            } else {
+                *s = false;
+            }
+        }
+    }
+    kept
+}
+
 /// The executed round, reduced to what the server's later stages need.
 /// Per-client detail stays in `outcomes` (ascending client id).
 pub struct ExecOutput {
@@ -411,8 +454,17 @@ pub struct ExecOutput {
     pub aggregate: Option<Vec<f32>>,
     /// Clients scheduled this round.
     pub scheduled: usize,
-    /// Uploads that survived C4 (dropouts = scheduled − aggregated).
+    /// Uploads folded into the aggregate: C4 survivors minus mid-round
+    /// departures minus over-selection demotions.
     pub aggregated: usize,
+    /// Scheduled clients that departed mid-round
+    /// ([`ExecOpts::departed`]) — their energy/airtime is still
+    /// counted, like any C4 miss.
+    pub departed: usize,
+    /// Final per-task survival flags (task order, after departures and
+    /// the over-selection cap) — the clients whose uploads made the
+    /// aggregate, for the server's staleness bookkeeping.
+    pub survived: Vec<bool>,
     /// Σ realized payload bytes over scheduled clients (transmitted
     /// whether or not the upload survived C4 — airtime is spent either
     /// way). Per upload this equals `ceil(eq. (5)/8)`.
@@ -462,25 +514,65 @@ pub fn execute_round(
     threads: usize,
     scratch: &mut Vec<WorkerScratch>,
 ) -> Result<ExecOutput> {
+    execute_round_with(p, rt, theta, tasks, threads, scratch, &ExecOpts::default())
+}
+
+/// [`execute_round`] with churn-era options: departures, the
+/// over-selection cap, and staleness-scaled fold weights. Survival —
+/// and with it every fold weight — is still a pure function of the
+/// decisions and the options, computed **before** any training runs,
+/// so the streaming-aggregation determinism contract is unchanged.
+pub fn execute_round_with(
+    p: &SystemParams,
+    rt: &Runtime,
+    theta: &[f32],
+    tasks: Vec<ClientTask<'_>>,
+    threads: usize,
+    scratch: &mut Vec<WorkerScratch>,
+    opts: &ExecOpts,
+) -> Result<ExecOutput> {
     let scheduled = tasks.len();
+    if let Some(d) = &opts.departed {
+        anyhow::ensure!(d.len() == scheduled, "departed flags != task count");
+    }
+    if let Some(s) = &opts.stale_scale {
+        anyhow::ensure!(s.len() == scheduled, "stale_scale != task count");
+    }
 
     // C4 survival — and with it the renormalized aggregation weights —
     // is decided by (f, q, rate) alone, so compute both up front and
     // let uploads stream straight into the accumulator. A zero
     // surviving data mass (all survivors empty) yields no weights at
     // all: the fold runs with w = 0 and the aggregate is discarded
-    // below, instead of dividing by zero into NaN weights.
-    let survive: Vec<bool> = tasks
+    // below, instead of dividing by zero into NaN weights. A mid-round
+    // departure or an over-selection demotion rides the same flag, so
+    // the all-departed round reuses the same no-aggregate guard.
+    let mut survive: Vec<bool> = tasks
         .iter()
-        .map(|t| {
-            survives_deadline(
-                p,
-                realized_latency(p, t.size, &t.decision, t.cpu_scale),
-                t.deadline_exempt,
-            )
+        .enumerate()
+        .map(|(seq, t)| {
+            let gone = opts.departed.as_ref().is_some_and(|d| d[seq]);
+            !gone
+                && survives_deadline(
+                    p,
+                    realized_latency(p, t.size, &t.decision, t.cpu_scale),
+                    t.deadline_exempt,
+                )
         })
         .collect();
-    let sizes: Vec<f64> = tasks.iter().map(|t| t.size).collect();
+    if let Some(n) = opts.n_target {
+        apply_aggregation_cap(&mut survive, n);
+    }
+    let departed =
+        opts.departed.as_ref().map_or(0, |d| d.iter().filter(|&&g| g).count());
+    let sizes: Vec<f64> = match &opts.stale_scale {
+        // Effective data mass under staleness weighting; `scale = 1`
+        // multiplies exactly (IEEE), keeping fresh clients bit-equal.
+        Some(scale) => {
+            tasks.iter().zip(scale).map(|(t, s)| t.size * s).collect()
+        }
+        None => tasks.iter().map(|t| t.size).collect(),
+    };
     let weights = survivor_weights(&sizes, &survive);
     let has_data_mass = weights.is_some();
     let weights: Vec<f32> = weights.unwrap_or_else(|| vec![0.0; scheduled]);
@@ -520,6 +612,8 @@ pub fn execute_round(
         aggregate,
         scheduled,
         aggregated,
+        departed,
+        survived: survive,
         wire_bytes: 0,
         round_energy: 0.0,
         max_latency: 0.0,
@@ -694,6 +788,21 @@ mod tests {
         assert_eq!(w[1], 0.0);
         assert_eq!(w[2], 0.25);
         assert!(w.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn aggregation_cap_keeps_first_n_survivors() {
+        let mut s = vec![true, false, true, true, false, true];
+        assert_eq!(apply_aggregation_cap(&mut s, 2), 2);
+        assert_eq!(s, vec![true, false, true, false, false, false]);
+        // n_target >= survivor count is the identity.
+        let mut s = vec![true, false, true];
+        assert_eq!(apply_aggregation_cap(&mut s, 5), 2);
+        assert_eq!(s, vec![true, false, true]);
+        // n_target = 0 demotes everyone (the no-aggregate guard path).
+        let mut s = vec![true, true];
+        assert_eq!(apply_aggregation_cap(&mut s, 0), 0);
+        assert_eq!(s, vec![false, false]);
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //! a run checkpointed mid-horizon resumes bit-identically
 //! (`docs/CHECKPOINTS.md`).
 
+pub mod avail;
 pub mod exec;
 
 use anyhow::Result;
@@ -113,6 +114,9 @@ pub struct Server<'rt> {
     /// Per-worker reusable encode/noise buffers, kept alive across
     /// rounds (grown on demand when `threads` changes).
     scratch: Vec<exec::WorkerScratch>,
+    /// Client-availability process ([`avail`]); `None` = every client
+    /// is always available (the legacy engine, bit-for-bit).
+    churn: Option<avail::AvailProcess>,
 }
 
 impl<'rt> Server<'rt> {
@@ -192,12 +196,27 @@ impl<'rt> Server<'rt> {
             eval_every: 2,
             threads: threadpool::default_threads(),
             scratch: Vec::new(),
+            churn: None,
         })
     }
 
     /// Name of the scheduler driving the decisions.
     pub fn scheduler_name(&self) -> &'static str {
         self.scheduler.name()
+    }
+
+    /// Opt into client churn: install the seeded availability process
+    /// (`seed` is the run seed — [`avail::AvailProcess`] salts it, so
+    /// the availability streams never alias the server or scheduler
+    /// streams). Call before [`Server::restore_state`] on a resume; the
+    /// snapshot must then carry matching availability state.
+    pub fn set_churn(&mut self, cfg: avail::AvailCfg, seed: u64) {
+        self.churn = Some(avail::AvailProcess::new(self.params.num_clients, cfg, seed));
+    }
+
+    /// The availability process, when churn is on (diagnostics/tests).
+    pub fn churn(&self) -> Option<&avail::AvailProcess> {
+        self.churn.as_ref()
     }
 
     /// Round-2 recalibration of ε1/ε2 (see `SystemParams::auto_eps`):
@@ -241,6 +260,10 @@ impl<'rt> Server<'rt> {
         let sigma2: Vec<f64> = self.clients.iter().map(|c| c.stats.sigma2()).collect();
         let theta_max: Vec<f64> = self.clients.iter().map(|c| c.theta_max).collect();
         let q_prev: Vec<f64> = self.clients.iter().map(|c| c.q_prev).collect();
+        // Decide-time candidate mask: the availability state *before*
+        // this round's Markov transition (the transition itself runs
+        // between decide and execute — mid-round departures).
+        let avail_mask: Option<Vec<bool>> = self.churn.as_ref().map(|a| a.mask().to_vec());
         let inputs = RoundInputs {
             params: &p,
             round: self.round,
@@ -252,9 +275,26 @@ impl<'rt> Server<'rt> {
             theta_max: &theta_max,
             q_prev: &q_prev,
             queues: &self.queues,
+            avail: avail_mask.as_deref(),
         };
         let t_decide = std::time::Instant::now();
-        let decision: RoundDecision = self.scheduler.decide(&inputs);
+        let decision: RoundDecision = if avail_mask
+            .as_ref()
+            .is_some_and(|m| m.iter().all(|&on| !on))
+        {
+            // Nobody is available: an empty round, decided without
+            // invoking the scheduler (whose search spaces degenerate at
+            // zero candidates). Deterministic on resume because the
+            // mask itself is.
+            RoundDecision {
+                assignments: vec![None; self.params.num_clients],
+                j0: 0.0,
+                evals: 0,
+                deadline_exempt: false,
+            }
+        } else {
+            self.scheduler.decide(&inputs)
+        };
         let decide_seconds = t_decide.elapsed().as_secs_f64();
         if crate::util::logging::enabled(crate::util::logging::Level::Debug) {
             let greedy = crate::sched::greedy_allocation(&inputs);
@@ -280,10 +320,46 @@ impl<'rt> Server<'rt> {
         (decision, DecideCtx { w_full, g2, sigma2, decide_seconds })
     }
 
+    /// Between decide and execute under churn: advance every client's
+    /// Markov chain by one transition and derive the round's execution
+    /// options — mid-round departures (scheduled clients whose flag
+    /// flipped off), the over-selection aggregation target, and the
+    /// pre-tick staleness multipliers (decision-pure: captured before
+    /// the transition, like everything else the fold weights depend
+    /// on). Without churn this is `ExecOpts::default()` — the legacy
+    /// path, untouched.
+    fn churn_opts(&mut self, decision: &RoundDecision) -> exec::ExecOpts {
+        let Some(av) = &mut self.churn else {
+            return exec::ExecOpts::default();
+        };
+        let cfg = *av.cfg();
+        let sched_ids: Vec<usize> = decision
+            .assignments
+            .iter()
+            .enumerate()
+            .filter_map(|(i, d)| d.is_some().then_some(i))
+            .collect();
+        let stale_scale: Option<Vec<f64>> =
+            cfg.staleness.then(|| sched_ids.iter().map(|&i| av.stale_scale(i)).collect());
+        av.tick();
+        let departed: Vec<bool> = sched_ids.iter().map(|&i| !av.mask()[i]).collect();
+        exec::ExecOpts {
+            departed: Some(departed),
+            n_target: Some(avail::aggregation_target(sched_ids.len(), cfg.over_select)),
+            stale_scale,
+        }
+    }
+
     /// Stage 2 — fan the scheduled clients out over the worker pool
     /// (`self.threads`; 1 = serial) and write the advanced per-client
     /// state back in client-id order, exactly as the serial loop did.
-    fn stage_execute(&mut self, decision: &RoundDecision) -> Result<exec::ExecOutput> {
+    /// Departed clients get the same writebacks as C4 misses — they
+    /// trained and transmitted; only their upload is lost.
+    fn stage_execute(
+        &mut self,
+        decision: &RoundDecision,
+        opts: &exec::ExecOpts,
+    ) -> Result<exec::ExecOutput> {
         let t_compute = std::time::Instant::now();
         let mut tasks: Vec<exec::ClientTask<'_>> = Vec::new();
         for (i, d) in decision.assignments.iter().enumerate() {
@@ -298,13 +374,14 @@ impl<'rt> Server<'rt> {
                 rng: self.clients[i].rng.clone(),
             });
         }
-        let mut out = exec::execute_round(
+        let mut out = exec::execute_round_with(
             &self.params,
             self.runtime,
             &self.theta,
             tasks,
             self.threads,
             &mut self.scratch,
+            opts,
         )?;
         for oc in &out.outcomes {
             let c = &mut self.clients[oc.id];
@@ -389,6 +466,7 @@ impl<'rt> Server<'rt> {
             round: self.round,
             scheduled: exec_out.scheduled,
             aggregated: exec_out.aggregated,
+            departed: exec_out.departed,
             wire_bytes: exec_out.wire_bytes,
             energy: exec_out.round_energy,
             cum_energy: 0.0, // filled by run()
@@ -421,9 +499,21 @@ impl<'rt> Server<'rt> {
             self.recalibrate_eps();
         }
         let (decision, ctx) = self.stage_decide();
-        let mut exec_out = self.stage_execute(&decision)?;
+        let opts = self.churn_opts(&decision);
+        let mut exec_out = self.stage_execute(&decision, &opts)?;
         self.stage_aggregate(&mut exec_out);
         self.stage_update_queues(&ctx, &exec_out);
+        // Staleness bookkeeping: one round passed for everyone, and the
+        // clients whose uploads made the aggregate reset their gap.
+        if let Some(av) = &mut self.churn {
+            let agg_ids: Vec<usize> = exec_out
+                .outcomes
+                .iter()
+                .zip(&exec_out.survived)
+                .filter_map(|(oc, &s)| s.then_some(oc.id))
+                .collect();
+            av.note_round(&agg_ids);
+        }
         self.finish_round(&ctx, &exec_out)
     }
 
@@ -449,7 +539,9 @@ impl<'rt> Server<'rt> {
     /// subsystem: round index, θ, virtual queues (with history), the
     /// possibly auto-recalibrated ε1/ε2, every client's estimator /
     /// θ^max / `q_prev` anchor / private RNG stream, the server's
-    /// master stream, the scheduler's stream (if it owns one), and the
+    /// master stream, the scheduler's stream (if it owns one), the
+    /// availability process (when churn is on — per-client on/off flag,
+    /// missed counter and Markov stream), and the
     /// runtime's profiling clock (captured as observed; restored only
     /// by exclusive-runtime callers — see [`Server::restore_state`]).
     /// Everything *not* captured here —
@@ -480,6 +572,7 @@ impl<'rt> Server<'rt> {
                 .collect(),
             server_rng: self.rng.state(),
             sched_rng: self.scheduler.rng_state(),
+            avail: self.churn.as_ref().map(|a| a.checkpoint()),
             runtime_nanos: self.runtime.exec_nanos_snapshot(),
         }
     }
@@ -508,6 +601,16 @@ impl<'rt> Server<'rt> {
             self.scheduler.name(),
             if self.scheduler.rng_state().is_some() { "owns" } else { "has no" },
         );
+        anyhow::ensure!(
+            st.avail.is_some() == self.churn.is_some(),
+            "snapshot {} availability state but the server {} churn — \
+             scenario churn config mismatch",
+            if st.avail.is_some() { "carries" } else { "lacks" },
+            if self.churn.is_some() { "runs with" } else { "runs without" },
+        );
+        if let (Some(av), Some(snap)) = (&mut self.churn, &st.avail) {
+            av.restore(snap)?;
+        }
         self.round = st.round as usize;
         self.params.eps1 = st.eps1;
         self.params.eps2 = st.eps2;

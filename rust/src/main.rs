@@ -578,6 +578,7 @@ fn cmd_decide(args: &Args) -> Result<()> {
         theta_max: &theta_max,
         q_prev: &q_prev,
         queues: &queues,
+        avail: None,
     };
     for alg in ALL_ALGORITHMS {
         let mut s = make_scheduler(alg, seed).unwrap();

@@ -17,6 +17,10 @@ pub struct RoundRecord {
     pub scheduled: usize,
     /// Uploads aggregated (dropouts = scheduled − aggregated).
     pub aggregated: usize,
+    /// Scheduled clients that departed mid-round (churn): their energy
+    /// and wire bytes are spent, but the upload never arrives — a
+    /// subset of the dropouts. Always 0 without churn.
+    pub departed: usize,
     /// Realized bytes on the wire this round, summed over scheduled
     /// uploads: `ceil(eq. (5)/8)` per quantized upload, `4·Z` per raw
     /// one. This is the *transmitted* payload (airtime is spent even by
@@ -102,6 +106,22 @@ impl Trace {
         self.records.iter().map(|r| r.scheduled - r.aggregated).sum()
     }
 
+    /// Total clients scheduled across the run (participation
+    /// accounting for churn scenarios).
+    pub fn total_scheduled(&self) -> usize {
+        self.records.iter().map(|r| r.scheduled).sum()
+    }
+
+    /// Total uploads aggregated across the run.
+    pub fn total_aggregated(&self) -> usize {
+        self.records.iter().map(|r| r.aggregated).sum()
+    }
+
+    /// Total mid-round departures across the run (0 without churn).
+    pub fn total_departed(&self) -> usize {
+        self.records.iter().map(|r| r.departed).sum()
+    }
+
     /// Total realized bytes on the wire across the run (the physical
     /// quantity behind the paper's communication-energy accounting).
     pub fn total_wire_bytes(&self) -> u64 {
@@ -122,6 +142,7 @@ impl Trace {
                 "algorithm",
                 "scheduled",
                 "aggregated",
+                "departed",
                 "energy_j",
                 "cum_energy_j",
                 "train_loss",
@@ -142,6 +163,7 @@ impl Trace {
                 self.algorithm.clone(),
                 r.scheduled.to_string(),
                 r.aggregated.to_string(),
+                r.departed.to_string(),
                 format!("{:.9}", r.energy),
                 format!("{:.9}", r.cum_energy),
                 format!("{:.6}", r.train_loss),
@@ -194,6 +216,7 @@ impl Trace {
                 m.insert("round".into(), Json::Num(r.round as f64));
                 m.insert("scheduled".into(), Json::Num(r.scheduled as f64));
                 m.insert("aggregated".into(), Json::Num(r.aggregated as f64));
+                m.insert("departed".into(), Json::Num(r.departed as f64));
                 m.insert("energy_j".into(), num_or_null(r.energy));
                 m.insert("cum_energy_j".into(), num_or_null(r.cum_energy));
                 m.insert("train_loss".into(), num_or_null(r.train_loss));
@@ -232,6 +255,7 @@ mod tests {
             cum_energy: cum,
             scheduled: 10,
             aggregated: 9,
+            departed: 1,
             wire_bytes: 1500,
             ..Default::default()
         }
@@ -251,6 +275,9 @@ mod tests {
         assert_eq!(t.rounds_to_accuracy(0.95), None);
         assert_eq!(t.total_dropouts(), 4);
         assert_eq!(t.total_wire_bytes(), 4 * 1500);
+        assert_eq!(t.total_scheduled(), 40);
+        assert_eq!(t.total_aggregated(), 36);
+        assert_eq!(t.total_departed(), 4);
     }
 
     #[test]
@@ -276,6 +303,7 @@ mod tests {
             for key in [
                 "scheduled",
                 "aggregated",
+                "departed",
                 "energy_j",
                 "cum_energy_j",
                 "train_loss",

@@ -126,6 +126,13 @@ fn apply(
     let bad_num = |v: &str| format!("`[{section}] {key}`: bad number `{v}`");
     let f = |v: &str| v.parse::<f64>().map_err(|_| bad_num(v));
     let n = |v: &str| v.parse::<usize>().map_err(|_| bad_num(v));
+    let b = |v: &str| match v {
+        "true" | "on" | "1" => Ok(true),
+        "false" | "off" | "0" => Ok(false),
+        other => Err(format!(
+            "`[{section}] {key}`: bad boolean `{other}` (true|false|on|off|1|0)"
+        )),
+    };
     match (section, key) {
         ("scenario", "name") => sc.name = value.to_string(),
         ("scenario", "description") => sc.description = value.to_string(),
@@ -177,19 +184,14 @@ fn apply(
         ("train", "v") => sc.train.v = Some(f(value)?),
         ("train", "tau") => sc.train.tau = Some(n(value)?),
         ("train", "eval_every") => sc.train.eval_every = n(value)?,
-        ("train", "classes") => {
-            sc.train.classes = match value {
-                "true" | "on" | "1" => true,
-                "false" | "off" | "0" => false,
-                other => {
-                    return Err(format!(
-                        "`[train] classes`: bad boolean `{other}` (true|false|on|off|1|0)"
-                    ))
-                }
-            }
-        }
+        ("train", "classes") => sc.train.classes = b(value)?,
         ("train", "class_size_bins") => sc.train.class_size_bins = n(value)?,
         ("train", "class_rate_bins") => sc.train.class_rate_bins = n(value)?,
+        ("train", "churn") => sc.train.churn = b(value)?,
+        ("train", "p_join") => sc.train.p_join = f(value)?,
+        ("train", "p_leave") => sc.train.p_leave = f(value)?,
+        ("train", "over_select") => sc.train.over_select = f(value)?,
+        ("train", "staleness") => sc.train.staleness = b(value)?,
         _ => {
             return Err(format!(
                 "unknown key `[{section}] {key}` (see docs/SCENARIOS.md for the reference)"
@@ -320,6 +322,23 @@ pub fn render(sc: &Scenario) -> String {
     let _ = writeln!(o, "classes = {}", tr.classes);
     let _ = writeln!(o, "class_size_bins = {}", tr.class_size_bins);
     let _ = writeln!(o, "class_rate_bins = {}", tr.class_rate_bins);
+    // The churn block is all-or-nothing and appears only when any knob
+    // differs from its default: pre-churn scenarios keep byte-identical
+    // canonical renders (the ckpt identity check compares renders), and
+    // `parse(render(sc)) == sc` holds either way because parsing starts
+    // from the same defaults.
+    let churn_default = !tr.churn
+        && tr.p_join == 0.25
+        && tr.p_leave == 0.1
+        && tr.over_select == 0.0
+        && !tr.staleness;
+    if !churn_default {
+        let _ = writeln!(o, "churn = {}", tr.churn);
+        let _ = writeln!(o, "p_join = {}", tr.p_join);
+        let _ = writeln!(o, "p_leave = {}", tr.p_leave);
+        let _ = writeln!(o, "over_select = {}", tr.over_select);
+        let _ = writeln!(o, "staleness = {}", tr.staleness);
+    }
     o
 }
 
@@ -430,6 +449,52 @@ mod tests {
         let bad = "[scenario]\nname = cls\n[train]\nclasses = maybe\n";
         let err = parse_scenario(bad).unwrap_err();
         assert!(err.contains("bad boolean"), "{err}");
+    }
+
+    #[test]
+    fn churn_knobs_parse_render_and_reject_bad_values() {
+        let text = "[scenario]\nname = ch\n[train]\nchurn = on\np_leave = 0.2\n\
+                    over_select = 0.5\nstaleness = true\n";
+        let sc = parse_scenario(text).unwrap();
+        assert!(sc.train.churn && sc.train.staleness);
+        assert_eq!(sc.train.p_leave, 0.2);
+        assert_eq!(sc.train.p_join, 0.25, "untouched knob keeps its default");
+        assert_eq!(sc.train.over_select, 0.5);
+        // Round-trips through the canonical render.
+        let back = parse_scenario(&render(&sc)).unwrap();
+        assert_eq!(back, sc);
+        // Bad boolean / number are named errors.
+        let err = parse_scenario("[scenario]\nname = ch\n[train]\nchurn = maybe\n")
+            .unwrap_err();
+        assert!(err.contains("bad boolean"), "{err}");
+        let err = parse_scenario("[scenario]\nname = ch\n[train]\np_leave = often\n")
+            .unwrap_err();
+        assert!(err.contains("bad number"), "{err}");
+    }
+
+    #[test]
+    fn default_churn_knobs_render_no_churn_block() {
+        // Pre-churn scenarios must keep byte-identical canonical
+        // renders: all five knobs at defaults = no churn lines at all.
+        let sc = Scenario::defaults("plain", Task::Femnist);
+        let text = render(&sc);
+        for key in ["churn", "p_join", "p_leave", "over_select", "staleness"] {
+            assert!(
+                !text.lines().any(|l| l.starts_with(&format!("{key} ="))),
+                "default render leaked `{key}`:\n{text}"
+            );
+        }
+        // Any single non-default knob brings the whole block.
+        let mut sc = Scenario::defaults("plain", Task::Femnist);
+        sc.train.over_select = 0.25;
+        let text = render(&sc);
+        for key in ["churn", "p_join", "p_leave", "over_select", "staleness"] {
+            assert!(
+                text.lines().any(|l| l.starts_with(&format!("{key} ="))),
+                "non-default render missing `{key}`:\n{text}"
+            );
+        }
+        assert_eq!(parse_scenario(&text).unwrap(), sc);
     }
 
     #[test]

@@ -153,6 +153,24 @@ pub struct TrainSpec {
     /// Rank bins over mean uplink rates for the class partition (≥ 1;
     /// only read when `classes = true`).
     pub class_rate_bins: usize,
+    /// Client churn: clients follow a seeded per-client Markov on/off
+    /// availability process ([`crate::fl::avail`]). Off by default —
+    /// everyone is always available and the engine takes the exact
+    /// pre-churn path.
+    pub churn: bool,
+    /// Per-round probability an *offline* client rejoins (churn only).
+    pub p_join: f64,
+    /// Per-round probability an *online* client departs (churn only).
+    pub p_leave: f64,
+    /// Over-selection factor β ≥ 0 (churn only): the round schedules S
+    /// clients but aggregates only the first ⌈S/(1+β)⌉ survivors in
+    /// client order, hedging against mid-round departures. 0 disables
+    /// the cap.
+    pub over_select: f64,
+    /// Staleness-weighted aggregation (churn only): a client's
+    /// aggregation weight is scaled by `1/(1+m)` where `m` is the
+    /// number of rounds since its update last entered an aggregate.
+    pub staleness: bool,
 }
 
 /// A complete declarative workload description. See the module docs for
@@ -233,6 +251,11 @@ impl Scenario {
                 classes: false,
                 class_size_bins: 4,
                 class_rate_bins: 4,
+                churn: false,
+                p_join: 0.25,
+                p_leave: 0.1,
+                over_select: 0.0,
+                staleness: false,
             },
         }
     }
@@ -408,6 +431,18 @@ impl Scenario {
         if self.train.class_rate_bins == 0 {
             errs.push("class_rate_bins must be >= 1".to_string());
         }
+        if !(tr.p_join.is_finite() && (0.0..=1.0).contains(&tr.p_join)) {
+            errs.push(format!("train: p_join must be in [0, 1] (got {})", tr.p_join));
+        }
+        if !(tr.p_leave.is_finite() && (0.0..=1.0).contains(&tr.p_leave)) {
+            errs.push(format!("train: p_leave must be in [0, 1] (got {})", tr.p_leave));
+        }
+        if !(tr.over_select.is_finite() && tr.over_select >= 0.0) {
+            errs.push(format!(
+                "train: over_select must be finite and >= 0 (got {})",
+                tr.over_select
+            ));
+        }
         // Derived-parameter checks (C bounds again with the base U, the
         // heterogeneity-class knobs, τ/τ^e divisibility, theorem
         // prerequisites, physical sanity).
@@ -524,6 +559,30 @@ mod tests {
             "{:?}",
             sc.validate()
         );
+    }
+
+    #[test]
+    fn validate_rejects_bad_churn_knobs() {
+        let mut sc = Scenario::defaults("x", Task::Femnist);
+        sc.train.churn = true;
+        sc.train.p_join = 1.5;
+        assert!(sc.validate().iter().any(|e| e.contains("p_join")), "{:?}", sc.validate());
+        sc.train.p_join = 0.25;
+        sc.train.p_leave = -0.1;
+        assert!(sc.validate().iter().any(|e| e.contains("p_leave")), "{:?}", sc.validate());
+        sc.train.p_leave = f64::NAN;
+        assert!(sc.validate().iter().any(|e| e.contains("p_leave")), "{:?}", sc.validate());
+        sc.train.p_leave = 0.1;
+        sc.train.over_select = -0.5;
+        assert!(sc.validate().iter().any(|e| e.contains("over_select")), "{:?}", sc.validate());
+        sc.train.over_select = 0.5;
+        sc.train.staleness = true;
+        assert!(sc.validate().is_empty(), "{:?}", sc.validate());
+        // Boundary probabilities are legal (the all-depart regression
+        // scenario uses p_leave = 1, p_join = 0).
+        sc.train.p_leave = 1.0;
+        sc.train.p_join = 0.0;
+        assert!(sc.validate().is_empty(), "{:?}", sc.validate());
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Built-in scenario registry: the two paper profiles plus seven
+//! Built-in scenario registry: the two paper profiles plus ten
 //! stress/heterogeneity workloads drawn from the related work. Each
 //! builder documents *why* the scenario exists; `docs/SCENARIOS.md`
 //! carries the same rationale next to a rendered copy of each file.
@@ -15,7 +15,7 @@ pub struct ScenarioRegistry {
 }
 
 impl ScenarioRegistry {
-    /// The nine built-in scenarios, in documentation order.
+    /// The twelve built-in scenarios, in documentation order.
     pub fn builtin() -> ScenarioRegistry {
         ScenarioRegistry {
             scenarios: vec![
@@ -28,6 +28,9 @@ impl ScenarioRegistry {
                 cell_free_lite(),
                 stress_1000(),
                 stress_100k(),
+                churn_100(),
+                churn_1000(),
+                churn_10000(),
             ],
         }
     }
@@ -212,6 +215,69 @@ pub fn stress_100k() -> Scenario {
     sc
 }
 
+/// 100 clients / 24 channels under Markov churn with the full
+/// availability toolkit on: over-selection hedges mid-round departures
+/// and staleness weighting discounts long-absent clients. The
+/// churn-family's default member — small enough for checkpointed
+/// integration tests, contended enough (C < U) that the
+/// availability-masked candidate set changes the decision.
+pub fn churn_100() -> Scenario {
+    let mut sc = Scenario::defaults("churn-100", Task::Femnist);
+    sc.description = "100 clients, 24 channels under Markov on/off churn \
+                      (p_leave = 0.1, p_join = 0.25) with over-selection 0.5 and \
+                      staleness-weighted aggregation: the asynchronous-FL regime \
+                      (clients depart mid-round, energy spent, upload lost) at a \
+                      size the determinism test battery can checkpoint."
+        .into();
+    sc.topology.clients = 100;
+    sc.topology.channels = 24;
+    sc.topology.cell_radius_m = 900.0;
+    sc.train.rounds = 20;
+    sc.train.churn = true;
+    sc.train.over_select = 0.5;
+    sc.train.staleness = true;
+    sc
+}
+
+/// 1000 clients / 64 channels under churn, evaluation off: the
+/// decision-pipeline scale smoke of `stress-1000` with the
+/// availability mask thinning the candidate set every round.
+pub fn churn_1000() -> Scenario {
+    let mut sc = Scenario::defaults("churn-1000", Task::Femnist);
+    sc.description = "1000 clients, 64 channels, 3 rounds, no eval, Markov churn: \
+                      the stress-1000 decision-pipeline smoke with an \
+                      availability-masked candidate set."
+        .into();
+    sc.topology.clients = 1000;
+    sc.topology.channels = 64;
+    sc.topology.cell_radius_m = 1200.0;
+    sc.train.rounds = 3;
+    sc.train.eval_every = 0;
+    sc.train.churn = true;
+    sc.train.over_select = 0.5;
+    sc
+}
+
+/// 10 000 clients / 64 channels, churn + class-based scheduling: the
+/// hierarchical decision stage re-partitions the *available* clients
+/// each round — classes shrink and grow with the availability mask.
+pub fn churn_10000() -> Scenario {
+    let mut sc = Scenario::defaults("churn-10000", Task::Femnist);
+    sc.description = "10000 clients, 64 channels, 2 rounds, no eval, Markov churn \
+                      with class-based scheduling: the class partition is rebuilt \
+                      over the available clients every round."
+        .into();
+    sc.topology.clients = 10_000;
+    sc.topology.channels = 64;
+    sc.topology.cell_radius_m = 1500.0;
+    sc.train.rounds = 2;
+    sc.train.eval_every = 0;
+    sc.train.classes = true;
+    sc.train.churn = true;
+    sc.train.over_select = 0.5;
+    sc
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,13 +297,16 @@ mod tests {
             "cell-free-lite",
             "stress-1000",
             "stress-100k",
+            "churn-100",
+            "churn-1000",
+            "churn-10000",
         ] {
             assert!(names.contains(&want), "missing builtin `{want}`");
             let sc = reg.get(want).unwrap();
             assert!(sc.validate().is_empty(), "{want}: {:?}", sc.validate());
             assert!(!sc.description.is_empty(), "{want} undocumented");
         }
-        assert_eq!(reg.all().len(), 9);
+        assert_eq!(reg.all().len(), 12);
     }
 
     #[test]
@@ -274,17 +343,40 @@ mod tests {
         let mut sc = paper_femnist();
         sc.train.rounds = 7;
         reg.add(sc);
-        assert_eq!(reg.all().len(), 9);
+        assert_eq!(reg.all().len(), 12);
         assert_eq!(reg.get("paper-femnist").unwrap().train.rounds, 7);
     }
 
     #[test]
     fn contention_scenarios_have_c_below_u() {
         let reg = ScenarioRegistry::builtin();
-        for name in ["megacell-100", "zipf-skew", "cell-free-lite", "stress-1000", "stress-100k"] {
+        for name in [
+            "megacell-100",
+            "zipf-skew",
+            "cell-free-lite",
+            "stress-1000",
+            "stress-100k",
+            "churn-100",
+            "churn-1000",
+            "churn-10000",
+        ] {
             let t = &reg.get(name).unwrap().topology;
             assert!(t.channels < t.clients, "{name} should exercise C < U");
         }
+    }
+
+    #[test]
+    fn churn_family_opts_into_churn() {
+        for name in ["churn-100", "churn-1000", "churn-10000"] {
+            let reg = ScenarioRegistry::builtin();
+            let sc = reg.get(name).unwrap();
+            assert!(sc.train.churn, "{name} must enable churn");
+            assert_eq!(sc.train.over_select, 0.5, "{name} over-selects");
+            assert_eq!((sc.train.p_join, sc.train.p_leave), (0.25, 0.1));
+        }
+        assert!(churn_100().train.staleness, "churn-100 exercises staleness weights");
+        assert!(churn_10000().train.classes, "churn-10000 composes churn with classes");
+        assert_eq!(churn_1000().train.eval_every, 0, "decision-only scale smoke");
     }
 
     #[test]

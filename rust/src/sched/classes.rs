@@ -134,6 +134,13 @@ impl ClassPlan {
         let rate_bin = rank_bins(u, cfg.rate_bins.max(1), |i| mean_rate[i]);
         let mut groups: BTreeMap<(usize, usize, bool), Vec<usize>> = BTreeMap::new();
         for i in 0..u {
+            // Unavailable clients never enter a class: they cannot be
+            // seated by `expand`, and the exact re-score + greedy
+            // backstop apply the same mask through
+            // [`RoundInputs::is_available`].
+            if !inp.is_available(i) {
+                continue;
+            }
             let slow = p.cpu_scale(i) < 1.0;
             groups.entry((size_bin[i], rate_bin[i], slow)).or_default().push(i);
         }
@@ -626,6 +633,37 @@ mod tests {
             a.iter().map(|d| d.map(|d| (d.channel, d.q, d.f.to_bits(), d.rate.to_bits()))).collect::<Vec<_>>()
         };
         assert_eq!(bits(&a_on), bits(&a_off));
+    }
+
+    #[test]
+    fn unavailable_clients_never_enter_a_class() {
+        let fx = Fixture::new(26);
+        let mut inp = fx.inputs();
+        let mask: Vec<bool> = (0..10).map(|i| i != 3 && i != 8).collect();
+        inp.avail = Some(&mask);
+        let plan = ClassPlan::build(&inp, ClassingConfig::default());
+        let mut seen = vec![0usize; 10];
+        for k in 0..plan.num_classes() {
+            for &i in plan.class_members(k) {
+                seen[i] += 1;
+            }
+        }
+        assert_eq!(seen[3], 0, "offline client 3 classed");
+        assert_eq!(seen[8], 0, "offline client 8 classed");
+        assert_eq!(seen.iter().sum::<usize>(), 8, "all online clients classed once");
+        // The classed decide still produces a finite, mask-respecting
+        // decision on the remaining clients.
+        let mut rng = Rng::seed_from(13);
+        let (j0, assigns, _) = decide_with_classes(
+            &inp,
+            Case5Mode::Taylor,
+            &GaParams::default(),
+            &mut rng,
+            ClassingConfig::default(),
+            true,
+        );
+        assert!(j0.is_finite());
+        assert!(assigns[3].is_none() && assigns[8].is_none(), "offline client scheduled");
     }
 
     #[test]

@@ -164,7 +164,15 @@ impl<'a> EvalCtx<'a> {
             for ch in 0..c {
                 let r = inp.channels.rate(i, ch);
                 rates[i * c + ch] = r;
-                q_max[i * c + ch] = solver::q_max_feasible(p, inp.sizes[i], r).unwrap_or(0);
+                // An unavailable client's whole row stays 0: the
+                // `q_max >= 1` gate in `eval_inner` then rejects every
+                // (i, ch) pair exactly where the reference evaluator's
+                // availability gate does.
+                q_max[i * c + ch] = if inp.is_available(i) {
+                    solver::q_max_feasible(p, inp.sizes[i], r).unwrap_or(0)
+                } else {
+                    0
+                };
             }
         }
         let tau = p.tau as f64;
@@ -413,6 +421,33 @@ mod tests {
         let reference = evaluate_allocation(&inp, &chrom, Case5Mode::Taylor);
         let got = ctx.evaluate(&chrom, &mut scratch);
         assert_same(&reference, &got, "memo off");
+    }
+
+    #[test]
+    fn masked_matches_reference_bitwise() {
+        // Availability masking must keep the cached/uncached
+        // bit-identity contract: the mask zeroes q_max rows here and
+        // gates the reference's assignment loop there — same exclusions,
+        // same J0 bits.
+        let fx = Fixture::new(7);
+        let mut inp = fx.inputs();
+        let mask: Vec<bool> = (0..10).map(|i| i % 3 != 0).collect();
+        inp.avail = Some(&mask);
+        let ctx = EvalCtx::new(&inp, Case5Mode::Taylor);
+        let mut scratch = ctx.make_scratch();
+        let mut rng = Rng::seed_from(123);
+        let mut chroms = vec![greedy_allocation(&inp)];
+        for _ in 0..8 {
+            chroms.push(Chromosome::random(10, 10, &mut rng));
+        }
+        for (k, chrom) in chroms.iter().enumerate() {
+            let reference = evaluate_allocation(&inp, chrom, Case5Mode::Taylor);
+            let got = ctx.evaluate(chrom, &mut scratch);
+            assert_same(&reference, &got, &format!("masked chrom {k}"));
+            for (i, a) in got.1.iter().enumerate() {
+                assert!(mask[i] || a.is_none(), "offline client {i} scheduled");
+            }
+        }
     }
 
     #[test]

@@ -54,6 +54,19 @@ pub struct RoundInputs<'a> {
     pub q_prev: &'a [f64],
     /// The virtual queues λ1/λ2.
     pub queues: &'a Queues,
+    /// Decide-time availability mask from the churn layer
+    /// (`fl::avail`): `None` = every client is a candidate (the legacy
+    /// engine); `Some(mask)` removes `mask[i] = false` clients from the
+    /// candidate set of **every** path — the reference evaluator, the
+    /// cached [`EvalCtx`], the greedy backstop, and the classed plan.
+    pub avail: Option<&'a [bool]>,
+}
+
+impl RoundInputs<'_> {
+    /// Whether client `i` may be scheduled this round.
+    pub fn is_available(&self, i: usize) -> bool {
+        self.avail.map_or(true, |a| a[i])
+    }
 }
 
 /// Per-client intended decision.
@@ -140,6 +153,11 @@ pub fn evaluate_allocation(
     let mut assigned: Vec<Option<usize>> = vec![None; u];
     for (ch, slot) in chrom.alloc.iter().enumerate() {
         if let Some(i) = *slot {
+            // Availability gates ahead of feasibility: an offline
+            // client is no candidate at all, on any path.
+            if !inp.is_available(i) {
+                continue;
+            }
             let r = inp.channels.rate(i, ch);
             if solver::q_max_feasible(p, inp.sizes[i], r).is_some() {
                 assigned[i] = Some(ch);
@@ -219,6 +237,9 @@ pub fn greedy_allocation(inp: &RoundInputs<'_>) -> Chromosome {
     let mut taken_count = 0usize;
     let mut alloc = vec![None; c];
     for &i in &order {
+        if !inp.is_available(i) {
+            continue;
+        }
         // Once every channel is held, the remaining U − C clients can
         // only scan fully-taken channels and assign nothing — at the
         // stress-100k scale (U = 10⁵, C = 64) that tail used to cost
@@ -305,6 +326,7 @@ pub(crate) mod tests {
                 theta_max: &self.theta_max,
                 q_prev: &self.q_prev,
                 queues: &self.queues,
+                avail: None,
             }
         }
     }
@@ -331,6 +353,44 @@ pub(crate) mod tests {
             assert!(d.q.unwrap() >= 1);
             assert!(d.f >= fx.params.f_min && d.f <= fx.params.f_max);
         }
+    }
+
+    #[test]
+    fn all_available_mask_matches_no_mask_bitwise() {
+        // The churn-off pin at the decision layer: an all-true mask
+        // must be indistinguishable — bit for bit — from no mask.
+        let fx = Fixture::new(2);
+        let mut inp = fx.inputs();
+        let chrom = greedy_allocation(&inp);
+        let (j_none, a_none) = evaluate_allocation(&inp, &chrom, Case5Mode::Bisect);
+        let g_none = greedy_allocation(&inp);
+        let mask = vec![true; 10];
+        inp.avail = Some(&mask);
+        let (j_mask, a_mask) = evaluate_allocation(&inp, &chrom, Case5Mode::Bisect);
+        assert_eq!(j_none.to_bits(), j_mask.to_bits());
+        assert_eq!(format!("{a_none:?}"), format!("{a_mask:?}"));
+        assert_eq!(greedy_allocation(&inp).alloc, g_none.alloc);
+    }
+
+    #[test]
+    fn unavailable_clients_never_scheduled() {
+        let fx = Fixture::new(5);
+        let mut inp = fx.inputs();
+        let mut mask = vec![true; 10];
+        mask[2] = false;
+        mask[7] = false;
+        inp.avail = Some(&mask);
+        let greedy = greedy_allocation(&inp);
+        for (ch, slot) in greedy.alloc.iter().enumerate() {
+            assert!(*slot != Some(2) && *slot != Some(7), "channel {ch} seats an offline client");
+        }
+        // Even a chromosome that *names* an offline client must not
+        // seat it — the gate runs inside the evaluator.
+        let chrom = Chromosome { alloc: (0..10).map(Some).collect() };
+        let (j0, assigns) = evaluate_allocation(&inp, &chrom, Case5Mode::Bisect);
+        assert!(j0.is_finite());
+        assert!(assigns[2].is_none() && assigns[7].is_none());
+        assert!(assigns.iter().flatten().count() >= 5);
     }
 
     #[test]

@@ -1,0 +1,238 @@
+//! Churn-engine integration: the availability layer's acceptance pins.
+//!
+//! * A churn-100 run checkpointed mid-horizon and resumed is
+//!   **bit-identical** to the uninterrupted run, for engine thread
+//!   counts 1 and 8 on the resumed half — the churn analog of
+//!   `integration_ckpt.rs`, additionally covering the availability
+//!   state (`RunState::avail`) in the snapshot.
+//! * The all-depart regression: when every over-selected client departs
+//!   mid-round, the round takes the `d_surv = 0` no-aggregate path —
+//!   energy spent, nothing folded, θ kept, **no NaN** anywhere the
+//!   model touches.
+//! * `p_leave = 0` pins the whole churn engine bit-identical to the
+//!   always-available engine (churn = false), end to end.
+//!
+//! All tests no-op (with a note) when `make artifacts` hasn't run.
+
+use std::path::PathBuf;
+
+use qccf::ckpt;
+use qccf::experiments::common::{run_scenario, run_scenario_ckpt, CheckpointPolicy};
+use qccf::fl::avail::aggregation_target;
+use qccf::metrics::Trace;
+use qccf::runtime::{artifacts_dir, Runtime};
+use qccf::scenario::registry;
+
+fn runtime() -> Option<Runtime> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(&artifacts_dir(), "tiny").expect("load tiny runtime"))
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Every deterministic trace field, compared bit for bit (same
+/// exclusions as `integration_ckpt.rs`: only the two measured
+/// wall-clock fields are skipped).
+fn assert_traces_bit_identical(want: &Trace, got: &Trace, tag: &str) {
+    assert_eq!(want.algorithm, got.algorithm, "{tag}: algorithm");
+    assert_eq!(want.records.len(), got.records.len(), "{tag}: length");
+    for (a, b) in want.records.iter().zip(&got.records) {
+        let r = a.round;
+        assert_eq!(a.round, b.round, "{tag}: round");
+        assert_eq!(a.scheduled, b.scheduled, "{tag} r{r}: scheduled");
+        assert_eq!(a.aggregated, b.aggregated, "{tag} r{r}: aggregated");
+        assert_eq!(a.departed, b.departed, "{tag} r{r}: departed");
+        assert_eq!(a.wire_bytes, b.wire_bytes, "{tag} r{r}: wire_bytes");
+        assert_eq!(a.energy.to_bits(), b.energy.to_bits(), "{tag} r{r}: energy");
+        assert_eq!(a.cum_energy.to_bits(), b.cum_energy.to_bits(), "{tag} r{r}: cum_energy");
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{tag} r{r}: train_loss");
+        assert_eq!(
+            a.test_loss.map(f64::to_bits),
+            b.test_loss.map(f64::to_bits),
+            "{tag} r{r}: test_loss"
+        );
+        assert_eq!(
+            a.test_acc.map(f64::to_bits),
+            b.test_acc.map(f64::to_bits),
+            "{tag} r{r}: test_acc"
+        );
+        assert_eq!(a.mean_q.to_bits(), b.mean_q.to_bits(), "{tag} r{r}: mean_q");
+        assert_eq!(a.q_per_client, b.q_per_client, "{tag} r{r}: q_per_client");
+        assert_eq!(a.lambda1.to_bits(), b.lambda1.to_bits(), "{tag} r{r}: lambda1");
+        assert_eq!(a.lambda2.to_bits(), b.lambda2.to_bits(), "{tag} r{r}: lambda2");
+        assert_eq!(a.max_latency.to_bits(), b.max_latency.to_bits(), "{tag} r{r}: max_latency");
+    }
+}
+
+/// churn-100 shrunk to test scale (the data volume, not the physics or
+/// the churn knobs), 12-round horizon — the same shrink
+/// `integration_ckpt.rs` applies to paper-femnist.
+fn churn_scenario_12() -> qccf::scenario::Scenario {
+    let mut sc = registry::churn_100();
+    sc.data.size_mean = 300.0;
+    sc.data.size_std = 60.0;
+    sc.data.test_size = 128;
+    sc.train.rounds = 12;
+    sc
+}
+
+#[test]
+fn churn_checkpoint_at_6_resume_bit_identical_to_straight_12() {
+    // The churn acceptance pin: churn-100 (over-selection 0.5,
+    // staleness weighting on) 12 rounds straight vs checkpoint-at-6 +
+    // resume, whole-trace bit equality including the departed column —
+    // with the interrupted half at 8 engine threads and the resumed
+    // half at both 1 and 8. Passing at both thread counts also pins the
+    // "availability draws are thread-count invariant" half of the
+    // determinism contract at the full-engine level.
+    let Some(rt) = runtime() else { return };
+    let sc = churn_scenario_12();
+    let seed = 5u64;
+
+    let reference = run_scenario(&rt, &sc, "qccf", seed, 1).unwrap();
+    assert_eq!(reference.records.len(), 12);
+    // Over-selection's cap is a hard invariant of every record.
+    for r in &reference.records {
+        assert!(
+            r.aggregated <= aggregation_target(r.scheduled, sc.train.over_select),
+            "round {}: aggregated {} > target of {} scheduled",
+            r.round,
+            r.aggregated,
+            r.scheduled
+        );
+    }
+
+    // Full 12-round run at 8 threads: threads are a non-input even with
+    // the availability chain in the loop.
+    let threads8 = run_scenario(&rt, &sc, "qccf", seed, 8).unwrap();
+    assert_traces_bit_identical(&reference, &threads8, "threads=8 straight");
+
+    // "Interrupted" run: 6-round horizon with a snapshot at round 6.
+    let ckpt_dir = fresh_dir("qccf_integration_churn_ckpt");
+    let mut sc6 = sc.clone();
+    sc6.train.rounds = 6;
+    let part = run_scenario_ckpt(
+        &rt,
+        &sc6,
+        "qccf",
+        seed,
+        8,
+        &CheckpointPolicy {
+            every: 6,
+            dir: Some(ckpt_dir.clone()),
+            resume: None,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(part.records.len(), 6);
+    let snap_path = ckpt_dir.join(ckpt::snapshot_file_name(&sc.name, "qccf", seed));
+    assert!(snap_path.exists(), "snapshot not written at round 6");
+
+    let prefix =
+        Trace { algorithm: reference.algorithm.clone(), records: reference.records[..6].to_vec() };
+    assert_traces_bit_identical(&prefix, &part, "prefix");
+
+    // Resume must replay the exact availability future the straight run
+    // saw — the snapshot's RunState::avail carries every client's
+    // on/off flag, missed counter, and Markov stream position.
+    for threads in [1usize, 8] {
+        let resumed = run_scenario_ckpt(
+            &rt,
+            &sc,
+            "qccf",
+            seed,
+            threads,
+            &CheckpointPolicy {
+                every: 0,
+                dir: None,
+                resume: Some(snap_path.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_traces_bit_identical(&reference, &resumed, &format!("resumed threads={threads}"));
+    }
+
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+}
+
+#[test]
+fn all_departed_round_takes_no_aggregate_path_without_nan() {
+    // Adversarial knobs: p_leave = 1, p_join = 0. Round 1 decides over
+    // the initial all-on mask, then the post-decide tick flips every
+    // client off — every scheduled client departs mid-round, so the
+    // round must take the d_surv = 0 no-aggregate path: energy and
+    // airtime spent, nothing folded, θ^{n+1} = θ^n. Every later round
+    // short-circuits before the scheduler (nobody ever rejoins). The
+    // old unguarded 0/0 weight division would have poisoned θ with NaN
+    // here; eval must stay finite for the whole horizon.
+    let Some(rt) = runtime() else { return };
+    let mut sc = churn_scenario_12();
+    sc.train.rounds = 4;
+    sc.train.eval_every = 1;
+    sc.train.p_leave = 1.0;
+    sc.train.p_join = 0.0;
+    let seed = 11u64;
+
+    let trace = run_scenario(&rt, &sc, "qccf", seed, 1).unwrap();
+    assert_eq!(trace.records.len(), 4);
+
+    let r1 = &trace.records[0];
+    assert!(r1.scheduled > 0, "round 1 must schedule from the all-on mask");
+    assert_eq!(r1.departed, r1.scheduled, "every scheduled client departs");
+    assert_eq!(r1.aggregated, 0, "departed uploads must not be folded");
+    assert!(r1.energy > 0.0, "departure energy is spent, not refunded");
+    assert!(r1.wire_bytes > 0, "departure airtime is spent, not refunded");
+
+    for r in &trace.records[1..] {
+        assert_eq!(r.scheduled, 0, "round {}: all-off mask must short-circuit", r.round);
+        assert_eq!(r.departed, 0, "round {}", r.round);
+        assert_eq!(r.aggregated, 0, "round {}", r.round);
+        assert_eq!(r.energy, 0.0, "round {}: no clients, no energy", r.round);
+    }
+
+    // θ was never touched by a fold, so every evaluation is of the
+    // initial model — finite, and identical across the horizon.
+    let mut evals = trace.records.iter().filter_map(|r| r.test_loss);
+    let first = evals.next().expect("eval_every = 1 must evaluate round 1");
+    assert!(first.is_finite(), "NaN θ leaked into evaluation");
+    for l in evals {
+        assert_eq!(l.to_bits(), first.to_bits(), "θ changed without any aggregate");
+    }
+
+    // The no-aggregate path is thread-count invariant too.
+    let t8 = run_scenario(&rt, &sc, "qccf", seed, 8).unwrap();
+    assert_traces_bit_identical(&trace, &t8, "all-departed threads=8");
+}
+
+#[test]
+fn p_leave_zero_engine_bit_identical_to_churn_off() {
+    // With p_leave = 0 the Markov chain never leaves the all-on state:
+    // the mask is always all-true (bit-identical decisions — pinned at
+    // the unit level), nobody departs, the over-selection target at
+    // β = 0 is the identity, and staleness is off — so the churn engine
+    // must retrace the churn = false engine bit for bit, end to end.
+    let Some(rt) = runtime() else { return };
+    let mut churn = churn_scenario_12();
+    churn.train.rounds = 8;
+    churn.train.p_leave = 0.0;
+    churn.train.over_select = 0.0;
+    churn.train.staleness = false;
+    let mut plain = churn.clone();
+    plain.train.churn = false;
+    let seed = 7u64;
+
+    let a = run_scenario(&rt, &churn, "qccf", seed, 1).unwrap();
+    let b = run_scenario(&rt, &plain, "qccf", seed, 1).unwrap();
+    assert_traces_bit_identical(&b, &a, "p_leave=0 vs churn off");
+    assert!(a.records.iter().all(|r| r.departed == 0), "p_leave = 0 cannot depart anyone");
+}

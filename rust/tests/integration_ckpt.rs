@@ -44,6 +44,7 @@ fn assert_traces_bit_identical(want: &Trace, got: &Trace, tag: &str) {
         assert_eq!(a.round, b.round, "{tag}: round");
         assert_eq!(a.scheduled, b.scheduled, "{tag} r{r}: scheduled");
         assert_eq!(a.aggregated, b.aggregated, "{tag} r{r}: aggregated");
+        assert_eq!(a.departed, b.departed, "{tag} r{r}: departed");
         assert_eq!(a.wire_bytes, b.wire_bytes, "{tag} r{r}: wire_bytes");
         assert_eq!(a.energy.to_bits(), b.energy.to_bits(), "{tag} r{r}: energy");
         assert_eq!(a.cum_energy.to_bits(), b.cum_energy.to_bits(), "{tag} r{r}: cum_energy");

@@ -1,0 +1,322 @@
+//! Property pins for the availability layer (`fl::avail`) and the
+//! churn-era aggregation plumbing (`fl::exec`):
+//!
+//! * availability histories are a pure function of `(seed, U, cfg,
+//!   #ticks)` — invariant to the order clients are ticked in (the
+//!   engine never ticks inside the worker fan-out, so this is exactly
+//!   the property that makes churn draws thread-count invariant; the
+//!   full-engine `--threads {1,8}` pin lives in
+//!   `integration_churn.rs`);
+//! * over-selection never aggregates more than the
+//!   `ceil(S/(1+β))` target, and keeps survivors in ascending order;
+//! * staleness-scaled fold weights are finite, non-negative, zero for
+//!   non-survivors, and renormalize to 1;
+//! * `p_leave = 0` pins the churn path to the always-available engine:
+//!   the mask stays all-true forever, and an all-true mask is
+//!   bit-identical to no mask at every decision entry point.
+
+use qccf::config::SystemParams;
+use qccf::fl::avail::{aggregation_target, AvailCfg, AvailProcess};
+use qccf::fl::exec::{apply_aggregation_cap, survivor_weights};
+use qccf::lyapunov::Queues;
+use qccf::sched::{evaluate_allocation, greedy_allocation, EvalCtx, RoundInputs};
+use qccf::solver::Case5Mode;
+use qccf::util::prop;
+use qccf::util::rng::Rng;
+use qccf::wireless::ChannelState;
+
+#[derive(Debug)]
+struct ChurnCase {
+    u: usize,
+    p_join: f64,
+    p_leave: f64,
+    seed: u64,
+    rounds: usize,
+    /// Seed for the per-round tick permutations of run B.
+    order_seed: u64,
+}
+
+fn churn_case(rng: &mut Rng) -> ChurnCase {
+    ChurnCase {
+        u: 2 + rng.below(60),
+        p_join: rng.range(0.0, 1.0),
+        p_leave: rng.range(0.0, 1.0),
+        seed: rng.next_u64(),
+        rounds: 1 + rng.below(25),
+        order_seed: rng.next_u64(),
+    }
+}
+
+#[test]
+fn avail_history_invariant_to_tick_order() {
+    prop::check("avail-tick-order", prop::iters(40), churn_case, |cs| {
+        let cfg = AvailCfg { p_join: cs.p_join, p_leave: cs.p_leave, ..AvailCfg::default() };
+        let mut a = AvailProcess::new(cs.u, cfg, cs.seed);
+        let mut b = AvailProcess::new(cs.u, cfg, cs.seed);
+        let mut order: Vec<usize> = (0..cs.u).collect();
+        let mut orng = Rng::seed_from(cs.order_seed);
+        for round in 0..cs.rounds {
+            a.tick();
+            // A fresh random permutation every round: each tick touches
+            // exactly one private stream, so any order must land on the
+            // same state.
+            orng.shuffle(&mut order);
+            for &i in &order {
+                b.tick_one(i);
+            }
+            if a.mask() != b.mask() {
+                return Err(format!("round {round}: masks diverged under permuted ticks"));
+            }
+        }
+        // The streams themselves (not just the flags) must agree: the
+        // futures stay identical after the permuted history.
+        a.tick();
+        b.tick();
+        if a.mask() != b.mask() {
+            return Err("post-history tick diverged — stream state corrupted".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn avail_history_is_a_pure_function_of_seed() {
+    prop::check("avail-replay", prop::iters(30), churn_case, |cs| {
+        let cfg = AvailCfg { p_join: cs.p_join, p_leave: cs.p_leave, ..AvailCfg::default() };
+        let run = |ticks: usize| -> Vec<Vec<bool>> {
+            let mut p = AvailProcess::new(cs.u, cfg, cs.seed);
+            (0..ticks)
+                .map(|_| {
+                    p.tick();
+                    p.mask().to_vec()
+                })
+                .collect()
+        };
+        if run(cs.rounds) != run(cs.rounds) {
+            return Err("same (seed, U, cfg, #ticks) produced different histories".into());
+        }
+        Ok(())
+    });
+}
+
+#[derive(Debug)]
+struct CapCase {
+    survive: Vec<bool>,
+    beta: f64,
+}
+
+fn cap_case(rng: &mut Rng) -> CapCase {
+    let s = rng.below(50);
+    CapCase {
+        survive: (0..s).map(|_| rng.chance(0.6)).collect(),
+        beta: rng.range(0.0, 3.0),
+    }
+}
+
+#[test]
+fn over_selection_never_aggregates_more_than_target() {
+    prop::check("over-selection-cap", prop::iters(120), cap_case, |cs| {
+        let scheduled = cs.survive.len();
+        let n = aggregation_target(scheduled, cs.beta);
+        if scheduled > 0 && !(1..=scheduled).contains(&n) {
+            return Err(format!("target {n} outside 1..={scheduled}"));
+        }
+        let mut capped = cs.survive.clone();
+        let kept = apply_aggregation_cap(&mut capped, n);
+        let survivors = cs.survive.iter().filter(|&&s| s).count();
+        if kept != survivors.min(n) {
+            return Err(format!("kept {kept}, want min({survivors}, {n})"));
+        }
+        if capped.iter().filter(|&&s| s).count() != kept {
+            return Err("flag count != reported kept".into());
+        }
+        // The kept survivors are exactly the *first* `kept` survivors in
+        // ascending task order — over-selection demotes from the tail.
+        let mut seen = 0usize;
+        for (i, (&orig, &now)) in cs.survive.iter().zip(&capped).enumerate() {
+            if now && !orig {
+                return Err(format!("slot {i}: cap promoted a non-survivor"));
+            }
+            if orig {
+                let should_keep = seen < n;
+                seen += 1;
+                if now != should_keep {
+                    return Err(format!("slot {i}: cap is not a prefix of survivors"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[derive(Debug)]
+struct WeightCase {
+    sizes: Vec<f64>,
+    missed: Vec<u64>,
+    survive: Vec<bool>,
+}
+
+fn weight_case(rng: &mut Rng) -> WeightCase {
+    let u = 1 + rng.below(40);
+    let mut survive: Vec<bool> = (0..u).map(|_| rng.chance(0.5)).collect();
+    // Keep at least one survivor with positive mass: the zero-mass
+    // regime is `survivor_weights -> None` (pinned in exec's unit
+    // tests); this property is about the well-formed regime.
+    let forced = rng.below(u);
+    survive[forced] = true;
+    WeightCase {
+        sizes: (0..u).map(|_| rng.range(1.0, 5000.0)).collect(),
+        missed: (0..u).map(|_| rng.below(20) as u64).collect(),
+        survive,
+    }
+}
+
+#[test]
+fn staleness_weights_finite_nonneg_and_renormalized() {
+    prop::check("staleness-weights", prop::iters(120), weight_case, |cs| {
+        // The engine's staleness path: effective mass D_i / (1 + missed)
+        // through the same renormalization the default path uses.
+        let scaled: Vec<f64> = cs
+            .sizes
+            .iter()
+            .zip(&cs.missed)
+            .map(|(d, m)| {
+                let scale = 1.0 / (1.0 + *m as f64);
+                if !(scale > 0.0 && scale <= 1.0) {
+                    return f64::NAN; // caught by the finiteness check
+                }
+                d * scale
+            })
+            .collect();
+        let Some(w) = survivor_weights(&scaled, &cs.survive) else {
+            return Err("positive surviving mass yielded no weights".into());
+        };
+        let mut sum = 0.0f64;
+        for (i, (&wi, &s)) in w.iter().zip(&cs.survive).enumerate() {
+            if !wi.is_finite() || wi < 0.0 {
+                return Err(format!("w[{i}] = {wi} not finite/non-negative"));
+            }
+            if !s && wi != 0.0 {
+                return Err(format!("non-survivor {i} got weight {wi}"));
+            }
+            sum += wi as f64;
+        }
+        if (sum - 1.0).abs() > 1e-3 {
+            return Err(format!("weights sum to {sum}, want 1"));
+        }
+        Ok(())
+    });
+}
+
+#[derive(Debug)]
+struct MaskRegime {
+    u: usize,
+    c: usize,
+    rates: Vec<f64>,
+    sizes: Vec<f64>,
+    g2: Vec<f64>,
+    sigma2: Vec<f64>,
+    theta_max: Vec<f64>,
+    q_prev: Vec<f64>,
+    lambda1: f64,
+    lambda2: f64,
+}
+
+fn mask_regime(rng: &mut Rng) -> MaskRegime {
+    let u = 2 + rng.below(24);
+    let c = (u / 2).max(1);
+    MaskRegime {
+        u,
+        c,
+        rates: (0..u * c).map(|_| rng.range(1e4, 4e7)).collect(),
+        sizes: (0..u).map(|_| rng.range(100.0, 3000.0)).collect(),
+        g2: (0..u).map(|_| rng.range(0.01, 25.0)).collect(),
+        sigma2: (0..u).map(|_| rng.range(0.01, 4.0)).collect(),
+        theta_max: (0..u).map(|_| rng.range(0.05, 2.0)).collect(),
+        q_prev: (0..u).map(|_| rng.range(1.0, 14.0)).collect(),
+        lambda1: 10f64.powf(rng.range(1.0, 4.0)),
+        lambda2: 10f64.powf(rng.range(1.0, 3.5)),
+    }
+}
+
+#[test]
+fn p_leave_zero_pins_the_always_available_engine() {
+    prop::check("p-leave-zero-pin", prop::iters(25), mask_regime, |r| {
+        // Part 1: with p_leave = 0 the Markov chain can never leave the
+        // all-on state, whatever p_join does.
+        let cfg = AvailCfg { p_join: 0.7, p_leave: 0.0, ..AvailCfg::default() };
+        let mut av = AvailProcess::new(r.u, cfg, r.lambda1.to_bits());
+        for _ in 0..20 {
+            av.tick();
+            if !av.mask().iter().all(|&o| o) {
+                return Err("p_leave = 0 produced an offline client".into());
+            }
+        }
+
+        // Part 2: the all-true mask that chain feeds the scheduler is
+        // bit-identical to no mask at every decision entry point.
+        let mut params = SystemParams::femnist_small();
+        params.num_clients = r.u;
+        params.num_channels = r.c;
+        let state = ChannelState::from_rates(r.u, r.c, r.rates.clone());
+        let total: f64 = r.sizes.iter().sum();
+        let w_full: Vec<f64> = r.sizes.iter().map(|d| d / total).collect();
+        let mut queues = Queues::new();
+        queues.lambda1 = r.lambda1;
+        queues.lambda2 = r.lambda2;
+        let base = RoundInputs {
+            params: &params,
+            round: 3,
+            channels: &state,
+            sizes: &r.sizes,
+            w_full: &w_full,
+            g2: &r.g2,
+            sigma2: &r.sigma2,
+            theta_max: &r.theta_max,
+            q_prev: &r.q_prev,
+            queues: &queues,
+            avail: None,
+        };
+        let masked = RoundInputs {
+            params: &params,
+            round: 3,
+            channels: &state,
+            sizes: &r.sizes,
+            w_full: &w_full,
+            g2: &r.g2,
+            sigma2: &r.sigma2,
+            theta_max: &r.theta_max,
+            q_prev: &r.q_prev,
+            queues: &queues,
+            avail: Some(av.mask()),
+        };
+        let chrom = greedy_allocation(&base);
+        if chrom.alloc != greedy_allocation(&masked).alloc {
+            return Err("greedy allocation diverged under the all-true mask".into());
+        }
+        let (j_base, a_base) = evaluate_allocation(&base, &chrom, Case5Mode::Taylor);
+        let (j_mask, a_mask) = evaluate_allocation(&masked, &chrom, Case5Mode::Taylor);
+        if j_base.to_bits() != j_mask.to_bits() {
+            return Err(format!("reference J0 diverged: {j_base} vs {j_mask}"));
+        }
+        let bits = |assigns: &[Option<qccf::sched::ClientDecision>]| -> Vec<_> {
+            assigns
+                .iter()
+                .map(|a| a.map(|d| (d.channel, d.q, d.f.to_bits(), d.rate.to_bits())))
+                .collect::<Vec<_>>()
+        };
+        if bits(&a_base) != bits(&a_mask) {
+            return Err("reference assignments diverged under the all-true mask".into());
+        }
+        let ctx_base = EvalCtx::new(&base, Case5Mode::Taylor);
+        let ctx_mask = EvalCtx::new(&masked, Case5Mode::Taylor);
+        let mut s1 = ctx_base.make_scratch();
+        let mut s2 = ctx_mask.make_scratch();
+        let jc_base = ctx_base.evaluate_j0(&chrom, &mut s1);
+        let jc_mask = ctx_mask.evaluate_j0(&chrom, &mut s2);
+        if jc_base.to_bits() != jc_mask.to_bits() {
+            return Err(format!("cached J0 diverged: {jc_base} vs {jc_mask}"));
+        }
+        Ok(())
+    });
+}

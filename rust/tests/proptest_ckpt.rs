@@ -9,7 +9,7 @@
 //! harness (`qccf::util::prop`): failures print the case seed for
 //! exact replay via `QCCF_PROP_SEED`.
 
-use qccf::ckpt::{CkptError, ClientCkpt, RunState, Snapshot, VERSION};
+use qccf::ckpt::{AvailCkpt, CkptError, ClientCkpt, RunState, Snapshot, VERSION};
 use qccf::metrics::{RoundRecord, Trace};
 use qccf::util::prop;
 use qccf::util::rng::{Rng, RngState};
@@ -59,6 +59,7 @@ fn rand_record(rng: &mut Rng, u: usize) -> RoundRecord {
         round: rng.below(10_000),
         scheduled: rng.below(u + 1),
         aggregated: rng.below(u + 1),
+        departed: rng.below(u + 1),
         wire_bytes: rng.below(1 << 30),
         energy: weird_f64(rng),
         cum_energy: weird_f64(rng),
@@ -114,6 +115,15 @@ fn rand_snapshot(rng: &mut Rng) -> Snapshot {
                 .collect(),
             server_rng: rand_rng_state(rng),
             sched_rng: rng.chance(0.7).then(|| rand_rng_state(rng)),
+            avail: rng.chance(0.5).then(|| {
+                (0..u)
+                    .map(|_| AvailCkpt {
+                        on: rng.chance(0.5),
+                        missed: rng.next_u64(),
+                        rng: rand_rng_state(rng),
+                    })
+                    .collect()
+            }),
             runtime_nanos: [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()],
         },
         trace,

@@ -112,6 +112,7 @@ fn identical_members_make_the_classed_path_exact() {
             theta_max: &theta_max,
             q_prev: &q_prev,
             queues: &queues,
+            avail: None,
         };
         let cfg = ClassingConfig { size_bins: cs.t, rate_bins: 1 };
         let plan = ClassPlan::build(&inp, cfg);

@@ -118,6 +118,7 @@ fn eval_ctx_bit_identical_to_reference() {
             theta_max: &cs.theta_max,
             q_prev: &cs.q_prev,
             queues: &cs.queues,
+            avail: None,
         };
         let ctx = EvalCtx::new(&inp, cs.mode);
         let ctx_nomemo = EvalCtx::new(&inp, cs.mode).with_memo(false);
@@ -183,6 +184,7 @@ fn eval_ctx_handles_fully_infeasible_rounds() {
             theta_max: &theta_max,
             q_prev: &q_prev,
             queues: &queues,
+            avail: None,
         };
         let chrom = Chromosome { alloc: (0..c).map(Some).collect() };
         let (j_ref, a_ref) = evaluate_allocation(&inp, &chrom, Case5Mode::Taylor);

@@ -85,6 +85,7 @@ fn every_evaluated_decision_is_feasible() {
             theta_max: &r.theta_max,
             q_prev: &r.q_prev,
             queues: &r.queues,
+            avail: None,
         };
         let chrom = greedy_allocation(&inp);
         let (j0, assigns) = evaluate_allocation(&inp, &chrom, Case5Mode::Taylor);
@@ -319,6 +320,7 @@ fn ga_never_worse_than_seeded_greedy() {
             theta_max: &r.theta_max,
             q_prev: &r.q_prev,
             queues: &r.queues,
+            avail: None,
         };
         let greedy = greedy_allocation(&inp);
         let (jg, _) = evaluate_allocation(&inp, &greedy, Case5Mode::Taylor);

@@ -83,17 +83,21 @@ for b in BENCH_wire.json BENCH_sched.json BENCH_ckpt.json; do
     cp "target/$b" "$b"
 done
 
-# Scenario-path smoke: two built-in scenarios through the sweep runner
-# (2 rounds, tiny profile). Needs artifacts, like the integration tests.
+# Scenario-path smoke: three built-in scenarios through the sweep
+# runner (2 rounds, tiny profile) — churn-100 exercises the
+# availability layer (masked decide, mid-round departures, the
+# departed column) end to end. Needs artifacts, like the integration
+# tests.
 if [ -f artifacts/manifest.json ]; then
-    echo "== sweep --quick smoke (paper-femnist, zipf-skew) =="
+    echo "== sweep --quick smoke (paper-femnist, zipf-skew, churn-100) =="
     SWEEP_OUT="$(mktemp -d)"
     trap 'rm -rf "$SWEEP_OUT"' EXIT
     cargo run --release --quiet -- sweep \
-        --scenarios paper-femnist,zipf-skew --algorithms qccf \
+        --scenarios paper-femnist,zipf-skew,churn-100 --algorithms qccf \
         --seeds 1 --quick --profile tiny --threads 2 --out "$SWEEP_OUT"
     for f in "$SWEEP_OUT"/paper-femnist__qccf__seed1.jsonl \
              "$SWEEP_OUT"/zipf-skew__qccf__seed1.jsonl \
+             "$SWEEP_OUT"/churn-100__qccf__seed1.jsonl \
              "$SWEEP_OUT"/summary.csv; do
         [ -s "$f" ] || { echo "verify.sh: sweep smoke missing $f" >&2; exit 1; }
     done
@@ -101,7 +105,7 @@ if [ -f artifacts/manifest.json ]; then
     # completed triple (0 to run) and still rewrite a complete summary.
     echo "== sweep --resume smoke (same --out, all triples skipped) =="
     cargo run --release --quiet -- sweep \
-        --scenarios paper-femnist,zipf-skew --algorithms qccf \
+        --scenarios paper-femnist,zipf-skew,churn-100 --algorithms qccf \
         --seeds 1 --quick --profile tiny --threads 2 --out "$SWEEP_OUT" --resume
     [ -s "$SWEEP_OUT"/summary.csv ] || {
         echo "verify.sh: sweep --resume lost summary.csv" >&2
