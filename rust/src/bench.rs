@@ -116,6 +116,8 @@ impl BenchSet {
             ));
         }
         use std::io::Write;
+        // detlint: allow(R5) — append-only local perf log under target/;
+        // never read back by the pipeline, torn tails are harmless.
         if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
             f.write_all(lines.as_bytes()).ok();
         }
@@ -195,7 +197,7 @@ pub fn write_wire_bench_json(
             .collect(),
     );
     let doc = json::obj(vec![("z", json::num(z as f64)), ("benches", benches)]);
-    std::fs::write(path, format!("{}\n", doc.to_string_compact()))
+    crate::util::fsio::write_atomic(path, format!("{}\n", doc.to_string_compact()).as_bytes())
 }
 
 /// One row of the decision-stage perf baseline (`BENCH_sched.json`).
@@ -587,7 +589,7 @@ pub fn write_sched_bench_json(
         ("speedups", Json::Arr(speedups)),
         ("classed", classed_rows),
     ]);
-    std::fs::write(path, format!("{}\n", doc.to_string_compact()))
+    crate::util::fsio::write_atomic(path, format!("{}\n", doc.to_string_compact()).as_bytes())
 }
 
 /// Canonical regression metric of one `benches` row: key, value, and
@@ -834,7 +836,7 @@ pub fn write_ckpt_bench_json(
             .collect(),
     );
     let doc = json::obj(vec![("z", json::num(z as f64)), ("benches", benches)]);
-    std::fs::write(path, format!("{}\n", doc.to_string_compact()))
+    crate::util::fsio::write_atomic(path, format!("{}\n", doc.to_string_compact()).as_bytes())
 }
 
 #[cfg(test)]

@@ -268,6 +268,28 @@ mod tests {
         r.finish("end").unwrap();
     }
 
+    // Prefixed `miri_` so verify.sh's nightly gate runs it
+    // (`cargo +nightly miri test --lib miri_`): a compact sweep of the
+    // codec's pointer/length arithmetic — the byte-slice reads, the
+    // UTF-8 reinterpretation, and the CRC table walk — under Miri's
+    // UB checks, sized to stay fast in the interpreter.
+    #[test]
+    fn miri_primitives_round_trip_smoke() {
+        let mut w = Writer::new();
+        w.u32(42);
+        w.f64(f64::NAN);
+        w.string("miri");
+        w.bool(false);
+        let bytes = w.into_bytes();
+        assert_ne!(crc32(&bytes), 0);
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u32("a").unwrap(), 42);
+        assert_eq!(r.f64("b").unwrap().to_bits(), f64::NAN.to_bits());
+        assert_eq!(r.string("c").unwrap(), "miri");
+        assert!(!r.bool("d").unwrap());
+        r.finish("end").unwrap();
+    }
+
     #[test]
     fn reader_rejects_bad_shapes() {
         // Short read names the field.

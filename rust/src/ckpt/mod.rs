@@ -41,6 +41,11 @@
 //! [`crate::util::fsio`]) so a crash mid-write leaves the previous
 //! snapshot intact.
 
+// Snapshot decode must degrade into typed CkptErrors, never an
+// `unwrap()` panic on attacker-shaped bytes; scope clippy's unwrap ban
+// to this subsystem (see fl/mod.rs for the policy note).
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 pub mod codec;
 
 use std::path::Path;

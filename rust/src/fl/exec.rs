@@ -338,9 +338,13 @@ impl StreamingAggregator {
     /// blocks, so the pipeline always progresses as long as every slot
     /// is eventually committed exactly once.
     pub fn commit(&self, seq: usize, upload: Option<(f32, Upload)>) {
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard =
+            self.inner.lock().expect("aggregator mutex poisoned: a worker panicked mid-commit");
         while seq > guard.next + self.max_lag {
-            guard = self.drained.wait(guard).unwrap();
+            guard = self
+                .drained
+                .wait(guard)
+                .expect("aggregator condvar wait failed: mutex poisoned");
         }
         let st = &mut *guard;
         debug_assert!(seq >= st.next, "slot {seq} committed twice");
@@ -377,7 +381,8 @@ impl StreamingAggregator {
     /// The accumulated Σ w·θ. Panics if a slot was never committed —
     /// only call after every worker returned.
     pub fn finish(self) -> Vec<f32> {
-        let st = self.inner.into_inner().unwrap();
+        let st =
+            self.inner.into_inner().expect("aggregator mutex poisoned: a worker panicked mid-commit");
         assert_eq!(st.next, st.total, "uncommitted upload slots");
         st.acc
     }

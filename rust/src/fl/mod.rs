@@ -30,6 +30,12 @@
 //! a run checkpointed mid-horizon resumes bit-identically
 //! (`docs/CHECKPOINTS.md`).
 
+// The round engine is crash-path-critical: a poisoned-lock panic must
+// say *what* died, not `unwrap()`. verify.sh relies on this module-tree
+// attribute (and its twins in sched/ and ckpt/) to scope the deny to
+// the hot subsystems while tests and benches stay free to unwrap.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 pub mod avail;
 pub mod exec;
 
@@ -277,6 +283,8 @@ impl<'rt> Server<'rt> {
             queues: &self.queues,
             avail: avail_mask.as_deref(),
         };
+        // detlint: allow(R2) — profiling only: feeds RoundRecord's
+        // decide_seconds trace field, never a scheduling decision.
         let t_decide = std::time::Instant::now();
         let decision: RoundDecision = if avail_mask
             .as_ref()
@@ -360,6 +368,8 @@ impl<'rt> Server<'rt> {
         decision: &RoundDecision,
         opts: &exec::ExecOpts,
     ) -> Result<exec::ExecOutput> {
+        // detlint: allow(R2) — profiling only: feeds RoundRecord's
+        // compute_seconds trace field, never a scheduling decision.
         let t_compute = std::time::Instant::now();
         let mut tasks: Vec<exec::ClientTask<'_>> = Vec::new();
         for (i, d) in decision.assignments.iter().enumerate() {

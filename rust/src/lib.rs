@@ -45,6 +45,13 @@
 //! with atomic writes, and a checkpointed-then-resumed run is
 //! bit-identical to the uninterrupted one (`docs/CHECKPOINTS.md`).
 //!
+//! The bit-identity contract is also **machine-checked**: `verify.sh`
+//! gates on `detlint` (`rust/xtask`), a static-analysis pass that flags
+//! the source patterns that break it — hash-order iteration, ambient
+//! wall-clock or entropy, `partial_cmp` float sorts, non-atomic file
+//! writes, uncommented `unsafe` — per the R1–R6 catalog and escape
+//! policy in `docs/DETERMINISM.md`.
+//!
 //! Start with [`config::SystemParams`] (paper Table I), then
 //! [`fl::Server`] for the training loop, or the `examples/`. The full
 //! layer-by-layer tour — AOT pipeline, artifacts, PJRT runtime,

@@ -33,18 +33,20 @@ pub struct Runtime {
     /// entry point, atomically accumulated so concurrent `execute`
     /// calls profile lock-free (was a `RefCell`, which kept the whole
     /// round loop single-threaded).
-    exec_nanos: [AtomicU64; 4],
+    exec_nanos: ExecClock,
     /// Escape hatch: `QCCF_PJRT_SERIALIZE=1` wraps every execute in a
     /// process-wide lock for PJRT plugins that are not safe under
     /// concurrent `Execute` (the bundled CPU client is).
     exec_lock: Option<Mutex<()>>,
 }
 
-// SAFETY: all interior mutability in `Runtime` is the atomic profiling
-// counters and the optional serialization mutex; the remaining fields
-// are immutable after `load`. Two layers must be race-free for this to
-// be sound: (1) PJRT itself — its API contract makes clients and
-// loaded executables thread-safe (concurrent `Execute` on one
+// SAFETY: all interior mutability in `Runtime` is the [`ExecClock`]
+// atomic profiling counters (whose cross-thread contract is exercised
+// under Miri by `miri_exec_clock_concurrent_adds_are_exact` below) and
+// the optional serialization mutex; the remaining fields are immutable
+// after `load`. Two layers must be race-free for this to be sound:
+// (1) PJRT itself — its API contract makes clients and loaded
+// executables thread-safe (concurrent `Execute` on one
 // `PjRtLoadedExecutable` is supported; the CPU plugin synchronizes
 // internally); (2) the `xla` binding layer, which wraps raw handles
 // and does not derive `Send`/`Sync` — this impl asserts its handle
@@ -56,6 +58,69 @@ pub struct Runtime {
 // parallel round pipeline keeps working.
 unsafe impl Send for Runtime {}
 unsafe impl Sync for Runtime {}
+
+/// The lock-free per-entry-point nanosecond clock behind
+/// [`Runtime::exec_profile`]: one atomic cumulative-nanos counter per
+/// entry point `(init, train_step, eval, quantize)`.
+///
+/// Split out of `Runtime` so the concurrency contract the
+/// `unsafe impl Send/Sync` above leans on is testable in isolation —
+/// including under Miri, which cannot construct a full `Runtime` (that
+/// needs PJRT artifacts and the xla FFI). Profiling only: the clock
+/// never feeds a decision, so nothing here can move a trace bit.
+#[derive(Debug)]
+pub struct ExecClock {
+    nanos: [AtomicU64; 4],
+}
+
+impl ExecClock {
+    /// A clock with all four counters at zero.
+    pub const fn new() -> ExecClock {
+        ExecClock {
+            nanos: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+        }
+    }
+
+    /// Add `nanos` to entry point `which` (0..4). Relaxed is enough:
+    /// counters are independent and only ever read as point-in-time
+    /// snapshots, never used for synchronization.
+    pub fn add(&self, which: usize, nanos: u64) {
+        self.nanos[which].fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of all four counters (checkpoint capture).
+    pub fn snapshot(&self) -> [u64; 4] {
+        [
+            self.nanos[0].load(Ordering::Relaxed),
+            self.nanos[1].load(Ordering::Relaxed),
+            self.nanos[2].load(Ordering::Relaxed),
+            self.nanos[3].load(Ordering::Relaxed),
+        ]
+    }
+
+    /// Reinstall a captured snapshot (checkpoint resume).
+    pub fn restore(&self, nanos: [u64; 4]) {
+        for (ctr, v) in self.nanos.iter().zip(nanos) {
+            ctr.store(v, Ordering::Relaxed);
+        }
+    }
+
+    /// The counters in seconds, the unit `exec_profile` reports.
+    pub fn profile_secs(&self) -> [f64; 4] {
+        self.snapshot().map(|n| n as f64 * 1e-9)
+    }
+}
+
+impl Default for ExecClock {
+    fn default() -> ExecClock {
+        ExecClock::new()
+    }
+}
 
 /// Result of one local training round on a client.
 #[derive(Clone, Debug)]
@@ -93,12 +158,7 @@ impl Runtime {
             quantize: get("quantize")?,
             client,
             info,
-            exec_nanos: [
-                AtomicU64::new(0),
-                AtomicU64::new(0),
-                AtomicU64::new(0),
-                AtomicU64::new(0),
-            ],
+            exec_nanos: ExecClock::new(),
             exec_lock: matches!(
                 std::env::var("QCCF_PJRT_SERIALIZE").as_deref(),
                 Ok("1")
@@ -132,7 +192,7 @@ impl Runtime {
             .to_literal_sync()
             .map_err(|e| anyhow!("fetch result: {e:?}"))?;
         let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        self.exec_nanos[which].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.exec_nanos.add(which, t0.elapsed().as_nanos() as u64);
         Ok(parts)
     }
 
@@ -247,28 +307,63 @@ impl Runtime {
     /// Cumulative execution seconds per entry point
     /// `(init, train_step, eval, quantize)` — perf-pass accounting.
     pub fn exec_profile(&self) -> [f64; 4] {
-        let sec = |i: usize| self.exec_nanos[i].load(Ordering::Relaxed) as f64 * 1e-9;
-        [sec(0), sec(1), sec(2), sec(3)]
+        self.exec_nanos.profile_secs()
     }
 
     /// The raw nanosecond clock behind [`Runtime::exec_profile`] —
     /// captured into checkpoints so a resumed run's profile continues
     /// the original accounting instead of restarting at zero.
     pub fn exec_nanos_snapshot(&self) -> [u64; 4] {
-        [
-            self.exec_nanos[0].load(Ordering::Relaxed),
-            self.exec_nanos[1].load(Ordering::Relaxed),
-            self.exec_nanos[2].load(Ordering::Relaxed),
-            self.exec_nanos[3].load(Ordering::Relaxed),
-        ]
+        self.exec_nanos.snapshot()
     }
 
     /// Reinstall a captured nanosecond clock (checkpoint resume).
     /// Profiling only — the clock never feeds any decision, so this
     /// cannot move a trace bit.
     pub fn restore_exec_nanos(&self, nanos: [u64; 4]) {
-        for (ctr, v) in self.exec_nanos.iter().zip(nanos) {
-            ctr.store(v, Ordering::Relaxed);
-        }
+        self.exec_nanos.restore(nanos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Prefixed `miri_` so verify.sh's nightly gate can run exactly this
+    // subset (`cargo +nightly miri test --lib miri_`): it exercises the
+    // cross-thread contract the `unsafe impl Send/Sync for Runtime`
+    // SAFETY argument leans on, without needing PJRT artifacts.
+    #[test]
+    fn miri_exec_clock_concurrent_adds_are_exact() {
+        let threads: u64 = if cfg!(miri) { 4 } else { 8 };
+        let iters: u64 = if cfg!(miri) { 50 } else { 10_000 };
+        let clock = ExecClock::new();
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let clock = &clock;
+                s.spawn(move || {
+                    for i in 0..iters {
+                        clock.add(((t + i) % 4) as usize, 3);
+                    }
+                });
+            }
+        });
+        let total: u64 = clock.snapshot().iter().sum();
+        assert_eq!(total, threads * iters * 3, "lost or duplicated adds");
+    }
+
+    #[test]
+    fn miri_exec_clock_snapshot_restore_round_trip() {
+        let clock = ExecClock::new();
+        clock.add(0, 7);
+        clock.add(2, 11);
+        clock.add(3, 13);
+        let snap = clock.snapshot();
+        assert_eq!(snap, [7, 0, 11, 13]);
+        let resumed = ExecClock::default();
+        resumed.restore(snap);
+        assert_eq!(resumed.snapshot(), snap);
+        let secs = resumed.profile_secs();
+        assert_eq!(secs[3], 13.0 * 1e-9);
     }
 }

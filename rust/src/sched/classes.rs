@@ -460,11 +460,12 @@ impl<'a> ClassEvalCtx<'a> {
             return self.solve(k, d_rep, w, rate);
         };
         let key = (rate.to_bits(), w.to_bits(), d_rep.to_bits());
-        if let Some(&hit) = shards[k].lock().unwrap().get(&key) {
+        let poisoned = "solve-memo shard poisoned: a worker panicked holding the lock";
+        if let Some(&hit) = shards[k].lock().expect(poisoned).get(&key) {
             return hit;
         }
         let solved = self.solve(k, d_rep, w, rate);
-        shards[k].lock().unwrap().insert(key, solved);
+        shards[k].lock().expect(poisoned).insert(key, solved);
         solved
     }
 

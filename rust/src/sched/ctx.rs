@@ -241,11 +241,12 @@ impl<'a> EvalCtx<'a> {
             return self.solve(i, w, rate);
         };
         let key = (rate.to_bits(), w.to_bits());
-        if let Some(&hit) = shards[i].lock().unwrap().get(&key) {
+        let poisoned = "solve-memo shard poisoned: a worker panicked holding the lock";
+        if let Some(&hit) = shards[i].lock().expect(poisoned).get(&key) {
             return hit;
         }
         let solved = self.solve(i, w, rate);
-        shards[i].lock().unwrap().insert(key, solved);
+        shards[i].lock().expect(poisoned).insert(key, solved);
         solved
     }
 

@@ -17,6 +17,11 @@
 //! pools, and the winning expansion is re-scored through the exact
 //! reference before anything reaches the trace.
 
+// Decision-stage code runs under worker pools where an anonymous
+// `unwrap()` panic is hard to attribute; scope clippy's unwrap ban to
+// this subsystem (see fl/mod.rs for the policy note).
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 pub mod classes;
 pub mod ctx;
 pub mod qccf;

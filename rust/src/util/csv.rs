@@ -26,6 +26,9 @@ impl CsvWriter {
             std::fs::create_dir_all(dir)?;
         }
         let mut w = CsvWriter {
+            // detlint: allow(R5) — streaming per-round trace appended as
+            // rounds finish; a torn tail row is acceptable and resume-
+            // critical artifacts all go through fsio::replace_atomic.
             out: BufWriter::new(File::create(path)?),
             ncol: headers.len(),
         };

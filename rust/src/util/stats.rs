@@ -96,7 +96,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return f64::NAN;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
     v[rank.min(v.len() - 1)]
 }
@@ -172,6 +172,23 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn percentile_total_cmp_matches_partial_cmp_on_finite_data() {
+        // Bit-identity pin for the detlint R3 fix: on finite inputs —
+        // including signed zeros and duplicates — the total_cmp sort
+        // inside `percentile` returns bit-for-bit what the historical
+        // partial_cmp sort returned, at every rank.
+        let xs = [3.5, -0.0, 0.0, 3.5, -7.25, 1e300, -1e-300, 42.0, -0.0, 0.125];
+        let mut reference: Vec<f64> = xs.to_vec();
+        reference.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (k, p) in (0..=10).map(|k| (k, k as f64 * 10.0)) {
+            let got = percentile(&xs, p);
+            let rank = ((p / 100.0) * (xs.len() as f64 - 1.0)).round() as usize;
+            let want = reference[rank.min(xs.len() - 1)];
+            assert_eq!(got.to_bits(), want.to_bits(), "p{k}0: {got} vs {want}");
+        }
     }
 
     #[test]

@@ -133,9 +133,7 @@ impl ChannelState {
     /// Best channel for a client (used by greedy baselines).
     pub fn best_channel(&self, client: usize) -> usize {
         (0..self.num_channels)
-            .max_by(|&a, &b| {
-                self.rate(client, a).partial_cmp(&self.rate(client, b)).unwrap()
-            })
+            .max_by(|&a, &b| self.rate(client, a).total_cmp(&self.rate(client, b)))
             .unwrap_or(0)
     }
 
@@ -168,7 +166,7 @@ mod tests {
         let (m, _) = model();
         let mut pairs: Vec<(f64, f64)> =
             m.distances_m.iter().cloned().zip(m.large_scale.iter().cloned()).collect();
-        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
         for w in pairs.windows(2) {
             assert!(w[0].1 >= w[1].1, "gain should fall with distance");
         }
@@ -259,5 +257,23 @@ mod tests {
         let st = ChannelState::from_rates(2, 3, vec![1.0, 5.0, 2.0, 9.0, 1.0, 3.0]);
         assert_eq!(st.best_channel(0), 1);
         assert_eq!(st.best_channel(1), 0);
+    }
+
+    #[test]
+    fn best_channel_bit_identical_to_partial_cmp_reference() {
+        // Bit-identity pin for the detlint R3 fix: on drawn (finite,
+        // positive) rates, the total_cmp argmax picks the same channel
+        // the historical partial_cmp argmax picked for every client,
+        // and exact rate ties keep the last-max-wins convention.
+        let (m, mut rng) = model();
+        let st = m.draw(&mut rng);
+        for i in 0..st.num_clients {
+            let reference = (0..st.num_channels)
+                .max_by(|&a, &b| st.rate(i, a).partial_cmp(&st.rate(i, b)).unwrap())
+                .unwrap();
+            assert_eq!(st.best_channel(i), reference, "client {i}");
+        }
+        let tie = ChannelState::from_rates(1, 3, vec![5.0, 7.0, 7.0]);
+        assert_eq!(tie.best_channel(0), 2, "max_by keeps the last max on ties");
     }
 }

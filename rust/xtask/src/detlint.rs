@@ -1,0 +1,916 @@
+//! `detlint` — the repo-specific determinism & safety audit.
+//!
+//! Every number this reproduction reports rests on one contract: runs
+//! are **bit-identical** for any `--threads` value, any cache state,
+//! and across checkpoint/resume (docs/DETERMINISM.md). The example
+//! pins in `rust/tests/` enforce that contract by sampling it; this
+//! pass enforces the *source patterns* that break it, at `verify.sh`
+//! time instead of in a flaky `stress-100k` trace:
+//!
+//! * **R1** — no iteration over `HashMap`/`HashSet` outside the
+//!   allowlisted memo modules (`sched/ctx.rs`, `sched/classes.rs`,
+//!   `ga/mod.rs`, which only do bit-keyed *lookups*): hash order is
+//!   nondeterministic, so folds/loops must go through `BTreeMap` or a
+//!   sorted view.
+//! * **R2** — no `Instant::now` / `SystemTime` outside `runtime/`,
+//!   `bench.rs` and `util/logging.rs`: wall-clock flows through
+//!   `Runtime` so it can be snapshotted and never feeds a decision.
+//! * **R3** — float comparisons via `total_cmp` only: a
+//!   `partial_cmp(..).unwrap()` sort is a NaN panic waiting in a hot
+//!   path, and `unwrap_or(Equal)` fallbacks silently destabilize order.
+//! * **R4** — RNG construction only through `util::rng` seeded
+//!   streams: no `thread_rng`/entropy/`RandomState`-style ambient
+//!   randomness anywhere.
+//! * **R5** — file writes only through `util::fsio::replace_atomic`
+//!   (writes staged *inside* a `replace_atomic` closure are
+//!   recognized): a torn file on preemption must never be observable.
+//! * **R6** — every `unsafe` block/impl carries a `// SAFETY:` comment
+//!   immediately above (consecutive `unsafe impl`s may share one).
+//!
+//! Legitimate exceptions are *auditable, not invisible*: a
+//! `// detlint: allow(Rk) — reason` comment on the offending line (or
+//! the comment block directly above it) suppresses the finding, the
+//! reason is mandatory, and the per-rule escape counts are printed in
+//! the summary line so drift shows up in CI logs.
+//!
+//! The analysis is a comment/string-aware token scan, not a full parse
+//! (the containers are offline, so `syn` is unavailable); `#[cfg(test)]
+//! mod` blocks are skipped — tests are example pins and may compare
+//! however they like.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The rule identifiers accepted by `allow(..)` escapes, in report order.
+pub const RULE_IDS: [&str; 6] = ["R1", "R2", "R3", "R4", "R5", "R6"];
+
+/// Files (relative to the lint root) where hash-container use is legal:
+/// the bit-keyed memo subsystems, which never iterate for results.
+const R1_ALLOWLIST: [&str; 3] = ["sched/ctx.rs", "sched/classes.rs", "ga/mod.rs"];
+
+/// Methods that observe hash iteration order.
+const R1_ITER_METHODS: [&str; 10] = [
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+    ".drain(",
+    ".retain(",
+];
+
+/// Ambient / nondeterministic randomness sources (R4).
+const R4_TOKENS: [&str; 8] = [
+    "thread_rng",
+    "from_entropy",
+    "from_os_rng",
+    "OsRng",
+    "getrandom",
+    "RandomState",
+    "StdRng",
+    "SmallRng",
+];
+
+/// Raw file-creation APIs (R5).
+const R5_TOKENS: [&str; 4] = ["File::create", "File::create_new", "fs::write", "OpenOptions"];
+
+/// One finding, anchored to a source line.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// Path relative to the lint root (or the bare file name).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// `R1`..`R6`, or `escape` for a malformed allow escape.
+    pub rule: String,
+    /// Human-readable description with the suggested fix.
+    pub msg: String,
+}
+
+/// The aggregated result of one lint run.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Findings that survived escapes, sorted by (file, line, rule).
+    pub violations: Vec<Violation>,
+    /// How many findings each rule's `allow` escapes suppressed.
+    pub escapes_used: BTreeMap<String, usize>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+}
+
+impl Report {
+    /// The one-line summary verify.sh prints: per-rule escape counts so
+    /// allow-drift is visible in logs.
+    pub fn summary_line(&self) -> String {
+        let escapes: Vec<String> = RULE_IDS
+            .iter()
+            .map(|r| format!("{r}={}", self.escapes_used.get(*r).copied().unwrap_or(0)))
+            .collect();
+        format!(
+            "detlint: {} file(s) scanned, {} violation(s); allow escapes used: {}",
+            self.files,
+            self.violations.len(),
+            escapes.join(" ")
+        )
+    }
+}
+
+/// Lint `root` (a directory walked recursively for `*.rs`, or a single
+/// file). Paths in the report are relative to `root`.
+pub fn lint_root(root: &Path) -> io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut rep = Report::default();
+    for f in &files {
+        let rel = match f.strip_prefix(root) {
+            Ok(p) if !p.as_os_str().is_empty() => p.to_string_lossy().replace('\\', "/"),
+            _ => f
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_else(|| f.to_string_lossy().into_owned()),
+        };
+        let src = fs::read_to_string(f)?;
+        rep.files += 1;
+        lint_into(&rel, &src, &mut rep);
+    }
+    Ok(rep)
+}
+
+/// Lint a single in-memory source (tests and tooling).
+pub fn lint_source_str(rel: &str, src: &str) -> Report {
+    let mut rep = Report { files: 1, ..Report::default() };
+    lint_into(rel, src, &mut rep);
+    rep
+}
+
+fn collect_rs(p: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if p.is_file() {
+        out.push(p.to_path_buf());
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = fs::read_dir(p)?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<Result<_, _>>()?;
+    entries.sort();
+    for e in entries {
+        if e.is_dir() {
+            collect_rs(&e, out)?;
+        } else if e.extension().is_some_and(|x| x == "rs") {
+            out.push(e);
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Source masking: split every line into (code, comment), with string and
+// char literal *contents* blanked out of the code half so token scans
+// cannot be fooled by literals, and comments preserved verbatim for the
+// SAFETY / escape checks. Handles nested block comments, raw strings,
+// byte strings, and the char-literal-vs-lifetime ambiguity.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, Default)]
+struct MaskedLine {
+    code: String,
+    comment: String,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn mask_source(src: &str) -> Vec<MaskedLine> {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut lines: Vec<MaskedLine> = vec![MaskedLine::default()];
+
+    fn push(lines: &mut Vec<MaskedLine>, c: char, to_comment: bool) {
+        if c == '\n' {
+            lines.push(MaskedLine::default());
+        } else if to_comment {
+            lines.last_mut().expect("lines never empty").comment.push(c);
+        } else {
+            lines.last_mut().expect("lines never empty").code.push(c);
+        }
+    }
+
+    let mut i = 0usize;
+    while i < n {
+        let c = cs[i];
+
+        // Line comment (covers `//`, `///`, `//!`).
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            while i < n && cs[i] != '\n' {
+                push(&mut lines, cs[i], true);
+                i += 1;
+            }
+            continue;
+        }
+
+        // Block comment, nesting-aware.
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let mut depth = 0usize;
+            while i < n {
+                if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    push(&mut lines, '/', true);
+                    push(&mut lines, '*', true);
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth = depth.saturating_sub(1);
+                    push(&mut lines, '*', true);
+                    push(&mut lines, '/', true);
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    push(&mut lines, cs[i], true);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+
+        let prev_ident = i > 0 && is_ident_char(cs[i - 1]);
+
+        // Raw (byte) string: r"..", r#".."#, br#".."# — blank contents.
+        if !prev_ident && (c == 'r' || (c == 'b' && i + 1 < n && cs[i + 1] == 'r')) {
+            let q_start = if c == 'b' { i + 2 } else { i + 1 };
+            let mut j = q_start;
+            let mut hashes = 0usize;
+            while j < n && cs[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && cs[j] == '"' {
+                for _ in i..=j {
+                    push(&mut lines, ' ', false);
+                }
+                i = j + 1;
+                while i < n {
+                    if cs[i] == '"' {
+                        let closes = (0..hashes).all(|h| i + 1 + h < n && cs[i + 1 + h] == '#');
+                        if closes {
+                            for _ in 0..(1 + hashes) {
+                                push(&mut lines, ' ', false);
+                            }
+                            i += 1 + hashes;
+                            break;
+                        }
+                    }
+                    push(&mut lines, if cs[i] == '\n' { '\n' } else { ' ' }, false);
+                    i += 1;
+                }
+                continue;
+            }
+            // Not a raw string opener: fall through to normal handling.
+        }
+
+        // Plain / byte string literal — blank contents, keep the quotes.
+        if c == '"' || (c == 'b' && !prev_ident && i + 1 < n && cs[i + 1] == '"') {
+            if c == 'b' {
+                push(&mut lines, ' ', false);
+                i += 1;
+            }
+            push(&mut lines, '"', false);
+            i += 1;
+            while i < n {
+                if cs[i] == '\\' && i + 1 < n {
+                    push(&mut lines, ' ', false);
+                    push(&mut lines, if cs[i + 1] == '\n' { '\n' } else { ' ' }, false);
+                    i += 2;
+                    continue;
+                }
+                if cs[i] == '"' {
+                    push(&mut lines, '"', false);
+                    i += 1;
+                    break;
+                }
+                push(&mut lines, if cs[i] == '\n' { '\n' } else { ' ' }, false);
+                i += 1;
+            }
+            continue;
+        }
+
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && cs[i + 1] == '\\' {
+                // Escaped char literal: blank through the closing quote.
+                push(&mut lines, ' ', false);
+                i += 1;
+                while i < n && cs[i] != '\'' {
+                    push(&mut lines, if cs[i] == '\n' { '\n' } else { ' ' }, false);
+                    i += 1;
+                }
+                if i < n {
+                    push(&mut lines, ' ', false);
+                    i += 1;
+                }
+                continue;
+            }
+            if i + 2 < n && cs[i + 2] == '\'' && cs[i + 1] != '\'' && cs[i + 1] != '\\' {
+                // Simple char literal 'x'.
+                for _ in 0..3 {
+                    push(&mut lines, ' ', false);
+                }
+                i += 3;
+                continue;
+            }
+            // Lifetime tick: keep it, it cannot confuse token scans.
+            push(&mut lines, '\'', false);
+            i += 1;
+            continue;
+        }
+
+        push(&mut lines, c, false);
+        i += 1;
+    }
+    lines
+}
+
+// ---------------------------------------------------------------------------
+// Token scanning.
+// ---------------------------------------------------------------------------
+
+/// Byte offsets at which `tok` occurs in `code` with identifier-boundary
+/// checks on whichever ends of `tok` are identifier characters.
+fn token_positions(code: &str, tok: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    if tok.is_empty() {
+        return out;
+    }
+    let first_is_ident = tok.chars().next().is_some_and(is_ident_char);
+    let last_is_ident = tok.chars().last().is_some_and(is_ident_char);
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(tok) {
+        let p = start + pos;
+        let before_ok = !first_is_ident
+            || p == 0
+            || !code[..p].chars().next_back().is_some_and(is_ident_char);
+        let after_ok = !last_is_ident
+            || !code[p + tok.len()..].chars().next().is_some_and(is_ident_char);
+        if before_ok && after_ok {
+            out.push(p);
+        }
+        start = p + tok.len();
+    }
+    out
+}
+
+fn has_token(code: &str, tok: &str) -> bool {
+    !token_positions(code, tok).is_empty()
+}
+
+// ---------------------------------------------------------------------------
+// Escapes: `// detlint: allow(Rk) — reason`.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct EscapeScan {
+    rules: Vec<String>,
+    malformed: Vec<String>,
+}
+
+fn is_reason_separator(c: char) -> bool {
+    c.is_whitespace() || matches!(c, '—' | '–' | '-' | ':' | ',')
+}
+
+fn parse_escape_comment(comment: &str) -> EscapeScan {
+    let mut out = EscapeScan::default();
+    let mut rest = comment;
+    while let Some(p) = rest.find("detlint:") {
+        let tail = rest[p + "detlint:".len()..].trim_start();
+        if let Some(t) = tail.strip_prefix("allow(") {
+            if let Some(close) = t.find(')') {
+                let rule = t[..close].trim().to_string();
+                let reason = t[close + 1..].trim_start_matches(is_reason_separator).trim();
+                if !RULE_IDS.contains(&rule.as_str()) {
+                    out.malformed.push(format!(
+                        "unknown rule `{rule}` in detlint allow escape (expected one of R1..R6)"
+                    ));
+                } else if reason.is_empty() {
+                    out.malformed.push(format!(
+                        "allow({rule}) escape without a reason — write `// detlint: allow({rule}) — <why this site is sound>` on one line"
+                    ));
+                } else {
+                    out.rules.push(rule);
+                }
+                rest = &t[close + 1..];
+                continue;
+            }
+        }
+        out.malformed.push(
+            "malformed detlint escape (expected `detlint: allow(Rk) — reason`)".to_string(),
+        );
+        rest = tail;
+    }
+    out
+}
+
+/// Escapes that apply to code line `l`: its own trailing comment plus
+/// the contiguous comment-only block directly above (a blank line or a
+/// code line detaches the block).
+fn escapes_for_line(lines: &[MaskedLine], l: usize) -> Vec<String> {
+    let mut out = parse_escape_comment(&lines[l].comment).rules;
+    let mut k = l;
+    while k > 0 {
+        k -= 1;
+        let ml = &lines[k];
+        if !ml.code.trim().is_empty() {
+            break;
+        }
+        if ml.comment.trim().is_empty() {
+            break;
+        }
+        out.extend(parse_escape_comment(&ml.comment).rules);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// `#[cfg(test)]` regions — tests are example pins, not linted.
+// ---------------------------------------------------------------------------
+
+fn test_regions(lines: &[MaskedLine]) -> Vec<bool> {
+    let mut mark = vec![false; lines.len()];
+    let mut l = 0usize;
+    while l < lines.len() {
+        let squish: String = lines[l].code.chars().filter(|c| !c.is_whitespace()).collect();
+        if !squish.contains("#[cfg(test)]") {
+            l += 1;
+            continue;
+        }
+        // Find the gated item: the next non-blank, non-attribute code line.
+        let mut j = l + 1;
+        while j < lines.len() {
+            let t = lines[j].code.trim();
+            if t.is_empty() || t.starts_with("#[") {
+                j += 1;
+            } else {
+                break;
+            }
+        }
+        if j >= lines.len() {
+            for m in mark.iter_mut().skip(l) {
+                *m = true;
+            }
+            break;
+        }
+        let item = lines[j].code.trim_start();
+        let is_mod = item.starts_with("mod ")
+            || item.starts_with("pub mod ")
+            || item.starts_with("pub(crate) mod ");
+        if !is_mod {
+            // A single gated item (e.g. `#[cfg(test)] use ...`).
+            for m in l..=j {
+                mark[m] = true;
+            }
+            l = j + 1;
+            continue;
+        }
+        // Brace-match the module body.
+        let mut depth: i64 = 0;
+        let mut started = false;
+        let mut k = j;
+        let mut closed_at: Option<usize> = None;
+        'scan: while k < lines.len() {
+            for ch in lines[k].code.chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        started = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+                if started && depth == 0 {
+                    closed_at = Some(k);
+                    break 'scan;
+                }
+            }
+            k += 1;
+        }
+        match closed_at {
+            Some(end) => {
+                for m in l..=end {
+                    mark[m] = true;
+                }
+                l = end + 1;
+            }
+            None => {
+                for m in mark.iter_mut().skip(l) {
+                    *m = true;
+                }
+                break;
+            }
+        }
+    }
+    mark
+}
+
+// ---------------------------------------------------------------------------
+// Rule passes. Each emits (0-based line, rule, message) candidates;
+// escapes and test regions are resolved centrally in `lint_into`.
+// ---------------------------------------------------------------------------
+
+type Candidate = (usize, &'static str, String);
+
+fn binding_name_before(code: &str, p: usize) -> Option<String> {
+    let before = &code[..p];
+    // `let [mut] name ... Hash...`
+    if let Some(lp) = before.rfind("let ") {
+        let boundary_ok =
+            lp == 0 || !before[..lp].chars().next_back().is_some_and(is_ident_char);
+        if boundary_ok {
+            let seg = before[lp + 4..].trim_start();
+            let seg = seg.strip_prefix("mut ").unwrap_or(seg).trim_start();
+            let name: String = seg.chars().take_while(|&c| is_ident_char(c)).collect();
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+    }
+    // `name: ...Hash` (struct field / fn param) or `name = Hash...`:
+    // scan back for the nearest single `:` or `=`.
+    let bytes = before.as_bytes();
+    let mut q = before.len();
+    while q > 0 {
+        q -= 1;
+        let b = bytes[q];
+        if b == b':' {
+            if q > 0 && bytes[q - 1] == b':' {
+                q -= 1; // skip over `::`
+                continue;
+            }
+            if q + 1 < bytes.len() && bytes[q + 1] == b':' {
+                continue;
+            }
+        } else if b != b'=' {
+            continue;
+        }
+        let head = before[..q].trim_end();
+        let rev: String = head.chars().rev().take_while(|&c| is_ident_char(c)).collect();
+        let name: String = rev.chars().rev().collect();
+        if !name.is_empty() && name != "mut" && name != "let" {
+            return Some(name);
+        }
+        break;
+    }
+    None
+}
+
+fn for_in_target(code: &str) -> Option<String> {
+    if token_positions(code, "for").is_empty() {
+        return None;
+    }
+    let inp = code.find(" in ")?;
+    let mut tail = code[inp + 4..].trim_start();
+    loop {
+        if let Some(t) = tail.strip_prefix('&') {
+            tail = t.trim_start();
+            continue;
+        }
+        if let Some(t) = tail.strip_prefix("mut ") {
+            tail = t.trim_start();
+            continue;
+        }
+        if let Some(t) = tail.strip_prefix("self.") {
+            tail = t;
+            continue;
+        }
+        break;
+    }
+    let name: String = tail.chars().take_while(|&c| is_ident_char(c)).collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+fn r1_hash_iteration(rel: &str, lines: &[MaskedLine], out: &mut Vec<Candidate>) {
+    if R1_ALLOWLIST.contains(&rel) {
+        return;
+    }
+    // Hash-like type tokens: the std types plus local aliases of them
+    // (two fixpoint sweeps cover alias-of-alias).
+    let mut hash_types: Vec<String> = vec!["HashMap".to_string(), "HashSet".to_string()];
+    for _ in 0..2 {
+        for ml in lines {
+            let t = ml.code.trim_start();
+            let rest = t
+                .strip_prefix("pub type ")
+                .or_else(|| t.strip_prefix("pub(crate) type "))
+                .or_else(|| t.strip_prefix("type "));
+            let Some(rest) = rest else { continue };
+            let name: String = rest.chars().take_while(|&c| is_ident_char(c)).collect();
+            if name.is_empty() || hash_types.contains(&name) {
+                continue;
+            }
+            if hash_types.iter().any(|h| has_token(&ml.code, h)) {
+                hash_types.push(name);
+            }
+        }
+    }
+    // Identifiers bound to hash-typed values.
+    let mut names: Vec<String> = Vec::new();
+    for ml in lines {
+        for h in &hash_types {
+            for p in token_positions(&ml.code, h) {
+                if let Some(n) = binding_name_before(&ml.code, p) {
+                    if !names.contains(&n) {
+                        names.push(n);
+                    }
+                }
+            }
+        }
+    }
+    if names.is_empty() {
+        return;
+    }
+    for (idx, ml) in lines.iter().enumerate() {
+        for name in &names {
+            for m in R1_ITER_METHODS {
+                let pat = format!("{name}{m}");
+                if has_token(&ml.code, &pat) {
+                    out.push((idx, "R1", format!(
+                        "iteration over hash container `{name}` (`{m}`): hash order is nondeterministic — use a BTreeMap/BTreeSet or a sorted view (allowlist: {})",
+                        R1_ALLOWLIST.join(", ")
+                    )));
+                }
+            }
+            if for_in_target(&ml.code).as_deref() == Some(name.as_str()) {
+                out.push((idx, "R1", format!(
+                    "`for` iteration over hash container `{name}`: hash order is nondeterministic — iterate a BTreeMap or sorted keys"
+                )));
+            }
+        }
+    }
+}
+
+fn r2_wall_clock(rel: &str, lines: &[MaskedLine], out: &mut Vec<Candidate>) {
+    if rel.starts_with("runtime/") || rel == "bench.rs" || rel == "util/logging.rs" {
+        return;
+    }
+    for (idx, ml) in lines.iter().enumerate() {
+        for tok in ["Instant::now", "SystemTime"] {
+            if has_token(&ml.code, tok) {
+                out.push((idx, "R2", format!(
+                    "wall-clock read (`{tok}`) outside runtime/, bench.rs, util/logging.rs: route timing through `Runtime` so it is checkpointable and never feeds a decision"
+                )));
+            }
+        }
+    }
+}
+
+fn r3_partial_cmp(lines: &[MaskedLine], out: &mut Vec<Candidate>) {
+    for (idx, ml) in lines.iter().enumerate() {
+        if has_token(&ml.code, "partial_cmp") {
+            out.push((idx, "R3", "float comparison via `partial_cmp`: use `total_cmp` — bit-stable total order, no NaN panic/fallback".to_string()));
+        }
+    }
+}
+
+fn r4_rng_sources(rel: &str, lines: &[MaskedLine], out: &mut Vec<Candidate>) {
+    if rel == "util/rng.rs" {
+        return;
+    }
+    for (idx, ml) in lines.iter().enumerate() {
+        for tok in R4_TOKENS {
+            if has_token(&ml.code, tok) {
+                out.push((idx, "R4", format!(
+                    "nondeterministic randomness source `{tok}`: construct RNGs only through `util::rng` explicitly-seeded streams"
+                )));
+            }
+        }
+    }
+}
+
+fn r5_file_writes(rel: &str, lines: &[MaskedLine], out: &mut Vec<Candidate>) {
+    if rel == "util/fsio.rs" {
+        return;
+    }
+    // Positional pass: a write API is legal while lexically inside the
+    // argument list of a `replace_atomic(...)` call (the staging
+    // closure writes the tmp sibling). `armed` is true between the
+    // `replace_atomic` token and the `(` that must directly follow it;
+    // any other non-whitespace character disarms, so a bare import
+    // (`use ...::replace_atomic;`) never opens a bogus extent.
+    let mut depth: i64 = 0;
+    let mut extents: Vec<i64> = Vec::new();
+    let mut armed = false;
+    for (idx, ml) in lines.iter().enumerate() {
+        let code = &ml.code;
+        let chars: Vec<(usize, char)> = code.char_indices().collect();
+        let mut ci = 0usize;
+        while ci < chars.len() {
+            let (bp, ch) = chars[ci];
+            if starts_token_here(code, bp, "replace_atomic") {
+                armed = true;
+                ci += "replace_atomic".len();
+                continue;
+            }
+            if extents.is_empty() {
+                for tok in R5_TOKENS {
+                    if starts_token_here(code, bp, tok) {
+                        out.push((idx, "R5", format!(
+                            "direct file write (`{tok}`) outside `util::fsio`: stage through `replace_atomic` so preemption never leaves a torn file"
+                        )));
+                    }
+                }
+            }
+            match ch {
+                '(' => {
+                    depth += 1;
+                    if armed {
+                        extents.push(depth);
+                        armed = false;
+                    }
+                }
+                ')' => {
+                    if extents.last() == Some(&depth) {
+                        extents.pop();
+                    }
+                    depth -= 1;
+                }
+                c if c.is_whitespace() => {}
+                _ => armed = false,
+            }
+            ci += 1;
+        }
+    }
+}
+
+/// True when `tok` occurs in `code` starting exactly at byte `bp`, with
+/// an identifier-boundary check on the left edge.
+fn starts_token_here(code: &str, bp: usize, tok: &str) -> bool {
+    token_positions(&code[bp..], tok).first() == Some(&0)
+        && (bp == 0 || !code[..bp].chars().next_back().is_some_and(is_ident_char))
+}
+
+fn r6_unsafe_safety(lines: &[MaskedLine], out: &mut Vec<Candidate>) {
+    for (idx, ml) in lines.iter().enumerate() {
+        if !has_token(&ml.code, "unsafe") {
+            continue;
+        }
+        if ml.comment.contains("SAFETY:") {
+            continue;
+        }
+        let mut k = idx;
+        let mut satisfied = false;
+        while k > 0 {
+            k -= 1;
+            let prev = &lines[k];
+            let code = prev.code.trim();
+            let comment = prev.comment.trim();
+            if !code.is_empty() {
+                // Consecutive `unsafe impl`s may share one SAFETY block;
+                // attributes are transparent.
+                if code.starts_with("unsafe impl") || code.starts_with("#[") || code.starts_with("#![") {
+                    if comment.contains("SAFETY:") {
+                        satisfied = true;
+                        break;
+                    }
+                    continue;
+                }
+                break;
+            }
+            if comment.is_empty() {
+                break; // blank line detaches the comment block
+            }
+            if comment.contains("SAFETY:") {
+                satisfied = true;
+                break;
+            }
+        }
+        if !satisfied {
+            out.push((idx, "R6", "`unsafe` without a `// SAFETY:` comment immediately above stating the soundness argument".to_string()));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-file driver.
+// ---------------------------------------------------------------------------
+
+fn lint_into(rel: &str, src: &str, rep: &mut Report) {
+    let lines = mask_source(src);
+    let in_test = test_regions(&lines);
+
+    // Malformed escapes are violations wherever they appear — an escape
+    // that fails to parse must never silently suppress anything.
+    for (idx, ml) in lines.iter().enumerate() {
+        for m in parse_escape_comment(&ml.comment).malformed {
+            rep.violations.push(Violation {
+                file: rel.to_string(),
+                line: idx + 1,
+                rule: "escape".to_string(),
+                msg: m,
+            });
+        }
+    }
+
+    let mut candidates: Vec<Candidate> = Vec::new();
+    r1_hash_iteration(rel, &lines, &mut candidates);
+    r2_wall_clock(rel, &lines, &mut candidates);
+    r3_partial_cmp(&lines, &mut candidates);
+    r4_rng_sources(rel, &lines, &mut candidates);
+    r5_file_writes(rel, &lines, &mut candidates);
+    r6_unsafe_safety(&lines, &mut candidates);
+
+    candidates.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    candidates.dedup_by(|a, b| a.0 == b.0 && a.1 == b.1);
+
+    for (l, rule, msg) in candidates {
+        if in_test.get(l).copied().unwrap_or(false) {
+            continue;
+        }
+        if escapes_for_line(&lines, l).iter().any(|r| r == rule) {
+            *rep.escapes_used.entry(rule.to_string()).or_insert(0) += 1;
+        } else {
+            rep.violations.push(Violation {
+                file: rel.to_string(),
+                line: l + 1,
+                rule: rule.to_string(),
+                msg,
+            });
+        }
+    }
+    rep.violations
+        .sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masking_separates_comments_and_blanks_strings() {
+        let src = "let x = \"Instant::now\"; // Instant::now here is comment\n";
+        let lines = mask_source(src);
+        assert!(!has_token(&lines[0].code, "Instant::now"));
+        assert!(lines[0].comment.contains("Instant::now"));
+    }
+
+    #[test]
+    fn lifetimes_do_not_eat_code() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }\n";
+        let lines = mask_source(src);
+        assert!(lines[0].code.contains("str"));
+    }
+
+    #[test]
+    fn char_literals_are_blanked() {
+        let src = "let c = 'x'; let d = '\\n'; let e = b'\"';\n";
+        let lines = mask_source(src);
+        assert!(!lines[0].code.contains('x') || lines[0].code.contains("let"));
+        assert!(!lines[0].code.contains('"'));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let src = "let s = r#\"SystemTime \"quoted\" inside\"#; let t = 1;\n";
+        let lines = mask_source(src);
+        assert!(!has_token(&lines[0].code, "SystemTime"));
+        assert!(lines[0].code.contains("let t = 1;"));
+    }
+
+    #[test]
+    fn escape_reason_required() {
+        let scan = parse_escape_comment("// detlint: allow(R3) —");
+        assert!(scan.rules.is_empty());
+        assert_eq!(scan.malformed.len(), 1);
+        let ok = parse_escape_comment("// detlint: allow(R3) — callers guarantee non-NaN");
+        assert_eq!(ok.rules, vec!["R3".to_string()]);
+        assert!(ok.malformed.is_empty());
+    }
+
+    #[test]
+    fn unknown_rule_is_malformed() {
+        let scan = parse_escape_comment("// detlint: allow(R9) — whatever");
+        assert!(scan.rules.is_empty());
+        assert_eq!(scan.malformed.len(), 1);
+    }
+
+    #[test]
+    fn replace_atomic_extent_suppresses_r5() {
+        let src = "use crate::util::fsio::replace_atomic;\npub fn save(p: &std::path::Path) -> std::io::Result<()> {\n    replace_atomic(p, |tmp| {\n        let f = std::fs::File::create(tmp)?;\n        drop(f);\n        Ok(())\n    })\n}\n";
+        let rep = lint_source_str("x.rs", src);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+    }
+
+    #[test]
+    fn grouped_unsafe_impls_share_one_safety_comment() {
+        let src = "// SAFETY: all interior mutability is atomic.\nunsafe impl Send for T {}\nunsafe impl Sync for T {}\n";
+        let rep = lint_source_str("x.rs", src);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+    }
+}

@@ -1,0 +1,10 @@
+//! Repo tooling for the QCCF reproduction. The only task today is
+//! [`detlint`], the determinism & safety audit `verify.sh` gates on:
+//!
+//! ```text
+//! cargo run --manifest-path rust/xtask/Cargo.toml -p xtask -- detlint --root rust/src
+//! ```
+//!
+//! See `docs/DETERMINISM.md` for the contract the rules machine-check.
+
+pub mod detlint;

@@ -1,0 +1,83 @@
+//! `xtask` CLI. `xtask detlint [--root PATH]` runs the determinism &
+//! safety audit over a source tree and exits nonzero on any violation.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use xtask::detlint;
+
+fn usage() -> &'static str {
+    "usage: xtask detlint [--root PATH]\n\n\
+     Runs the determinism & safety audit (rules R1-R6, see\n\
+     docs/DETERMINISM.md) over PATH (default: rust/src, falling back\n\
+     to src). Exits 1 if any violation is found."
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("detlint") => run_detlint(&args[1..]),
+        Some("--help") | Some("-h") | None => {
+            println!("{}", usage());
+            ExitCode::SUCCESS
+        }
+        Some(other) => {
+            eprintln!("xtask: unknown task `{other}`\n\n{}", usage());
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run_detlint(args: &[String]) -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut i = 0usize;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" => {
+                let Some(v) = args.get(i + 1) else {
+                    eprintln!("xtask: --root needs a value\n\n{}", usage());
+                    return ExitCode::from(2);
+                };
+                root = Some(PathBuf::from(v));
+                i += 2;
+            }
+            "--help" | "-h" => {
+                println!("{}", usage());
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("xtask: unknown detlint argument `{other}`\n\n{}", usage());
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let root = root.unwrap_or_else(|| {
+        let preferred = PathBuf::from("rust/src");
+        if preferred.is_dir() {
+            preferred
+        } else {
+            PathBuf::from("src")
+        }
+    });
+    if !root.exists() {
+        eprintln!("xtask: detlint root `{}` does not exist", root.display());
+        return ExitCode::from(2);
+    }
+    match detlint::lint_root(&root) {
+        Ok(rep) => {
+            for v in &rep.violations {
+                println!("detlint: {}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+            }
+            println!("{}", rep.summary_line());
+            if rep.violations.is_empty() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("xtask: detlint failed to read `{}`: {e}", root.display());
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Fixture battery for `detlint`: each rule R1-R6 fires exactly once on
+//! its fixture, the clean fixture is silent, reasonless escapes are
+//! rejected, and the CLI exit codes match (acceptance criteria of the
+//! determinism-audit issue).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use xtask::detlint::{lint_root, lint_source_str};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+fn assert_single_violation(name: &str, rule: &str) {
+    let rep = lint_root(&fixture(name)).expect("fixture readable");
+    assert_eq!(
+        rep.violations.len(),
+        1,
+        "{name}: expected exactly one violation, got {:?}",
+        rep.violations
+    );
+    assert_eq!(rep.violations[0].rule, rule, "{name}: {:?}", rep.violations);
+}
+
+#[test]
+fn r1_hash_iteration_fires_once() {
+    assert_single_violation("r1_hash_iter.rs", "R1");
+}
+
+#[test]
+fn r2_wall_clock_fires_once() {
+    assert_single_violation("r2_wallclock.rs", "R2");
+}
+
+#[test]
+fn r3_partial_cmp_fires_once() {
+    assert_single_violation("r3_partial_cmp.rs", "R3");
+}
+
+#[test]
+fn r4_ambient_rng_fires_once() {
+    assert_single_violation("r4_rng.rs", "R4");
+}
+
+#[test]
+fn r5_direct_write_fires_once() {
+    assert_single_violation("r5_file_write.rs", "R5");
+}
+
+#[test]
+fn r6_missing_safety_fires_once() {
+    assert_single_violation("r6_unsafe.rs", "R6");
+}
+
+#[test]
+fn clean_fixture_is_silent() {
+    let rep = lint_root(&fixture("clean.rs")).expect("fixture readable");
+    assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+    assert!(rep.escapes_used.is_empty(), "{:?}", rep.escapes_used);
+}
+
+#[test]
+fn allow_escape_requires_nonempty_reason() {
+    let rep = lint_root(&fixture("allow_no_reason.rs")).expect("fixture readable");
+    let rules: Vec<&str> = rep.violations.iter().map(|v| v.rule.as_str()).collect();
+    assert!(
+        rules.contains(&"escape"),
+        "the malformed escape itself must be reported: {:?}",
+        rep.violations
+    );
+    assert!(
+        rules.contains(&"R3"),
+        "a reasonless escape must not suppress the finding: {:?}",
+        rep.violations
+    );
+}
+
+#[test]
+fn valid_escape_suppresses_and_is_counted() {
+    let src = "\
+/// Sorts with a documented exception.\n\
+pub fn sort_samples(v: &mut [f64]) {\n\
+    // detlint: allow(R3) — inputs are clamped upstream, NaN impossible\n\
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+}\n";
+    let rep = lint_source_str("escaped.rs", src);
+    assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+    assert_eq!(rep.escapes_used.get("R3"), Some(&1));
+}
+
+#[test]
+fn summary_line_reports_all_rules() {
+    let rep = lint_source_str("empty.rs", "");
+    let line = rep.summary_line();
+    for r in ["R1", "R2", "R3", "R4", "R5", "R6"] {
+        assert!(line.contains(&format!("{r}=0")), "{line}");
+    }
+}
+
+#[test]
+fn cli_exits_nonzero_on_violations_and_zero_on_clean() {
+    let bin = env!("CARGO_BIN_EXE_xtask");
+    for (name, expect_ok) in [
+        ("r1_hash_iter.rs", false),
+        ("r2_wallclock.rs", false),
+        ("r3_partial_cmp.rs", false),
+        ("r4_rng.rs", false),
+        ("r5_file_write.rs", false),
+        ("r6_unsafe.rs", false),
+        ("allow_no_reason.rs", false),
+        ("clean.rs", true),
+    ] {
+        let out = Command::new(bin)
+            .args(["detlint", "--root"])
+            .arg(fixture(name))
+            .output()
+            .expect("xtask binary runs");
+        assert_eq!(
+            out.status.success(),
+            expect_ok,
+            "{name}: status {:?}\nstdout: {}",
+            out.status,
+            String::from_utf8_lossy(&out.stdout)
+        );
+    }
+}

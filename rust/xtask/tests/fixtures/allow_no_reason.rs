@@ -1,0 +1,8 @@
+//! Fixture: an allow escape with an empty reason must NOT suppress the
+//! finding, and the malformed escape is itself reported.
+
+/// Sorts with partial_cmp under a reasonless escape: both are flagged.
+pub fn sort_samples(v: &mut [f64]) {
+    // detlint: allow(R3) —
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

@@ -1,0 +1,35 @@
+//! Fixture: passes every rule. Ordered containers, total_cmp, a
+//! SAFETY-commented unsafe, and a #[cfg(test)] module that is free to
+//! compare however it likes (tests are skipped by detlint).
+
+use std::collections::BTreeMap;
+
+/// Sums values in key order: deterministic fold.
+pub fn sum_values(m: &BTreeMap<u64, f64>) -> f64 {
+    m.values().sum()
+}
+
+/// Sorts samples under the IEEE-754 total order.
+pub fn sort_samples(v: &mut [f64]) {
+    v.sort_by(|a, b| a.total_cmp(b));
+}
+
+/// Reads the first byte of a slice the caller promises is non-empty.
+pub fn first_byte(v: &[f64]) -> u8 {
+    debug_assert!(!v.is_empty());
+    // SAFETY: the pointer is valid for at least one f64 (asserted
+    // above), and any initialized byte is a valid u8.
+    unsafe { *(v.as_ptr() as *const u8) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tests_may_use_partial_cmp() {
+        let mut v = vec![2.0_f64, 1.0];
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(v, vec![1.0, 2.0]);
+    }
+}

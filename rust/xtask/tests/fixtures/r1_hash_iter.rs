@@ -1,0 +1,8 @@
+//! Fixture: triggers R1 exactly once — iteration over a HashMap.
+
+use std::collections::HashMap;
+
+/// Sums the values of `m` in hash order: nondeterministic fold.
+pub fn sum_values(m: &HashMap<u64, f64>) -> f64 {
+    m.values().sum()
+}

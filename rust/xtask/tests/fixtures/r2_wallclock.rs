@@ -1,0 +1,8 @@
+//! Fixture: triggers R2 exactly once — wall-clock read outside runtime/.
+
+/// Times a closure with an ambient clock instead of the Runtime.
+pub fn timed<F: FnOnce()>(f: F) -> u128 {
+    let t0 = std::time::Instant::now();
+    f();
+    t0.elapsed().as_nanos()
+}

@@ -1,0 +1,6 @@
+//! Fixture: triggers R3 exactly once — float sort via partial_cmp.
+
+/// Sorts samples with a NaN-panicking partial order.
+pub fn sort_samples(v: &mut Vec<f64>) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

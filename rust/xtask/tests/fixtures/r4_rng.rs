@@ -1,0 +1,7 @@
+//! Fixture: triggers R4 exactly once — ambient RNG construction.
+
+/// Draws from an OS-entropy-seeded generator: unreproducible.
+pub fn ambient_draw() -> u64 {
+    let mut rng = rand::thread_rng();
+    rng.gen()
+}

@@ -1,0 +1,9 @@
+//! Fixture: triggers R5 exactly once — direct file write.
+
+use std::io::Write;
+
+/// Writes bytes straight to `path`: preemption leaves a torn file.
+pub fn dump(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(bytes)
+}

@@ -1,0 +1,6 @@
+//! Fixture: triggers R6 exactly once — unsafe without a SAFETY comment.
+
+/// Reads the first byte of a non-empty slice without an argument.
+pub fn first_byte(v: &[f64]) -> u8 {
+    unsafe { *(v.as_ptr() as *const u8) }
+}

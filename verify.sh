@@ -3,8 +3,10 @@
 #
 #   ./verify.sh
 #
-# Runs the release build, the full test suite, and clippy with warnings
-# denied, from wherever the Cargo manifest lives relative to this repo.
+# Runs the release build, the detlint determinism & safety audit
+# (docs/DETERMINISM.md), the full test suite, the Miri UB gate when a
+# nightly toolchain is present, and clippy with warnings denied, from
+# wherever the Cargo manifest lives relative to this repo.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -24,8 +26,41 @@ fi
 
 echo "== cargo build --release =="
 cargo build --release
+
+# Determinism & safety audit (rules R1-R6, docs/DETERMINISM.md): a hard
+# gate before anything else runs, so a stray HashMap iteration or
+# partial_cmp never reaches the (much slower) test stage. The xtask
+# crate is a standalone zero-dependency workspace, invoked by manifest
+# path so it builds the same whether we cd'd into rust/ or not. Its
+# summary line includes the allow-escape count per rule — watch that
+# number in CI logs for drift.
+XTASK_DIR="rust/xtask"; [ -d "$XTASK_DIR" ] || XTASK_DIR="xtask"
+DETLINT_ROOT="rust/src"; [ -d "$DETLINT_ROOT" ] || DETLINT_ROOT="src"
+echo "== detlint (determinism & safety audit over $DETLINT_ROOT) =="
+cargo run --release --quiet --manifest-path "$XTASK_DIR/Cargo.toml" \
+    -p xtask -- detlint --root "$DETLINT_ROOT"
+echo "== xtask self-test (detlint fixture battery) =="
+cargo test -q --manifest-path "$XTASK_DIR/Cargo.toml" -p xtask
+
 echo "== cargo test -q =="
 cargo test -q
+
+# Miri UB gate: interpret the `miri_`-prefixed unit-test subset — the
+# ExecClock atomics behind `unsafe impl Send/Sync for Runtime` and the
+# ckpt codec's byte-slice arithmetic — under nightly Miri. Skip with a
+# warning when no nightly toolchain is installed (the default CI image
+# is stable-only).
+if cargo +nightly miri --version >/dev/null 2>&1; then
+    echo "== cargo +nightly miri test --lib miri_ =="
+    cargo +nightly miri test --lib miri_
+else
+    echo "verify.sh: WARNING — nightly miri unavailable; skipping the UB gate" >&2
+fi
+
+# clippy::unwrap_used is denied per-module (inner attrs in fl/mod.rs,
+# sched/mod.rs, ckpt/mod.rs) rather than on this command line, so the
+# ban scopes to the crash-path-critical subsystems while tests and
+# benches stay free to unwrap.
 echo "== cargo clippy --all-targets --release -- -D warnings =="
 cargo clippy --all-targets --release -- -D warnings
 echo "== cargo doc --no-deps (warnings denied) =="
