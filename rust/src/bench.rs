@@ -137,15 +137,29 @@ pub struct WireBenchRow {
     /// Mean wall time per model dimension (ns/elem) — the
     /// size-independent number later PRs regress against.
     pub ns_per_elem: f64,
+    /// Realized bytes across all transmission attempts for the
+    /// retransmission rows (attempts × encoded payload — the wire cost
+    /// `fl::exec::fault_payload_bytes` charges); 0 for single-attempt
+    /// rows.
+    pub retry_bytes: usize,
 }
 
-/// Run the byte-transport microbench: `quant::wire::encode` and the
-/// fused decode-fold (`quant::wire::fold_into`) over a Z-dimensional
-/// model at each level in `qs`. Pure Rust — no artifacts needed — so
-/// `verify.sh` can run it as a tier-1 smoke (see the `bench-wire` CLI
-/// subcommand, which writes the rows to `BENCH_wire.json`).
+/// Transmission attempts the `retry_fold` rows model: the chaos-default
+/// retry budget of 2 exhausted after the first failure (see
+/// [`crate::fl::faults::FaultCfg::retries`]).
+const RETRY_ATTEMPTS: usize = 3;
+
+/// Run the byte-transport microbench: `quant::wire::encode`, the fused
+/// decode-fold (`quant::wire::fold_into`), and the decode-failure /
+/// retransmission path (each failed attempt pays a full decode pass
+/// before the final one folds — [`RETRY_ATTEMPTS`] passes total) over a
+/// Z-dimensional model at each level in `qs`. Pure Rust — no artifacts
+/// needed — so `verify.sh` can run it as a tier-1 smoke (see the
+/// `bench-wire` CLI subcommand, which writes the rows to
+/// `BENCH_wire.json`).
 pub fn run_wire_bench(z: usize, qs: &[u32]) -> Vec<WireBenchRow> {
     let mut set = BenchSet::new("wire");
+    let mut retry_bytes: Vec<usize> = Vec::new(); // per row, 0 = single attempt
     let mut rng = crate::util::rng::Rng::seed_from(0xB17E);
     let theta: Vec<f32> = (0..z).map(|_| rng.gaussian(0.0, 0.5) as f32).collect();
     let mut noise = vec![0.0f32; z];
@@ -153,26 +167,38 @@ pub fn run_wire_bench(z: usize, qs: &[u32]) -> Vec<WireBenchRow> {
     for &q in qs {
         let (idx, signs, tmax) = crate::quant::knot_indices(&theta, &noise, q);
         set.bench(&format!("encode_z{z}_q{q}"), || crate::quant::encode(tmax, &signs, &idx, q));
+        retry_bytes.push(0);
         let bytes = crate::quant::encode(tmax, &signs, &idx, q);
         let mut acc = vec![0.0f32; z];
         set.bench(&format!("decode_fold_z{z}_q{q}"), || {
             crate::quant::wire::fold_into(&mut acc, 0.25, &bytes, q).unwrap()
         });
+        retry_bytes.push(0);
+        let mut racc = vec![0.0f32; z];
+        set.bench(&format!("retry_fold_z{z}_q{q}"), || {
+            for _ in 0..RETRY_ATTEMPTS {
+                crate::quant::wire::fold_into(&mut racc, 0.25, &bytes, q).unwrap();
+            }
+        });
+        retry_bytes.push(RETRY_ATTEMPTS * bytes.len());
     }
     set.results
         .iter()
-        .map(|r| WireBenchRow {
+        .zip(retry_bytes)
+        .map(|(r, retry_bytes)| WireBenchRow {
             name: r.name.clone(),
             iters: r.iters,
             mean_ns: r.mean_ns,
             ns_per_elem: r.mean_ns / z.max(1) as f64,
+            retry_bytes,
         })
         .collect()
 }
 
 /// Write wire-bench rows as a single JSON document (`BENCH_wire.json`):
-/// `{"z": Z, "benches": [{name, iters, mean_ns, ns_per_elem}, ...]}` —
-/// the perf baseline subsequent PRs diff against.
+/// `{"z": Z, "benches": [{name, iters, mean_ns, ns_per_elem,
+/// retry_bytes}, ...]}` — the perf baseline subsequent PRs diff
+/// against.
 pub fn write_wire_bench_json(
     path: &std::path::Path,
     z: usize,
@@ -192,6 +218,7 @@ pub fn write_wire_bench_json(
                     ("iters", json::num(r.iters as f64)),
                     ("mean_ns", json::num(r.mean_ns)),
                     ("ns_per_elem", json::num(r.ns_per_elem)),
+                    ("retry_bytes", json::num(r.retry_bytes as f64)),
                 ])
             })
             .collect(),
@@ -718,6 +745,9 @@ fn synthetic_snapshot(z: usize, u: usize) -> crate::ckpt::Snapshot {
             round: n,
             scheduled: u / 2,
             aggregated: u / 2,
+            departed: u / 10,
+            retries: n % 3,
+            failed_decodes: n % 2,
             wire_bytes: (u / 2) * (z / 2),
             energy,
             cum_energy: cum,
@@ -763,6 +793,8 @@ fn synthetic_snapshot(z: usize, u: usize) -> crate::ckpt::Snapshot {
                 .collect(),
             server_rng: mk_rng(7),
             sched_rng: Some(mk_rng(9)),
+            avail: None,
+            faults: None,
             runtime_nanos: [1, 2, 3, 4],
         },
         trace,
@@ -863,17 +895,29 @@ mod tests {
         std::env::set_var("QCCF_BENCH_WARMUP_MS", "1");
         std::env::set_var("QCCF_BENCH_MEASURE_MS", "5");
         let rows = run_wire_bench(512, &[4, 8]);
-        assert_eq!(rows.len(), 4, "encode + decode-fold per q");
+        assert_eq!(rows.len(), 6, "encode + decode-fold + retry-fold per q");
         assert!(rows.iter().all(|r| r.iters > 0 && r.ns_per_elem >= 0.0));
         assert!(rows.iter().any(|r| r.name.contains("encode_z512_q4")));
         assert!(rows.iter().any(|r| r.name.contains("decode_fold_z512_q8")));
+        // The retransmission row carries the realized multi-attempt
+        // wire bytes; single-attempt rows carry 0.
+        let retry = rows.iter().find(|r| r.name.contains("retry_fold_z512_q4")).unwrap();
+        assert_eq!(retry.retry_bytes, RETRY_ATTEMPTS * crate::quant::wire::encoded_len(512, 4));
+        assert!(rows
+            .iter()
+            .filter(|r| !r.name.contains("retry"))
+            .all(|r| r.retry_bytes == 0));
         let dir = std::env::temp_dir().join("qccf_wire_bench_test");
         let path = dir.join("BENCH_wire.json");
         write_wire_bench_json(&path, 512, &rows).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let doc = crate::util::json::parse(text.trim()).unwrap();
         assert_eq!(doc.get("z").and_then(|x| x.as_usize()), Some(512));
-        assert_eq!(doc.get("benches").and_then(|x| x.as_arr()).map(|a| a.len()), Some(4));
+        assert_eq!(doc.get("benches").and_then(|x| x.as_arr()).map(|a| a.len()), Some(6));
+        let benches = doc.get("benches").and_then(|x| x.as_arr()).unwrap();
+        assert!(benches
+            .iter()
+            .any(|b| b.get("retry_bytes").and_then(|x| x.as_f64()).unwrap_or(0.0) > 0.0));
         std::fs::remove_dir_all(&dir).ok();
     }
 

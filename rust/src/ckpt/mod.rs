@@ -15,11 +15,11 @@
 //! against the wrong workload is a typed mismatch error, not a silently
 //! diverging run.
 //!
-//! # Wire format (version 2)
+//! # Wire format (version 3)
 //!
 //! ```text
 //! magic    4 B   "QCKP"
-//! version  4 B   u32 LE (currently 2)
+//! version  4 B   u32 LE (currently 3)
 //! length   8 B   u64 LE — payload byte count
 //! payload  N B   the Snapshot fields (see docs/CHECKPOINTS.md)
 //! crc32    4 B   u32 LE — CRC32 (IEEE) of the payload
@@ -64,8 +64,10 @@ pub const MAGIC: [u8; 4] = *b"QCKP";
 /// [`CkptError::Version`], never reinterpreted (versioning policy:
 /// docs/CHECKPOINTS.md). Version 2 added the per-round `departed`
 /// count and the optional availability-process state
-/// ([`RunState::avail`]).
-pub const VERSION: u32 = 2;
+/// ([`RunState::avail`]). Version 3 added the per-round
+/// `retries`/`failed_decodes` counts and the optional fault-plan state
+/// ([`RunState::faults`]).
+pub const VERSION: u32 = 3;
 
 /// File-name extension snapshots are written under.
 pub const EXTENSION: &str = "qckpt";
@@ -181,6 +183,20 @@ pub struct AvailCkpt {
     pub rng: RngState,
 }
 
+/// The resumable fault-injection state: every per-client fault-stream
+/// position (ascending client id) plus the plan-level
+/// checkpoint-corruption stream. Captured by
+/// [`crate::fl::faults::FaultPlan::checkpoint`], reinstalled by
+/// `FaultPlan::restore` — a resumed chaos run replays the exact fault
+/// future of the uninterrupted one.
+#[derive(Clone, Debug)]
+pub struct FaultsCkpt {
+    /// Per-client fault-stream positions, ascending client id.
+    pub rngs: Vec<RngState>,
+    /// Plan-level checkpoint-corruption stream position.
+    pub ckpt_rng: RngState,
+}
+
 /// The complete resumable state of a [`crate::fl::Server`] mid-horizon.
 /// Captured by `Server::checkpoint_state`, reinstalled by
 /// `Server::restore_state` over a freshly constructed server (same
@@ -212,6 +228,8 @@ pub struct RunState {
     /// Per-client availability-process state, ascending client id
     /// (`None` for runs without churn).
     pub avail: Option<Vec<AvailCkpt>>,
+    /// Fault-plan stream positions (`None` for runs without chaos).
+    pub faults: Option<FaultsCkpt>,
     /// The PJRT runtime's cumulative per-entry-point nanosecond clock
     /// `(init, train_step, eval, quantize)` as observed at capture.
     /// Reinstalled only by callers that own the runtime exclusively
@@ -274,6 +292,8 @@ fn write_record(w: &mut Writer, rec: &RoundRecord) {
     w.u64(rec.scheduled as u64);
     w.u64(rec.aggregated as u64);
     w.u64(rec.departed as u64);
+    w.u64(rec.retries as u64);
+    w.u64(rec.failed_decodes as u64);
     w.u64(rec.wire_bytes as u64);
     w.f64(rec.energy);
     w.f64(rec.cum_energy);
@@ -297,6 +317,8 @@ fn read_record(r: &mut Reader<'_>) -> Result<RoundRecord, CkptError> {
     let scheduled = r.u64("record.scheduled")? as usize;
     let aggregated = r.u64("record.aggregated")? as usize;
     let departed = r.u64("record.departed")? as usize;
+    let retries = r.u64("record.retries")? as usize;
+    let failed_decodes = r.u64("record.failed_decodes")? as usize;
     let wire_bytes = r.u64("record.wire_bytes")? as usize;
     let energy = r.f64("record.energy")?;
     let cum_energy = r.f64("record.cum_energy")?;
@@ -314,6 +336,8 @@ fn read_record(r: &mut Reader<'_>) -> Result<RoundRecord, CkptError> {
         scheduled,
         aggregated,
         departed,
+        retries,
+        failed_decodes,
         wire_bytes,
         energy,
         cum_energy,
@@ -381,6 +405,17 @@ impl Snapshot {
                     w.u64(a.missed);
                     write_rng(&mut w, &a.rng);
                 }
+            }
+            None => w.bool(false),
+        }
+        match &st.faults {
+            Some(f) => {
+                w.bool(true);
+                w.u64(f.rngs.len() as u64);
+                for rng in &f.rngs {
+                    write_rng(&mut w, rng);
+                }
+                write_rng(&mut w, &f.ckpt_rng);
             }
             None => w.bool(false),
         }
@@ -495,6 +530,16 @@ impl Snapshot {
         } else {
             None
         };
+        let faults = if r.bool("state.faults")? {
+            let nf = r.seq_len(8 * 4 + 1, "state.faults")?;
+            let mut rngs = Vec::with_capacity(nf);
+            for _ in 0..nf {
+                rngs.push(read_rng(&mut r, "faults.rng")?);
+            }
+            Some(FaultsCkpt { rngs, ckpt_rng: read_rng(&mut r, "faults.ckpt_rng")? })
+        } else {
+            None
+        };
         let mut runtime_nanos = [0u64; 4];
         for n in &mut runtime_nanos {
             *n = r.u64("state.runtime_nanos")?;
@@ -524,6 +569,7 @@ impl Snapshot {
                 server_rng,
                 sched_rng,
                 avail,
+                faults,
                 runtime_nanos,
             },
             trace: Trace { algorithm: trace_algorithm, records },
@@ -564,6 +610,8 @@ mod tests {
             scheduled: 5,
             aggregated: 4,
             departed: 1,
+            retries: 2,
+            failed_decodes: 1,
             wire_bytes: 12_345,
             energy: 0.75,
             cum_energy: 2.5,
@@ -617,6 +665,10 @@ mod tests {
                         })
                         .collect(),
                 ),
+                faults: Some(FaultsCkpt {
+                    rngs: (0..3).map(|i| rng(3000 + i as u64)).collect(),
+                    ckpt_rng: rng(4000),
+                }),
                 runtime_nanos: [1, 2, 3, 4],
             },
             trace,
@@ -643,6 +695,11 @@ mod tests {
         assert_eq!(avail.len(), 3);
         assert!(!avail[1].on && avail[2].missed == 6);
         assert_eq!(back.trace.records[0].departed, 1);
+        let faults = back.state.faults.as_ref().unwrap();
+        assert_eq!(faults.rngs.len(), 3);
+        assert_eq!(faults.ckpt_rng, snap.state.faults.as_ref().unwrap().ckpt_rng);
+        assert_eq!(back.trace.records[0].retries, 2);
+        assert_eq!(back.trace.records[0].failed_decodes, 1);
     }
 
     #[test]

@@ -272,6 +272,23 @@ pub fn run_scenario_ckpt(
             seed,
         );
     }
+    // Scenario-gated chaos: same placement discipline as churn — the
+    // fault plan must exist before any resume (restore_state requires
+    // the snapshot's fault-state presence to match the server's), and
+    // it is seeded from the run seed (salted internally), independent
+    // of both the scheduler and availability streams.
+    if scenario.train.chaos {
+        server.set_faults(
+            crate::fl::faults::FaultCfg {
+                p_decode: scenario.train.chaos_decode,
+                p_straggle: scenario.train.chaos_straggle,
+                p_panic: scenario.train.chaos_panic,
+                retries: scenario.train.chaos_retries as u32,
+                p_ckpt: scenario.train.chaos_ckpt,
+            },
+            seed,
+        );
+    }
 
     // The resolved scenario is part of the snapshot's identity: resume
     // compares canonical renders, so *any* drifted knob — not just the
@@ -310,6 +327,11 @@ pub fn run_scenario_ckpt(
         trace.push(rec);
         if policy.every > 0 && server.round() % policy.every == 0 {
             let dir = policy.dir.as_ref().expect("checked above");
+            // Chaos ckpt-corruption draw comes BEFORE capturing state so
+            // the snapshot records the post-draw stream position: an
+            // uninterrupted run and a resumed one replay the identical
+            // corruption future (see fl::faults module docs).
+            let corrupt = server.draw_ckpt_corrupt().unwrap_or(false);
             let snap = Snapshot {
                 scenario_text: scenario_text.clone(),
                 algorithm: algorithm.to_string(),
@@ -318,7 +340,36 @@ pub fn run_scenario_ckpt(
                 trace: trace.clone(),
             };
             let path = dir.join(ckpt::snapshot_file_name(&scenario.name, algorithm, seed));
+            // Keep the previous snapshot as `<name>.prev` — the
+            // recovery ladder's middle rung when the latest write is
+            // corrupted (docs/FAULTS.md). Rename failure (e.g. no
+            // previous snapshot yet) is not an error.
+            if path.exists() {
+                let mut prev_name = path
+                    .file_name()
+                    .map(|n| n.to_os_string())
+                    .unwrap_or_default();
+                prev_name.push(".prev");
+                let _ = std::fs::rename(&path, path.with_file_name(prev_name));
+            }
             snap.save(&path)?;
+            if corrupt {
+                // Injected fault: flip one payload byte after the write
+                // lands, exactly the torn/bit-rotted file the CRC
+                // envelope exists to catch. Loaders see CkptError::Crc.
+                let mut bytes = std::fs::read(&path)?;
+                let mid = bytes.len() / 2;
+                if let Some(b) = bytes.get_mut(mid) {
+                    *b ^= 0x01;
+                }
+                crate::util::fsio::write_atomic(&path, &bytes)?;
+                crate::warn_log!(
+                    "chaos",
+                    "corrupted snapshot write at round {} -> {}",
+                    server.round(),
+                    path.display()
+                );
+            }
             crate::debug_log!(
                 "ckpt",
                 "snapshot at round {}/{} -> {}",

@@ -27,7 +27,19 @@
 //! Interrupted runs restart from their latest snapshot under
 //! `<out>/ckpt/` when [`SweepConfig::checkpoint_every`] wrote one
 //! (bit-identical restart, the `ckpt` contract), and from round 0
-//! otherwise. The final `summary.csv` is identical either way.
+//! otherwise. A corrupt latest snapshot falls back to the previous
+//! one (`<name>.qckpt.prev`, kept by the run path's rotation) and
+//! then to a fresh restart — the recovery ladder of `docs/FAULTS.md`.
+//! The final `summary.csv` is identical either way.
+//!
+//! # Unit isolation
+//!
+//! A unit that **panics** (an engine bug, or `fl::faults` chaos with
+//! `chaos_panic > 0`) is caught per unit (`catch_unwind`): it becomes
+//! a `failed` row in `summary.csv` and the fleet keeps draining. Only
+//! after every unit has completed does the sweep return an error
+//! naming the poisoned units (non-zero process exit). On a later
+//! `--resume`, `failed` rows re-run — only `ok` rows are skipped.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -102,6 +114,10 @@ pub struct SweepRow {
     pub aggregated: usize,
     /// Total mid-round departures (churn; 0 otherwise).
     pub departed: usize,
+    /// `"ok"` for a completed unit, `"failed"` for one whose run
+    /// panicked or errored (caught per unit; see the module docs).
+    /// Failed rows carry zero/NaN metrics and re-run on `--resume`.
+    pub status: String,
     /// Where the JSONL trace was written.
     pub trace_path: PathBuf,
 }
@@ -200,41 +216,54 @@ pub fn unit_stem(scenario: &str, algorithm: &str, seed: u64) -> String {
     ckpt::unit_stem(scenario, algorithm, seed)
 }
 
-/// A unit's latest snapshot under `ckpt_dir`, if one exists *and* is
-/// loadable *and* matches the unit's resolved scenario/horizon. A
-/// missing, corrupt or mismatched snapshot downgrades to a fresh
-/// restart (with a warning) — resuming a sweep must never be blocked by
-/// one damaged file.
+/// The rotated-previous sibling of a snapshot path (`<name>.prev`,
+/// written by the run path before each replacement).
+fn prev_snapshot_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".prev");
+    path.with_file_name(name)
+}
+
+/// A unit's best resumable snapshot under `ckpt_dir`, if one exists
+/// *and* is loadable *and* matches the unit's resolved
+/// scenario/horizon. The **recovery ladder** (docs/FAULTS.md): try the
+/// latest snapshot, then the rotated previous one (`<name>.qckpt.prev`
+/// — a few rounds staler but bit-identical to replay), then restart
+/// fresh. Every downgrade warns; resuming a sweep must never be
+/// blocked by one damaged file.
 fn usable_snapshot(ckpt_dir: &Path, sc: &Scenario, alg: &str, seed: u64) -> Option<PathBuf> {
-    let path = ckpt_dir.join(ckpt::snapshot_file_name(&sc.name, alg, seed));
-    if !path.exists() {
-        return None;
-    }
-    match ckpt::Snapshot::load(&path) {
-        // The same eligibility rules the hard-refusing run path applies
-        // (`common::snapshot_mismatch`) — shared so a future refusal
-        // condition cannot be added there and missed here, where it
-        // would abort the whole sweep instead of restarting one unit.
-        Ok(snap) => match super::common::snapshot_mismatch(&snap, sc, alg, seed) {
-            None => Some(path),
-            Some(why) => {
+    let latest = ckpt_dir.join(ckpt::snapshot_file_name(&sc.name, alg, seed));
+    let prev = prev_snapshot_path(&latest);
+    for path in [latest, prev] {
+        if !path.exists() {
+            continue;
+        }
+        match ckpt::Snapshot::load(&path) {
+            // The same eligibility rules the hard-refusing run path
+            // applies (`common::snapshot_mismatch`) — shared so a
+            // future refusal condition cannot be added there and missed
+            // here, where it would abort the whole sweep instead of
+            // restarting one unit.
+            Ok(snap) => match super::common::snapshot_mismatch(&snap, sc, alg, seed) {
+                None => return Some(path),
+                Some(why) => {
+                    crate::warn_log!(
+                        "sweep",
+                        "snapshot {}: {why} — trying the next recovery rung",
+                        path.display()
+                    );
+                }
+            },
+            Err(e) => {
                 crate::warn_log!(
                     "sweep",
-                    "snapshot {}: {why} — restarting fresh",
+                    "unreadable snapshot {}: {e:#} — trying the next recovery rung",
                     path.display()
                 );
-                None
             }
-        },
-        Err(e) => {
-            crate::warn_log!(
-                "sweep",
-                "unreadable snapshot {}: {e:#} — restarting fresh",
-                path.display()
-            );
-            None
         }
     }
+    None
 }
 
 /// Run the sweep. Fails fast on an invalid config — scenarios,
@@ -319,10 +348,12 @@ pub fn run(rt: &Runtime, cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
     }
 
     // Resume bookkeeping: a triple counts as complete when the prior
-    // summary row exists (and survived the staleness prune), its trace
-    // file is still on disk, and its round count matches this sweep's
-    // (a changed --rounds override makes the old run stale, not
-    // reusable). Rows for triples *outside* this sweep's cross product
+    // summary row exists (and survived the staleness prune), it is an
+    // `ok` row (`failed` units re-run — that is the whole point of
+    // recording them), its trace file is still on disk, and its round
+    // count matches this sweep's (a changed --rounds override makes
+    // the old run stale, not reusable). Rows for triples *outside* this
+    // sweep's cross product
     // (a narrower resume: fewer scenarios/seeds/algorithms) are
     // carried through every summary rewrite untouched — resuming a
     // subset must not delete the rest of the record.
@@ -346,7 +377,11 @@ pub fn run(rt: &Runtime, cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
         let (sc, alg, seed) = unit;
         let key = (sc.name.clone(), alg.clone(), *seed);
         match done.get(&key) {
-            Some(row) if row.rounds == sc.train.rounds && row.trace_path.exists() => {
+            Some(row)
+                if row.status == "ok"
+                    && row.rounds == sc.train.rounds
+                    && row.trace_path.exists() =>
+            {
                 slots.push(Some(row.clone()));
             }
             _ => {
@@ -368,6 +403,17 @@ pub fn run(rt: &Runtime, cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
         cfg.out_dir.display()
     );
     let slots = std::sync::Mutex::new(slots);
+    // Record one finished unit — ok or failed — and make the summary
+    // durable *immediately*, not at sweep end, so a kill mid-sweep
+    // forfeits at most the in-flight units on resume. The lock also
+    // serializes the atomic rewrite's shared tmp file.
+    let record = |i: usize, row: SweepRow| -> Result<()> {
+        let mut slots = slots.lock().unwrap();
+        slots[i] = Some(row);
+        let mut so_far: Vec<SweepRow> = slots.iter().flatten().cloned().collect();
+        so_far.extend(carried.iter().cloned());
+        write_summary(&so_far, &cfg.out_dir)
+    };
     let results: Vec<Result<()>> =
         threadpool::parallel_map(&pending, cfg.threads.max(1), |_, &(i, (sc, alg, seed))| {
             let policy = CheckpointPolicy {
@@ -383,50 +429,102 @@ pub fn run(rt: &Runtime, cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
                 // others' in-flight accounting.
                 restore_runtime_clock: false,
             };
-            let trace = run_scenario_ckpt(rt, sc, alg, *seed, 1, &policy)
-                .map_err(|e| anyhow::anyhow!("{}/{alg}/seed{seed}: {e:#}", sc.name))?;
             let path = cfg.out_dir.join(format!("{}.jsonl", unit_stem(&sc.name, alg, *seed)));
-            trace
-                .write_jsonl(
-                    &path,
-                    &[
-                        ("scenario", json::s(&sc.name)),
-                        ("algorithm", json::s(alg)),
-                        ("seed", json::num(*seed as f64)),
-                    ],
-                )
-                .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
-            {
-                // Make the unit's summary row durable *immediately* —
-                // not at sweep end — so a kill mid-sweep forfeits at
-                // most the in-flight units on resume. The lock also
-                // serializes the atomic rewrite's shared tmp file.
-                let mut slots = slots.lock().unwrap();
-                slots[i] = Some(summarize(&trace, sc, alg, *seed, path));
-                let mut so_far: Vec<SweepRow> = slots.iter().flatten().cloned().collect();
-                so_far.extend(carried.iter().cloned());
-                write_summary(&so_far, &cfg.out_dir)?;
-            }
-            // Only after the summary row is durable is the snapshot
-            // stale — dropping it earlier would leave a killed-right-
-            // here unit with neither artifact.
-            std::fs::remove_file(ckpt_dir.join(ckpt::snapshot_file_name(&sc.name, alg, *seed)))
-                .ok();
-            Ok(())
+            // Per-unit isolation: a panicking unit (an engine bug, or
+            // `fl::faults` chaos) must not take the fleet down. Catch
+            // it here, record a `failed` row, and keep draining; the
+            // sweep errors only after every unit has run. The borrowed
+            // state is sound to reuse after a caught panic: the unit
+            // only *reads* rt/sc and its partial outputs (trace file,
+            // snapshot) are replaced atomically or re-run on resume.
+            let unit = std::panic::AssertUnwindSafe(|| -> Result<Trace> {
+                let trace = run_scenario_ckpt(rt, sc, alg, *seed, 1, &policy)?;
+                trace
+                    .write_jsonl(
+                        &path,
+                        &[
+                            ("scenario", json::s(&sc.name)),
+                            ("algorithm", json::s(alg)),
+                            ("seed", json::num(*seed as f64)),
+                        ],
+                    )
+                    .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
+                Ok(trace)
+            });
+            let why = match std::panic::catch_unwind(unit) {
+                Ok(Ok(trace)) => {
+                    record(i, summarize(&trace, sc, alg, *seed, path))?;
+                    // Only after the summary row is durable is the
+                    // snapshot stale — dropping it earlier would leave
+                    // a killed-right-here unit with neither artifact.
+                    let snap = ckpt_dir.join(ckpt::snapshot_file_name(&sc.name, alg, *seed));
+                    std::fs::remove_file(prev_snapshot_path(&snap)).ok();
+                    std::fs::remove_file(snap).ok();
+                    return Ok(());
+                }
+                Ok(Err(e)) => format!("{e:#}"),
+                Err(payload) => format!("panicked: {}", panic_message(&payload)),
+            };
+            crate::warn_log!("sweep", "{}/{alg}/seed{seed} failed: {why}", sc.name);
+            record(i, failed_row(sc, alg, *seed, path))?;
+            Err(anyhow::anyhow!("{}/{alg}/seed{seed}: {why}", sc.name))
         });
-    for r in results {
-        r?;
-    }
+    let failures: Vec<String> =
+        results.into_iter().filter_map(|r| r.err()).map(|e| format!("{e:#}")).collect();
     let rows: Vec<SweepRow> = slots
         .into_inner()
         .unwrap()
         .into_iter()
-        .map(|s| s.expect("every unit completed or carried over"))
+        .map(|s| s.expect("every unit completed, failed, or carried over"))
         .collect();
     let mut all_rows = rows.clone();
     all_rows.extend(carried);
     write_summary(&all_rows, &cfg.out_dir)?;
+    // The grid has fully drained; only now does a poisoned unit turn
+    // into a non-zero exit (the per-unit isolation contract).
+    anyhow::ensure!(
+        failures.is_empty(),
+        "{} of {} runs failed (recorded as `failed` rows in summary.csv; they re-run on \
+         --resume):\n  {}",
+        failures.len(),
+        units.len(),
+        failures.join("\n  ")
+    );
     Ok(rows)
+}
+
+/// Human-readable panic payload (panics carry `&str` or `String` in
+/// practice; anything else gets a placeholder).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// The `failed` summary row for a poisoned unit: identity columns
+/// filled, metrics zero/NaN, `status = "failed"` — so `--resume` knows
+/// to re-run exactly this triple.
+fn failed_row(sc: &Scenario, alg: &str, seed: u64, path: PathBuf) -> SweepRow {
+    SweepRow {
+        scenario: sc.name.clone(),
+        algorithm: alg.to_string(),
+        seed,
+        rounds: 0,
+        final_acc: f64::NAN,
+        best_acc: f64::NAN,
+        cum_energy: 0.0,
+        wire_bytes: 0,
+        dropouts: 0,
+        scheduled: 0,
+        aggregated: 0,
+        departed: 0,
+        status: "failed".to_string(),
+        trace_path: path,
+    }
 }
 
 fn summarize(trace: &Trace, sc: &Scenario, alg: &str, seed: u64, path: PathBuf) -> SweepRow {
@@ -443,13 +541,14 @@ fn summarize(trace: &Trace, sc: &Scenario, alg: &str, seed: u64, path: PathBuf) 
         scheduled: trace.total_scheduled(),
         aggregated: trace.total_aggregated(),
         departed: trace.total_departed(),
+        status: "ok".to_string(),
         trace_path: path,
     }
 }
 
 /// `summary.csv` column set, shared by [`write_summary`] and
 /// [`read_summary`] so the resume path can never drift from the writer.
-const SUMMARY_COLUMNS: [&str; 13] = [
+const SUMMARY_COLUMNS: [&str; 14] = [
     "scenario",
     "algorithm",
     "seed",
@@ -462,6 +561,7 @@ const SUMMARY_COLUMNS: [&str; 13] = [
     "scheduled",
     "aggregated",
     "departed",
+    "status",
     "trace_file",
 ];
 
@@ -487,6 +587,7 @@ pub fn write_summary(rows: &[SweepRow], out_dir: &std::path::Path) -> Result<()>
                 r.scheduled.to_string(),
                 r.aggregated.to_string(),
                 r.departed.to_string(),
+                r.status.clone(),
                 r.trace_path
                     .file_name()
                     .map(|f| f.to_string_lossy().into_owned())
@@ -550,7 +651,11 @@ pub fn read_summary(out_dir: &std::path::Path) -> Result<Vec<SweepRow>> {
             scheduled: cells[9].parse().map_err(|_| bad("scheduled", cells[9]))?,
             aggregated: cells[10].parse().map_err(|_| bad("aggregated", cells[10]))?,
             departed: cells[11].parse().map_err(|_| bad("departed", cells[11]))?,
-            trace_path: out_dir.join(cells[12]),
+            status: match cells[12] {
+                "ok" | "failed" => cells[12].to_string(),
+                other => return Err(bad("status", other)),
+            },
+            trace_path: out_dir.join(cells[13]),
         });
     }
     Ok(rows)
@@ -572,6 +677,7 @@ pub fn print(rows: &[SweepRow]) {
                 table::fnum(r.wire_bytes as f64),
                 r.dropouts.to_string(),
                 r.departed.to_string(),
+                r.status.clone(),
             ]
         })
         .collect();
@@ -589,7 +695,8 @@ pub fn print(rows: &[SweepRow]) {
                 "energy (J)",
                 "wire (B)",
                 "dropouts",
-                "departed"
+                "departed",
+                "status"
             ],
             &body
         )
@@ -697,6 +804,7 @@ mod tests {
             scheduled: 20,
             aggregated: 20,
             departed: 0,
+            status: "ok".into(),
             trace_path: PathBuf::from("x/s__qccf__seed1.jsonl"),
         }];
         let dir = std::env::temp_dir().join("qccf_sweep_summary_test");
@@ -729,6 +837,7 @@ mod tests {
                 scheduled: 120,
                 aggregated: 117,
                 departed: 2,
+                status: "ok".into(),
                 trace_path: PathBuf::from("ignored/paper-femnist__qccf__seed1.jsonl"),
             },
             SweepRow {
@@ -744,6 +853,7 @@ mod tests {
                 scheduled: 8,
                 aggregated: 8,
                 departed: 0,
+                status: "failed".into(),
                 trace_path: PathBuf::from("ignored/zipf-skew__same-size__seed9.jsonl"),
             },
         ];
@@ -762,6 +872,7 @@ mod tests {
             assert_eq!(a.scheduled, b.scheduled);
             assert_eq!(a.aggregated, b.aggregated);
             assert_eq!(a.departed, b.departed);
+            assert_eq!(a.status, b.status);
             assert!(
                 (a.final_acc == b.final_acc) || (a.final_acc.is_nan() && b.final_acc.is_nan())
             );
@@ -789,5 +900,42 @@ mod tests {
             crate::ckpt::snapshot_file_name("deep-fade", "qccf", 7),
             format!("{}.qckpt", unit_stem("deep-fade", "qccf", 7))
         );
+        let snap = PathBuf::from("ckpt/deep-fade__qccf__seed7.qckpt");
+        assert_eq!(
+            prev_snapshot_path(&snap),
+            PathBuf::from("ckpt/deep-fade__qccf__seed7.qckpt.prev")
+        );
+    }
+
+    #[test]
+    fn failed_rows_parse_back_and_reject_junk_status() {
+        let sc = registry::chaos_panic();
+        let row = failed_row(&sc, "qccf", 3, PathBuf::from("x/chaos-panic__qccf__seed3.jsonl"));
+        assert_eq!(row.status, "failed");
+        assert_eq!(row.rounds, 0);
+        assert!(row.final_acc.is_nan() && row.best_acc.is_nan());
+        let dir = std::env::temp_dir().join("qccf_sweep_failed_row_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_summary(&[row], &dir).unwrap();
+        let back = read_summary(&dir).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].status, "failed");
+        // A status cell outside {ok, failed} is a descriptive error,
+        // not a silently trusted resume record.
+        let text = std::fs::read_to_string(dir.join("summary.csv")).unwrap();
+        std::fs::write(dir.join("summary.csv"), text.replace("failed", "maybe")).unwrap();
+        let err = read_summary(&dir).unwrap_err().to_string();
+        assert!(err.contains("bad status"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn panic_messages_unwrap_common_payloads() {
+        let p: Box<dyn std::any::Any + Send> = Box::new("static str panic");
+        assert_eq!(panic_message(&*p), "static str panic");
+        let p: Box<dyn std::any::Any + Send> = Box::new(String::from("owned panic"));
+        assert_eq!(panic_message(&*p), "owned panic");
+        let p: Box<dyn std::any::Any + Send> = Box::new(42u32);
+        assert_eq!(panic_message(&*p), "non-string panic payload");
     }
 }

@@ -54,6 +54,15 @@ use crate::util::rng::Rng;
 use crate::util::stats::linf_norm;
 use crate::util::threadpool;
 
+use super::faults::FaultDraw;
+
+/// Compute-term stretch factor for an injected straggle fault
+/// (`fl::faults`): the client's `t_cmp` term takes this many times
+/// longer on the wall clock. Energy is unchanged — a stall burns time,
+/// not joules — but the stretched latency can blow the C4 deadline,
+/// dropping the client exactly like any other deadline miss.
+pub const STRAGGLE_FACTOR: f64 = 4.0;
+
 /// One scheduled client's work order, built by the server's decision
 /// stage. Owns the client's private RNG stream for the duration of the
 /// round; the advanced stream comes back in [`ClientOutcome::rng`].
@@ -179,6 +188,63 @@ pub fn realized_energy(p: &SystemParams, size: f64, d: &ClientDecision, cpu_scal
 /// noise. The No-Quantization baseline is exempt (no latency design).
 pub fn survives_deadline(p: &SystemParams, latency: f64, exempt: bool) -> bool {
     exempt || latency <= p.t_max * (1.0 + 1e-9)
+}
+
+/// Airtime energy for the retransmission attempts beyond the first:
+/// `(attempts − 1) · E_com(ℓ/rate)` — each retry puts the full eq. (5)
+/// payload back on the wire at the decision's rate. Monotone
+/// non-decreasing in `attempts` (pinned by `proptest_faults.rs`), and
+/// exactly `0.0` at one attempt so the benign path stays bit-identical.
+pub fn retry_energy(p: &SystemParams, d: &ClientDecision, attempts: u32) -> f64 {
+    attempts.saturating_sub(1) as f64
+        * energy::e_com(p, decision_payload_bits(p, d) / d.rate)
+}
+
+/// [`realized_latency`] under a fault draw: each retry adds one full
+/// payload airtime, a straggle stretches the compute term by
+/// [`STRAGGLE_FACTOR`]. The benign draw adds exactly `+0.0` twice —
+/// IEEE-identity on the finite base — so a chaos-off round and an
+/// all-benign chaos round realize the same bits.
+pub fn fault_latency(
+    p: &SystemParams,
+    size: f64,
+    d: &ClientDecision,
+    cpu_scale: f64,
+    fd: &FaultDraw,
+) -> f64 {
+    let straggle_extra = if fd.straggle {
+        (STRAGGLE_FACTOR - 1.0) * energy::t_cmp(p, size, d.f * cpu_scale)
+    } else {
+        0.0
+    };
+    realized_latency(p, size, d, cpu_scale)
+        + fd.retries() as f64 * (decision_payload_bits(p, d) / d.rate)
+        + straggle_extra
+}
+
+/// [`realized_energy`] under a fault draw: the base cost plus
+/// [`retry_energy`]. A straggle adds no energy (a stall burns time,
+/// not joules), so the only fault-era energy term is retransmission
+/// airtime — charged whether or not any attempt ultimately decoded.
+pub fn fault_energy(
+    p: &SystemParams,
+    size: f64,
+    d: &ClientDecision,
+    cpu_scale: f64,
+    fd: &FaultDraw,
+) -> f64 {
+    realized_energy(p, size, d, cpu_scale) + retry_energy(p, d, fd.attempts)
+}
+
+/// Realized bytes on the wire under a fault draw: every attempt
+/// retransmits the full `ceil(eq. (5)/8)` payload, so the realized
+/// byte count is `attempts ×` the single-shot payload.
+pub fn fault_payload_bytes(p: &SystemParams, d: &ClientDecision, fd: &FaultDraw) -> usize {
+    let single = match d.q {
+        Some(q) => wire::encoded_len(p.z, q),
+        None => (p.raw_payload_bits() as usize + 7) / 8,
+    };
+    fd.attempts as usize * single
 }
 
 /// Run one client: τ local steps through the AOT `train_step`, then
@@ -430,6 +496,13 @@ pub struct ExecOpts {
     /// `w_i ∝ D_i · scale_i` over survivors. `None` = all `1.0`
     /// (bit-identical to the unscaled path).
     pub stale_scale: Option<Vec<f64>>,
+    /// Per-task fault draws (task order) from `fl::faults`: retries
+    /// charge extra eq. (5) airtime/bytes, a straggle stretches the
+    /// compute latency, an exhausted retry budget (`!decoded`) demotes
+    /// the client to the departed path, and a panic draw panics the
+    /// worker (the sweep layer isolates it). `None` = no chaos;
+    /// `Some(all-benign)` is bit-identical to `None`.
+    pub faults: Option<Vec<FaultDraw>>,
 }
 
 /// Apply the over-selection cap in place: keep the first `n_target`
@@ -466,6 +539,14 @@ pub struct ExecOutput {
     /// ([`ExecOpts::departed`]) — their energy/airtime is still
     /// counted, like any C4 miss.
     pub departed: usize,
+    /// Σ retransmission attempts beyond the first over scheduled
+    /// clients ([`ExecOpts::faults`]) — each charged full eq. (5)
+    /// airtime energy and payload bytes.
+    pub retries: usize,
+    /// Scheduled clients whose retry budget was exhausted (no attempt
+    /// decoded) — demoted to the departed path: energy spent, upload
+    /// discarded.
+    pub failed_decodes: usize,
     /// Final per-task survival flags (task order, after departures and
     /// the over-selection cap) — the clients whose uploads made the
     /// aggregate, for the server's staleness bookkeeping.
@@ -543,6 +624,9 @@ pub fn execute_round_with(
     if let Some(s) = &opts.stale_scale {
         anyhow::ensure!(s.len() == scheduled, "stale_scale != task count");
     }
+    if let Some(f) = &opts.faults {
+        anyhow::ensure!(f.len() == scheduled, "fault draws != task count");
+    }
 
     // C4 survival — and with it the renormalized aggregation weights —
     // is decided by (f, q, rate) alone, so compute both up front and
@@ -557,12 +641,30 @@ pub fn execute_round_with(
         .enumerate()
         .map(|(seq, t)| {
             let gone = opts.departed.as_ref().is_some_and(|d| d[seq]);
-            !gone
-                && survives_deadline(
-                    p,
-                    realized_latency(p, t.size, &t.decision, t.cpu_scale),
-                    t.deadline_exempt,
-                )
+            match &opts.faults {
+                // Fault-era survival: an exhausted retry budget drops
+                // the upload outright, and the deadline is checked
+                // against the fault-stretched latency (retransmission
+                // airtime + straggle) — the benign draw reproduces the
+                // plain verdict bit for bit.
+                Some(fs) => {
+                    !gone
+                        && fs[seq].decoded
+                        && survives_deadline(
+                            p,
+                            fault_latency(p, t.size, &t.decision, t.cpu_scale, &fs[seq]),
+                            t.deadline_exempt,
+                        )
+                }
+                None => {
+                    !gone
+                        && survives_deadline(
+                            p,
+                            realized_latency(p, t.size, &t.decision, t.cpu_scale),
+                            t.deadline_exempt,
+                        )
+                }
+            }
         })
         .collect();
     if let Some(n) = opts.n_target {
@@ -570,6 +672,30 @@ pub fn execute_round_with(
     }
     let departed =
         opts.departed.as_ref().map_or(0, |d| d.iter().filter(|&&g| g).count());
+    // Fault accounting, decided pre-fan-out like survival: the realized
+    // (latency, energy, payload bytes) per task under its draw. For a
+    // benign draw all three equal the plain realized values bit for
+    // bit, so overwriting the outcome below is an exact no-op; chaos
+    // off (`None`) skips the writeback entirely and the legacy path
+    // stays instruction-identical.
+    let fault_totals: Option<Vec<(f64, f64, usize)>> = opts.faults.as_ref().map(|fs| {
+        tasks
+            .iter()
+            .zip(fs)
+            .map(|(t, fd)| {
+                (
+                    fault_latency(p, t.size, &t.decision, t.cpu_scale, fd),
+                    fault_energy(p, t.size, &t.decision, t.cpu_scale, fd),
+                    fault_payload_bytes(p, &t.decision, fd),
+                )
+            })
+            .collect()
+    });
+    let (retries, failed_decodes) = opts.faults.as_ref().map_or((0, 0), |fs| {
+        fs.iter().fold((0usize, 0usize), |(r, n), d| {
+            (r + d.retries() as usize, n + usize::from(!d.decoded))
+        })
+    });
     let sizes: Vec<f64> = match &opts.stale_scale {
         // Effective data mass under staleness weighting; `scale = 1`
         // multiplies exactly (IEEE), keeping fresh clients bit-equal.
@@ -600,7 +726,23 @@ pub fn execute_round_with(
             // pool in `commit`. On `Err` we bail below before touching
             // the (then meaningless) aggregate.
             let mut fallback = CommitOnDrop { agg: &agg, seq, armed: true };
+            // Injected client panic (`fl::faults`): raised only after
+            // the fallback is armed, so the fold cursor still advances
+            // and the panic propagates cleanly out of the pool for the
+            // sweep layer to isolate.
+            if opts.faults.as_ref().is_some_and(|fs| fs[seq].panic) {
+                panic!("chaos: injected client panic (client {}, slot {seq})", task.id);
+            }
             let mut oc = run_client(p, rt, theta, task, survive[seq], ws)?;
+            if let Some(totals) = &fault_totals {
+                // Retransmission + straggle accounting: airtime energy
+                // and payload bytes for every attempt, stretched
+                // compute latency — bit-identical under a benign draw.
+                let (latency, energy, payload_bytes) = totals[seq];
+                oc.latency = latency;
+                oc.energy = energy;
+                oc.payload_bytes = payload_bytes;
+            }
             fallback.armed = false;
             agg.commit(seq, oc.upload.take().map(|u| (weights[seq], u)));
             Ok(oc)
@@ -618,6 +760,8 @@ pub fn execute_round_with(
         scheduled,
         aggregated,
         departed,
+        retries,
+        failed_decodes,
         survived: survive,
         wire_bytes: 0,
         round_energy: 0.0,
@@ -847,5 +991,62 @@ mod tests {
         };
         assert!(survives_deadline(&p, realized_latency(&p, 1200.0, &tight, 1.0), false));
         assert!(!survives_deadline(&p, realized_latency(&p, 1200.0, &tight, 0.4), false));
+    }
+
+    #[test]
+    fn benign_fault_accounting_is_bit_identical() {
+        let p = SystemParams::femnist_small();
+        let benign = FaultDraw::benign();
+        for q in [Some(1u32), Some(4), Some(9), None] {
+            let d = ClientDecision { channel: 0, q, f: p.f_max, rate: 25e6 };
+            for cpu_scale in [1.0, 0.5] {
+                let lat = fault_latency(&p, 1200.0, &d, cpu_scale, &benign);
+                let en = fault_energy(&p, 1200.0, &d, cpu_scale, &benign);
+                assert_eq!(
+                    lat.to_bits(),
+                    realized_latency(&p, 1200.0, &d, cpu_scale).to_bits(),
+                    "q={q:?}"
+                );
+                assert_eq!(
+                    en.to_bits(),
+                    realized_energy(&p, 1200.0, &d, cpu_scale).to_bits(),
+                    "q={q:?}"
+                );
+            }
+            assert_eq!(retry_energy(&p, &d, 1), 0.0);
+            let single = fault_payload_bytes(&p, &d, &benign);
+            match q {
+                Some(q) => assert_eq!(single, wire::encoded_len(p.z, q)),
+                None => assert_eq!(single, (p.raw_payload_bits() as usize + 7) / 8),
+            }
+        }
+    }
+
+    #[test]
+    fn retry_accounting_scales_with_attempts() {
+        let p = SystemParams::femnist_small();
+        let d = ClientDecision { channel: 0, q: Some(4), f: p.f_max, rate: 25e6 };
+        // Energy monotone in attempts, linear in the retry count.
+        let mut prev = -1.0;
+        for attempts in 1..=6u32 {
+            let e = retry_energy(&p, &d, attempts);
+            assert!(e >= prev, "attempts={attempts}");
+            prev = e;
+        }
+        assert_eq!(retry_energy(&p, &d, 3), 2.0 * retry_energy(&p, &d, 2));
+        // Bytes: every attempt retransmits the full eq. (5) payload.
+        let fd = FaultDraw { attempts: 3, ..FaultDraw::benign() };
+        assert_eq!(fault_payload_bytes(&p, &d, &fd), 3 * wire::encoded_len(p.z, 4));
+        // Latency: retries add airtime, a straggle stretches compute.
+        let base = realized_latency(&p, 1200.0, &d, 1.0);
+        assert!(fault_latency(&p, 1200.0, &d, 1.0, &fd) > base);
+        let st = FaultDraw { straggle: true, ..FaultDraw::benign() };
+        let want = base + (STRAGGLE_FACTOR - 1.0) * crate::energy::t_cmp(&p, 1200.0, d.f);
+        assert!((fault_latency(&p, 1200.0, &d, 1.0, &st) - want).abs() < 1e-12);
+        // A straggle costs no extra energy.
+        assert_eq!(
+            fault_energy(&p, 1200.0, &d, 1.0, &st).to_bits(),
+            realized_energy(&p, 1200.0, &d, 1.0).to_bits()
+        );
     }
 }

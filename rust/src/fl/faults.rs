@@ -1,0 +1,337 @@
+//! Deterministic **fault-injection layer** ("chaos"): seeded per-client
+//! fault draws driving the graceful-degradation machinery (scenario
+//! knobs `chaos`, `chaos_decode`, `chaos_straggle`, `chaos_panic`,
+//! `chaos_retries`, `chaos_ckpt` — see `docs/SCENARIOS.md` and
+//! `docs/FAULTS.md`).
+//!
+//! # Fault taxonomy
+//!
+//! One [`FaultDraw`] per scheduled client per round, covering:
+//!
+//! * **decode failure** — the upload fails to decode at the server
+//!   (payload bit-flip / outage); the client retransmits up to
+//!   `chaos_retries` extra attempts, each charged full eq. (5) airtime
+//!   energy and payload bytes. Budget exhausted (`decoded == false`)
+//!   folds the client into the churn departed path: energy spent,
+//!   upload discarded, θ stays finite.
+//! * **compute straggle** — the round's compute term stretches by
+//!   [`crate::fl::exec::STRAGGLE_FACTOR`]; a straggler that blows the
+//!   C4 deadline is dropped exactly like any other deadline miss.
+//! * **client panic** — the worker panics mid-round. The executor's
+//!   fold cursor survives (`CommitOnDrop`), the panic propagates, and
+//!   the sweep layer isolates the poisoned unit as a `failed` row.
+//! * **checkpoint corruption** — a plan-level stream decides whether a
+//!   just-written snapshot gets a bit flipped, exercising the
+//!   latest → previous → fresh recovery ladder.
+//!
+//! # Determinism contract
+//!
+//! Same shape as `fl::avail`: draws come from **per-client RNG
+//! streams** forked off a private root seeded from the run seed (salted
+//! `"FAULTSV1"` so it can never alias the server, scheduler, or
+//! availability streams). Streams are forked once, serially, in
+//! ascending client-id order at construction (the checkpoint stream
+//! last), and [`FaultPlan::tick_one`] advances exactly one client's
+//! stream — so the fault history is a pure function of
+//! `(seed, U, cfg, #ticks)`:
+//!
+//! * **thread-count invariant** — every draw happens before the worker
+//!   fan-out, so `--threads` cannot reorder or split any stream;
+//! * **iteration-order invariant** — ticking clients in any order
+//!   produces the same draws (`proptest_faults.rs` pins this);
+//! * **checkpointable** — every stream position round-trips through
+//!   [`FaultPlan::checkpoint`] / [`FaultPlan::restore`] as a
+//!   `ckpt::FaultsCkpt` record, so a resumed run replays the exact
+//!   fault future an uninterrupted run would have seen.
+//!
+//! With every probability at 0 each draw is [`FaultDraw::benign`], and
+//! the engine's accounting is bit-identical to a chaos-disabled run
+//! (the benign adjustments are IEEE-exact no-ops; `proptest_faults.rs`
+//! pins this too).
+
+use anyhow::{ensure, Result};
+
+use crate::ckpt::FaultsCkpt;
+use crate::util::rng::Rng;
+
+/// Salt mixed into the run seed for the fault root stream:
+/// `"FAULTSV1"` in ASCII. Keeps the root distinct from the server
+/// stream (`seed`), the scheduler stream (`seed·31 + 7`), and the
+/// availability stream (`seed ^ AVAIL_V1`).
+const FAULT_SEED_SALT: u64 = 0x4641_554C_5453_5631;
+
+/// Chaos knobs, resolved from the scenario's `[train]` section.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultCfg {
+    /// Per-attempt probability an upload fails to decode.
+    pub p_decode: f64,
+    /// Per-round probability a client's compute straggles by
+    /// [`crate::fl::exec::STRAGGLE_FACTOR`].
+    pub p_straggle: f64,
+    /// Per-round probability a client's worker panics mid-round.
+    pub p_panic: f64,
+    /// Retry budget: extra transmission attempts after the first
+    /// (attempts ≤ 1 + retries).
+    pub retries: u32,
+    /// Per-snapshot probability a just-written checkpoint gets a bit
+    /// flipped (drawn from the plan-level stream, not a client's).
+    pub p_ckpt: f64,
+}
+
+impl Default for FaultCfg {
+    fn default() -> FaultCfg {
+        FaultCfg { p_decode: 0.0, p_straggle: 0.0, p_panic: 0.0, retries: 2, p_ckpt: 0.0 }
+    }
+}
+
+/// One client's fault outcome for one round. `attempts` counts every
+/// transmission of the payload (first try included), `decoded` is
+/// whether any attempt succeeded within the retry budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultDraw {
+    /// Compute term stretches by `STRAGGLE_FACTOR` this round.
+    pub straggle: bool,
+    /// The worker panics this round (sweep-level isolation target).
+    pub panic: bool,
+    /// Transmission attempts actually spent, `1 ..= 1 + retries`.
+    pub attempts: u32,
+    /// False iff every attempt failed — the client takes the departed
+    /// path (energy spent, upload discarded).
+    pub decoded: bool,
+}
+
+impl FaultDraw {
+    /// The no-fault draw: one attempt, decoded, no straggle, no panic.
+    /// Every accounting adjustment keyed off this draw is an IEEE-exact
+    /// no-op, which is what makes fault-rate-0 runs bit-identical to a
+    /// chaos-disabled engine.
+    pub fn benign() -> FaultDraw {
+        FaultDraw { straggle: false, panic: false, attempts: 1, decoded: true }
+    }
+
+    /// Extra transmission attempts beyond the first.
+    pub fn retries(&self) -> u32 {
+        self.attempts.saturating_sub(1)
+    }
+}
+
+impl Default for FaultDraw {
+    fn default() -> FaultDraw {
+        FaultDraw::benign()
+    }
+}
+
+/// Per-client seeded fault process. See the module docs for the
+/// determinism and checkpoint contracts.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    cfg: FaultCfg,
+    /// Most recent per-client draws (round-transient working state;
+    /// regenerated by [`FaultPlan::tick`], not checkpointed).
+    draws: Vec<FaultDraw>,
+    /// Per-client fault streams, forked in id order at construction.
+    rngs: Vec<Rng>,
+    /// Plan-level stream for checkpoint-corruption draws, forked last.
+    ckpt_rng: Rng,
+}
+
+impl FaultPlan {
+    /// Build the plan for `u` clients from the run seed. Forks the
+    /// per-client streams serially in ascending id order, then the
+    /// checkpoint stream — the only place any ordering enters, and it
+    /// is fixed.
+    pub fn new(u: usize, cfg: FaultCfg, seed: u64) -> FaultPlan {
+        let mut root = Rng::seed_from(seed ^ FAULT_SEED_SALT);
+        let rngs: Vec<Rng> = (0..u).map(|i| root.fork(i as u64)).collect();
+        let ckpt_rng = root.fork(u as u64);
+        FaultPlan { cfg, draws: vec![FaultDraw::benign(); u], rngs, ckpt_rng }
+    }
+
+    /// The configured knobs.
+    pub fn cfg(&self) -> &FaultCfg {
+        &self.cfg
+    }
+
+    /// Number of clients.
+    pub fn len(&self) -> usize {
+        self.rngs.len()
+    }
+
+    /// True when the plan tracks no clients.
+    pub fn is_empty(&self) -> bool {
+        self.rngs.is_empty()
+    }
+
+    /// The current per-client draws (valid after a [`FaultPlan::tick`]).
+    pub fn draws(&self) -> &[FaultDraw] {
+        &self.draws
+    }
+
+    /// Draw client `i`'s faults for the round — a fixed draw sequence
+    /// (straggle, panic, then one decode draw per attempt until the
+    /// first success or the budget runs out) from client `i`'s private
+    /// stream, touching no other state, which is what makes
+    /// [`FaultPlan::tick`] invariant to iteration order.
+    pub fn tick_one(&mut self, i: usize) -> FaultDraw {
+        let rng = &mut self.rngs[i];
+        let straggle = rng.chance(self.cfg.p_straggle);
+        let panic = rng.chance(self.cfg.p_panic);
+        let mut attempts = 0u32;
+        let mut decoded = false;
+        while attempts <= self.cfg.retries {
+            attempts += 1;
+            if !rng.chance(self.cfg.p_decode) {
+                decoded = true;
+                break;
+            }
+        }
+        let draw = FaultDraw { straggle, panic, attempts, decoded };
+        self.draws[i] = draw;
+        draw
+    }
+
+    /// Draw every client's faults for the round (ascending id order —
+    /// equivalent to any other order, see [`FaultPlan::tick_one`]).
+    pub fn tick(&mut self) {
+        for i in 0..self.rngs.len() {
+            self.tick_one(i);
+        }
+    }
+
+    /// One checkpoint-corruption draw from the plan-level stream —
+    /// called exactly once per snapshot write so the stream position
+    /// stays aligned across checkpoint/resume.
+    pub fn draw_ckpt_corrupt(&mut self) -> bool {
+        self.ckpt_rng.chance(self.cfg.p_ckpt)
+    }
+
+    /// Capture every stream position for a snapshot. The transient
+    /// draws are not part of the record — snapshots happen between
+    /// rounds, and the next round re-ticks.
+    pub fn checkpoint(&self) -> FaultsCkpt {
+        FaultsCkpt {
+            rngs: self.rngs.iter().map(|r| r.state()).collect(),
+            ckpt_rng: self.ckpt_rng.state(),
+        }
+    }
+
+    /// Restore from a snapshot's record (inverse of
+    /// [`FaultPlan::checkpoint`]). The config is not part of the record
+    /// — the caller re-derives it from the scenario, exactly as the
+    /// availability config is.
+    pub fn restore(&mut self, state: &FaultsCkpt) -> Result<()> {
+        ensure!(
+            state.rngs.len() == self.rngs.len(),
+            "fault snapshot holds {} clients, plan has {}",
+            state.rngs.len(),
+            self.rngs.len()
+        );
+        for (rng, st) in self.rngs.iter_mut().zip(&state.rngs) {
+            rng.restore(st);
+        }
+        self.ckpt_rng.restore(&state.ckpt_rng);
+        for d in &mut self.draws {
+            *d = FaultDraw::benign();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(p_decode: f64, p_straggle: f64) -> FaultCfg {
+        FaultCfg { p_decode, p_straggle, ..FaultCfg::default() }
+    }
+
+    #[test]
+    fn same_seed_same_history_any_tick_order() {
+        let u = 31;
+        let mut a = FaultPlan::new(u, cfg(0.4, 0.2), 42);
+        let mut b = FaultPlan::new(u, cfg(0.4, 0.2), 42);
+        for round in 0..50 {
+            a.tick();
+            // Reverse iteration order must not change anything — each
+            // tick touches exactly one private stream.
+            for i in (0..u).rev() {
+                b.tick_one(i);
+            }
+            assert_eq!(a.draws(), b.draws(), "round {round}");
+        }
+        let mut c = FaultPlan::new(u, cfg(0.4, 0.2), 43);
+        c.tick();
+        a = FaultPlan::new(u, cfg(0.4, 0.2), 42);
+        a.tick();
+        assert_ne!(a.draws(), c.draws(), "different seeds should diverge (u = {u})");
+    }
+
+    #[test]
+    fn zero_rates_draw_benign_forever() {
+        let mut a = FaultPlan::new(20, FaultCfg::default(), 7);
+        for _ in 0..60 {
+            a.tick();
+            assert!(a.draws().iter().all(|d| *d == FaultDraw::benign()));
+            assert!(!a.draw_ckpt_corrupt());
+        }
+    }
+
+    #[test]
+    fn decode_rate_one_exhausts_the_retry_budget() {
+        let mut a = FaultPlan::new(8, FaultCfg { p_decode: 1.0, ..FaultCfg::default() }, 9);
+        a.tick();
+        for d in a.draws() {
+            assert_eq!(d.attempts, 3, "retries = 2 → 3 attempts");
+            assert!(!d.decoded);
+            assert_eq!(d.retries(), 2);
+        }
+        // A zero retry budget means exactly one (failing) attempt.
+        let mut b =
+            FaultPlan::new(8, FaultCfg { p_decode: 1.0, retries: 0, ..FaultCfg::default() }, 9);
+        b.tick();
+        assert!(b.draws().iter().all(|d| d.attempts == 1 && !d.decoded));
+    }
+
+    #[test]
+    fn attempts_stay_within_budget_and_failures_only_at_exhaustion() {
+        let mut a = FaultPlan::new(64, cfg(0.5, 0.0), 11);
+        for _ in 0..40 {
+            a.tick();
+            for d in a.draws() {
+                assert!(d.attempts >= 1 && d.attempts <= 3);
+                if !d.decoded {
+                    assert_eq!(d.attempts, 3, "failure only after the full budget");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_restore_replays_identical_future() {
+        let u = 17;
+        let mut a = FaultPlan::new(u, cfg(0.35, 0.25), 99);
+        for _ in 0..7 {
+            a.tick();
+            a.draw_ckpt_corrupt();
+        }
+        let snap = a.checkpoint();
+        let mut b = FaultPlan::new(u, cfg(0.35, 0.25), 99);
+        b.restore(&snap).unwrap();
+        for round in 0..20 {
+            a.tick();
+            b.tick();
+            assert_eq!(a.draws(), b.draws(), "round {round}");
+            assert_eq!(a.draw_ckpt_corrupt(), b.draw_ckpt_corrupt(), "round {round}");
+        }
+        // Length mismatch is a typed refusal, not a silent truncation.
+        let mut c = FaultPlan::new(u + 1, cfg(0.35, 0.25), 99);
+        assert!(c.restore(&snap).is_err());
+    }
+
+    #[test]
+    fn panic_rate_one_marks_everyone() {
+        let mut a = FaultPlan::new(5, FaultCfg { p_panic: 1.0, ..FaultCfg::default() }, 3);
+        a.tick();
+        assert!(a.draws().iter().all(|d| d.panic));
+    }
+}

@@ -38,6 +38,7 @@
 
 pub mod avail;
 pub mod exec;
+pub mod faults;
 
 use anyhow::Result;
 
@@ -123,6 +124,9 @@ pub struct Server<'rt> {
     /// Client-availability process ([`avail`]); `None` = every client
     /// is always available (the legacy engine, bit-for-bit).
     churn: Option<avail::AvailProcess>,
+    /// Fault-injection plan ([`faults`]); `None` = no chaos (the
+    /// fault-free engine, bit-for-bit).
+    faults: Option<faults::FaultPlan>,
 }
 
 impl<'rt> Server<'rt> {
@@ -203,6 +207,7 @@ impl<'rt> Server<'rt> {
             threads: threadpool::default_threads(),
             scratch: Vec::new(),
             churn: None,
+            faults: None,
         })
     }
 
@@ -223,6 +228,30 @@ impl<'rt> Server<'rt> {
     /// The availability process, when churn is on (diagnostics/tests).
     pub fn churn(&self) -> Option<&avail::AvailProcess> {
         self.churn.as_ref()
+    }
+
+    /// Opt into fault injection: install the seeded fault plan (`seed`
+    /// is the run seed — [`faults::FaultPlan`] salts it, so the fault
+    /// streams never alias the server, scheduler, or availability
+    /// streams). Call before [`Server::restore_state`] on a resume; the
+    /// snapshot must then carry matching fault state.
+    pub fn set_faults(&mut self, cfg: faults::FaultCfg, seed: u64) {
+        self.faults = Some(faults::FaultPlan::new(self.params.num_clients, cfg, seed));
+    }
+
+    /// The fault plan, when chaos is on (diagnostics/tests).
+    pub fn faults(&self) -> Option<&faults::FaultPlan> {
+        self.faults.as_ref()
+    }
+
+    /// One checkpoint-corruption draw from the plan-level chaos stream
+    /// (`None` when chaos is off). The checkpointing caller asks once
+    /// per snapshot write, **before** capturing state — the snapshot
+    /// then records the post-draw stream position, so a run resumed
+    /// from snapshot `k` draws at snapshot `2k` from exactly the
+    /// position the uninterrupted run would have.
+    pub fn draw_ckpt_corrupt(&mut self) -> Option<bool> {
+        self.faults.as_mut().map(|f| f.draw_ckpt_corrupt())
     }
 
     /// Round-2 recalibration of ε1/ε2 (see `SystemParams::auto_eps`):
@@ -355,7 +384,27 @@ impl<'rt> Server<'rt> {
             departed: Some(departed),
             n_target: Some(avail::aggregation_target(sched_ids.len(), cfg.over_select)),
             stale_scale,
+            faults: None,
         }
+    }
+
+    /// Between decide and execute under chaos: draw **every** client's
+    /// faults for the round (scheduled or not — the tick count per
+    /// stream must not depend on scheduling, or the fault history would
+    /// stop being a pure function of `(seed, round)`), then attach the
+    /// scheduled clients' draws to the execution options in task order.
+    fn fault_opts(&mut self, decision: &RoundDecision, opts: &mut exec::ExecOpts) {
+        let Some(fp) = &mut self.faults else {
+            return;
+        };
+        fp.tick();
+        let draws: Vec<faults::FaultDraw> = decision
+            .assignments
+            .iter()
+            .enumerate()
+            .filter_map(|(i, d)| d.as_ref().map(|_| fp.draws()[i]))
+            .collect();
+        opts.faults = Some(draws);
     }
 
     /// Stage 2 — fan the scheduled clients out over the worker pool
@@ -477,6 +526,8 @@ impl<'rt> Server<'rt> {
             scheduled: exec_out.scheduled,
             aggregated: exec_out.aggregated,
             departed: exec_out.departed,
+            retries: exec_out.retries,
+            failed_decodes: exec_out.failed_decodes,
             wire_bytes: exec_out.wire_bytes,
             energy: exec_out.round_energy,
             cum_energy: 0.0, // filled by run()
@@ -509,7 +560,8 @@ impl<'rt> Server<'rt> {
             self.recalibrate_eps();
         }
         let (decision, ctx) = self.stage_decide();
-        let opts = self.churn_opts(&decision);
+        let mut opts = self.churn_opts(&decision);
+        self.fault_opts(&decision, &mut opts);
         let mut exec_out = self.stage_execute(&decision, &opts)?;
         self.stage_aggregate(&mut exec_out);
         self.stage_update_queues(&ctx, &exec_out);
@@ -551,7 +603,9 @@ impl<'rt> Server<'rt> {
     /// θ^max / `q_prev` anchor / private RNG stream, the server's
     /// master stream, the scheduler's stream (if it owns one), the
     /// availability process (when churn is on — per-client on/off flag,
-    /// missed counter and Markov stream), and the
+    /// missed counter and Markov stream), the fault plan (when chaos is
+    /// on — per-client fault streams plus the checkpoint-corruption
+    /// stream), and the
     /// runtime's profiling clock (captured as observed; restored only
     /// by exclusive-runtime callers — see [`Server::restore_state`]).
     /// Everything *not* captured here —
@@ -583,6 +637,7 @@ impl<'rt> Server<'rt> {
             server_rng: self.rng.state(),
             sched_rng: self.scheduler.rng_state(),
             avail: self.churn.as_ref().map(|a| a.checkpoint()),
+            faults: self.faults.as_ref().map(|f| f.checkpoint()),
             runtime_nanos: self.runtime.exec_nanos_snapshot(),
         }
     }
@@ -618,8 +673,18 @@ impl<'rt> Server<'rt> {
             if st.avail.is_some() { "carries" } else { "lacks" },
             if self.churn.is_some() { "runs with" } else { "runs without" },
         );
+        anyhow::ensure!(
+            st.faults.is_some() == self.faults.is_some(),
+            "snapshot {} fault state but the server {} chaos — \
+             scenario chaos config mismatch",
+            if st.faults.is_some() { "carries" } else { "lacks" },
+            if self.faults.is_some() { "runs with" } else { "runs without" },
+        );
         if let (Some(av), Some(snap)) = (&mut self.churn, &st.avail) {
             av.restore(snap)?;
+        }
+        if let (Some(fp), Some(snap)) = (&mut self.faults, &st.faults) {
+            fp.restore(snap)?;
         }
         self.round = st.round as usize;
         self.params.eps1 = st.eps1;

@@ -26,10 +26,18 @@
 //!                                for any --threads). `--list` prints the
 //!                                built-ins; format reference: docs/SCENARIOS.md
 //!           [--resume] [--checkpoint-every N]
-//!                                preemption-safe restart: skip triples already
-//!                                completed in summary.csv and restart partial
-//!                                runs from their latest snapshot under
-//!                                --out/ckpt (written every N rounds)
+//!                                preemption-safe restart: skip `ok` triples
+//!                                already in summary.csv (`failed` rows re-run)
+//!                                and restart partial runs from their latest
+//!                                snapshot under --out/ckpt (written every N
+//!                                rounds; a corrupt one falls back to the
+//!                                rotated .prev snapshot, then to fresh).
+//!                                A panicking unit becomes a `failed` summary
+//!                                row and the fleet keeps draining; the sweep
+//!                                exits non-zero only after every unit ran.
+//!                                Deterministic fault injection (chaos-*
+//!                                scenarios and the [train] chaos knobs) is
+//!                                documented in docs/FAULTS.md
 //!   decide  [--profile P] [--seed S]    one-round decision demo (all algorithms)
 //!   ablate  [--draws N] [--seed S] [--quick]   design-choice ablations (no artifacts)
 //!   bench-wire [--z Z] [--qs 4,8] [--out F]    wire-codec microbench (encode +

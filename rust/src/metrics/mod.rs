@@ -21,6 +21,15 @@ pub struct RoundRecord {
     /// and wire bytes are spent, but the upload never arrives — a
     /// subset of the dropouts. Always 0 without churn.
     pub departed: usize,
+    /// Retransmission attempts beyond the first, summed over scheduled
+    /// clients (fault injection): each retry puts the full eq. (5)
+    /// payload back on the wire and is charged airtime energy. Always
+    /// 0 without chaos.
+    pub retries: usize,
+    /// Scheduled clients whose upload never decoded within the retry
+    /// budget (fault injection) — demoted to the departed path: energy
+    /// and wire bytes spent, upload discarded. Always 0 without chaos.
+    pub failed_decodes: usize,
     /// Realized bytes on the wire this round, summed over scheduled
     /// uploads: `ceil(eq. (5)/8)` per quantized upload, `4·Z` per raw
     /// one. This is the *transmitted* payload (airtime is spent even by
@@ -122,6 +131,17 @@ impl Trace {
         self.records.iter().map(|r| r.departed).sum()
     }
 
+    /// Total retransmission attempts across the run (0 without chaos).
+    pub fn total_retries(&self) -> usize {
+        self.records.iter().map(|r| r.retries).sum()
+    }
+
+    /// Total retry-budget-exhausted uploads across the run (0 without
+    /// chaos).
+    pub fn total_failed_decodes(&self) -> usize {
+        self.records.iter().map(|r| r.failed_decodes).sum()
+    }
+
     /// Total realized bytes on the wire across the run (the physical
     /// quantity behind the paper's communication-energy accounting).
     pub fn total_wire_bytes(&self) -> u64 {
@@ -143,6 +163,8 @@ impl Trace {
                 "scheduled",
                 "aggregated",
                 "departed",
+                "retries",
+                "failed_decodes",
                 "energy_j",
                 "cum_energy_j",
                 "train_loss",
@@ -164,6 +186,8 @@ impl Trace {
                 r.scheduled.to_string(),
                 r.aggregated.to_string(),
                 r.departed.to_string(),
+                r.retries.to_string(),
+                r.failed_decodes.to_string(),
                 format!("{:.9}", r.energy),
                 format!("{:.9}", r.cum_energy),
                 format!("{:.6}", r.train_loss),
@@ -217,6 +241,8 @@ impl Trace {
                 m.insert("scheduled".into(), Json::Num(r.scheduled as f64));
                 m.insert("aggregated".into(), Json::Num(r.aggregated as f64));
                 m.insert("departed".into(), Json::Num(r.departed as f64));
+                m.insert("retries".into(), Json::Num(r.retries as f64));
+                m.insert("failed_decodes".into(), Json::Num(r.failed_decodes as f64));
                 m.insert("energy_j".into(), num_or_null(r.energy));
                 m.insert("cum_energy_j".into(), num_or_null(r.cum_energy));
                 m.insert("train_loss".into(), num_or_null(r.train_loss));
@@ -256,6 +282,8 @@ mod tests {
             scheduled: 10,
             aggregated: 9,
             departed: 1,
+            retries: 2,
+            failed_decodes: 1,
             wire_bytes: 1500,
             ..Default::default()
         }
@@ -278,6 +306,8 @@ mod tests {
         assert_eq!(t.total_scheduled(), 40);
         assert_eq!(t.total_aggregated(), 36);
         assert_eq!(t.total_departed(), 4);
+        assert_eq!(t.total_retries(), 8);
+        assert_eq!(t.total_failed_decodes(), 4);
     }
 
     #[test]
@@ -304,6 +334,8 @@ mod tests {
                 "scheduled",
                 "aggregated",
                 "departed",
+                "retries",
+                "failed_decodes",
                 "energy_j",
                 "cum_energy_j",
                 "train_loss",

@@ -192,6 +192,12 @@ fn apply(
         ("train", "p_leave") => sc.train.p_leave = f(value)?,
         ("train", "over_select") => sc.train.over_select = f(value)?,
         ("train", "staleness") => sc.train.staleness = b(value)?,
+        ("train", "chaos") => sc.train.chaos = b(value)?,
+        ("train", "chaos_decode") => sc.train.chaos_decode = f(value)?,
+        ("train", "chaos_straggle") => sc.train.chaos_straggle = f(value)?,
+        ("train", "chaos_panic") => sc.train.chaos_panic = f(value)?,
+        ("train", "chaos_retries") => sc.train.chaos_retries = n(value)?,
+        ("train", "chaos_ckpt") => sc.train.chaos_ckpt = f(value)?,
         _ => {
             return Err(format!(
                 "unknown key `[{section}] {key}` (see docs/SCENARIOS.md for the reference)"
@@ -338,6 +344,23 @@ pub fn render(sc: &Scenario) -> String {
         let _ = writeln!(o, "p_leave = {}", tr.p_leave);
         let _ = writeln!(o, "over_select = {}", tr.over_select);
         let _ = writeln!(o, "staleness = {}", tr.staleness);
+    }
+    // Chaos block: same all-or-nothing rule as churn, for the same
+    // reasons (byte-identical canonical renders for chaos-free
+    // scenarios; round-trip holds either way).
+    let chaos_default = !tr.chaos
+        && tr.chaos_decode == 0.0
+        && tr.chaos_straggle == 0.0
+        && tr.chaos_panic == 0.0
+        && tr.chaos_retries == 2
+        && tr.chaos_ckpt == 0.0;
+    if !chaos_default {
+        let _ = writeln!(o, "chaos = {}", tr.chaos);
+        let _ = writeln!(o, "chaos_decode = {}", tr.chaos_decode);
+        let _ = writeln!(o, "chaos_straggle = {}", tr.chaos_straggle);
+        let _ = writeln!(o, "chaos_panic = {}", tr.chaos_panic);
+        let _ = writeln!(o, "chaos_retries = {}", tr.chaos_retries);
+        let _ = writeln!(o, "chaos_ckpt = {}", tr.chaos_ckpt);
     }
     o
 }
@@ -489,6 +512,62 @@ mod tests {
         sc.train.over_select = 0.25;
         let text = render(&sc);
         for key in ["churn", "p_join", "p_leave", "over_select", "staleness"] {
+            assert!(
+                text.lines().any(|l| l.starts_with(&format!("{key} ="))),
+                "non-default render missing `{key}`:\n{text}"
+            );
+        }
+        assert_eq!(parse_scenario(&text).unwrap(), sc);
+    }
+
+    #[test]
+    fn chaos_knobs_parse_render_and_reject_bad_values() {
+        let text = "[scenario]\nname = cz\n[train]\nchaos = on\nchaos_decode = 0.3\n\
+                    chaos_retries = 5\nchaos_ckpt = 0.1\n";
+        let sc = parse_scenario(text).unwrap();
+        assert!(sc.train.chaos);
+        assert_eq!(sc.train.chaos_decode, 0.3);
+        assert_eq!(sc.train.chaos_straggle, 0.0, "untouched knob keeps its default");
+        assert_eq!(sc.train.chaos_retries, 5);
+        assert_eq!(sc.train.chaos_ckpt, 0.1);
+        // Round-trips through the canonical render.
+        let back = parse_scenario(&render(&sc)).unwrap();
+        assert_eq!(back, sc);
+        // Bad boolean / number are named errors.
+        let err =
+            parse_scenario("[scenario]\nname = cz\n[train]\nchaos = maybe\n").unwrap_err();
+        assert!(err.contains("bad boolean"), "{err}");
+        let err = parse_scenario("[scenario]\nname = cz\n[train]\nchaos_decode = lots\n")
+            .unwrap_err();
+        assert!(err.contains("bad number"), "{err}");
+        let err = parse_scenario("[scenario]\nname = cz\n[train]\nchaos_retries = 1.5\n")
+            .unwrap_err();
+        assert!(err.contains("bad number"), "{err}");
+    }
+
+    #[test]
+    fn default_chaos_knobs_render_no_chaos_block() {
+        // Chaos-free scenarios must keep byte-identical canonical
+        // renders: all six knobs at defaults = no chaos lines at all.
+        let sc = Scenario::defaults("plain", Task::Femnist);
+        let text = render(&sc);
+        for key in
+            ["chaos", "chaos_decode", "chaos_straggle", "chaos_panic", "chaos_retries",
+             "chaos_ckpt"]
+        {
+            assert!(
+                !text.lines().any(|l| l.starts_with(&format!("{key} ="))),
+                "default render leaked `{key}`:\n{text}"
+            );
+        }
+        // Any single non-default knob brings the whole block.
+        let mut sc = Scenario::defaults("plain", Task::Femnist);
+        sc.train.chaos_retries = 4;
+        let text = render(&sc);
+        for key in
+            ["chaos", "chaos_decode", "chaos_straggle", "chaos_panic", "chaos_retries",
+             "chaos_ckpt"]
+        {
             assert!(
                 text.lines().any(|l| l.starts_with(&format!("{key} ="))),
                 "non-default render missing `{key}`:\n{text}"

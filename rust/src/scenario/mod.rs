@@ -171,6 +171,26 @@ pub struct TrainSpec {
     /// aggregation weight is scaled by `1/(1+m)` where `m` is the
     /// number of rounds since its update last entered an aggregate.
     pub staleness: bool,
+    /// Deterministic fault injection ([`crate::fl::faults`]). Off by
+    /// default — the engine takes the exact chaos-free path and the
+    /// `chaos_*` knobs below are ignored.
+    pub chaos: bool,
+    /// Per-attempt probability an upload fails to decode and must be
+    /// retransmitted (chaos only).
+    pub chaos_decode: f64,
+    /// Per-round probability a scheduled client straggles — its compute
+    /// stalls by [`crate::fl::exec::STRAGGLE_FACTOR`] (chaos only).
+    pub chaos_straggle: f64,
+    /// Per-round probability a scheduled client's worker panics
+    /// (chaos only; exercises sweep-level unit isolation).
+    pub chaos_panic: f64,
+    /// Retransmission budget: retries allowed after the first decode
+    /// attempt before the client folds into the departed path
+    /// (chaos only).
+    pub chaos_retries: usize,
+    /// Per-snapshot probability a checkpoint write is corrupted after
+    /// landing on disk (chaos only; exercises the recovery ladder).
+    pub chaos_ckpt: f64,
 }
 
 /// A complete declarative workload description. See the module docs for
@@ -256,6 +276,12 @@ impl Scenario {
                 p_leave: 0.1,
                 over_select: 0.0,
                 staleness: false,
+                chaos: false,
+                chaos_decode: 0.0,
+                chaos_straggle: 0.0,
+                chaos_panic: 0.0,
+                chaos_retries: 2,
+                chaos_ckpt: 0.0,
             },
         }
     }
@@ -443,6 +469,27 @@ impl Scenario {
                 tr.over_select
             ));
         }
+        if !(tr.chaos_decode.is_finite() && (0.0..=1.0).contains(&tr.chaos_decode)) {
+            errs.push(format!(
+                "train: chaos_decode must be in [0, 1] (got {})",
+                tr.chaos_decode
+            ));
+        }
+        if !(tr.chaos_straggle.is_finite() && (0.0..=1.0).contains(&tr.chaos_straggle)) {
+            errs.push(format!(
+                "train: chaos_straggle must be in [0, 1] (got {})",
+                tr.chaos_straggle
+            ));
+        }
+        if !(tr.chaos_panic.is_finite() && (0.0..=1.0).contains(&tr.chaos_panic)) {
+            errs.push(format!(
+                "train: chaos_panic must be in [0, 1] (got {})",
+                tr.chaos_panic
+            ));
+        }
+        if !(tr.chaos_ckpt.is_finite() && (0.0..=1.0).contains(&tr.chaos_ckpt)) {
+            errs.push(format!("train: chaos_ckpt must be in [0, 1] (got {})", tr.chaos_ckpt));
+        }
         // Derived-parameter checks (C bounds again with the base U, the
         // heterogeneity-class knobs, τ/τ^e divisibility, theorem
         // prerequisites, physical sanity).
@@ -582,6 +629,36 @@ mod tests {
         // scenario uses p_leave = 1, p_join = 0).
         sc.train.p_leave = 1.0;
         sc.train.p_join = 0.0;
+        assert!(sc.validate().is_empty(), "{:?}", sc.validate());
+    }
+
+    #[test]
+    fn validate_rejects_bad_chaos_knobs() {
+        let mut sc = Scenario::defaults("x", Task::Femnist);
+        sc.train.chaos = true;
+        sc.train.chaos_decode = 1.5;
+        assert!(sc.validate().iter().any(|e| e.contains("chaos_decode")), "{:?}", sc.validate());
+        sc.train.chaos_decode = 0.1;
+        sc.train.chaos_straggle = -0.2;
+        assert!(
+            sc.validate().iter().any(|e| e.contains("chaos_straggle")),
+            "{:?}",
+            sc.validate()
+        );
+        sc.train.chaos_straggle = 0.05;
+        sc.train.chaos_panic = f64::NAN;
+        assert!(sc.validate().iter().any(|e| e.contains("chaos_panic")), "{:?}", sc.validate());
+        sc.train.chaos_panic = 0.0;
+        sc.train.chaos_ckpt = 2.0;
+        assert!(sc.validate().iter().any(|e| e.contains("chaos_ckpt")), "{:?}", sc.validate());
+        sc.train.chaos_ckpt = 0.25;
+        // A retry budget of 0 is legal: one decode attempt, no retries.
+        sc.train.chaos_retries = 0;
+        assert!(sc.validate().is_empty(), "{:?}", sc.validate());
+        // Boundary probabilities are legal (chaos-panic pins
+        // chaos_panic = 1 to poison a sweep unit on purpose).
+        sc.train.chaos_panic = 1.0;
+        sc.train.chaos_decode = 1.0;
         assert!(sc.validate().is_empty(), "{:?}", sc.validate());
     }
 

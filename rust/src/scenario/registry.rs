@@ -1,4 +1,4 @@
-//! Built-in scenario registry: the two paper profiles plus ten
+//! Built-in scenario registry: the two paper profiles plus twelve
 //! stress/heterogeneity workloads drawn from the related work. Each
 //! builder documents *why* the scenario exists; `docs/SCENARIOS.md`
 //! carries the same rationale next to a rendered copy of each file.
@@ -15,7 +15,7 @@ pub struct ScenarioRegistry {
 }
 
 impl ScenarioRegistry {
-    /// The twelve built-in scenarios, in documentation order.
+    /// The fourteen built-in scenarios, in documentation order.
     pub fn builtin() -> ScenarioRegistry {
         ScenarioRegistry {
             scenarios: vec![
@@ -31,6 +31,8 @@ impl ScenarioRegistry {
                 churn_100(),
                 churn_1000(),
                 churn_10000(),
+                chaos_100(),
+                chaos_panic(),
             ],
         }
     }
@@ -278,6 +280,51 @@ pub fn churn_10000() -> Scenario {
     sc
 }
 
+/// 100 clients / 24 channels under deterministic fault injection
+/// (`fl::faults`): decode failures trigger the bounded retransmission
+/// loop, a straggle class stalls compute past C4, and snapshot writes
+/// are occasionally corrupted to exercise the checkpoint recovery
+/// ladder. No injected panics — every unit of a sweep over this
+/// scenario completes, degraded but finite.
+pub fn chaos_100() -> Scenario {
+    let mut sc = Scenario::defaults("chaos-100", Task::Femnist);
+    sc.description = "100 clients, 24 channels with deterministic fault injection: \
+                      15% decode failures (2 retransmissions budgeted), 10% compute \
+                      straggles, 25% of snapshot writes corrupted. Retry energy is \
+                      charged against the eq.-(5) wire cost; retry-exhausted \
+                      clients fold into the departed path. Fault history is a pure \
+                      function of (seed, knobs) — bit-identical for any --threads \
+                      and across checkpoint/resume."
+        .into();
+    sc.topology.clients = 100;
+    sc.topology.channels = 24;
+    sc.topology.cell_radius_m = 900.0;
+    sc.train.rounds = 20;
+    sc.train.chaos = true;
+    sc.train.chaos_decode = 0.15;
+    sc.train.chaos_straggle = 0.1;
+    sc.train.chaos_ckpt = 0.25;
+    sc
+}
+
+/// A deliberately poisoned unit: every scheduled client panics on round
+/// one (`chaos_panic = 1`). A sweep containing this scenario must still
+/// drain every other unit and record exactly one `failed` row — the
+/// per-unit isolation contract verify.sh's chaos smoke pins.
+pub fn chaos_panic() -> Scenario {
+    let mut sc = Scenario::defaults("chaos-panic", Task::Femnist);
+    sc.description = "10 clients, chaos_panic = 1: every scheduled worker panics, \
+                      poisoning the unit on its first round. Exists to exercise \
+                      sweep-level catch_unwind isolation — the fleet keeps \
+                      draining and summary.csv records this unit as `failed`."
+        .into();
+    sc.train.rounds = 3;
+    sc.train.eval_every = 0;
+    sc.train.chaos = true;
+    sc.train.chaos_panic = 1.0;
+    sc
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -300,13 +347,15 @@ mod tests {
             "churn-100",
             "churn-1000",
             "churn-10000",
+            "chaos-100",
+            "chaos-panic",
         ] {
             assert!(names.contains(&want), "missing builtin `{want}`");
             let sc = reg.get(want).unwrap();
             assert!(sc.validate().is_empty(), "{want}: {:?}", sc.validate());
             assert!(!sc.description.is_empty(), "{want} undocumented");
         }
-        assert_eq!(reg.all().len(), 12);
+        assert_eq!(reg.all().len(), 14);
     }
 
     #[test]
@@ -343,7 +392,7 @@ mod tests {
         let mut sc = paper_femnist();
         sc.train.rounds = 7;
         reg.add(sc);
-        assert_eq!(reg.all().len(), 12);
+        assert_eq!(reg.all().len(), 14);
         assert_eq!(reg.get("paper-femnist").unwrap().train.rounds, 7);
     }
 
@@ -377,6 +426,20 @@ mod tests {
         assert!(churn_100().train.staleness, "churn-100 exercises staleness weights");
         assert!(churn_10000().train.classes, "churn-10000 composes churn with classes");
         assert_eq!(churn_1000().train.eval_every, 0, "decision-only scale smoke");
+    }
+
+    #[test]
+    fn chaos_family_opts_into_chaos() {
+        let sc = chaos_100();
+        assert!(sc.train.chaos, "chaos-100 must enable chaos");
+        assert!(sc.train.chaos_decode > 0.0 && sc.train.chaos_straggle > 0.0);
+        assert!(sc.train.chaos_ckpt > 0.0, "chaos-100 exercises snapshot corruption");
+        assert_eq!(sc.train.chaos_panic, 0.0, "chaos-100 units must complete");
+        assert_eq!(sc.train.chaos_retries, 2, "default retransmission budget");
+        let sc = chaos_panic();
+        assert!(sc.train.chaos);
+        assert_eq!(sc.train.chaos_panic, 1.0, "chaos-panic poisons its unit");
+        assert_eq!(sc.train.eval_every, 0, "no eval before the injected panic");
     }
 
     #[test]

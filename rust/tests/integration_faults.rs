@@ -1,0 +1,245 @@
+//! Fault-injection integration: the chaos subsystem's acceptance pins.
+//! A chaos-enabled run must stay **bit-identical** across engine thread
+//! counts and across checkpoint/resume (fault draws are a pure function
+//! of the seed, never of the fan-out), retry-exhausted clients must
+//! degrade into the departed path with finite θ, and a CRC-corrupted
+//! mid-sweep snapshot must fall down the latest → previous → fresh
+//! recovery ladder under `sweep --resume` instead of killing the sweep.
+//!
+//! All tests no-op (with a note) when `make artifacts` hasn't run.
+
+use std::path::PathBuf;
+
+use qccf::ckpt;
+use qccf::experiments::common::{run_scenario, run_scenario_ckpt, CheckpointPolicy};
+use qccf::experiments::sweep;
+use qccf::metrics::Trace;
+use qccf::runtime::{artifacts_dir, Runtime};
+use qccf::scenario::registry;
+
+fn runtime() -> Option<Runtime> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(&artifacts_dir(), "tiny").expect("load tiny runtime"))
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Every deterministic trace field — including the chaos columns —
+/// compared bit for bit. Wall-clock fields excluded, same contract as
+/// `integration_ckpt.rs`.
+fn assert_traces_bit_identical(want: &Trace, got: &Trace, tag: &str) {
+    assert_eq!(want.algorithm, got.algorithm, "{tag}: algorithm");
+    assert_eq!(want.records.len(), got.records.len(), "{tag}: length");
+    for (a, b) in want.records.iter().zip(&got.records) {
+        let r = a.round;
+        assert_eq!(a.round, b.round, "{tag}: round");
+        assert_eq!(a.scheduled, b.scheduled, "{tag} r{r}: scheduled");
+        assert_eq!(a.aggregated, b.aggregated, "{tag} r{r}: aggregated");
+        assert_eq!(a.departed, b.departed, "{tag} r{r}: departed");
+        assert_eq!(a.retries, b.retries, "{tag} r{r}: retries");
+        assert_eq!(a.failed_decodes, b.failed_decodes, "{tag} r{r}: failed_decodes");
+        assert_eq!(a.wire_bytes, b.wire_bytes, "{tag} r{r}: wire_bytes");
+        assert_eq!(a.energy.to_bits(), b.energy.to_bits(), "{tag} r{r}: energy");
+        assert_eq!(a.cum_energy.to_bits(), b.cum_energy.to_bits(), "{tag} r{r}: cum_energy");
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{tag} r{r}: train_loss");
+        assert_eq!(a.mean_q.to_bits(), b.mean_q.to_bits(), "{tag} r{r}: mean_q");
+        assert_eq!(a.q_per_client, b.q_per_client, "{tag} r{r}: q_per_client");
+        assert_eq!(a.lambda1.to_bits(), b.lambda1.to_bits(), "{tag} r{r}: lambda1");
+        assert_eq!(a.lambda2.to_bits(), b.lambda2.to_bits(), "{tag} r{r}: lambda2");
+        assert_eq!(a.max_latency.to_bits(), b.max_latency.to_bits(), "{tag} r{r}: max_latency");
+    }
+}
+
+/// paper-femnist shrunk to test scale with the chaos layer turned on
+/// hot: decode failures frequent enough that the 8-round horizon sees
+/// both successful retries and exhausted budgets, plus stragglers.
+/// `chaos_ckpt` stays 0 so the mid-run snapshot this test resumes from
+/// is sound (the corruption path has its own test below).
+fn chaos_scenario_8() -> qccf::scenario::Scenario {
+    let mut sc = registry::paper_femnist();
+    sc.data.size_mean = 300.0;
+    sc.data.size_std = 60.0;
+    sc.data.test_size = 128;
+    sc.train.rounds = 8;
+    sc.train.chaos = true;
+    sc.train.chaos_decode = 0.4;
+    sc.train.chaos_straggle = 0.2;
+    sc.train.chaos_retries = 2;
+    sc
+}
+
+#[test]
+fn chaos_run_bit_identical_across_threads_and_resume() {
+    // The tentpole acceptance pin: a chaos-enabled run is bit-identical
+    // for --threads 1 vs 8 and across a checkpoint/resume split, while
+    // actually exercising the fault machinery (retries observed) and
+    // degrading — never crashing — on exhausted retry budgets.
+    let Some(rt) = runtime() else { return };
+    let sc = chaos_scenario_8();
+    let seed = 11u64;
+
+    let reference = run_scenario(&rt, &sc, "qccf", seed, 1).unwrap();
+    assert_eq!(reference.records.len(), 8);
+    let retries: usize = reference.records.iter().map(|r| r.retries).sum();
+    assert!(retries > 0, "p_decode = 0.4 over 8 rounds drew no retries");
+    for rec in &reference.records {
+        assert!(
+            rec.train_loss.is_finite() && rec.energy.is_finite(),
+            "round {}: chaos run lost finiteness (loss {}, energy {})",
+            rec.round,
+            rec.train_loss,
+            rec.energy
+        );
+        // Exhausted budgets take the departed path — a failed decode
+        // never reaches the fold, so it bounds the aggregate count.
+        assert!(
+            rec.aggregated + rec.failed_decodes <= rec.scheduled,
+            "round {}: {} aggregated + {} failed decodes exceeds {} scheduled",
+            rec.round,
+            rec.aggregated,
+            rec.failed_decodes,
+            rec.scheduled
+        );
+    }
+
+    let parallel = run_scenario(&rt, &sc, "qccf", seed, 8).unwrap();
+    assert_traces_bit_identical(&reference, &parallel, "threads=8");
+
+    // Checkpoint at round 4, resume to the full horizon on both thread
+    // counts: the fault streams snapshot/restore like every other RNG.
+    let ckpt_dir = fresh_dir("qccf_integration_faults_run");
+    let mut sc4 = sc.clone();
+    sc4.train.rounds = 4;
+    run_scenario_ckpt(
+        &rt,
+        &sc4,
+        "qccf",
+        seed,
+        8,
+        &CheckpointPolicy { every: 4, dir: Some(ckpt_dir.clone()), resume: None, ..Default::default() },
+    )
+    .unwrap();
+    let snap_path = ckpt_dir.join(ckpt::snapshot_file_name(&sc.name, "qccf", seed));
+    assert!(snap_path.exists(), "snapshot not written at round 4");
+    for threads in [1usize, 8] {
+        let resumed = run_scenario_ckpt(
+            &rt,
+            &sc,
+            "qccf",
+            seed,
+            threads,
+            &CheckpointPolicy { every: 0, dir: None, resume: Some(snap_path.clone()), ..Default::default() },
+        )
+        .unwrap();
+        assert_traces_bit_identical(&reference, &resumed, &format!("resumed threads={threads}"));
+    }
+
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+}
+
+#[test]
+fn corrupt_mid_sweep_snapshot_walks_the_recovery_ladder() {
+    // The satellite regression pin: a CRC-bit-flipped mid-sweep
+    // snapshot must not kill `sweep --resume`. With no usable rung the
+    // unit restarts fresh; with a sound `.prev` rung it resumes from
+    // there. Either way the unit completes and its trace is
+    // byte-identical to the uninterrupted sweep's.
+    let Some(rt) = runtime() else { return };
+    let out_dir = fresh_dir("qccf_integration_faults_sweep");
+    let cfg = |resume: bool| sweep::SweepConfig {
+        scenarios: vec![registry::paper_femnist()],
+        seeds: vec![1],
+        algorithms: Some(vec!["qccf".into()]),
+        rounds: Some(2),
+        out_dir: out_dir.clone(),
+        threads: 1,
+        resume,
+        checkpoint_every: 1,
+    };
+
+    let rows = sweep::run(&rt, &cfg(false)).unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].status, "ok");
+    let jsonl = out_dir.join(format!("{}.jsonl", sweep::unit_stem("paper-femnist", "qccf", 1)));
+    let full = std::fs::read(&jsonl).unwrap();
+    let snap = out_dir.join("ckpt").join(ckpt::snapshot_file_name("paper-femnist", "qccf", 1));
+    assert!(!snap.exists(), "completed unit left a stale snapshot");
+
+    // Rung 1 — corrupted latest, no .prev: the ladder warns twice and
+    // restarts fresh; determinism makes the rerun byte-identical.
+    std::fs::remove_file(&jsonl).unwrap();
+    sweep::write_summary(&[], &out_dir).unwrap();
+    let mut sc1 = registry::paper_femnist();
+    sc1.train.rounds = 1;
+    run_scenario_ckpt(
+        &rt,
+        &sc1,
+        "qccf",
+        1,
+        1,
+        &CheckpointPolicy { every: 1, dir: Some(out_dir.join("ckpt")), resume: None, ..Default::default() },
+    )
+    .unwrap();
+    assert!(snap.exists(), "simulated kill must leave the round-1 snapshot");
+    let mut bytes = std::fs::read(&snap).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&snap, &bytes).unwrap();
+
+    let rows2 = sweep::run(&rt, &cfg(true)).unwrap();
+    assert_eq!(rows2.len(), 1);
+    assert_eq!(rows2[0].status, "ok");
+    assert_eq!(
+        std::fs::read(&jsonl).unwrap(),
+        full,
+        "fresh-restart rung must reproduce the uninterrupted trace"
+    );
+
+    // Rung 2 — corrupted latest, sound .prev: a full 2-round run with
+    // checkpoint_every=1 leaves the round-1 snapshot rotated to .prev
+    // under the round-2 one. Flipping a bit in the latest forces the
+    // ladder onto the .prev rung, which must carry the unit home.
+    std::fs::remove_file(&jsonl).unwrap();
+    sweep::write_summary(&[], &out_dir).unwrap();
+    let mut sc2 = registry::paper_femnist();
+    sc2.train.rounds = 2;
+    run_scenario_ckpt(
+        &rt,
+        &sc2,
+        "qccf",
+        1,
+        1,
+        &CheckpointPolicy { every: 1, dir: Some(out_dir.join("ckpt")), resume: None, ..Default::default() },
+    )
+    .unwrap();
+    let prev = out_dir.join("ckpt").join(format!(
+        "{}.prev",
+        ckpt::snapshot_file_name("paper-femnist", "qccf", 1)
+    ));
+    assert!(snap.exists() && prev.exists(), "rotation must leave latest + .prev");
+    let mut bytes = std::fs::read(&snap).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&snap, &bytes).unwrap();
+
+    let rows3 = sweep::run(&rt, &cfg(true)).unwrap();
+    assert_eq!(rows3.len(), 1);
+    assert_eq!(rows3[0].status, "ok");
+    assert_eq!(
+        std::fs::read(&jsonl).unwrap(),
+        full,
+        ".prev rung must reproduce the uninterrupted trace"
+    );
+    // Completion sweeps both rungs away.
+    assert!(!snap.exists() && !prev.exists(), "completed unit left snapshot rungs behind");
+
+    std::fs::remove_dir_all(&out_dir).ok();
+}

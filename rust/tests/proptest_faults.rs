@@ -1,0 +1,226 @@
+//! Property pins for the fault-injection layer (`fl::faults`) and the
+//! retransmission-aware accounting helpers (`fl::exec`):
+//!
+//! * fault histories are a pure function of `(seed, cfg, client id,
+//!   #ticks)` — invariant to the order clients are ticked in (draws
+//!   happen before the worker fan-out, so this is exactly the property
+//!   that makes chaos runs thread-count invariant), and stable under
+//!   fleet growth (client `i`'s stream never depends on `U`, because
+//!   streams fork off the salted root in ascending id order);
+//! * retransmission energy is monotone non-decreasing in `attempts`
+//!   and exactly `0.0` on the first attempt;
+//! * the benign draw is a bitwise no-op: `fault_latency`,
+//!   `fault_energy`, and `fault_payload_bytes` reproduce the
+//!   chaos-disabled `realized_latency` / `realized_energy` /
+//!   single-shot payload IEEE-exactly, and an all-zero-rate
+//!   [`FaultCfg`] draws benign forever — which is what pins
+//!   fault-rate-0 runs bit-identical to a chaos-disabled engine.
+
+use qccf::config::SystemParams;
+use qccf::fl::exec::{
+    fault_energy, fault_latency, fault_payload_bytes, realized_energy, realized_latency,
+    retry_energy, STRAGGLE_FACTOR,
+};
+use qccf::fl::faults::{FaultCfg, FaultDraw, FaultPlan};
+use qccf::quant::wire;
+use qccf::sched::ClientDecision;
+use qccf::util::prop;
+use qccf::util::rng::Rng;
+
+#[derive(Debug)]
+struct ChaosCase {
+    u: usize,
+    cfg: FaultCfg,
+    seed: u64,
+    rounds: usize,
+    /// Seed for the per-round tick permutations of run B.
+    order_seed: u64,
+}
+
+fn chaos_case(rng: &mut Rng) -> ChaosCase {
+    ChaosCase {
+        u: 2 + rng.below(48),
+        cfg: FaultCfg {
+            p_decode: rng.range(0.0, 1.0),
+            p_straggle: rng.range(0.0, 1.0),
+            p_panic: rng.range(0.0, 1.0),
+            retries: rng.below(5) as u32,
+            p_ckpt: rng.range(0.0, 1.0),
+        },
+        seed: rng.next_u64(),
+        rounds: 1 + rng.below(20),
+        order_seed: rng.next_u64(),
+    }
+}
+
+#[test]
+fn fault_history_invariant_to_tick_order() {
+    prop::check("faults-tick-order", prop::iters(40), chaos_case, |cs| {
+        let mut a = FaultPlan::new(cs.u, cs.cfg, cs.seed);
+        let mut b = FaultPlan::new(cs.u, cs.cfg, cs.seed);
+        let mut order: Vec<usize> = (0..cs.u).collect();
+        let mut orng = Rng::seed_from(cs.order_seed);
+        for round in 0..cs.rounds {
+            a.tick();
+            // A fresh random permutation every round: each tick touches
+            // exactly one private stream, so any order must land on the
+            // same draws.
+            orng.shuffle(&mut order);
+            for &i in &order {
+                b.tick_one(i);
+            }
+            if a.draws() != b.draws() {
+                return Err(format!("round {round}: draws diverged under permuted ticks"));
+            }
+            // The plan-level checkpoint stream is independent of every
+            // client stream — interleaving snapshot draws must agree
+            // and must not perturb the client futures.
+            if a.draw_ckpt_corrupt() != b.draw_ckpt_corrupt() {
+                return Err(format!("round {round}: ckpt-corruption draw diverged"));
+            }
+        }
+        a.tick();
+        b.tick();
+        if a.draws() != b.draws() {
+            return Err("post-history tick diverged — stream state corrupted".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fault_history_pure_function_of_seed_and_client_id() {
+    prop::check("faults-replay", prop::iters(30), chaos_case, |cs| {
+        let run = |u: usize, ticks: usize| -> Vec<Vec<FaultDraw>> {
+            let mut p = FaultPlan::new(u, cs.cfg, cs.seed);
+            (0..ticks)
+                .map(|_| {
+                    p.tick();
+                    p.draws().to_vec()
+                })
+                .collect()
+        };
+        if run(cs.u, cs.rounds) != run(cs.u, cs.rounds) {
+            return Err("same (seed, U, cfg, #ticks) produced different histories".into());
+        }
+        // Fleet growth leaves existing clients' streams untouched:
+        // client i's stream is a function of (seed, i), not of U.
+        let small = run(cs.u, cs.rounds);
+        let big = run(cs.u + 1 + cs.u / 2, cs.rounds);
+        for (round, (s, b)) in small.iter().zip(&big).enumerate() {
+            if s[..] != b[..cs.u] {
+                return Err(format!("round {round}: growing the fleet rewrote client draws"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[derive(Debug)]
+struct DecisionCase {
+    size: f64,
+    d: ClientDecision,
+    cpu_scale: f64,
+    budget: u32,
+}
+
+fn decision_case(rng: &mut Rng) -> DecisionCase {
+    DecisionCase {
+        size: rng.range(50.0, 5000.0),
+        d: ClientDecision {
+            channel: rng.below(16),
+            q: if rng.chance(0.85) { Some(1 + rng.below(14) as u32) } else { None },
+            f: rng.range(1e8, 2e9),
+            rate: rng.range(1e4, 4e7),
+        },
+        cpu_scale: rng.range(0.25, 1.0),
+        budget: 1 + rng.below(6) as u32,
+    }
+}
+
+#[test]
+fn retry_energy_monotone_and_free_on_first_attempt() {
+    prop::check("retry-energy-monotone", prop::iters(120), decision_case, |cs| {
+        let p = SystemParams::femnist_small();
+        // The first transmission is part of the base eq. (5) cost —
+        // retransmission airtime starts at attempt two, exactly.
+        if retry_energy(&p, &cs.d, 0) != 0.0 || retry_energy(&p, &cs.d, 1) != 0.0 {
+            return Err("retry_energy non-zero without a retry".into());
+        }
+        let mut prev = 0.0f64;
+        for attempts in 1..=(1 + cs.budget) {
+            let e = retry_energy(&p, &cs.d, attempts);
+            if !e.is_finite() || e < prev {
+                return Err(format!("attempts {attempts}: retry energy {e} < prior {prev}"));
+            }
+            prev = e;
+        }
+        // Each extra attempt strictly adds airtime at a finite rate.
+        if retry_energy(&p, &cs.d, 2) <= 0.0 {
+            return Err("a retry charged no airtime energy".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn benign_draws_are_bitwise_noops() {
+    prop::check("benign-noop", prop::iters(120), decision_case, |cs| {
+        let p = SystemParams::femnist_small();
+        let benign = FaultDraw::benign();
+        let lat = realized_latency(&p, cs.size, &cs.d, cs.cpu_scale);
+        let flat = fault_latency(&p, cs.size, &cs.d, cs.cpu_scale, &benign);
+        if lat.to_bits() != flat.to_bits() {
+            return Err(format!("benign latency diverged: {lat} vs {flat}"));
+        }
+        let en = realized_energy(&p, cs.size, &cs.d, cs.cpu_scale);
+        let fen = fault_energy(&p, cs.size, &cs.d, cs.cpu_scale, &benign);
+        if en.to_bits() != fen.to_bits() {
+            return Err(format!("benign energy diverged: {en} vs {fen}"));
+        }
+        let single = match cs.d.q {
+            Some(q) => wire::encoded_len(p.z, q),
+            None => (p.raw_payload_bits() as usize + 7) / 8,
+        };
+        if fault_payload_bytes(&p, &cs.d, &benign) != single {
+            return Err("benign draw changed the wire byte count".into());
+        }
+        // Non-benign draws move in the right direction: a straggle
+        // stretches latency, retries multiply the payload.
+        let faulty = FaultDraw { straggle: true, panic: false, attempts: 3, decoded: false };
+        if !(STRAGGLE_FACTOR > 1.0) {
+            return Err("straggle factor must stretch compute".into());
+        }
+        if fault_latency(&p, cs.size, &cs.d, cs.cpu_scale, &faulty) <= lat {
+            return Err("straggle + retries failed to stretch latency".into());
+        }
+        if fault_payload_bytes(&p, &cs.d, &faulty) != 3 * single {
+            return Err("3 attempts should put 3 payloads on the wire".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn zero_rate_cfg_draws_benign_forever() {
+    prop::check("fault-rate-zero-pin", prop::iters(30), chaos_case, |cs| {
+        let cfg = FaultCfg {
+            p_decode: 0.0,
+            p_straggle: 0.0,
+            p_panic: 0.0,
+            retries: cs.cfg.retries,
+            p_ckpt: 0.0,
+        };
+        let mut plan = FaultPlan::new(cs.u, cfg, cs.seed);
+        for round in 0..cs.rounds {
+            plan.tick();
+            if plan.draws().iter().any(|d| *d != FaultDraw::benign()) {
+                return Err(format!("round {round}: zero-rate cfg drew a fault"));
+            }
+            if plan.draw_ckpt_corrupt() {
+                return Err(format!("round {round}: zero-rate cfg corrupted a snapshot"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -146,6 +146,51 @@ if [ -f artifacts/manifest.json ]; then
         echo "verify.sh: sweep --resume lost summary.csv" >&2
         exit 1
     }
+    # Chaos smoke: chaos-100 exercises the fault-injection path (decode
+    # retries, straggle, checkpoint corruption + the .prev recovery
+    # ladder) while chaos-panic deliberately poisons its unit with an
+    # injected client panic. The sweep must DRAIN the fleet — chaos-100
+    # completes with a trace, chaos-panic lands as exactly one `failed`
+    # row — and only then exit non-zero (docs/FAULTS.md).
+    echo "== chaos sweep smoke (chaos-100 ok, chaos-panic failed row) =="
+    CHAOS_OUT="$(mktemp -d)"
+    trap 'rm -rf "$SWEEP_OUT" "$CHAOS_OUT"' EXIT
+    if cargo run --release --quiet -- sweep \
+        --scenarios chaos-100,chaos-panic --algorithms qccf \
+        --seeds 1 --quick --profile tiny --threads 2 \
+        --checkpoint-every 1 --out "$CHAOS_OUT"; then
+        echo "verify.sh: chaos sweep exited zero despite chaos-panic" >&2
+        exit 1
+    fi
+    [ -s "$CHAOS_OUT"/chaos-100__qccf__seed1.jsonl ] || {
+        echo "verify.sh: chaos sweep missing chaos-100 trace" >&2
+        exit 1
+    }
+    n_failed="$(grep -c ',failed,' "$CHAOS_OUT"/summary.csv || true)"
+    [ "$n_failed" = "1" ] || {
+        echo "verify.sh: chaos sweep expected 1 failed row, got $n_failed" >&2
+        exit 1
+    }
+    # Resume over the same --out: the chaos-100 `ok` row is carried, the
+    # `failed` chaos-panic row re-runs (and fails again), so the exit
+    # stays non-zero and the summary still holds exactly one failed row.
+    echo "== chaos sweep --resume smoke (ok row carried, failed re-run) =="
+    if cargo run --release --quiet -- sweep \
+        --scenarios chaos-100,chaos-panic --algorithms qccf \
+        --seeds 1 --quick --profile tiny --threads 2 \
+        --checkpoint-every 1 --out "$CHAOS_OUT" --resume; then
+        echo "verify.sh: chaos sweep --resume exited zero despite chaos-panic" >&2
+        exit 1
+    fi
+    grep -q '^chaos-100,' "$CHAOS_OUT"/summary.csv || {
+        echo "verify.sh: chaos sweep --resume lost the chaos-100 row" >&2
+        exit 1
+    }
+    n_failed="$(grep -c ',failed,' "$CHAOS_OUT"/summary.csv || true)"
+    [ "$n_failed" = "1" ] || {
+        echo "verify.sh: chaos --resume expected 1 failed row, got $n_failed" >&2
+        exit 1
+    }
 else
     echo "== sweep smoke skipped (no artifacts/manifest.json — run make artifacts) =="
 fi
