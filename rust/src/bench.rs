@@ -637,6 +637,11 @@ fn bench_row_metric(row: &crate::util::json::Json) -> Option<(&'static str, f64,
     None
 }
 
+/// The committed benchmark baseline files, as written by `qccf bench`
+/// and compared by `bench-diff` and `report`. One list so the CLI and
+/// the report aggregator can never drift apart on which files exist.
+pub const BENCH_FILES: [&str; 3] = ["BENCH_wire.json", "BENCH_sched.json", "BENCH_ckpt.json"];
+
 /// Compare a fresh BENCH_*.json document against the committed
 /// baseline and return one warning line per metric that regressed more
 /// than `threshold` (fractional — 0.2 = 20%). Rows are matched by

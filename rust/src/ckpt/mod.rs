@@ -40,6 +40,13 @@
 //! Snapshots are written atomically (tmp + fsync + rename, see
 //! [`crate::util::fsio`]) so a crash mid-write leaves the previous
 //! snapshot intact.
+//!
+//! This module is deliberately **observability-free**: snapshot bytes
+//! are part of the bit-identity contract, so no wall-clock type from
+//! [`crate::obs`] may appear here (detlint rule R7). Write timing is
+//! measured by the *caller* with a `CheckpointWrite` span
+//! ([`crate::obs::spans`]), and the embedded trace's side-channel
+//! wall columns are zeroed before capture (docs/OBSERVABILITY.md).
 
 // Snapshot decode must degrade into typed CkptErrors, never an
 // `unwrap()` panic on attacker-shaped bytes; scope clippy's unwrap ban

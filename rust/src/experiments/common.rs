@@ -14,6 +14,7 @@ use crate::config::SystemParams;
 use crate::data;
 use crate::fl::Server;
 use crate::metrics::Trace;
+use crate::obs::spans::{Span, SpanGuard};
 use crate::runtime::Runtime;
 use crate::scenario::{registry, Scenario};
 
@@ -332,14 +333,30 @@ pub fn run_scenario_ckpt(
             // uninterrupted run and a resumed one replay the identical
             // corruption future (see fl::faults module docs).
             let corrupt = server.draw_ckpt_corrupt().unwrap_or(false);
+            // Normalize the side-channel wall-clock columns out of the
+            // snapshot's trace: they are CSV-only profiler readings
+            // (outside the bit-identity contract), and carrying them
+            // would make snapshot bytes vary run-to-run and across
+            // QCCF_OBS settings (pinned by tests/integration_obs.rs).
+            // A resumed run's CSV therefore shows zeros for pre-resume
+            // rounds' wall columns; every deterministic field is exact.
+            let mut snap_trace = trace.clone();
+            for r in &mut snap_trace.records {
+                r.decide_seconds = 0.0;
+                r.compute_seconds = 0.0;
+            }
             let snap = Snapshot {
                 scenario_text: scenario_text.clone(),
                 algorithm: algorithm.to_string(),
                 seed,
                 state: server.checkpoint_state(),
-                trace: trace.clone(),
+                trace: snap_trace,
             };
             let path = dir.join(ckpt::snapshot_file_name(&scenario.name, algorithm, seed));
+            // Span-profiled at the call site so the `ckpt` module stays
+            // obs-free (detlint R7); the guard covers rotation + encode
+            // + atomic write.
+            let ckpt_span = SpanGuard::enter(Span::CheckpointWrite);
             // Keep the previous snapshot as `<name>.prev` — the
             // recovery ladder's middle rung when the latest write is
             // corrupted (docs/FAULTS.md). Rename failure (e.g. no
@@ -353,6 +370,7 @@ pub fn run_scenario_ckpt(
                 let _ = std::fs::rename(&path, path.with_file_name(prev_name));
             }
             snap.save(&path)?;
+            drop(ckpt_span);
             if corrupt {
                 // Injected fault: flip one payload byte after the write
                 // lands, exactly the torn/bit-rotted file the CRC

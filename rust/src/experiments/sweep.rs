@@ -40,6 +40,20 @@
 //! after every unit has completed does the sweep return an error
 //! naming the poisoned units (non-zero process exit). On a later
 //! `--resume`, `failed` rows re-run — only `ok` rows are skipped.
+//!
+//! # Observability
+//!
+//! Per unit the sweep also writes a **sketch sidecar**
+//! (`<stem>.sketch.json`, [`crate::obs::sketch`]) — deterministic, a
+//! pure function of the trace, covered by the bytes-identical contract
+//! above — and appends one line to the run **ledger**
+//! (`ledger.jsonl`, [`crate::obs::ledger`]): unit identity, status,
+//! per-stage span totals and wall duration. The ledger is a
+//! completion-ordered wall-clock journal, so it is the one file under
+//! `--out` *excluded* from the bytes-identical contract (exactly like
+//! the train CSV's wall columns — see docs/OBSERVABILITY.md). The
+//! `report` subcommand aggregates summary + ledger + sidecars without
+//! rereading any per-round trace.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -48,6 +62,7 @@ use anyhow::Result;
 
 use crate::ckpt;
 use crate::metrics::Trace;
+use crate::obs::{ledger, sketch, spans, wall};
 use crate::runtime::Runtime;
 use crate::scenario::Scenario;
 use crate::util::csv::CsvWriter;
@@ -114,6 +129,15 @@ pub struct SweepRow {
     pub aggregated: usize,
     /// Total mid-round departures (churn; 0 otherwise).
     pub departed: usize,
+    /// Total retransmission attempts beyond the first (chaos; 0
+    /// otherwise).
+    pub retries: usize,
+    /// Median per-round energy (J), read off the unit's deterministic
+    /// sketch ([`crate::obs::sketch`]; NaN for a failed unit).
+    pub energy_p50: f64,
+    /// 95th-percentile per-round energy (J), same sketch (NaN for a
+    /// failed unit).
+    pub energy_p95: f64,
     /// `"ok"` for a completed unit, `"failed"` for one whose run
     /// panicked or errored (caught per unit; see the module docs).
     /// Failed rows carry zero/NaN metrics and re-run on `--resume`.
@@ -403,12 +427,30 @@ pub fn run(rt: &Runtime, cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
         cfg.out_dir.display()
     );
     let slots = std::sync::Mutex::new(slots);
+    // Heartbeat state (satellite of docs/OBSERVABILITY.md): one info
+    // line per completed unit with done/total and a monotonic-clock ETA
+    // — side-channel wall time, confined to the log.
+    let to_run = pending.len();
+    let completed = std::sync::atomic::AtomicUsize::new(0);
+    let sweep_wall = wall::Stopwatch::start();
+    let git_stamp = ledger::git_describe();
     // Record one finished unit — ok or failed — and make the summary
     // durable *immediately*, not at sweep end, so a kill mid-sweep
     // forfeits at most the in-flight units on resume. The lock also
     // serializes the atomic rewrite's shared tmp file.
     let record = |i: usize, row: SweepRow| -> Result<()> {
         let mut slots = slots.lock().unwrap();
+        let done = completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+        let elapsed = sweep_wall.elapsed_secs();
+        let eta = elapsed / done as f64 * to_run.saturating_sub(done) as f64;
+        crate::info!(
+            "sweep",
+            "unit {done}/{to_run} {} ({}/{}/seed{}) — elapsed {elapsed:.1}s, eta ~{eta:.1}s",
+            row.status,
+            row.scenario,
+            row.algorithm,
+            row.seed
+        );
         slots[i] = Some(row);
         let mut so_far: Vec<SweepRow> = slots.iter().flatten().cloned().collect();
         so_far.extend(carried.iter().cloned());
@@ -430,6 +472,14 @@ pub fn run(rt: &Runtime, cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
                 restore_runtime_clock: false,
             };
             let path = cfg.out_dir.join(format!("{}.jsonl", unit_stem(&sc.name, alg, *seed)));
+            // Unit-scoped observability: drain any stale thread-local
+            // span shadow, then open the sweep-unit span — units run
+            // with engine threads = 1, so every stage span of this unit
+            // lands on this pool thread and `local_take` below reads
+            // out exactly this unit's totals for its ledger line.
+            let _ = spans::local_take();
+            let unit_wall = wall::Stopwatch::start();
+            let unit_span = spans::SpanGuard::enter(spans::Span::SweepUnit);
             // Per-unit isolation: a panicking unit (an engine bug, or
             // `fl::faults` chaos) must not take the fleet down. Catch
             // it here, record a `failed` row, and keep draining; the
@@ -437,7 +487,7 @@ pub fn run(rt: &Runtime, cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
             // state is sound to reuse after a caught panic: the unit
             // only *reads* rt/sc and its partial outputs (trace file,
             // snapshot) are replaced atomically or re-run on resume.
-            let unit = std::panic::AssertUnwindSafe(|| -> Result<Trace> {
+            let unit = std::panic::AssertUnwindSafe(|| -> Result<(Trace, sketch::TraceSketches)> {
                 let trace = run_scenario_ckpt(rt, sc, alg, *seed, 1, &policy)?;
                 trace
                     .write_jsonl(
@@ -449,11 +499,42 @@ pub fn run(rt: &Runtime, cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
                         ],
                     )
                     .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
-                Ok(trace)
+                // Deterministic sketch sidecar next to the trace — a
+                // pure function of the trace, so a resumed unit
+                // reproduces it bit for bit.
+                let sketches = sketch::TraceSketches::from_trace(&trace);
+                sketches.save(&sketch::sidecar_path(&path)).map_err(|e| {
+                    anyhow::anyhow!("write sketch sidecar for {}: {e}", path.display())
+                })?;
+                Ok((trace, sketches))
             });
-            let why = match std::panic::catch_unwind(unit) {
-                Ok(Ok(trace)) => {
-                    record(i, summarize(&trace, sc, alg, *seed, path))?;
+            let caught = std::panic::catch_unwind(unit);
+            drop(unit_span);
+            let span_totals = spans::local_take();
+            let mut entry = ledger::LedgerEntry {
+                kind: "sweep-unit".to_string(),
+                scenario: sc.name.clone(),
+                algorithm: alg.clone(),
+                seed: *seed,
+                rounds: 0,
+                status: "failed".to_string(),
+                wall_secs: unit_wall.elapsed_secs(),
+                threads: 1,
+                spans: span_totals,
+                sketch_digests: BTreeMap::new(),
+                git: git_stamp.clone(),
+            };
+            let why = match caught {
+                Ok(Ok((trace, sketches))) => {
+                    entry.rounds = trace.records.len();
+                    entry.status = "ok".to_string();
+                    entry.sketch_digests = sketches
+                        .digests()
+                        .into_iter()
+                        .map(|(k, d)| (k.to_string(), d))
+                        .collect();
+                    append_ledger(&cfg.out_dir, &entry);
+                    record(i, summarize(&trace, &sketches, sc, alg, *seed, path))?;
                     // Only after the summary row is durable is the
                     // snapshot stale — dropping it earlier would leave
                     // a killed-right-here unit with neither artifact.
@@ -465,6 +546,7 @@ pub fn run(rt: &Runtime, cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
                 Ok(Err(e)) => format!("{e:#}"),
                 Err(payload) => format!("panicked: {}", panic_message(&payload)),
             };
+            append_ledger(&cfg.out_dir, &entry);
             crate::warn_log!("sweep", "{}/{alg}/seed{seed} failed: {why}", sc.name);
             record(i, failed_row(sc, alg, *seed, path))?;
             Err(anyhow::anyhow!("{}/{alg}/seed{seed}: {why}", sc.name))
@@ -491,6 +573,15 @@ pub fn run(rt: &Runtime, cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
         failures.join("\n  ")
     );
     Ok(rows)
+}
+
+/// Best-effort ledger append: the run ledger is a side-channel journal
+/// (like the wall-clock CSV columns), so a failed append warns and
+/// must never fail the unit it describes.
+fn append_ledger(dir: &Path, entry: &ledger::LedgerEntry) {
+    if let Err(e) = ledger::append(dir, entry) {
+        crate::warn_log!("sweep", "ledger append under {} failed: {e}", dir.display());
+    }
 }
 
 /// Human-readable panic payload (panics carry `&str` or `String` in
@@ -522,12 +613,22 @@ fn failed_row(sc: &Scenario, alg: &str, seed: u64, path: PathBuf) -> SweepRow {
         scheduled: 0,
         aggregated: 0,
         departed: 0,
+        retries: 0,
+        energy_p50: f64::NAN,
+        energy_p95: f64::NAN,
         status: "failed".to_string(),
         trace_path: path,
     }
 }
 
-fn summarize(trace: &Trace, sc: &Scenario, alg: &str, seed: u64, path: PathBuf) -> SweepRow {
+fn summarize(
+    trace: &Trace,
+    sketches: &sketch::TraceSketches,
+    sc: &Scenario,
+    alg: &str,
+    seed: u64,
+    path: PathBuf,
+) -> SweepRow {
     SweepRow {
         scenario: sc.name.clone(),
         algorithm: alg.to_string(),
@@ -541,6 +642,9 @@ fn summarize(trace: &Trace, sc: &Scenario, alg: &str, seed: u64, path: PathBuf) 
         scheduled: trace.total_scheduled(),
         aggregated: trace.total_aggregated(),
         departed: trace.total_departed(),
+        retries: trace.total_retries(),
+        energy_p50: sketches.energy.quantile(0.50),
+        energy_p95: sketches.energy.quantile(0.95),
         status: "ok".to_string(),
         trace_path: path,
     }
@@ -548,7 +652,7 @@ fn summarize(trace: &Trace, sc: &Scenario, alg: &str, seed: u64, path: PathBuf) 
 
 /// `summary.csv` column set, shared by [`write_summary`] and
 /// [`read_summary`] so the resume path can never drift from the writer.
-const SUMMARY_COLUMNS: [&str; 14] = [
+const SUMMARY_COLUMNS: [&str; 17] = [
     "scenario",
     "algorithm",
     "seed",
@@ -561,6 +665,9 @@ const SUMMARY_COLUMNS: [&str; 14] = [
     "scheduled",
     "aggregated",
     "departed",
+    "retries",
+    "energy_p50_j",
+    "energy_p95_j",
     "status",
     "trace_file",
 ];
@@ -587,6 +694,9 @@ pub fn write_summary(rows: &[SweepRow], out_dir: &std::path::Path) -> Result<()>
                 r.scheduled.to_string(),
                 r.aggregated.to_string(),
                 r.departed.to_string(),
+                r.retries.to_string(),
+                format!("{:.9}", r.energy_p50),
+                format!("{:.9}", r.energy_p95),
                 r.status.clone(),
                 r.trace_path
                     .file_name()
@@ -651,11 +761,14 @@ pub fn read_summary(out_dir: &std::path::Path) -> Result<Vec<SweepRow>> {
             scheduled: cells[9].parse().map_err(|_| bad("scheduled", cells[9]))?,
             aggregated: cells[10].parse().map_err(|_| bad("aggregated", cells[10]))?,
             departed: cells[11].parse().map_err(|_| bad("departed", cells[11]))?,
-            status: match cells[12] {
-                "ok" | "failed" => cells[12].to_string(),
+            retries: cells[12].parse().map_err(|_| bad("retries", cells[12]))?,
+            energy_p50: cells[13].parse().map_err(|_| bad("energy_p50_j", cells[13]))?,
+            energy_p95: cells[14].parse().map_err(|_| bad("energy_p95_j", cells[14]))?,
+            status: match cells[15] {
+                "ok" | "failed" => cells[15].to_string(),
                 other => return Err(bad("status", other)),
             },
-            trace_path: out_dir.join(cells[13]),
+            trace_path: out_dir.join(cells[16]),
         });
     }
     Ok(rows)
@@ -804,6 +917,9 @@ mod tests {
             scheduled: 20,
             aggregated: 20,
             departed: 0,
+            retries: 0,
+            energy_p50: 0.625,
+            energy_p95: 0.75,
             status: "ok".into(),
             trace_path: PathBuf::from("x/s__qccf__seed1.jsonl"),
         }];
@@ -837,6 +953,9 @@ mod tests {
                 scheduled: 120,
                 aggregated: 117,
                 departed: 2,
+                retries: 5,
+                energy_p50: 0.105,
+                energy_p95: 0.12,
                 status: "ok".into(),
                 trace_path: PathBuf::from("ignored/paper-femnist__qccf__seed1.jsonl"),
             },
@@ -853,6 +972,9 @@ mod tests {
                 scheduled: 8,
                 aggregated: 8,
                 departed: 0,
+                retries: 0,
+                energy_p50: f64::NAN,
+                energy_p95: f64::NAN,
                 status: "failed".into(),
                 trace_path: PathBuf::from("ignored/zipf-skew__same-size__seed9.jsonl"),
             },
@@ -872,9 +994,18 @@ mod tests {
             assert_eq!(a.scheduled, b.scheduled);
             assert_eq!(a.aggregated, b.aggregated);
             assert_eq!(a.departed, b.departed);
+            assert_eq!(a.retries, b.retries);
             assert_eq!(a.status, b.status);
             assert!(
                 (a.final_acc == b.final_acc) || (a.final_acc.is_nan() && b.final_acc.is_nan())
+            );
+            assert!(
+                (a.energy_p50 == b.energy_p50)
+                    || (a.energy_p50.is_nan() && b.energy_p50.is_nan())
+            );
+            assert!(
+                (a.energy_p95 == b.energy_p95)
+                    || (a.energy_p95.is_nan() && b.energy_p95.is_nan())
             );
             // Trace paths are re-anchored under the summary's directory.
             assert_eq!(

@@ -563,7 +563,9 @@ pub struct ExecOutput {
     pub loss_sum: f64,
     /// Count behind [`ExecOutput::loss_sum`].
     pub loss_n: usize,
-    /// Filled by the server around the fan-out.
+    /// Filled by the server from the execute-stage span guard
+    /// (`obs::spans`) around the fan-out — side-channel wall-clock,
+    /// CSV-only.
     pub compute_seconds: f64,
 }
 

@@ -47,6 +47,7 @@ use crate::convergence::{self, GradStats};
 use crate::data::Federation;
 use crate::lyapunov::Queues;
 use crate::metrics::{RoundRecord, Trace};
+use crate::obs::spans::{Span, SpanGuard};
 use crate::runtime::Runtime;
 use crate::sched::{RoundDecision, RoundInputs, Scheduler};
 use crate::util::rng::Rng;
@@ -312,9 +313,10 @@ impl<'rt> Server<'rt> {
             queues: &self.queues,
             avail: avail_mask.as_deref(),
         };
-        // detlint: allow(R2) — profiling only: feeds RoundRecord's
-        // decide_seconds trace field, never a scheduling decision.
-        let t_decide = std::time::Instant::now();
+        // Span-profiled (obs::spans — wall-clock stays inside the R2
+        // allowlist): the reading feeds RoundRecord's decide_seconds
+        // CSV column only, never a scheduling decision.
+        let span = SpanGuard::enter(Span::Decide);
         let decision: RoundDecision = if avail_mask
             .as_ref()
             .is_some_and(|m| m.iter().all(|&on| !on))
@@ -332,7 +334,7 @@ impl<'rt> Server<'rt> {
         } else {
             self.scheduler.decide(&inputs)
         };
-        let decide_seconds = t_decide.elapsed().as_secs_f64();
+        let decide_seconds = span.finish_secs();
         if crate::util::logging::enabled(crate::util::logging::Level::Debug) {
             let greedy = crate::sched::greedy_allocation(&inputs);
             let (jg, ag) = crate::sched::evaluate_allocation(
@@ -417,9 +419,10 @@ impl<'rt> Server<'rt> {
         decision: &RoundDecision,
         opts: &exec::ExecOpts,
     ) -> Result<exec::ExecOutput> {
-        // detlint: allow(R2) — profiling only: feeds RoundRecord's
-        // compute_seconds trace field, never a scheduling decision.
-        let t_compute = std::time::Instant::now();
+        // Span-profiled like stage_decide: the execute span's reading
+        // becomes RoundRecord's compute_seconds CSV column, nothing
+        // deterministic.
+        let span = SpanGuard::enter(Span::Execute);
         let mut tasks: Vec<exec::ClientTask<'_>> = Vec::new();
         for (i, d) in decision.assignments.iter().enumerate() {
             let Some(d) = d else { continue };
@@ -451,7 +454,7 @@ impl<'rt> Server<'rt> {
                 c.q_prev = q as f64;
             }
         }
-        out.compute_seconds = t_compute.elapsed().as_secs_f64();
+        out.compute_seconds = span.finish_secs();
         Ok(out)
     }
 
@@ -563,8 +566,14 @@ impl<'rt> Server<'rt> {
         let mut opts = self.churn_opts(&decision);
         self.fault_opts(&decision, &mut opts);
         let mut exec_out = self.stage_execute(&decision, &opts)?;
-        self.stage_aggregate(&mut exec_out);
-        self.stage_update_queues(&ctx, &exec_out);
+        {
+            let _span = SpanGuard::enter(Span::Aggregate);
+            self.stage_aggregate(&mut exec_out);
+        }
+        {
+            let _span = SpanGuard::enter(Span::QueueUpdate);
+            self.stage_update_queues(&ctx, &exec_out);
+        }
         // Staleness bookkeeping: one round passed for everyone, and the
         // clients whose uploads made the aggregate reset their gap.
         if let Some(av) = &mut self.churn {

@@ -49,8 +49,12 @@
 //! gates on `detlint` (`rust/xtask`), a static-analysis pass that flags
 //! the source patterns that break it — hash-order iteration, ambient
 //! wall-clock or entropy, `partial_cmp` float sorts, non-atomic file
-//! writes, uncommented `unsafe` — per the R1–R6 catalog and escape
-//! policy in `docs/DETERMINISM.md`.
+//! writes, uncommented `unsafe`, observability wall-clock leaking into
+//! deterministic outputs — per the R1–R7 catalog and escape policy in
+//! `docs/DETERMINISM.md`. The [`obs`] layer (stage-span profiler,
+//! deterministic quantile sketches, run ledger + `report` aggregator)
+//! is the one sanctioned home for wall-clock telemetry
+//! (`docs/OBSERVABILITY.md`).
 //!
 //! Start with [`config::SystemParams`] (paper Table I), then
 //! [`fl::Server`] for the training loop, or the `examples/`. The full
@@ -73,6 +77,7 @@ pub mod fl;
 pub mod ga;
 pub mod lyapunov;
 pub mod metrics;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod scenario;

@@ -66,14 +66,21 @@
 //!                                encode/decode MB/s and snapshot bytes at
 //!                                Z model dims × U clients; written as
 //!                                BENCH_ckpt.json (default target/; no artifacts)
+//!   report  [--dir DIR] [--bench-baseline DIR --bench-fresh DIR]   aggregate a
+//!                                sweep directory into a health report — unit
+//!                                outcomes, per-stage p50/p95/p99 wall times
+//!                                from ledger.jsonl, energy quantiles from the
+//!                                deterministic sketch sidecars, and advisory
+//!                                bench deltas — without rereading any per-round
+//!                                JSONL trace (docs/OBSERVABILITY.md; no artifacts)
 //!
 //! The fig2..fig5 harnesses are presets over the `paper-femnist` /
 //! `paper-cifar10` scenarios — the same path `sweep` runs (see
 //! docs/ARCHITECTURE.md).
 //!
 //! Requires `make artifacts` (HLO text under ./artifacts), except
-//! `ablate`, `bench-wire`, `bench-sched`, `bench-ckpt`, `bench-diff`
-//! and `sweep --list`.
+//! `ablate`, `bench-wire`, `bench-sched`, `bench-ckpt`, `bench-diff`,
+//! `report` and `sweep --list`.
 
 use std::path::PathBuf;
 
@@ -84,6 +91,7 @@ use qccf::config::SystemParams;
 use qccf::experiments::{common, fig2, fig3, fig4, fig5, sweep, RunSpec, Task};
 use qccf::info;
 use qccf::lyapunov::Queues;
+use qccf::obs::{ledger, sketch, spans, wall};
 use qccf::runtime::Runtime;
 use qccf::scenario::{self, ScenarioRegistry};
 use qccf::sched::RoundInputs;
@@ -128,9 +136,10 @@ fn run(args: &Args) -> Result<()> {
         Some("bench-sched") => cmd_bench_sched(args),
         Some("bench-ckpt") => cmd_bench_ckpt(args),
         Some("bench-diff") => cmd_bench_diff(args),
+        Some("report") => cmd_report(args),
         Some(other) => anyhow::bail!("unknown subcommand `{other}` (see README)"),
         None => {
-            println!("usage: qccf <params|train|fig2|fig3|fig4|fig5|sweep|decide|ablate|bench-wire|bench-sched|bench-ckpt|bench-diff> [options]");
+            println!("usage: qccf <params|train|fig2|fig3|fig4|fig5|sweep|decide|ablate|bench-wire|bench-sched|bench-ckpt|bench-diff|report> [options]");
             println!("see README.md for the full option list; `qccf sweep --list` shows scenarios");
             Ok(())
         }
@@ -178,6 +187,10 @@ fn load_runtime(args: &Args) -> Result<Runtime> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // Fresh span totals + a wall stopwatch so the run's ledger entry
+    // attributes only this invocation (docs/OBSERVABILITY.md).
+    spans::reset();
+    let train_wall = wall::Stopwatch::start();
     let rt = load_runtime(args)?;
     let mut spec = RunSpec::new(args.get_or("algorithm", "qccf"), task_of(args));
     spec.rounds = args.get_usize("rounds", 40);
@@ -235,6 +248,25 @@ fn cmd_train(args: &Args) -> Result<()> {
     let path = common::results_dir().join(format!("train_{}.csv", spec.algorithm));
     trace.write_csv(&path)?;
     println!("wrote {}", path.display());
+    // Ledger line: completion-ordered wall-clock journal next to the
+    // CSV (best-effort — telemetry must never fail the run).
+    let sketches = sketch::TraceSketches::from_trace(&trace);
+    let entry = ledger::LedgerEntry {
+        kind: "train".into(),
+        scenario: sc.name.clone(),
+        algorithm: spec.algorithm.clone(),
+        seed: spec.seed,
+        rounds: trace.records.len(),
+        status: "ok".into(),
+        wall_secs: train_wall.elapsed_secs(),
+        threads: spec.threads,
+        spans: spans::totals(),
+        sketch_digests: sketches.digests().into_iter().map(|(k, d)| (k.to_string(), d)).collect(),
+        git: ledger::git_describe(),
+    };
+    if let Err(e) = ledger::append(&common::results_dir(), &entry) {
+        info!("main", "ledger append failed (non-fatal): {e}");
+    }
     let prof = rt.exec_profile();
     info!(
         "main",
@@ -489,7 +521,7 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
     let threshold = args.get_f64("threshold", 0.2);
     anyhow::ensure!(threshold > 0.0, "--threshold: must be > 0");
     let mut total = 0usize;
-    for name in ["BENCH_wire.json", "BENCH_sched.json", "BENCH_ckpt.json"] {
+    for name in qccf::bench::BENCH_FILES {
         let bp = base_dir.join(name);
         let fp = fresh_dir.join(name);
         if !bp.is_file() {
@@ -518,6 +550,25 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
              investigate before committing refreshed baselines"
         );
     }
+    Ok(())
+}
+
+/// Sweep health report (no artifacts needed — pure file aggregation):
+/// fold `--dir`'s summary.csv, ledger.jsonl, and deterministic sketch
+/// sidecars into unit outcomes, per-stage wall-time quantiles, and
+/// energy quantiles, plus advisory bench deltas when both bench dirs
+/// are given. Never rereads a per-round JSONL trace
+/// (docs/OBSERVABILITY.md).
+fn cmd_report(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get_or("dir", "results/sweep"));
+    let baseline = args.get("bench-baseline").map(PathBuf::from);
+    let fresh = args.get("bench-fresh").map(PathBuf::from);
+    anyhow::ensure!(
+        baseline.is_some() == fresh.is_some(),
+        "report: --bench-baseline and --bench-fresh must be given together"
+    );
+    let text = qccf::obs::report::render(&dir, baseline.as_deref(), fresh.as_deref())?;
+    print!("{text}");
     Ok(())
 }
 

@@ -153,8 +153,16 @@ impl Trace {
         self.records.iter().filter(|r| r.mean_q > 0.0).map(|r| (r.round, r.mean_q)).collect()
     }
 
-    /// Dump per-round rows to CSV.
+    /// Dump per-round rows to CSV. Replaced **atomically** (tmp +
+    /// fsync + rename, see [`crate::util::fsio`]) like the JSONL
+    /// trace: a `train` run killed mid-write must not leave a torn
+    /// `train_*.csv` that looks complete.
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        crate::util::fsio::replace_atomic(path, |tmp| self.write_csv_plain(tmp))
+    }
+
+    /// The raw CSV emitter behind [`Trace::write_csv`]'s atomic wrapper.
+    fn write_csv_plain(&self, path: &Path) -> std::io::Result<()> {
         let mut w = CsvWriter::create(
             path,
             &[

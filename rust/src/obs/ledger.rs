@@ -1,0 +1,246 @@
+//! Run ledger: one schema-versioned JSONL line per completed run or
+//! sweep unit, appended to `<out>/ledger.jsonl`.
+//!
+//! The ledger is the side-channel record `report` aggregates instead of
+//! rereading per-round traces: scenario identity, seed, status, wall
+//! duration, per-stage span totals, sketch digests, and the bench
+//! `git describe` stamp. Appends go through [`crate::util::fsio`]'s
+//! append helper (single `write(2)` of one line + fsync); readers skip
+//! unparseable lines, so a torn tail line degrades to one missing entry
+//! rather than a poisoned file.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::obs::spans::{Span, SpanTotals};
+use crate::util::json::{self, Json};
+
+/// Ledger line schema version (bump on any breaking field change).
+pub const LEDGER_SCHEMA: u32 = 1;
+
+/// File name of the ledger within an `--out` directory.
+pub const LEDGER_FILE: &str = "ledger.jsonl";
+
+/// One completed run (a `train` invocation or one sweep unit).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LedgerEntry {
+    /// `"train"` or `"sweep-unit"`.
+    pub kind: String,
+    /// Scenario name.
+    pub scenario: String,
+    /// Algorithm name.
+    pub algorithm: String,
+    /// Run seed.
+    pub seed: u64,
+    /// Rounds completed.
+    pub rounds: usize,
+    /// `"ok"` or `"failed"`.
+    pub status: String,
+    /// Wall-clock duration of the run (side-channel).
+    pub wall_secs: f64,
+    /// Engine threads the run used.
+    pub threads: usize,
+    /// Per-stage span totals accumulated by the run (side-channel).
+    pub spans: SpanTotals,
+    /// Sketch digests keyed by kind (`energy_j`, …) — empty when the
+    /// run produced no sketches (e.g. a failed unit).
+    pub sketch_digests: BTreeMap<String, String>,
+    /// `git describe` stamp of the producing binary's checkout.
+    pub git: String,
+}
+
+impl LedgerEntry {
+    /// Serialize to one ledger line's JSON object.
+    pub fn to_json(&self) -> Json {
+        let mut spans = BTreeMap::new();
+        for s in Span::ALL {
+            spans.insert(
+                s.name().to_string(),
+                json::obj(vec![
+                    ("secs", json::num(self.spans.secs_of(s))),
+                    ("calls", json::num(self.spans.calls_of(s) as f64)),
+                ]),
+            );
+        }
+        let digests: BTreeMap<String, Json> = self
+            .sketch_digests
+            .iter()
+            .map(|(k, v)| (k.clone(), json::s(v)))
+            .collect();
+        json::obj(vec![
+            ("schema", json::num(LEDGER_SCHEMA as f64)),
+            ("kind", json::s(&self.kind)),
+            ("scenario", json::s(&self.scenario)),
+            ("algorithm", json::s(&self.algorithm)),
+            ("seed", json::num(self.seed as f64)),
+            ("rounds", json::num(self.rounds as f64)),
+            ("status", json::s(&self.status)),
+            ("wall_secs", json::num(self.wall_secs)),
+            ("threads", json::num(self.threads as f64)),
+            ("spans", Json::Obj(spans)),
+            ("sketch_digests", Json::Obj(digests)),
+            ("git", json::s(&self.git)),
+        ])
+    }
+
+    /// Inverse of [`LedgerEntry::to_json`].
+    pub fn from_json(v: &Json) -> Result<LedgerEntry, String> {
+        let schema = v
+            .get("schema")
+            .and_then(Json::as_f64)
+            .ok_or("ledger: missing `schema`")? as u32;
+        if schema != LEDGER_SCHEMA {
+            return Err(format!("ledger: unsupported schema {schema}"));
+        }
+        let gets = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("ledger: missing string `{k}`"))
+        };
+        let getn = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("ledger: missing numeric `{k}`"))
+        };
+        let mut spans = SpanTotals::default();
+        if let Some(obj) = v.get("spans").and_then(Json::as_obj) {
+            for (name, entry) in obj {
+                let Some(s) = Span::from_name(name) else { continue };
+                spans.secs[s.index()] =
+                    entry.get("secs").and_then(Json::as_f64).unwrap_or(0.0);
+                spans.calls[s.index()] =
+                    entry.get("calls").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            }
+        }
+        let mut sketch_digests = BTreeMap::new();
+        if let Some(obj) = v.get("sketch_digests").and_then(Json::as_obj) {
+            for (k, d) in obj {
+                if let Some(d) = d.as_str() {
+                    sketch_digests.insert(k.clone(), d.to_string());
+                }
+            }
+        }
+        Ok(LedgerEntry {
+            kind: gets("kind")?,
+            scenario: gets("scenario")?,
+            algorithm: gets("algorithm")?,
+            seed: getn("seed")? as u64,
+            rounds: getn("rounds")? as usize,
+            status: gets("status")?,
+            wall_secs: getn("wall_secs")?,
+            threads: getn("threads")? as usize,
+            spans,
+            sketch_digests,
+            git: gets("git")?,
+        })
+    }
+}
+
+/// Append one entry to `<dir>/ledger.jsonl`.
+pub fn append(dir: &Path, entry: &LedgerEntry) -> std::io::Result<()> {
+    crate::util::fsio::append_line(
+        &dir.join(LEDGER_FILE),
+        &entry.to_json().to_string_compact(),
+    )
+}
+
+/// Read every parseable entry of `<dir>/ledger.jsonl`, in file order.
+/// A missing file yields an empty vec; unparseable lines (torn tail
+/// after a crash, foreign schema) are skipped.
+pub fn read(dir: &Path) -> Vec<LedgerEntry> {
+    let Ok(text) = std::fs::read_to_string(dir.join(LEDGER_FILE)) else {
+        return Vec::new();
+    };
+    text.lines()
+        .filter_map(|line| {
+            let line = line.trim();
+            if line.is_empty() {
+                return None;
+            }
+            json::parse(line).ok().and_then(|v| LedgerEntry::from_json(&v).ok())
+        })
+        .collect()
+}
+
+/// Best-effort `git describe --always --dirty` of the current checkout
+/// (ledger provenance stamp); `"unknown"` when git or the repo is
+/// unavailable. Side-channel only.
+pub fn git_describe() -> String {
+    std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry() -> LedgerEntry {
+        let mut spans = SpanTotals::default();
+        spans.secs[Span::Decide.index()] = 0.5;
+        spans.calls[Span::Decide.index()] = 10;
+        spans.secs[Span::Execute.index()] = 2.0;
+        spans.calls[Span::Execute.index()] = 10;
+        let mut digests = BTreeMap::new();
+        digests.insert("energy_j".to_string(), "00ff00ff00ff00ff".to_string());
+        LedgerEntry {
+            kind: "sweep-unit".into(),
+            scenario: "paper-femnist".into(),
+            algorithm: "qccf".into(),
+            seed: 3,
+            rounds: 20,
+            status: "ok".into(),
+            wall_secs: 12.25,
+            threads: 1,
+            spans,
+            sketch_digests: digests,
+            git: "abc1234".into(),
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let e = entry();
+        let text = e.to_json().to_string_compact();
+        let back = LedgerEntry::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, e);
+    }
+
+    #[test]
+    fn append_then_read_skips_torn_and_foreign_lines() {
+        let dir = std::env::temp_dir().join("qccf_obs_ledger_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let e = entry();
+        append(&dir, &e).unwrap();
+        append(&dir, &e).unwrap();
+        // Simulate a torn tail and a foreign line.
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new()
+                .append(true)
+                .open(dir.join(LEDGER_FILE))
+                .unwrap();
+            writeln!(f, "{{\"schema\":999}}").unwrap();
+            write!(f, "{{\"schema\":1,\"kind\":\"tr").unwrap();
+        }
+        let entries = read(&dir);
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0], e);
+        // Missing dir reads empty.
+        assert!(read(&dir.join("nope")).is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn git_describe_never_panics() {
+        let s = git_describe();
+        assert!(!s.is_empty());
+    }
+}

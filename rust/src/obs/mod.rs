@@ -1,0 +1,86 @@
+//! Observability layer: stage-span profiler, deterministic streaming
+//! sketches, the run ledger, and the `report` aggregator.
+//!
+//! This module is the repo's **only** home for wall-clock side-channel
+//! telemetry outside `runtime/`, `bench.rs`, and the logger — detlint's
+//! R2 allowlist admits `obs/`, and the companion R7 rule enforces the
+//! reverse boundary: no `obs` wall-clock type may flow into `metrics`
+//! or `ckpt`, so nothing here can ever move a trace or snapshot bit
+//! (docs/OBSERVABILITY.md, docs/DETERMINISM.md).
+//!
+//! Three pieces:
+//!
+//! * [`spans`] — named monotonic stage spans (decide / execute /
+//!   aggregate / queue-update / checkpoint-write / sweep-unit) on the
+//!   `ExecClock` atomic-accumulation pattern; wall-clock only, never a
+//!   decision input.
+//! * [`sketch`] — fixed-bin log-histogram quantile sketches over
+//!   *simulated* quantities (energy, latency, q, wire bytes):
+//!   deterministic by construction (no sampling, no wall-clock), with
+//!   exact associative merge so sweep shards fold.
+//! * [`ledger`] + [`report`] — one schema-versioned JSONL line per
+//!   completed run/unit, and an aggregator that turns a sweep directory
+//!   into a health report without rereading per-round traces.
+
+pub mod ledger;
+pub mod report;
+pub mod sketch;
+pub mod spans;
+pub mod wall;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Tri-state enable flag: 0 = off, 1 = on, 2 = not yet resolved from
+/// the environment.
+static ENABLED: AtomicU8 = AtomicU8::new(2);
+
+/// Whether wall-clock observability (span profiling) is enabled.
+///
+/// Resolved once from `QCCF_OBS` (`0`/`false`/`off` disable; anything
+/// else — including unset — enables) and cached; [`set_enabled`]
+/// overrides the cache. Disabling must not change any deterministic
+/// output — the bit-identity pin in `tests/integration_obs.rs` holds
+/// traces and snapshot bytes fixed across both settings.
+pub fn enabled() -> bool {
+    match ENABLED.load(Ordering::Relaxed) {
+        0 => false,
+        1 => true,
+        _ => {
+            let on = !matches!(
+                std::env::var("QCCF_OBS").as_deref(),
+                Ok("0") | Ok("false") | Ok("off")
+            );
+            ENABLED.store(u8::from(on), Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Force the observability gate on or off (tests and tooling; env
+/// mutation mid-process would race the cached resolution).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(u8::from(on), Ordering::Relaxed);
+}
+
+/// Serializes tests that flip the global gate: the unit-test runner is
+/// multi-threaded, and a `set_enabled(false)` mid-flight would make a
+/// concurrent span test's guard silently inert.
+#[cfg(test)]
+pub(crate) fn test_gate() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_enabled_overrides_cache() {
+        let _gate = test_gate();
+        set_enabled(false);
+        assert!(!enabled());
+        set_enabled(true);
+        assert!(enabled());
+    }
+}

@@ -1,0 +1,230 @@
+//! Sweep health report: aggregate a sweep output directory —
+//! `summary.csv`, `ledger.jsonl`, and the per-unit sketch sidecars —
+//! into one deterministic text report, **without rereading any
+//! per-round JSONL trace**.
+//!
+//! The report is a pure function of the on-disk aggregates, so the
+//! golden-file test (`tests/golden_report.rs`) pins its exact bytes on
+//! a synthetic directory. Sections are fixed and greppable (`verify.sh`
+//! smokes on them): `-- outcomes --`, `-- stage times`, `-- energy
+//! quantiles`, `-- bench deltas --`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::experiments::sweep;
+use crate::obs::ledger::{self, LedgerEntry};
+use crate::obs::sketch::{self, TraceSketches};
+use crate::obs::spans::Span;
+use crate::util::stats;
+
+/// Pseudo-scenario key for the fold over every scenario; parenthesized
+/// so it can never collide with a real scenario name (those are
+/// restricted to `[A-Za-z0-9._-]`).
+const ALL: &str = "(all)";
+
+/// Render the health report for a sweep directory. `bench_baseline` /
+/// `bench_fresh` gate the advisory perf-delta section: with both set,
+/// every committed `BENCH_*.json` baseline is diffed against the fresh
+/// run of the same name (the `bench-diff` machinery at its default 20%
+/// threshold); otherwise the section says it was skipped.
+///
+/// Missing inputs degrade to explicit lines, not errors — an empty or
+/// partly-written directory still reports. Only a structurally foreign
+/// `summary.csv` errors (same contract as `sweep --resume`).
+pub fn render(
+    dir: &Path,
+    bench_baseline: Option<&Path>,
+    bench_fresh: Option<&Path>,
+) -> Result<String> {
+    let rows = sweep::read_summary(dir)?;
+    let entries = ledger::read(dir);
+    let mut out = String::new();
+    writeln!(out, "== qccf report ==")?;
+
+    // -- outcomes -- : unit counts and failure/retry/dropout rates,
+    // straight off the summary rows.
+    let ok = rows.iter().filter(|r| r.status == "ok").count();
+    let failed = rows.len() - ok;
+    let scheduled: usize = rows.iter().map(|r| r.scheduled).sum();
+    let dropouts: usize = rows.iter().map(|r| r.dropouts).sum();
+    let retries: usize = rows.iter().map(|r| r.retries).sum();
+    let rate = |num: usize, den: usize| if den == 0 { 0.0 } else { num as f64 / den as f64 };
+    writeln!(out)?;
+    writeln!(out, "-- outcomes --")?;
+    writeln!(out, "units: {ok} ok + {failed} failed = {}", rows.len())?;
+    writeln!(out, "failed rate: {:.4}", rate(failed, rows.len()))?;
+    writeln!(out, "retries: {retries} ({:.6} per scheduled upload)", rate(retries, scheduled))?;
+    writeln!(
+        out,
+        "dropouts: {dropouts} of {scheduled} scheduled ({:.6})",
+        rate(dropouts, scheduled)
+    )?;
+
+    // -- stage times -- : per-scenario per-stage wall-second quantiles
+    // across ledger entries (one entry ≈ one unit), plus the (all)
+    // fold. Side-channel numbers by construction — they came from span
+    // guards, never from the traces.
+    writeln!(out)?;
+    writeln!(out, "-- stage times (s, from {} ledger entries) --", entries.len())?;
+    if entries.is_empty() {
+        writeln!(out, "no ledger entries (run with QCCF_OBS enabled to populate)")?;
+    } else {
+        let mut groups: BTreeMap<&str, Vec<&LedgerEntry>> = BTreeMap::new();
+        for e in &entries {
+            groups.entry(e.scenario.as_str()).or_default().push(e);
+            groups.entry(ALL).or_default().push(e);
+        }
+        writeln!(
+            out,
+            "{:<20} {:<18} {:>7} {:>12} {:>12} {:>12} {:>12}",
+            "scenario", "stage", "calls", "total", "p50", "p95", "p99"
+        )?;
+        for (scenario, group) in &groups {
+            for stage in Span::ALL {
+                let calls: u64 = group.iter().map(|e| e.spans.calls_of(stage)).sum();
+                if calls == 0 {
+                    continue;
+                }
+                let secs: Vec<f64> = group.iter().map(|e| e.spans.secs_of(stage)).collect();
+                writeln!(
+                    out,
+                    "{:<20} {:<18} {:>7} {:>12.6} {:>12.6} {:>12.6} {:>12.6}",
+                    scenario,
+                    stage.name(),
+                    calls,
+                    secs.iter().sum::<f64>(),
+                    stats::percentile(&secs, 50.0),
+                    stats::percentile(&secs, 95.0),
+                    stats::percentile(&secs, 99.0),
+                )?;
+            }
+        }
+    }
+
+    // -- energy quantiles -- : merge the per-unit sketch sidecars per
+    // scenario (the merge is exactly associative, so this equals one
+    // sketch over every round of every unit) and read quantiles off
+    // the merged sketches. Deterministic: sketches hold simulated
+    // joules, not wall-clock.
+    writeln!(out)?;
+    writeln!(out, "-- energy quantiles (J, from sketch sidecars) --")?;
+    let mut merged: BTreeMap<String, (usize, TraceSketches)> = BTreeMap::new();
+    let mut missing = 0usize;
+    for r in rows.iter().filter(|r| r.status == "ok") {
+        match TraceSketches::load(&sketch::sidecar_path(&r.trace_path)) {
+            Ok(ts) => {
+                for key in [r.scenario.as_str(), ALL] {
+                    let slot = merged.entry(key.to_string()).or_default();
+                    slot.0 += 1;
+                    slot.1.merge(&ts);
+                }
+            }
+            Err(_) => missing += 1,
+        }
+    }
+    if merged.is_empty() {
+        writeln!(out, "no sketch sidecars found")?;
+    } else {
+        writeln!(
+            out,
+            "{:<20} {:>6} {:>7} {:>12} {:>12} {:>12} {:>12}",
+            "scenario", "units", "rounds", "p50", "p90", "p99", "max"
+        )?;
+        for (scenario, (units, ts)) in &merged {
+            writeln!(
+                out,
+                "{:<20} {:>6} {:>7} {:>12.6} {:>12.6} {:>12.6} {:>12.6}",
+                scenario,
+                units,
+                ts.energy.count(),
+                ts.energy.quantile(0.50),
+                ts.energy.quantile(0.90),
+                ts.energy.quantile(0.99),
+                ts.energy.max(),
+            )?;
+        }
+    }
+    if missing > 0 {
+        writeln!(out, "({missing} ok unit(s) had no readable sketch sidecar)")?;
+    }
+
+    // -- bench deltas -- : the advisory perf-regression diff, reusing
+    // the exact bench-diff comparison so the two tools can never
+    // disagree about what counts as a regression.
+    writeln!(out)?;
+    writeln!(out, "-- bench deltas --")?;
+    match (bench_baseline, bench_fresh) {
+        (Some(base_dir), Some(fresh_dir)) => {
+            for name in crate::bench::BENCH_FILES {
+                let bp = base_dir.join(name);
+                let fp = fresh_dir.join(name);
+                if !bp.is_file() || !fp.is_file() {
+                    writeln!(out, "{name}: skipped (missing baseline or fresh run)")?;
+                    continue;
+                }
+                let parse = |p: &Path| -> Result<crate::util::json::Json> {
+                    crate::util::json::parse(std::fs::read_to_string(p)?.trim())
+                        .map_err(|e| anyhow::anyhow!("{}: {e}", p.display()))
+                };
+                match (parse(&bp), parse(&fp)) {
+                    (Ok(base), Ok(fresh)) => {
+                        let warnings = crate::bench::bench_diff_report(&base, &fresh, 0.2);
+                        if warnings.is_empty() {
+                            writeln!(out, "{name}: ok (no metric regressed > 20%)")?;
+                        }
+                        for w in warnings {
+                            writeln!(out, "{name}: {w}")?;
+                        }
+                    }
+                    (Err(e), _) | (_, Err(e)) => {
+                        writeln!(out, "{name}: unreadable ({e:#})")?;
+                    }
+                }
+            }
+        }
+        _ => writeln!(out, "skipped (pass --bench-baseline and --bench-fresh to diff)")?,
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_dir_reports_every_section() {
+        let dir = std::env::temp_dir().join("qccf_obs_report_empty");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::remove_file(dir.join("summary.csv")).ok();
+        std::fs::remove_file(dir.join(ledger::LEDGER_FILE)).ok();
+        let text = render(&dir, None, None).unwrap();
+        for section in [
+            "== qccf report ==",
+            "-- outcomes --",
+            "units: 0 ok + 0 failed = 0",
+            "-- stage times",
+            "no ledger entries",
+            "-- energy quantiles",
+            "no sketch sidecars found",
+            "-- bench deltas --",
+            "skipped (pass --bench-baseline",
+        ] {
+            assert!(text.contains(section), "missing `{section}` in:\n{text}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn foreign_summary_is_a_descriptive_error() {
+        let dir = std::env::temp_dir().join("qccf_obs_report_foreign");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("summary.csv"), "a,b\n1,2\n").unwrap();
+        let err = render(&dir, None, None).unwrap_err().to_string();
+        assert!(err.contains("unrecognized header"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

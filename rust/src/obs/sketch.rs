@@ -1,0 +1,560 @@
+//! Deterministic streaming quantile sketches: a fixed-bin log-domain
+//! histogram over f64 magnitudes.
+//!
+//! Design constraints (docs/OBSERVABILITY.md):
+//!
+//! * **Deterministic by construction** — no sampling, no randomized
+//!   compaction, no wall-clock: a sketch is a pure function of the
+//!   multiset of pushed values, so sketches over simulated quantities
+//!   (energy, latency, q, wire bytes) may land in deterministic
+//!   outputs without touching the bit-identity contract.
+//! * **Exactly associative merge** — bins are plain `u64` counts and
+//!   min/max are exact selections, so `(a ⊕ b) ⊕ c == a ⊕ (b ⊕ c)`
+//!   bit-for-bit and sweep shards fold in any grouping (property-tested
+//!   below).
+//! * **Bounded error** — each binade (power-of-two octave) is split
+//!   into 4 linear sub-bins keyed off the top two mantissa bits, so a
+//!   quantile estimate is the selected sub-bin's upper edge: at most
+//!   25% above the true nearest-rank value, never below it.
+//!
+//! Layout: 121 octaves (binary exponents −60..=60, covering ~8.7e−19
+//! to ~2.3e18 — far beyond any simulated joule/second/byte value) × 4
+//! sub-bins = 484 counters, with out-of-range magnitudes clamped into
+//! the edge bins and zeros / negatives / non-finites tracked in
+//! dedicated counters.
+
+use std::path::Path;
+
+use crate::metrics::Trace;
+use crate::util::json::{self, Json};
+
+/// Linear sub-bins per octave (top two mantissa bits).
+const SUBS: usize = 4;
+/// Lowest binned biased exponent (2^−60).
+const EXP_LO: i64 = 963;
+/// Highest binned biased exponent (2^60).
+const EXP_HI: i64 = 1083;
+/// Number of octaves covered without clamping.
+const OCTAVES: usize = (EXP_HI - EXP_LO + 1) as usize;
+/// Total positive-magnitude bins.
+pub const BINS: usize = OCTAVES * SUBS;
+
+/// Schema version stamped into serialized sketches.
+pub const SKETCH_SCHEMA: u32 = 1;
+
+fn bin_index(x: f64) -> usize {
+    let bits = x.to_bits();
+    let e = ((bits >> 52) & 0x7ff) as i64;
+    if e < EXP_LO {
+        return 0;
+    }
+    if e > EXP_HI {
+        return BINS - 1;
+    }
+    let s = ((bits >> 50) & 0x3) as usize;
+    ((e - EXP_LO) as usize) * SUBS + s
+}
+
+/// Upper edge of bin `b`: `2^E · (5 + s)/4` for octave `E`, sub-bin
+/// `s` — built by bit manipulation so it is exact on every platform.
+fn bin_upper(b: usize) -> f64 {
+    let exp = EXP_LO + (b / SUBS) as i64;
+    let s = (b % SUBS) as i64;
+    let pow = f64::from_bits((exp as u64) << 52);
+    pow * ((5 + s) as f64 / 4.0)
+}
+
+/// A streaming log-histogram over f64 observations.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sketch {
+    bins: Vec<u64>,
+    negatives: u64,
+    zeros: u64,
+    non_finite: u64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Sketch {
+    fn default() -> Sketch {
+        Sketch::new()
+    }
+}
+
+impl Sketch {
+    /// An empty sketch.
+    pub fn new() -> Sketch {
+        Sketch {
+            bins: vec![0; BINS],
+            negatives: 0,
+            zeros: 0,
+            non_finite: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Fold one observation in. Non-finite values are counted but
+    /// excluded from quantiles and min/max.
+    pub fn push(&mut self, x: f64) {
+        if !x.is_finite() {
+            self.non_finite += 1;
+            return;
+        }
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+        if x == 0.0 {
+            self.zeros += 1;
+        } else if x < 0.0 {
+            self.negatives += 1;
+        } else {
+            self.bins[bin_index(x)] += 1;
+        }
+    }
+
+    /// Number of finite observations.
+    pub fn count(&self) -> u64 {
+        self.negatives + self.zeros + self.bins.iter().sum::<u64>()
+    }
+
+    /// Number of non-finite observations pushed.
+    pub fn non_finite(&self) -> u64 {
+        self.non_finite
+    }
+
+    /// Smallest finite observation (`+inf` when empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Largest finite observation (`−inf` when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Fold `other` in. Counts add and min/max select, so the merge is
+    /// exactly associative and commutative — shard grouping can never
+    /// change a merged sketch by a bit.
+    pub fn merge(&mut self, other: &Sketch) {
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+        self.negatives += other.negatives;
+        self.zeros += other.zeros;
+        self.non_finite += other.non_finite;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
+    /// Nearest-rank quantile estimate for `p ∈ [0, 1]`: the upper edge
+    /// of the sub-bin holding the rank-⌈p·n⌉ observation, clamped to
+    /// the observed maximum — so the estimate is **never below** the
+    /// true quantile and at most 25% above it (property-tested below).
+    /// Returns NaN when empty. Negatives (tracked only for robustness;
+    /// every sketched quantity is physically nonnegative) collapse to
+    /// the observed minimum.
+    pub fn quantile(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let rank = ((p.clamp(0.0, 1.0) * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = self.negatives;
+        if rank <= seen {
+            return self.min;
+        }
+        seen += self.zeros;
+        if rank <= seen {
+            return 0.0;
+        }
+        for (b, &c) in self.bins.iter().enumerate() {
+            seen += c;
+            if rank <= seen {
+                return bin_upper(b).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Serialize: sparse `[bin, count]` pairs plus exact min/max as
+    /// 16-hex-digit bit patterns (`min`/`max` number fields are
+    /// human-readable duplicates, present only when finite).
+    pub fn to_json(&self) -> Json {
+        let pairs: Vec<Json> = self
+            .bins
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Json::Arr(vec![Json::Num(i as f64), Json::Num(c as f64)]))
+            .collect();
+        let readable = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        json::obj(vec![
+            ("schema", json::num(SKETCH_SCHEMA as f64)),
+            ("count", json::num(self.count() as f64)),
+            ("negatives", json::num(self.negatives as f64)),
+            ("zeros", json::num(self.zeros as f64)),
+            ("non_finite", json::num(self.non_finite as f64)),
+            ("min_bits", json::s(&format!("{:016x}", self.min.to_bits()))),
+            ("max_bits", json::s(&format!("{:016x}", self.max.to_bits()))),
+            ("min", readable(self.min)),
+            ("max", readable(self.max)),
+            ("bins", Json::Arr(pairs)),
+        ])
+    }
+
+    /// Inverse of [`Sketch::to_json`].
+    pub fn from_json(v: &Json) -> Result<Sketch, String> {
+        let getn = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("sketch: missing numeric `{k}`"))
+        };
+        let getbits = |k: &str| -> Result<f64, String> {
+            let t = v
+                .get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("sketch: missing `{k}`"))?;
+            u64::from_str_radix(t, 16)
+                .map(f64::from_bits)
+                .map_err(|e| format!("sketch: bad `{k}`: {e}"))
+        };
+        let mut sk = Sketch::new();
+        sk.negatives = getn("negatives")? as u64;
+        sk.zeros = getn("zeros")? as u64;
+        sk.non_finite = getn("non_finite")? as u64;
+        sk.min = getbits("min_bits")?;
+        sk.max = getbits("max_bits")?;
+        let pairs = v.get("bins").and_then(Json::as_arr).ok_or("sketch: missing `bins`")?;
+        for pair in pairs {
+            let p = pair.as_arr().ok_or("sketch: bin entry is not a pair")?;
+            if p.len() != 2 {
+                return Err("sketch: bin entry is not a pair".into());
+            }
+            let i = p[0].as_f64().ok_or("sketch: bad bin index")? as usize;
+            if i >= BINS {
+                return Err(format!("sketch: bin index {i} out of range"));
+            }
+            sk.bins[i] = p[1].as_f64().ok_or("sketch: bad bin count")? as u64;
+        }
+        Ok(sk)
+    }
+
+    /// FNV-1a 64 over the canonical serialization: a short hex string
+    /// that is equal iff two sketches serialize identically (ledger
+    /// lines carry digests so `report` can spot shard divergence
+    /// without loading every sidecar).
+    pub fn digest(&self) -> String {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.to_json().to_string_compact().bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        format!("{h:016x}")
+    }
+}
+
+/// The sketch sidecar path of a unit's JSONL trace:
+/// `<stem>.sketch.json` next to `<stem>.jsonl` — shared by the sweep
+/// writer and the `report` reader so the two can never disagree.
+pub fn sidecar_path(trace_path: &Path) -> std::path::PathBuf {
+    trace_path.with_extension("sketch.json")
+}
+
+/// The four per-run distribution sketches, derived **purely from the
+/// trace** — a resumed run (whose trace is restored from the snapshot)
+/// reproduces them bit-for-bit, with no extra checkpoint state.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceSketches {
+    /// Per-round energy spend (J).
+    pub energy: Sketch,
+    /// Per-round max realized client latency (s).
+    pub latency: Sketch,
+    /// Per-client quantization level among quantizing uploads (q > 0).
+    pub q: Sketch,
+    /// Per-round realized wire bytes.
+    pub wire_bytes: Sketch,
+}
+
+/// Serialization keys of the four sketches, in report order.
+pub const TRACE_SKETCH_KINDS: [&str; 4] = ["energy_j", "max_latency_s", "q", "wire_bytes"];
+
+impl TraceSketches {
+    /// Build all four sketches from a trace. Per-*round* aggregates
+    /// (energy, latency, wire bytes) rather than per-client raw values
+    /// keep this a pure function of the checkpointed trace; q is the
+    /// exception — per-client levels are already in the trace.
+    pub fn from_trace(trace: &Trace) -> TraceSketches {
+        let mut ts = TraceSketches::default();
+        for r in &trace.records {
+            ts.energy.push(r.energy);
+            ts.latency.push(r.max_latency);
+            ts.wire_bytes.push(r.wire_bytes as f64);
+            for q in r.q_per_client.iter().flatten() {
+                if *q > 0 {
+                    ts.q.push(*q as f64);
+                }
+            }
+        }
+        ts
+    }
+
+    /// Fold `other` in, sketch by sketch (exactly associative).
+    pub fn merge(&mut self, other: &TraceSketches) {
+        self.energy.merge(&other.energy);
+        self.latency.merge(&other.latency);
+        self.q.merge(&other.q);
+        self.wire_bytes.merge(&other.wire_bytes);
+    }
+
+    /// Serialize all four sketches under their
+    /// [`TRACE_SKETCH_KINDS`] keys.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("schema", json::num(SKETCH_SCHEMA as f64)),
+            ("energy_j", self.energy.to_json()),
+            ("max_latency_s", self.latency.to_json()),
+            ("q", self.q.to_json()),
+            ("wire_bytes", self.wire_bytes.to_json()),
+        ])
+    }
+
+    /// Inverse of [`TraceSketches::to_json`].
+    pub fn from_json(v: &Json) -> Result<TraceSketches, String> {
+        let get = |k: &str| {
+            Sketch::from_json(v.get(k).ok_or_else(|| format!("sketches: missing `{k}`"))?)
+        };
+        Ok(TraceSketches {
+            energy: get("energy_j")?,
+            latency: get("max_latency_s")?,
+            q: get("q")?,
+            wire_bytes: get("wire_bytes")?,
+        })
+    }
+
+    /// `(kind, digest)` per sketch, in [`TRACE_SKETCH_KINDS`] order.
+    pub fn digests(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("energy_j", self.energy.digest()),
+            ("max_latency_s", self.latency.digest()),
+            ("q", self.q.digest()),
+            ("wire_bytes", self.wire_bytes.digest()),
+        ]
+    }
+
+    /// Write the sketch sidecar atomically (`fsio`).
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut text = self.to_json().to_string_compact();
+        text.push('\n');
+        crate::util::fsio::write_atomic(path, text.as_bytes())
+    }
+
+    /// Read a sketch sidecar written by [`TraceSketches::save`].
+    pub fn load(path: &Path) -> Result<TraceSketches, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        TraceSketches::from_json(&json::parse(text.trim())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RoundRecord;
+    use crate::util::prop::{check, iters};
+    use crate::util::rng::Rng;
+
+    fn sketch_of(xs: &[f64]) -> Sketch {
+        let mut sk = Sketch::new();
+        for &x in xs {
+            sk.push(x);
+        }
+        sk
+    }
+
+    fn gen_positives(rng: &mut Rng, n_max: usize) -> Vec<f64> {
+        let n = 1 + rng.below(n_max);
+        (0..n).map(|_| 10f64.powf(rng.range(-12.0, 12.0))).collect()
+    }
+
+    #[test]
+    fn prop_merge_is_associative_and_matches_concat() {
+        check(
+            "sketch-merge-assoc",
+            iters(200),
+            |rng| {
+                (
+                    gen_positives(rng, 40),
+                    gen_positives(rng, 40),
+                    gen_positives(rng, 40),
+                )
+            },
+            |(a, b, c)| {
+                let (sa, sb, sc) = (sketch_of(a), sketch_of(b), sketch_of(c));
+                // Left grouping.
+                let mut left = sa.clone();
+                left.merge(&sb);
+                left.merge(&sc);
+                // Right grouping.
+                let mut bc = sb.clone();
+                bc.merge(&sc);
+                let mut right = sa.clone();
+                right.merge(&bc);
+                if left != right {
+                    return Err("grouping changed the merged sketch".into());
+                }
+                let concat: Vec<f64> =
+                    a.iter().chain(b).chain(c).copied().collect();
+                if left != sketch_of(&concat) {
+                    return Err("merge differs from sketching the concatenation".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_quantile_within_one_subbin_above_truth() {
+        check(
+            "sketch-quantile-bounds",
+            iters(200),
+            |rng| (gen_positives(rng, 60), rng.uniform()),
+            |(xs, p)| {
+                let sk = sketch_of(xs);
+                let mut v = xs.clone();
+                v.sort_by(|a, b| a.total_cmp(b));
+                let n = v.len();
+                let rank = ((p * n as f64).ceil() as usize).clamp(1, n);
+                let truth = v[rank - 1];
+                let est = sk.quantile(*p);
+                if est < truth {
+                    return Err(format!("estimate {est} below true quantile {truth}"));
+                }
+                if est > truth * 1.25 * (1.0 + 1e-9) {
+                    return Err(format!(
+                        "estimate {est} more than 25% above true quantile {truth}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_json_round_trips_exactly() {
+        check(
+            "sketch-json-roundtrip",
+            iters(100),
+            |rng| gen_positives(rng, 50),
+            |xs| {
+                let sk = sketch_of(xs);
+                let text = sk.to_json().to_string_compact();
+                let back = Sketch::from_json(&crate::util::json::parse(&text)?)
+                    .map_err(|e| format!("reparse: {e}"))?;
+                if back != sk {
+                    return Err("sketch changed across JSON round trip".into());
+                }
+                if back.digest() != sk.digest() {
+                    return Err("digest changed across JSON round trip".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn empty_zero_negative_and_nonfinite_handling() {
+        let empty = Sketch::new();
+        assert_eq!(empty.count(), 0);
+        assert!(empty.quantile(0.5).is_nan());
+
+        let mut sk = Sketch::new();
+        sk.push(0.0);
+        sk.push(0.0);
+        sk.push(-3.0);
+        sk.push(f64::NAN);
+        sk.push(f64::INFINITY);
+        sk.push(8.0);
+        assert_eq!(sk.count(), 4);
+        assert_eq!(sk.non_finite(), 2);
+        assert_eq!(sk.min(), -3.0);
+        assert_eq!(sk.max(), 8.0);
+        // rank 1 → negatives; rank 2..=3 → zeros; rank 4 → the 8.0 bin.
+        assert_eq!(sk.quantile(0.25), -3.0);
+        assert_eq!(sk.quantile(0.5), 0.0);
+        let top = sk.quantile(1.0);
+        assert!((8.0..=10.0).contains(&top), "top={top}");
+    }
+
+    #[test]
+    fn exact_powers_land_in_expected_bins() {
+        // 1.0 has biased exponent 1023, top mantissa bits 00.
+        assert_eq!(bin_index(1.0), (1023 - EXP_LO) as usize * SUBS);
+        // Upper edge of 1.0's bin is 1.25 exactly.
+        assert_eq!(bin_upper(bin_index(1.0)), 1.25);
+        // Clamping: far-out magnitudes hit the edge bins.
+        assert_eq!(bin_index(1e-300), 0);
+        assert_eq!(bin_index(1e300), BINS - 1);
+    }
+
+    #[test]
+    fn from_trace_draws_the_documented_fields() {
+        let mut t = Trace::new("qccf");
+        t.push(RoundRecord {
+            round: 1,
+            energy: 2.0,
+            max_latency: 0.5,
+            wire_bytes: 1000,
+            q_per_client: vec![Some(4), Some(0), None, Some(6)],
+            ..Default::default()
+        });
+        t.push(RoundRecord {
+            round: 2,
+            energy: 3.0,
+            max_latency: 0.25,
+            wire_bytes: 900,
+            q_per_client: vec![None, Some(2), None, None],
+            ..Default::default()
+        });
+        let ts = TraceSketches::from_trace(&t);
+        assert_eq!(ts.energy.count(), 2);
+        assert_eq!(ts.latency.count(), 2);
+        assert_eq!(ts.wire_bytes.count(), 2);
+        // q: Some(0) is a raw upload, None unscheduled — 3 quantized.
+        assert_eq!(ts.q.count(), 3);
+        // Round trip through the sidecar format.
+        let back = TraceSketches::from_json(&ts.to_json()).unwrap();
+        assert_eq!(back, ts);
+        assert_eq!(back.digests(), ts.digests());
+    }
+
+    #[test]
+    fn sidecar_save_load_round_trips() {
+        let mut t = Trace::new("qccf");
+        t.push(RoundRecord {
+            round: 1,
+            energy: 1.5,
+            max_latency: 0.1,
+            wire_bytes: 640,
+            q_per_client: vec![Some(4)],
+            ..Default::default()
+        });
+        let ts = TraceSketches::from_trace(&t);
+        assert_eq!(
+            sidecar_path(Path::new("out/s__qccf__seed1.jsonl")),
+            Path::new("out/s__qccf__seed1.sketch.json")
+        );
+        let dir = std::env::temp_dir().join("qccf_obs_sketch_sidecar");
+        let path = dir.join("unit.sketch.json");
+        ts.save(&path).unwrap();
+        let back = TraceSketches::load(&path).unwrap();
+        assert_eq!(back, ts);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

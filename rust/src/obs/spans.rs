@@ -1,0 +1,274 @@
+//! Stage-scoped span profiler on the `ExecClock` pattern
+//! (`runtime::ExecClock`): one pair of lock-free cumulative counters
+//! (nanoseconds, calls) per named pipeline stage, plus a thread-local
+//! shadow so a sweep worker can read out exactly its own unit's spans.
+//!
+//! Spans are **side-channel wall-clock only**: a [`SpanGuard`] never
+//! feeds a decision, and everything it accumulates stays out of
+//! deterministic outputs (JSONL traces, snapshots) — the CSV's
+//! `decide_s`/`compute_s` columns are read *from* the profiler and the
+//! CSV is explicitly excluded from the bit-identity contract
+//! (docs/DETERMINISM.md). Guards nest freely; each records its own
+//! stage independently, so e.g. `SweepUnit` encloses every per-round
+//! span of its unit.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Number of named stages ([`Span::ALL`]).
+pub const N_SPANS: usize = 6;
+
+/// A named pipeline stage, in pipeline order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Span {
+    /// Scheduler decision stage (`fl::Server::stage_decide`).
+    Decide = 0,
+    /// Client fan-out incl. the streaming aggregation fold
+    /// (`fl::exec::execute_round_with`).
+    Execute = 1,
+    /// Global-model writeback (`fl::Server::run_round`).
+    Aggregate = 2,
+    /// Lyapunov virtual-queue update (`fl::Server::run_round`).
+    QueueUpdate = 3,
+    /// Snapshot encode + atomic write (`experiments::common`, at the
+    /// `ckpt` call site — the `ckpt` module itself is obs-free per R7).
+    CheckpointWrite = 4,
+    /// One whole sweep unit: run + trace/sketch/ledger writes
+    /// (`experiments::sweep`).
+    SweepUnit = 5,
+}
+
+impl Span {
+    /// Every stage, in report order.
+    pub const ALL: [Span; N_SPANS] = [
+        Span::Decide,
+        Span::Execute,
+        Span::Aggregate,
+        Span::QueueUpdate,
+        Span::CheckpointWrite,
+        Span::SweepUnit,
+    ];
+
+    /// The stable name used in ledger lines and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Span::Decide => "decide",
+            Span::Execute => "execute",
+            Span::Aggregate => "aggregate",
+            Span::QueueUpdate => "queue-update",
+            Span::CheckpointWrite => "checkpoint-write",
+            Span::SweepUnit => "sweep-unit",
+        }
+    }
+
+    /// Index into [`SpanTotals`] arrays.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Inverse of [`Span::name`] (ledger parsing).
+    pub fn from_name(name: &str) -> Option<Span> {
+        Span::ALL.into_iter().find(|s| s.name() == name)
+    }
+}
+
+// `[AtomicU64::new(0); N]` needs a const item (AtomicU64 is not Copy).
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+/// Process-wide cumulative nanoseconds per stage.
+static NANOS: [AtomicU64; N_SPANS] = [ZERO; N_SPANS];
+/// Process-wide cumulative guard count per stage.
+static CALLS: [AtomicU64; N_SPANS] = [ZERO; N_SPANS];
+
+thread_local! {
+    /// Per-thread shadow of (nanos, calls): a sweep worker runs its
+    /// unit single-threaded on one pool thread, so [`local_take`]
+    /// reads out exactly that unit's spans without cross-unit bleed.
+    static LOCAL: RefCell<([u64; N_SPANS], [u64; N_SPANS])> =
+        const { RefCell::new(([0; N_SPANS], [0; N_SPANS])) };
+}
+
+fn record(span: Span, nanos: u64) {
+    let i = span.index();
+    // Relaxed suffices, exactly as in `ExecClock`: independent counters
+    // read only as point-in-time snapshots, never for synchronization.
+    NANOS[i].fetch_add(nanos, Ordering::Relaxed);
+    CALLS[i].fetch_add(1, Ordering::Relaxed);
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        l.0[i] += nanos;
+        l.1[i] += 1;
+    });
+}
+
+/// Point-in-time span accumulation: seconds and guard counts per stage,
+/// indexed by [`Span::index`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SpanTotals {
+    /// Cumulative wall seconds per stage.
+    pub secs: [f64; N_SPANS],
+    /// Number of completed guards per stage.
+    pub calls: [u64; N_SPANS],
+}
+
+impl SpanTotals {
+    /// Seconds accumulated for one stage.
+    pub fn secs_of(&self, span: Span) -> f64 {
+        self.secs[span.index()]
+    }
+
+    /// Completed guard count for one stage.
+    pub fn calls_of(&self, span: Span) -> u64 {
+        self.calls[span.index()]
+    }
+}
+
+/// Process-wide totals since start (or the last [`reset`]).
+pub fn totals() -> SpanTotals {
+    let mut t = SpanTotals::default();
+    for i in 0..N_SPANS {
+        t.secs[i] = NANOS[i].load(Ordering::Relaxed) as f64 * 1e-9;
+        t.calls[i] = CALLS[i].load(Ordering::Relaxed);
+    }
+    t
+}
+
+/// Drain the calling thread's span shadow: returns what this thread
+/// accumulated since its last `local_take` and zeroes the shadow. The
+/// sweep worker calls this once per unit (units run with engine
+/// `threads = 1`, so the whole unit's spans land on one pool thread).
+pub fn local_take() -> SpanTotals {
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        let mut t = SpanTotals::default();
+        for i in 0..N_SPANS {
+            t.secs[i] = l.0[i] as f64 * 1e-9;
+            t.calls[i] = l.1[i];
+        }
+        *l = ([0; N_SPANS], [0; N_SPANS]);
+        t
+    })
+}
+
+/// Zero the process-wide counters and the calling thread's shadow
+/// (other threads' shadows are untouched — tests and tooling only).
+pub fn reset() {
+    for i in 0..N_SPANS {
+        NANOS[i].store(0, Ordering::Relaxed);
+        CALLS[i].store(0, Ordering::Relaxed);
+    }
+    LOCAL.with(|l| *l.borrow_mut() = ([0; N_SPANS], [0; N_SPANS]));
+}
+
+/// An open span: created by [`SpanGuard::enter`], recorded on
+/// [`SpanGuard::finish_secs`] or drop. When the [`crate::obs`] gate is
+/// off the guard holds no clock at all — zero reads, zero writes.
+#[derive(Debug)]
+pub struct SpanGuard {
+    span: Span,
+    start: Option<Instant>,
+}
+
+impl SpanGuard {
+    /// Open a span for `span`; reads the monotonic clock only when the
+    /// observability gate is on.
+    pub fn enter(span: Span) -> SpanGuard {
+        let start = crate::obs::enabled().then(Instant::now);
+        SpanGuard { span, start }
+    }
+
+    /// Close the span, record it, and return its elapsed wall seconds
+    /// (0.0 when the gate was off at `enter` time). The return value is
+    /// **side-channel only** — it may reach the CSV's wall columns, but
+    /// never a decision or a deterministic output (detlint R7).
+    pub fn finish_secs(mut self) -> f64 {
+        self.close().unwrap_or(0.0)
+    }
+
+    fn close(&mut self) -> Option<f64> {
+        let start = self.start.take()?;
+        let nanos = start.elapsed().as_nanos() as u64;
+        record(self.span, nanos);
+        Some(nanos as f64 * 1e-9)
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip_and_indices_cover() {
+        for (i, s) in Span::ALL.into_iter().enumerate() {
+            assert_eq!(s.index(), i);
+            assert_eq!(Span::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Span::from_name("nope"), None);
+    }
+
+    #[test]
+    fn guard_records_calls_and_nonnegative_secs() {
+        let _gate = crate::obs::test_gate();
+        crate::obs::set_enabled(true);
+        let _ = local_take();
+        let before = totals();
+        let g = SpanGuard::enter(Span::Decide);
+        let secs = g.finish_secs();
+        assert!(secs >= 0.0);
+        // Global counters are process-wide (other tests may also record),
+        // so assert monotonicity there and exactness on the thread shadow.
+        let after = totals();
+        assert!(after.calls_of(Span::Decide) > before.calls_of(Span::Decide));
+        assert!(after.secs_of(Span::Decide) >= before.secs_of(Span::Decide));
+        let local = local_take();
+        assert_eq!(local.calls_of(Span::Decide), 1);
+        assert!(local.secs_of(Span::Decide) >= 0.0);
+        // Drained: a second take sees nothing.
+        assert_eq!(local_take(), SpanTotals::default());
+    }
+
+    #[test]
+    fn disabled_guard_is_inert() {
+        let _gate = crate::obs::test_gate();
+        crate::obs::set_enabled(false);
+        let _ = local_take();
+        let g = SpanGuard::enter(Span::Aggregate);
+        assert_eq!(g.finish_secs(), 0.0);
+        assert_eq!(local_take().calls_of(Span::Aggregate), 0);
+        crate::obs::set_enabled(true);
+    }
+
+    #[test]
+    fn drop_records_once_even_after_finish() {
+        let _gate = crate::obs::test_gate();
+        crate::obs::set_enabled(true);
+        let _ = local_take();
+        {
+            let _g = SpanGuard::enter(Span::QueueUpdate); // drop path
+        }
+        let g = SpanGuard::enter(Span::QueueUpdate);
+        let _ = g.finish_secs(); // finish path — drop must not double-count
+        assert_eq!(local_take().calls_of(Span::QueueUpdate), 2);
+    }
+
+    #[test]
+    fn nested_guards_each_record_their_stage() {
+        let _gate = crate::obs::test_gate();
+        crate::obs::set_enabled(true);
+        let _ = local_take();
+        let outer = SpanGuard::enter(Span::SweepUnit);
+        let inner = SpanGuard::enter(Span::Decide);
+        let _ = inner.finish_secs();
+        let _ = outer.finish_secs();
+        let t = local_take();
+        assert_eq!(t.calls_of(Span::SweepUnit), 1);
+        assert_eq!(t.calls_of(Span::Decide), 1);
+    }
+}

@@ -1,0 +1,41 @@
+//! Monotonic wall-clock helpers for side-channel telemetry (progress
+//! heartbeats, ledger durations). Lives inside `obs` so the rest of the
+//! crate never touches `std::time` directly — detlint R2 keeps
+//! wall-clock confined here, and R7 keeps these types out of `metrics`
+//! and `ckpt`, so no reading can ever reach a deterministic output.
+
+use std::time::Instant;
+
+/// A started monotonic stopwatch.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Seconds elapsed since [`Stopwatch::start`]. Side-channel only:
+    /// log lines, ledger `wall_secs`, ETA estimates — never a decision
+    /// input or a deterministic-output field.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_is_monotonic_nonnegative() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_secs();
+        let b = sw.elapsed_secs();
+        assert!(a >= 0.0);
+        assert!(b >= a);
+    }
+}

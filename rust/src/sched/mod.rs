@@ -16,6 +16,10 @@
 //! scale: the GA searches over client *equivalence classes* and channel
 //! pools, and the winning expansion is re-scored through the exact
 //! reference before anything reaches the trace.
+//!
+//! Decision-stage wall time is *not* measured here: the server brackets
+//! the whole stage with a `Decide` span ([`crate::obs::spans`]), so the
+//! scheduler math stays free of wall-clock reads (detlint rule R2).
 
 // Decision-stage code runs under worker pools where an anonymous
 // `unwrap()` panic is hard to attribute; scope clippy's unwrap ban to

@@ -26,9 +26,11 @@ impl CsvWriter {
             std::fs::create_dir_all(dir)?;
         }
         let mut w = CsvWriter {
-            // detlint: allow(R5) — streaming per-round trace appended as
-            // rounds finish; a torn tail row is acceptable and resume-
-            // critical artifacts all go through fsio::replace_atomic.
+            // detlint: allow(R5) — raw sink whose durability policy is
+            // the caller's: Trace::write_csv and sweep's summary.csv
+            // wrap it in fsio::replace_atomic (tmp path in, rename
+            // after); the remaining direct uses are streaming side
+            // channels where a torn tail row is acceptable.
             out: BufWriter::new(File::create(path)?),
             ncol: headers.len(),
         };

@@ -58,6 +58,30 @@ pub fn write_atomic(path: &Path, bytes: &[u8]) -> io::Result<()> {
     replace_atomic(path, |tmp| fs::write(tmp, bytes))
 }
 
+/// Append one line (plus `'\n'`) to `path`, creating the file and its
+/// parent directories as needed, and fsync the result.
+///
+/// This is the **journal** primitive (the obs run ledger): unlike
+/// [`replace_atomic`], an append is not all-or-nothing — a crash can
+/// leave a torn final line — so it is only suitable for line-oriented
+/// files whose readers skip unparseable lines. The single `write(2)` of
+/// one buffered line keeps concurrent appenders from interleaving
+/// *within* a line on POSIX (`O_APPEND`).
+pub fn append_line(path: &Path, line: &str) -> io::Result<()> {
+    use std::io::Write as _;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            fs::create_dir_all(dir)?;
+        }
+    }
+    let mut f = fs::OpenOptions::new().create(true).append(true).open(path)?;
+    let mut buf = Vec::with_capacity(line.len() + 1);
+    buf.extend_from_slice(line.as_bytes());
+    buf.push(b'\n');
+    f.write_all(&buf)?;
+    f.sync_all()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -75,6 +99,18 @@ mod tests {
             .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
             .collect();
         assert_eq!(names, vec!["out.bin".to_string()]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn append_line_creates_and_appends() {
+        let dir = std::env::temp_dir().join("qccf_fsio_test_append");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("nested").join("ledger.jsonl");
+        append_line(&path, "{\"a\":1}").unwrap();
+        append_line(&path, "{\"b\":2}").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "{\"a\":1}\n{\"b\":2}\n");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -28,17 +28,34 @@ fn start() -> Instant {
     *START.get_or_init(Instant::now)
 }
 
-/// Initialize level from the environment; idempotent.
+/// Initialize level from the environment; idempotent. An unrecognized
+/// `QCCF_LOG` value falls back to `info` *loudly* — a typo like
+/// `QCCF_LOG=dbug` used to be silently accepted, hiding exactly the
+/// diagnostics the variable was set to reveal.
 pub fn init() {
     start();
     if let Ok(v) = std::env::var("QCCF_LOG") {
-        set_level(match v.to_ascii_lowercase().as_str() {
-            "error" => Level::Error,
-            "warn" => Level::Warn,
-            "debug" => Level::Debug,
-            "trace" => Level::Trace,
-            _ => Level::Info,
-        });
+        let parsed = match v.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        };
+        set_level(parsed.unwrap_or(Level::Info));
+        if parsed.is_none() {
+            // After set_level so the warning itself prints at the
+            // fallback level.
+            log(
+                Level::Warn,
+                "logging",
+                format_args!(
+                    "QCCF_LOG=`{v}` is not a level; using `info` \
+                     (accepted: error|warn|info|debug|trace)"
+                ),
+            );
+        }
     }
 }
 

@@ -1,0 +1,105 @@
+//! Golden-file pin for the `report` aggregator: a hand-built sweep
+//! directory (summary.csv + ledger.jsonl + sketch sidecars, fixed
+//! numbers throughout) must render to exactly the committed
+//! `tests/golden/report_tiny.txt` — byte for byte. The report is a
+//! pure function of its on-disk inputs, so any formatting or
+//! aggregation change shows up as a readable diff here instead of as
+//! silent drift in `verify.sh` logs.
+
+use std::collections::BTreeMap;
+
+use qccf::metrics::{RoundRecord, Trace};
+use qccf::obs::ledger::{self, LedgerEntry};
+use qccf::obs::report;
+use qccf::obs::sketch::{self, TraceSketches};
+use qccf::obs::spans::{Span, SpanTotals};
+
+/// A trace whose only meaningful payload is the per-round energy
+/// sequence (the golden directory's sketch sidecars are derived from
+/// these).
+fn trace_with_energies(energies: &[f64]) -> Trace {
+    let mut t = Trace::new("qccf");
+    for (i, &e) in energies.iter().enumerate() {
+        t.push(RoundRecord {
+            round: i + 1,
+            energy: e,
+            max_latency: 0.5,
+            wire_bytes: 1000,
+            q_per_client: vec![Some(4)],
+            ..Default::default()
+        });
+    }
+    t
+}
+
+/// A ledger entry with fixed, exactly-representable span seconds so the
+/// JSON round trip and the rendered quantiles are bit-stable.
+fn unit_entry(seed: u64, decide: f64, execute: f64, unit: f64) -> LedgerEntry {
+    let mut spans = SpanTotals::default();
+    spans.secs[Span::Decide.index()] = decide;
+    spans.calls[Span::Decide.index()] = 2;
+    spans.secs[Span::Execute.index()] = execute;
+    spans.calls[Span::Execute.index()] = 2;
+    spans.secs[Span::SweepUnit.index()] = unit;
+    spans.calls[Span::SweepUnit.index()] = 1;
+    LedgerEntry {
+        kind: "sweep-unit".into(),
+        scenario: "alpha".into(),
+        algorithm: "qccf".into(),
+        seed,
+        rounds: 2,
+        status: "ok".into(),
+        wall_secs: unit,
+        threads: 1,
+        spans,
+        sketch_digests: BTreeMap::new(),
+        git: "fixed".into(),
+    }
+}
+
+#[test]
+fn report_renders_exactly_the_golden_bytes() {
+    let dir = std::env::temp_dir().join("qccf_golden_report");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // summary.csv exactly as `sweep` would write it: two ok units of
+    // scenario `alpha`, one failed unit of `beta` (NaN metric cells,
+    // like a failed row's).
+    let summary = "\
+scenario,algorithm,seed,rounds,final_acc,best_acc,cum_energy_j,wire_bytes,dropouts,scheduled,aggregated,departed,retries,energy_p50_j,energy_p95_j,status,trace_file\n\
+alpha,qccf,1,2,0.500000,0.600000,3.000000000,1000,1,10,9,0,2,1.250000000,2.500000000,ok,alpha__qccf__seed1.jsonl\n\
+alpha,qccf,2,2,0.550000,0.650000,12.000000000,2000,0,10,10,0,1,5.000000000,10.000000000,ok,alpha__qccf__seed2.jsonl\n\
+beta,qccf,1,0,NaN,NaN,0.000000000,0,0,0,0,0,0,NaN,NaN,failed,beta__qccf__seed1.jsonl\n";
+    std::fs::write(dir.join("summary.csv"), summary).unwrap();
+
+    // Ledger: one line per ok unit, spans chosen so totals and
+    // percentiles are exact dyadic values.
+    ledger::append(&dir, &unit_entry(1, 0.5, 1.0, 2.0)).unwrap();
+    ledger::append(&dir, &unit_entry(2, 0.75, 1.25, 2.5)).unwrap();
+
+    // Sketch sidecars next to where the traces would be: energies
+    // {1,2} and {4,8} J, merged by the report into {1,2,4,8}.
+    TraceSketches::from_trace(&trace_with_energies(&[1.0, 2.0]))
+        .save(&sketch::sidecar_path(&dir.join("alpha__qccf__seed1.jsonl")))
+        .unwrap();
+    TraceSketches::from_trace(&trace_with_energies(&[4.0, 8.0]))
+        .save(&sketch::sidecar_path(&dir.join("alpha__qccf__seed2.jsonl")))
+        .unwrap();
+
+    let got = report::render(&dir, None, None).unwrap();
+    let want = include_str!("golden/report_tiny.txt");
+    if got != want {
+        // Line-by-line diff for a readable failure.
+        for (i, (g, w)) in got.lines().zip(want.lines()).enumerate() {
+            assert_eq!(g, w, "report line {} diverges from the golden file", i + 1);
+        }
+        assert_eq!(
+            got.lines().count(),
+            want.lines().count(),
+            "report line count diverges from the golden file"
+        );
+        panic!("report differs from golden only in trailing whitespace/newlines");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,132 @@
+//! Observability bit-identity pin: profiling must be a pure
+//! side-channel. A run with the obs gate ON produces byte-identical
+//! deterministic outputs — per-unit JSONL traces, sketch sidecars,
+//! summary.csv, checkpoint snapshots — to the same run with the gate
+//! OFF (`QCCF_OBS=0`), at engine/sweep thread counts 1 and 8. Only
+//! `ledger.jsonl` (the completion-ordered wall-clock journal) may
+//! differ; it is explicitly excluded from the `--out` contract
+//! (docs/OBSERVABILITY.md).
+//!
+//! One `#[test]` on purpose: the obs gate is process-global state, so
+//! the on/off phases must not interleave with a concurrent test.
+//!
+//! No-ops (with a note) when `make artifacts` hasn't run.
+
+use std::path::{Path, PathBuf};
+
+use qccf::ckpt;
+use qccf::experiments::common::{run_scenario_ckpt, CheckpointPolicy};
+use qccf::experiments::sweep;
+use qccf::runtime::{artifacts_dir, Runtime};
+use qccf::scenario::registry;
+
+fn runtime() -> Option<Runtime> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(&artifacts_dir(), "tiny").expect("load tiny runtime"))
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// paper-femnist shrunk to test scale, like the ckpt battery uses.
+fn small_scenario(rounds: usize) -> qccf::scenario::Scenario {
+    let mut sc = registry::paper_femnist();
+    sc.data.size_mean = 300.0;
+    sc.data.size_std = 60.0;
+    sc.data.test_size = 128;
+    sc.train.rounds = rounds;
+    sc
+}
+
+/// Byte equality of one file across the two output directories.
+fn assert_same_bytes(on: &Path, off: &Path, tag: &str) {
+    let a = std::fs::read(on).unwrap_or_else(|e| panic!("{tag}: read {}: {e}", on.display()));
+    let b = std::fs::read(off).unwrap_or_else(|e| panic!("{tag}: read {}: {e}", off.display()));
+    assert_eq!(a, b, "{tag}: bytes differ between QCCF_OBS on and off");
+}
+
+#[test]
+fn profiled_outputs_are_bit_identical_to_unprofiled() {
+    let Some(rt) = runtime() else { return };
+
+    // Phase 1 — sweep path: JSONL trace, sketch sidecar, and
+    // summary.csv bytes must not depend on the obs gate, at sweep
+    // thread counts 1 and 8.
+    for threads in [1usize, 8] {
+        let mut dirs = Vec::new();
+        for enabled in [true, false] {
+            let out = fresh_dir(&format!("qccf_obs_ident_sweep_{threads}_{enabled}"));
+            qccf::obs::set_enabled(enabled);
+            let cfg = sweep::SweepConfig {
+                scenarios: vec![small_scenario(2)],
+                seeds: vec![1],
+                algorithms: Some(vec!["qccf".into()]),
+                rounds: Some(2),
+                out_dir: out.clone(),
+                threads,
+                resume: false,
+                checkpoint_every: 0,
+            };
+            let rows = sweep::run(&rt, &cfg).unwrap();
+            assert_eq!(rows.len(), 1);
+            assert_eq!(rows[0].status, "ok");
+            dirs.push(out);
+        }
+        qccf::obs::set_enabled(true);
+        let stem = sweep::unit_stem("paper-femnist", "qccf", 1);
+        for name in [format!("{stem}.jsonl"), format!("{stem}.sketch.json"), "summary.csv".into()]
+        {
+            assert_same_bytes(
+                &dirs[0].join(&name),
+                &dirs[1].join(&name),
+                &format!("sweep threads={threads} {name}"),
+            );
+        }
+        // The ledger is the sanctioned exception: it must exist in the
+        // profiled run (it records spans) and in the unprofiled run
+        // (appends are not gated — only span measurement is).
+        assert!(dirs[0].join("ledger.jsonl").exists());
+        assert!(dirs[1].join("ledger.jsonl").exists());
+        for d in dirs {
+            std::fs::remove_dir_all(&d).ok();
+        }
+    }
+
+    // Phase 2 — checkpoint path: snapshot bytes (which embed the trace
+    // with its wall columns zeroed at capture) must not depend on the
+    // obs gate, at engine thread counts 1 and 8.
+    let sc = small_scenario(4);
+    for threads in [1usize, 8] {
+        let mut snaps = Vec::new();
+        for enabled in [true, false] {
+            let ckpt_dir = fresh_dir(&format!("qccf_obs_ident_ckpt_{threads}_{enabled}"));
+            qccf::obs::set_enabled(enabled);
+            let policy = CheckpointPolicy {
+                every: 4,
+                dir: Some(ckpt_dir.clone()),
+                resume: None,
+                ..Default::default()
+            };
+            let trace = run_scenario_ckpt(&rt, &sc, "qccf", 3, threads, &policy).unwrap();
+            assert_eq!(trace.records.len(), 4);
+            snaps.push(ckpt_dir);
+        }
+        qccf::obs::set_enabled(true);
+        let name = ckpt::snapshot_file_name(&sc.name, "qccf", 3);
+        assert_same_bytes(
+            &snaps[0].join(&name),
+            &snaps[1].join(&name),
+            &format!("snapshot threads={threads}"),
+        );
+        for d in snaps {
+            std::fs::remove_dir_all(&d).ok();
+        }
+    }
+}

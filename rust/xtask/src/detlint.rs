@@ -13,8 +13,9 @@
 //!   nondeterministic, so folds/loops must go through `BTreeMap` or a
 //!   sorted view.
 //! * **R2** — no `Instant::now` / `SystemTime` outside `runtime/`,
-//!   `bench.rs` and `util/logging.rs`: wall-clock flows through
-//!   `Runtime` so it can be snapshotted and never feeds a decision.
+//!   `bench.rs`, `util/logging.rs` and `obs/`: wall-clock flows through
+//!   `Runtime` (or the `obs` telemetry layer) so it can be snapshotted
+//!   and never feeds a decision.
 //! * **R3** — float comparisons via `total_cmp` only: a
 //!   `partial_cmp(..).unwrap()` sort is a NaN panic waiting in a hot
 //!   path, and `unwrap_or(Equal)` fallbacks silently destabilize order.
@@ -26,6 +27,11 @@
 //!   recognized): a torn file on preemption must never be observable.
 //! * **R6** — every `unsafe` block/impl carries a `// SAFETY:` comment
 //!   immediately above (consecutive `unsafe impl`s may share one).
+//! * **R7** — no `obs` wall-clock type (`SpanGuard`, `Stopwatch`,
+//!   `LedgerEntry`, or any `obs::spans`/`obs::wall`/`obs::ledger`
+//!   path) inside `metrics/` or `ckpt/`: those modules produce the
+//!   bit-identical outputs, so wall-clock telemetry must stay at the
+//!   call sites that bracket them (docs/OBSERVABILITY.md).
 //!
 //! Legitimate exceptions are *auditable, not invisible*: a
 //! `// detlint: allow(Rk) — reason` comment on the offending line (or
@@ -44,7 +50,7 @@ use std::io;
 use std::path::{Path, PathBuf};
 
 /// The rule identifiers accepted by `allow(..)` escapes, in report order.
-pub const RULE_IDS: [&str; 6] = ["R1", "R2", "R3", "R4", "R5", "R6"];
+pub const RULE_IDS: [&str; 7] = ["R1", "R2", "R3", "R4", "R5", "R6", "R7"];
 
 /// Files (relative to the lint root) where hash-container use is legal:
 /// the bit-keyed memo subsystems, which never iterate for results.
@@ -86,7 +92,7 @@ pub struct Violation {
     pub file: String,
     /// 1-based line number.
     pub line: usize,
-    /// `R1`..`R6`, or `escape` for a malformed allow escape.
+    /// `R1`..`R7`, or `escape` for a malformed allow escape.
     pub rule: String,
     /// Human-readable description with the suggested fix.
     pub msg: String,
@@ -394,7 +400,7 @@ fn parse_escape_comment(comment: &str) -> EscapeScan {
                 let reason = t[close + 1..].trim_start_matches(is_reason_separator).trim();
                 if !RULE_IDS.contains(&rule.as_str()) {
                     out.malformed.push(format!(
-                        "unknown rule `{rule}` in detlint allow escape (expected one of R1..R6)"
+                        "unknown rule `{rule}` in detlint allow escape (expected one of R1..R7)"
                     ));
                 } else if reason.is_empty() {
                     out.malformed.push(format!(
@@ -657,14 +663,18 @@ fn r1_hash_iteration(rel: &str, lines: &[MaskedLine], out: &mut Vec<Candidate>) 
 }
 
 fn r2_wall_clock(rel: &str, lines: &[MaskedLine], out: &mut Vec<Candidate>) {
-    if rel.starts_with("runtime/") || rel == "bench.rs" || rel == "util/logging.rs" {
+    if rel.starts_with("runtime/")
+        || rel.starts_with("obs/")
+        || rel == "bench.rs"
+        || rel == "util/logging.rs"
+    {
         return;
     }
     for (idx, ml) in lines.iter().enumerate() {
         for tok in ["Instant::now", "SystemTime"] {
             if has_token(&ml.code, tok) {
                 out.push((idx, "R2", format!(
-                    "wall-clock read (`{tok}`) outside runtime/, bench.rs, util/logging.rs: route timing through `Runtime` so it is checkpointable and never feeds a decision"
+                    "wall-clock read (`{tok}`) outside runtime/, obs/, bench.rs, util/logging.rs: route timing through `Runtime` or an `obs` span so it is checkpointable and never feeds a decision"
                 )));
             }
         }
@@ -749,6 +759,31 @@ fn r5_file_writes(rel: &str, lines: &[MaskedLine], out: &mut Vec<Candidate>) {
     }
 }
 
+/// Modules whose outputs are part of the bit-identity contract and must
+/// therefore never touch an `obs` wall-clock type (R7).
+const R7_PROTECTED: [&str; 2] = ["metrics/", "ckpt/"];
+
+/// Tokens that mark an `obs` wall-clock dependency (R7): module paths
+/// and the wall-carrying types they export.
+const R7_TOKENS: [&str; 6] =
+    ["obs::spans", "obs::wall", "obs::ledger", "SpanGuard", "Stopwatch", "LedgerEntry"];
+
+fn r7_obs_wall(rel: &str, lines: &[MaskedLine], out: &mut Vec<Candidate>) {
+    if !R7_PROTECTED.iter().any(|p| rel.starts_with(p)) {
+        return;
+    }
+    for (idx, ml) in lines.iter().enumerate() {
+        for tok in R7_TOKENS {
+            if has_token(&ml.code, tok) {
+                out.push((idx, "R7", format!(
+                    "`obs` wall-clock type (`{tok}`) inside a deterministic-output module ({}): span/ledger telemetry belongs at the call site that brackets this code, never in the bytes it produces",
+                    R7_PROTECTED.join(", ")
+                )));
+            }
+        }
+    }
+}
+
 /// True when `tok` occurs in `code` starting exactly at byte `bp`, with
 /// an identifier-boundary check on the left edge.
 fn starts_token_here(code: &str, bp: usize, tok: &str) -> bool {
@@ -825,6 +860,7 @@ fn lint_into(rel: &str, src: &str, rep: &mut Report) {
     r4_rng_sources(rel, &lines, &mut candidates);
     r5_file_writes(rel, &lines, &mut candidates);
     r6_unsafe_safety(&lines, &mut candidates);
+    r7_obs_wall(rel, &lines, &mut candidates);
 
     candidates.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
     candidates.dedup_by(|a, b| a.0 == b.0 && a.1 == b.1);

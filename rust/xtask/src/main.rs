@@ -8,7 +8,7 @@ use xtask::detlint;
 
 fn usage() -> &'static str {
     "usage: xtask detlint [--root PATH]\n\n\
-     Runs the determinism & safety audit (rules R1-R6, see\n\
+     Runs the determinism & safety audit (rules R1-R7, see\n\
      docs/DETERMINISM.md) over PATH (default: rust/src, falling back\n\
      to src). Exits 1 if any violation is found."
 }

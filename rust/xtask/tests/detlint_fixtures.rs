@@ -1,4 +1,4 @@
-//! Fixture battery for `detlint`: each rule R1-R6 fires exactly once on
+//! Fixture battery for `detlint`: each rule R1-R7 fires exactly once on
 //! its fixture, the clean fixture is silent, reasonless escapes are
 //! rejected, and the CLI exit codes match (acceptance criteria of the
 //! determinism-audit issue).
@@ -54,6 +54,14 @@ fn r6_missing_safety_fires_once() {
 }
 
 #[test]
+fn r7_obs_wall_fires_once() {
+    // A directory fixture, not a single file: R7's predicate matches on
+    // the path relative to the lint root (`metrics/...`), which a bare
+    // file name can never satisfy.
+    assert_single_violation("r7_obs_wall", "R7");
+}
+
+#[test]
 fn clean_fixture_is_silent() {
     let rep = lint_root(&fixture("clean.rs")).expect("fixture readable");
     assert!(rep.violations.is_empty(), "{:?}", rep.violations);
@@ -93,7 +101,7 @@ pub fn sort_samples(v: &mut [f64]) {\n\
 fn summary_line_reports_all_rules() {
     let rep = lint_source_str("empty.rs", "");
     let line = rep.summary_line();
-    for r in ["R1", "R2", "R3", "R4", "R5", "R6"] {
+    for r in ["R1", "R2", "R3", "R4", "R5", "R6", "R7"] {
         assert!(line.contains(&format!("{r}=0")), "{line}");
     }
 }
@@ -108,6 +116,7 @@ fn cli_exits_nonzero_on_violations_and_zero_on_clean() {
         ("r4_rng.rs", false),
         ("r5_file_write.rs", false),
         ("r6_unsafe.rs", false),
+        ("r7_obs_wall", false),
         ("allow_no_reason.rs", false),
         ("clean.rs", true),
     ] {

@@ -1,0 +1,9 @@
+//! Fixture: triggers R7 exactly once — an `obs` wall-clock type leaking
+//! into a deterministic-output module (`metrics/`). Both tokens sit on
+//! one line, so the per-(line, rule) dedup still yields one finding.
+
+use crate::obs::spans::SpanGuard;
+
+/// The import above is the leak; the body never needs to mention it for
+/// the rule to fire.
+pub fn serialize_timed() {}

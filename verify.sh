@@ -27,7 +27,7 @@ fi
 echo "== cargo build --release =="
 cargo build --release
 
-# Determinism & safety audit (rules R1-R6, docs/DETERMINISM.md): a hard
+# Determinism & safety audit (rules R1-R7, docs/DETERMINISM.md): a hard
 # gate before anything else runs, so a stray HashMap iteration or
 # partial_cmp never reaches the (much slower) test stage. The xtask
 # crate is a standalone zero-dependency workspace, invoked by manifest
@@ -146,6 +146,20 @@ if [ -f artifacts/manifest.json ]; then
         echo "verify.sh: sweep --resume lost summary.csv" >&2
         exit 1
     }
+    # Report smoke: aggregate the sweep directory just produced. The
+    # report reads only summary.csv + ledger.jsonl + sketch sidecars
+    # (never the per-round JSONL traces), and must print every section
+    # header even on a tiny run.
+    echo "== report smoke (aggregate \$SWEEP_OUT) =="
+    REPORT_OUT="$(cargo run --release --quiet -- report --dir "$SWEEP_OUT")"
+    for section in "== qccf report ==" "-- outcomes --" "-- stage times" \
+                   "-- energy quantiles" "-- bench deltas --"; do
+        printf '%s\n' "$REPORT_OUT" | grep -qF "$section" || {
+            echo "verify.sh: report output missing \`$section\`" >&2
+            printf '%s\n' "$REPORT_OUT" >&2
+            exit 1
+        }
+    done
     # Chaos smoke: chaos-100 exercises the fault-injection path (decode
     # retries, straggle, checkpoint corruption + the .prev recovery
     # ladder) while chaos-panic deliberately poisons its unit with an
